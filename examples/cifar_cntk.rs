@@ -1,0 +1,96 @@
+//! Fig. 2b / Table 1 (scaled): CIFAR-like classification with CNTKSketch
+//! vs GradRF(CNN), plus exact-CNTK timing on a small subset to
+//! extrapolate the paper's 150× headline.
+//!
+//! Run: `cargo run --release --example cifar_cntk [--n 600 --side 10 --dim 512]`
+
+use ntk_sketch::cntk::exact::CntkExact;
+use ntk_sketch::data::{cifar_like, split};
+use ntk_sketch::features::cntk_sketch::{CntkSketch, CntkSketchConfig};
+use ntk_sketch::features::grad_rf::GradRfCnn;
+use ntk_sketch::features::ImageFeaturizer;
+use ntk_sketch::regression::cv::{lambda_grid, select_lambda_classification};
+use ntk_sketch::regression::{accuracy, RidgeRegressor};
+use ntk_sketch::rng::Rng;
+use ntk_sketch::util::cli::Args;
+use ntk_sketch::util::timer::{fmt_secs, timed, Timer};
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.usize("n", 600);
+    let side = args.usize("side", 10);
+    let dim = args.usize("dim", 512);
+    let depth = args.usize("depth", 3); // paper: conv depth L = 3
+    let q = 3;
+    let mut rng = Rng::new(args.u64("seed", 2));
+
+    let ds = cifar_like::generate(n, side, 21);
+    let (train0, test) = split::train_test_images(&ds, 0.2, 22);
+    let (train, val) = split::train_test_images(&train0, 0.15, 23);
+    println!(
+        "cifar-like: train={} val={} test={} {}x{}x3  depth={depth} q={q} budget={dim}",
+        train.n(),
+        val.n(),
+        test.n(),
+        side,
+        side
+    );
+
+    let labels = |ds: &ntk_sketch::data::ImageDataset| -> Vec<f32> {
+        ds.labels.iter().map(|&l| l as f32).collect()
+    };
+    let one_hot = |ds: &ntk_sketch::data::ImageDataset| ds.one_hot_centered();
+
+    println!("{:<16} {:>9} {:>10} {:>12}", "method", "dim", "test acc", "featurize");
+    let featurizers: Vec<(&str, Box<dyn ImageFeaturizer>)> = vec![
+        (
+            "GradRF(CNN)",
+            Box::new(GradRfCnn::for_feature_dim(side, side, 3, depth, q, dim, &mut rng)),
+        ),
+        (
+            "CNTKSketch",
+            Box::new(CntkSketch::new(
+                side,
+                side,
+                3,
+                CntkSketchConfig::for_budget(depth.max(2), q, dim),
+                &mut rng,
+            )),
+        ),
+    ];
+    for (name, f) in featurizers {
+        let (blocks, t_feat) = timed(|| {
+            (
+                f.transform_images(&train.images),
+                f.transform_images(&val.images),
+                f.transform_images(&test.images),
+            )
+        });
+        let (ftr, fval, fte) = blocks;
+        let (lam, _) = select_lambda_classification(
+            &ftr,
+            &one_hot(&train),
+            &fval,
+            &labels(&val),
+            &lambda_grid(),
+        );
+        let r = RidgeRegressor::fit(&ftr, &one_hot(&train), lam).unwrap();
+        let acc = accuracy(&r.predict(&fte), &labels(&test));
+        println!("{:<16} {:>9} {:>9.1}% {:>12}", name, f.dim(), 100.0 * acc, fmt_secs(t_feat));
+    }
+
+    // exact CNTK cost: time a small k×k Gram block, extrapolate to full n²
+    let k = args.usize("exact-sample", 8).min(train.n());
+    let cntk = CntkExact::new(depth.max(2), q);
+    let sub: Vec<_> = train.images[..k].to_vec();
+    let t = Timer::start();
+    let _ = cntk.gram(&sub);
+    let per_pair = t.secs() / ((k * (k + 1)) as f64 / 2.0);
+    let full_pairs = (n * (n + 1)) as f64 / 2.0;
+    println!(
+        "\nexact CNTK: {:.2}ms/pair measured on {k} images ⇒ full {n}-image Gram ≈ {}",
+        1e3 * per_pair,
+        fmt_secs(per_pair * full_pairs)
+    );
+    println!("(Table 1's point: this quadratic cost is what CNTKSketch's linear-in-pixels feature map replaces)");
+}

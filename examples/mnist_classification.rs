@@ -1,0 +1,76 @@
+//! Fig. 2a (scaled): classify the MNIST-like dataset with the three NTK
+//! approximations — GradRF, NTKSketch and NTKRF — at a fixed feature
+//! budget, with λ search on a validation split (the paper's §5.1
+//! protocol).
+//!
+//! Run: `cargo run --release --example mnist_classification [--n 1500 --dim 1024]`
+
+use ntk_sketch::data::{mnist_like, split};
+use ntk_sketch::features::grad_rf::GradRfMlp;
+use ntk_sketch::features::ntk_poly_sketch::NtkPolySketch;
+use ntk_sketch::features::ntk_rf::{NtkRf, NtkRfConfig};
+use ntk_sketch::features::ntk_sketch::{NtkSketch, NtkSketchConfig};
+use ntk_sketch::features::Featurizer;
+use ntk_sketch::regression::cv::{lambda_grid, select_lambda_classification};
+use ntk_sketch::regression::{accuracy, RidgeRegressor};
+use ntk_sketch::rng::Rng;
+use ntk_sketch::util::cli::Args;
+use ntk_sketch::util::timer::{fmt_secs, timed};
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.usize("n", 1500);
+    let dim = args.usize("dim", 1024);
+    let side = args.usize("side", 16);
+    let depth = 1; // the paper uses depth L = 1 for MNIST (§5.1)
+    let mut rng = Rng::new(args.u64("seed", 1));
+
+    let ds = mnist_like::generate(n, side, 11).flatten();
+    let (train0, test) = split::train_test(&ds, 0.2, 12);
+    let (train, val) = split::train_test(&train0, 0.15, 13);
+    println!(
+        "mnist-like: train={} val={} test={} d={} classes={}  feature budget={dim}",
+        train.n(),
+        val.n(),
+        test.n(),
+        ds.d(),
+        ds.classes
+    );
+    println!("{:<18} {:>9} {:>10} {:>12}", "method", "dim", "test acc", "featurize");
+
+    let featurizers: Vec<(&str, Box<dyn Featurizer>)> = vec![
+        ("GradRF", Box::new(GradRfMlp::for_feature_dim(ds.d(), depth.max(1), dim, &mut rng))),
+        (
+            "NTKSketch",
+            Box::new(NtkSketch::new(ds.d(), NtkSketchConfig::for_budget(depth, dim), &mut rng)),
+        ),
+        (
+            "NTKSketch(poly)",
+            Box::new(NtkPolySketch::new(ds.d(), depth, 8, 2 * dim, dim, &mut rng)),
+        ),
+        (
+            "NTKRF",
+            Box::new(NtkRf::new(ds.d(), NtkRfConfig::for_budget(depth, dim), &mut rng)),
+        ),
+    ];
+
+    for (name, f) in featurizers {
+        let (out, t_feat) = timed(|| {
+            let ftr = f.transform(&train.x);
+            let fval = f.transform(&val.x);
+            let fte = f.transform(&test.x);
+            (ftr, fval, fte)
+        });
+        let (ftr, fval, fte) = out;
+        let (lam, _) = select_lambda_classification(
+            &ftr,
+            &train.one_hot_centered(),
+            &fval,
+            &val.y,
+            &lambda_grid(),
+        );
+        let r = RidgeRegressor::fit(&ftr, &train.one_hot_centered(), lam).unwrap();
+        let acc = accuracy(&r.predict(&fte), &test.y);
+        println!("{:<18} {:>9} {:>9.1}% {:>12}", name, f.dim(), 100.0 * acc, fmt_secs(t_feat));
+    }
+}

@@ -1,0 +1,70 @@
+//! Quickstart: 60-second tour of the library.
+//!
+//! 1. Evaluate the exact ReLU-NTK (Definition 1 / Eq. 5).
+//! 2. Approximate it with NTKRF (Alg. 2) and NTKSketch (Alg. 1) features.
+//! 3. Train a ridge classifier on the features and compare against exact
+//!    kernel ridge regression.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use ntk_sketch::data::{split, synth};
+use ntk_sketch::features::ntk_rf::{NtkRf, NtkRfConfig};
+use ntk_sketch::features::ntk_sketch::{NtkSketch, NtkSketchConfig};
+use ntk_sketch::features::Featurizer;
+use ntk_sketch::ntk::{k_relu, ntk_cross_gram, ntk_gram, theta_ntk};
+use ntk_sketch::regression::{accuracy, KernelRidge, RidgeRegressor};
+use ntk_sketch::rng::Rng;
+use ntk_sketch::tensor::dot;
+use ntk_sketch::util::timer::timed;
+
+fn main() {
+    let mut rng = Rng::new(42);
+
+    println!("== 1. the ReLU-NTK function (Fig. 1) ==");
+    for depth in [2usize, 4, 8] {
+        println!(
+            "  K_relu^({depth})(-1) = {:.3}   K_relu^({depth})(0) = {:.3}   K_relu^({depth})(1) = {:.3}",
+            k_relu(depth, -1.0),
+            k_relu(depth, 0.0),
+            k_relu(depth, 1.0)
+        );
+    }
+
+    println!("\n== 2. feature maps approximate the kernel ==");
+    let d = 16;
+    let depth = 2;
+    let y = rng.gauss_vec(d);
+    let z = rng.gauss_vec(d);
+    let exact = theta_ntk(depth, &y, &z);
+    let rf = NtkRf::new(d, NtkRfConfig { depth, m0: 512, m1: 2048, ms: 512, phi1_mode: ntk_sketch::features::ntk_rf::Phi1Mode::Plain }, &mut rng);
+    let approx_rf = dot(&rf.features(&y), &rf.features(&z)) as f64;
+    let sk = NtkSketch::new(d, NtkSketchConfig::for_budget(depth, 1024), &mut rng);
+    let approx_sk = dot(&sk.features(&y), &sk.features(&z)) as f64;
+    println!("  Θ_ntk(y,z) exact    = {exact:.4}");
+    println!("  <Ψ_rf(y), Ψ_rf(z)>  = {approx_rf:.4}  (NTKRF, Alg. 2)");
+    println!("  <Ψ_sk(y), Ψ_sk(z)>  = {approx_sk:.4}  (NTKSketch, Alg. 1)");
+
+    println!("\n== 3. learning: features + linear ridge vs exact kernel ridge ==");
+    let ds = synth::gaussian_mixture(600, d, 4, 0.9, 7);
+    let (train, test) = split::train_test(&ds, 0.25, 8);
+
+    // exact NTK kernel ridge (the O(n²) baseline)
+    let (acc_exact, t_exact) = timed(|| {
+        let k = ntk_gram(depth, &train.x);
+        let kr = KernelRidge::fit(&k, &train.one_hot_centered(), 1e-4).unwrap();
+        let pred = kr.predict(&ntk_cross_gram(depth, &test.x, &train.x));
+        accuracy(&pred, &test.y)
+    });
+
+    // NTKRF features + streaming ridge (the paper's fast path)
+    let (acc_rf, t_rf) = timed(|| {
+        let ftr = rf.transform(&train.x);
+        let fte = rf.transform(&test.x);
+        let r = RidgeRegressor::fit(&ftr, &train.one_hot_centered(), 1e-4).unwrap();
+        accuracy(&r.predict(&fte), &test.y)
+    });
+
+    println!("  exact NTK ridge : acc {:.3}  ({:.2}s)", acc_exact, t_exact);
+    println!("  NTKRF + ridge   : acc {:.3}  ({:.2}s)", acc_rf, t_rf);
+    println!("\nDone. See examples/ for the paper's experiments and `cargo bench` for the tables/figures.");
+}

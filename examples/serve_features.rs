@@ -1,0 +1,147 @@
+//! End-to-end system driver (DESIGN.md §6): the full three-layer stack on
+//! a real workload.
+//!
+//!   L1/L2: the AOT artifact (`make artifacts`) — NTKRF in jax over the
+//!          Pallas kernels, lowered to HLO text;
+//!   runtime: PJRT CPU client executes it with device-resident weights;
+//!   L3: the FeatureServer batches concurrent requests (size/deadline
+//!       policy) and the streaming ridge accumulates normal equations.
+//!
+//! Trains on a UCI-like regression stream via the serving path and then
+//! serves a closed-loop latency/throughput benchmark. Results are
+//! recorded in EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_features`
+
+use ntk_sketch::coordinator::{BatchBackend, BatchPolicy, FeatureServer, Metrics};
+use ntk_sketch::data::uci_like::{generate, UciFamily};
+use ntk_sketch::regression::{mse, RidgeRegressor};
+use ntk_sketch::runtime::{artifacts_dir, Engine};
+use ntk_sketch::tensor::Mat;
+use ntk_sketch::util::cli::Args;
+use ntk_sketch::util::timer::Timer;
+
+struct PjrtBackend {
+    engine: Engine,
+}
+
+impl BatchBackend for PjrtBackend {
+    fn batch(&self) -> usize {
+        self.engine.batch()
+    }
+    fn input_dim(&self) -> usize {
+        self.engine.input_dim()
+    }
+    fn feature_dim(&self) -> usize {
+        self.engine.feature_dim()
+    }
+    fn run(&self, x: &Mat) -> Mat {
+        self.engine.run_batch(x).expect("pjrt batch")
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let dir = artifacts_dir();
+    if !dir.join("ntk_rf.manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let probe = Engine::load(&dir, "ntk_rf").expect("load artifact");
+    let (d, fdim, batch) = (probe.input_dim(), probe.feature_dim(), probe.batch());
+    println!(
+        "artifact ntk_rf: depth={} d={d} feature_dim={fdim} batch={batch} (golden max rel err {:.1e})",
+        probe.artifact.depth,
+        probe.verify_golden(1e-3, 1e-4).expect("golden")
+    );
+    drop(probe);
+
+    // ---- phase 1: streaming training through the serving path ----
+    let n_train = args.usize("n", 2048);
+    let n_test = 512;
+    // project the uci-like inputs to the artifact's d
+    let ds = generate(UciFamily::MillionSongs, n_train + n_test, 61);
+    let proj = {
+        let mut rng = ntk_sketch::rng::Rng::new(62);
+        Mat::from_vec(ds.d(), d, rng.gauss_vec(ds.d() * d))
+    };
+    let x_all = ds.x.matmul(&proj);
+    let x_train = x_all.slice_rows(0, n_train);
+    let x_test = x_all.slice_rows(n_train, n_train + n_test);
+    let y_train = Mat::from_vec(n_train, 1, ds.y[..n_train].to_vec());
+    let y_test = Mat::from_vec(n_test, 1, ds.y[n_train..].to_vec());
+
+    let dir2 = dir.clone();
+    let (server, client) = FeatureServer::start(
+        move || PjrtBackend { engine: Engine::load(&dir2, "ntk_rf").expect("engine") },
+        args.usize("workers", 1),
+        BatchPolicy { max_batch: batch, max_delay: std::time::Duration::from_millis(2) },
+        32,
+    );
+
+    let t_train = Timer::start();
+    let mut reg = RidgeRegressor::new(fdim, 1);
+    // stream rows through the server in flight-controlled waves
+    let wave = 256;
+    let mut test_feats = Mat::zeros(n_test, fdim);
+    {
+        let mut lo = 0;
+        while lo < n_train {
+            let hi = (lo + wave).min(n_train);
+            let rxs: Vec<_> = (lo..hi).map(|i| client.submit(x_train.row(i).to_vec())).collect();
+            let mut feats = Mat::zeros(hi - lo, fdim);
+            for (k, rx) in rxs.into_iter().enumerate() {
+                feats.row_mut(k).copy_from_slice(&rx.recv().expect("feature row"));
+            }
+            reg.add_batch(&feats, &y_train.slice_rows(lo, hi));
+            lo = hi;
+        }
+        // featurize the test set through the same path
+        let rxs: Vec<_> = (0..n_test).map(|i| client.submit(x_test.row(i).to_vec())).collect();
+        for (k, rx) in rxs.into_iter().enumerate() {
+            test_feats.row_mut(k).copy_from_slice(&rx.recv().expect("feature row"));
+        }
+    }
+    reg.solve(args.f64("lambda", 1e-3)).unwrap();
+    let train_secs = t_train.secs();
+    let test_mse = mse(&reg.predict(&test_feats), &y_test);
+    let var: f64 =
+        y_test.data.iter().map(|&v| (v as f64).powi(2)).sum::<f64>() / n_test as f64;
+    println!(
+        "\nstreaming training: {n_train} rows in {train_secs:.2}s ({:.0} rows/s), test MSE {test_mse:.4} (target var {var:.4})",
+        n_train as f64 / train_secs
+    );
+
+    // ---- phase 2: closed-loop serving benchmark ----
+    let n_req = args.usize("requests", 2000);
+    let clients = args.usize("clients", 8);
+    let t_serve = Timer::start();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let cl = client.clone();
+            let x = &x_train;
+            s.spawn(move || {
+                let mut rng = ntk_sketch::rng::Rng::new(900 + c as u64);
+                for _ in 0..n_req / clients {
+                    let i = rng.below(x.rows);
+                    let _ = cl.featurize(x.row(i).to_vec());
+                }
+            });
+        }
+    });
+    let serve_secs = t_serve.secs();
+    println!(
+        "\nserving: {n_req} requests from {clients} closed-loop clients in {serve_secs:.2}s = {:.0} req/s",
+        n_req as f64 / serve_secs
+    );
+    println!("metrics: {}", server.metrics.summary());
+    println!(
+        "batch fill: {:.1}% (pad rows / (batches × {batch}))",
+        100.0
+            * (1.0
+                - Metrics::get(&server.metrics.pad_rows) as f64
+                    / (Metrics::get(&server.metrics.batches) as f64 * batch as f64))
+    );
+    drop(client);
+    server.join();
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: L1 Pallas kernels + L2 JAX model + AOT lowering.
+
+Never imported at runtime — `make artifacts` runs once, the Rust binary
+loads the resulting HLO text via PJRT.
+"""

@@ -1,0 +1,121 @@
+"""AOT lowering: JAX model -> HLO *text* + weights + manifest + goldens.
+
+HLO text (not `.serialize()`) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that the image's xla_extension
+0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example).
+
+Artifacts written to --out-dir (default ../artifacts):
+  <name>.hlo.txt        the lowered computation  f(x, *params) -> (features,)
+  <name>.weights.bin    all parameter arrays, f32 little-endian, in order
+  <name>.manifest.json  shapes/order of inputs + golden file names
+  <name>.golden_in.bin  one example batch (f32)
+  <name>.golden_out.bin its features under the jitted fn (f32)
+
+Usage: python -m compile.aot [--depth 2 --d 64 --m0 128 --m1 512 --ms 128
+                              --batch 64 --seed 0 --out-dir ../artifacts]
+"""
+
+import argparse
+import json
+import os
+
+import numpy as np
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import NtkRfConfig, build_fn, init_params, param_layout
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    hlo = comp.as_hlo_text()
+    # as_hlo_text elides large constants as `constant({...})`; the
+    # xla_extension-0.5.1 parser silently reads those as ZEROS. All big
+    # tensors must be parameters (model.hadamard_sizes etc.). Fail loudly
+    # if any slipped through.
+    if "{...}" in hlo:
+        raise RuntimeError(
+            "lowered HLO contains an elided constant ('constant({...})') — "
+            "it would silently become zeros on the Rust side; pass the "
+            "tensor as a parameter instead"
+        )
+    return hlo
+
+
+def build_artifacts(cfg: NtkRfConfig, seed: int, out_dir: str, name: str = "ntk_rf"):
+    os.makedirs(out_dir, exist_ok=True)
+    params = init_params(cfg, seed=seed)
+    fn = build_fn(cfg)
+    x_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.d), np.float32)
+    p_specs = [jax.ShapeDtypeStruct(p.shape, np.float32) for p in params]
+    lowered = jax.jit(fn).lower(x_spec, *p_specs)
+    hlo = to_hlo_text(lowered)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+
+    # weights blob
+    weights_path = os.path.join(out_dir, f"{name}.weights.bin")
+    with open(weights_path, "wb") as f:
+        for p in params:
+            f.write(np.ascontiguousarray(p, dtype="<f4").tobytes())
+
+    # golden pair
+    rng = np.random.RandomState(seed + 1)
+    x = rng.randn(cfg.batch, cfg.d).astype(np.float32)
+    y = np.asarray(jax.jit(fn)(x, *params)[0], dtype=np.float32)
+    with open(os.path.join(out_dir, f"{name}.golden_in.bin"), "wb") as f:
+        f.write(np.ascontiguousarray(x, dtype="<f4").tobytes())
+    with open(os.path.join(out_dir, f"{name}.golden_out.bin"), "wb") as f:
+        f.write(np.ascontiguousarray(y, dtype="<f4").tobytes())
+
+    manifest = {
+        "name": name,
+        "model": "ntk_rf",
+        "depth": cfg.depth,
+        "d": cfg.d,
+        "m0": cfg.m0,
+        "m1": cfg.m1,
+        "ms": cfg.ms,
+        "batch": cfg.batch,
+        "feature_dim": cfg.feature_dim,
+        "seed": seed,
+        "hlo": f"{name}.hlo.txt",
+        "weights": f"{name}.weights.bin",
+        "golden_in": f"{name}.golden_in.bin",
+        "golden_out": f"{name}.golden_out.bin",
+        "params": [
+            {"name": pname, "shape": list(shape)} for pname, shape in param_layout(cfg)
+        ],
+    }
+    man_path = os.path.join(out_dir, f"{name}.manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    return hlo_path, weights_path, man_path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--depth", type=int, default=2)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--m0", type=int, default=128)
+    ap.add_argument("--m1", type=int, default=512)
+    ap.add_argument("--ms", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--name", type=str, default="ntk_rf")
+    ap.add_argument("--out-dir", type=str, default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    args = ap.parse_args()
+    cfg = NtkRfConfig(
+        depth=args.depth, d=args.d, m0=args.m0, m1=args.m1, ms=args.ms, batch=args.batch
+    )
+    paths = build_artifacts(cfg, args.seed, args.out_dir, name=args.name)
+    for p in paths:
+        print(f"wrote {p}")
+
+
+if __name__ == "__main__":
+    main()

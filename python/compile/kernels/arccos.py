@@ -1,0 +1,28 @@
+"""L1: fused arc-cosine random-feature blocks (paper Eq. 11).
+
+Φ₀(x) = √(2/m)·Step(x Wᵀ),  Φ₁(x) = √(2/m)·ReLU(x Wᵀ)
+
+One fused Pallas matmul+activation tile per output block — the dominant
+FLOPs of NTKRF (Algorithm 2). `w` is passed already transposed ([d, m])
+so the kernel's RHS layout is contraction-major.
+"""
+
+import math
+
+from . import matmul
+
+
+def phi0(x, wt, *, interpret: bool = True):
+    """Step features: x [B, d], wt [d, m] -> [B, m] scaled by √(2/m)."""
+    m = wt.shape[1]
+    return matmul.matmul_act(
+        x, wt, act=matmul.ACT_STEP, scale=math.sqrt(2.0 / m), interpret=interpret
+    )
+
+
+def phi1(x, wt, *, interpret: bool = True):
+    """ReLU features: x [B, d], wt [d, m] -> [B, m] scaled by √(2/m)."""
+    m = wt.shape[1]
+    return matmul.matmul_act(
+        x, wt, act=matmul.ACT_RELU, scale=math.sqrt(2.0 / m), interpret=interpret
+    )

@@ -1,0 +1,80 @@
+"""L1: blocked Walsh–Hadamard transform as MXU matmuls.
+
+GPU implementations butterfly FWHT through shared memory; the TPU-shaped
+formulation uses H_n = (H_a ⊗ I_c)(I_a ⊗ H_c): each stage contracts a
+≤128-wide axis against a dense Hadamard block H_b held in VMEM — i.e. a
+batched matmul on the systolic array (the `matmul.py` kernel). For
+n ≤ 128 one stage suffices; n ≤ 16384 needs two.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import matmul
+
+
+def hadamard_matrix(n: int) -> np.ndarray:
+    """Dense H_n (entries ±1), unnormalized. n must be a power of two."""
+    assert n >= 1 and (n & (n - 1)) == 0, f"n={n} not a power of two"
+    h = np.array([[1.0]], dtype=np.float32)
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return h
+
+
+def _factor(n: int, max_block: int = 128):
+    """Split n into power-of-two stage sizes each ≤ max_block."""
+    fs = []
+    rem = n
+    while rem > max_block:
+        fs.append(max_block)
+        assert rem % max_block == 0
+        rem //= max_block
+    fs.append(rem)
+    return fs
+
+
+def needed_block_sizes(n: int) -> set:
+    """Hadamard block sizes fwht_norm will contract against for length n."""
+    return set(_factor(n))
+
+
+def fwht_norm(x, hblocks=None, *, interpret: bool = True):
+    """Orthonormal FWHT over the last axis of x: [B, n] -> [B, n].
+
+    n must be a power of two. Decomposes into stages of Hadamard-block
+    matmuls executed by the Pallas matmul kernel.
+
+    `hblocks` maps block size -> H_f array. Pass the blocks as *traced
+    parameters* when the function will be AOT-lowered: `as_hlo_text()`
+    elides constants larger than a few elements (`constant({...})`) and
+    the xla_extension-0.5.1 text parser silently reads the elision as
+    zeros — baked-in Hadamard constants therefore vanish on the Rust
+    side. (aot.py asserts the lowered text has no elided constants.)
+    """
+    b, n = x.shape
+    assert (n & (n - 1)) == 0, f"fwht: n={n} not a power of two"
+    out = x
+    # H_n = prod over stages: contract each factor axis with H_f.
+    # view x as [B, f1, f2, ..., fk]; stage i contracts axis i+1.
+    factors = _factor(n)
+    k = len(factors)
+    out = out.reshape((b,) + tuple(factors))
+    for i, f in enumerate(factors):
+        if hblocks is not None and f in hblocks:
+            h = hblocks[f]
+        else:
+            h = jnp.asarray(hadamard_matrix(f))
+        # move axis i+1 last, flatten, matmul, restore
+        perm = list(range(out.ndim))
+        perm.append(perm.pop(i + 1))
+        moved = out.transpose(perm)
+        lead = moved.shape[:-1]
+        flat = moved.reshape((-1, f))
+        flat = matmul.matmul_act(flat, h, interpret=interpret)
+        moved = flat.reshape(lead + (f,))
+        inv = list(range(out.ndim))
+        inv.insert(i + 1, inv.pop(-1))
+        out = moved.transpose(inv)
+    out = out.reshape(b, n)
+    return out / jnp.sqrt(jnp.asarray(float(n), dtype=x.dtype))

@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: tiled matmul with optional fused activation.
+
+The single compute primitive every hot spot in this repo reduces to on
+TPU-shaped hardware (see DESIGN.md §Hardware-Adaptation):
+
+- arc-cosine random features  act(x @ W^T) * scale   (act = relu / step)
+- blocked FWHT stages         x_blocked @ H_b        (H_b in VMEM)
+- TensorSRHT gather           spectrum @ Sel^T       (one-hot selection)
+
+BlockSpec tiles rows of `x` and columns of `w` into VMEM; the contraction
+dimension is kept whole per tile (our models keep d ≤ 4096, i.e. ≤ 2 MiB
+per f32 tile at bm = 128). MUST run interpret=True on CPU — real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# activation codes
+ACT_NONE = 0
+ACT_RELU = 1
+ACT_STEP = 2
+
+
+def _matmul_kernel(x_ref, wt_ref, o_ref, *, act: int, scale: float):
+    """One (bm × bn) output tile: o = act(x @ wt) * scale."""
+    acc = jnp.dot(x_ref[...], wt_ref[...], preferred_element_type=jnp.float32)
+    if act == ACT_RELU:
+        acc = jnp.maximum(acc, 0.0)
+    elif act == ACT_STEP:
+        acc = jnp.where(acc > 0.0, 1.0, 0.0)
+    o_ref[...] = (acc * scale).astype(o_ref.dtype)
+
+
+def pick_block(n: int, target: int = 128) -> int:
+    """Largest divisor of n that is ≤ target (VMEM/MXU tile size)."""
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return max(b, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "scale", "interpret"))
+def matmul_act(x, wt, *, act: int = ACT_NONE, scale: float = 1.0, interpret: bool = True):
+    """act(x @ wt) * scale with x: [B, k], wt: [k, n] -> [B, n].
+
+    Grid over (B/bm, n/bn) output tiles; the k dimension rides whole in
+    each tile (k ≤ a few thousand in all our models).
+    """
+    b, k = x.shape
+    k2, n = wt.shape
+    assert k == k2, f"matmul_act: contraction mismatch {k} vs {k2}"
+    bm = pick_block(b)
+    bn = pick_block(n)
+    kernel = functools.partial(_matmul_kernel, act=act, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, n), x.dtype),
+        grid=(b // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(x, wt)
+
+
+def vmem_bytes_estimate(b: int, k: int, n: int, dtype_bytes: int = 4) -> int:
+    """Structural VMEM footprint per grid step (perf model, DESIGN §Perf)."""
+    bm = pick_block(b)
+    bn = pick_block(n)
+    return dtype_bytes * (bm * k + k * bn + bm * bn)

@@ -1,0 +1,80 @@
+"""Pure-jnp/numpy oracles for every L1 kernel — the correctness ground
+truth swept by hypothesis in python/tests/."""
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def matmul_act_ref(x, wt, act: int = 0, scale: float = 1.0):
+    out = jnp.dot(x, wt)
+    if act == 1:
+        out = jnp.maximum(out, 0.0)
+    elif act == 2:
+        out = jnp.where(out > 0.0, 1.0, 0.0)
+    return out * scale
+
+
+def hadamard_ref(n: int) -> np.ndarray:
+    h = np.array([[1.0]], dtype=np.float32)
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return h
+
+
+def fwht_norm_ref(x):
+    """Dense-matrix orthonormal Hadamard transform over the last axis."""
+    n = x.shape[-1]
+    h = jnp.asarray(hadamard_ref(n)) / math.sqrt(n)
+    return jnp.dot(x, h)  # H symmetric
+
+
+def phi0_ref(x, wt):
+    m = wt.shape[1]
+    return matmul_act_ref(x, wt, act=2, scale=math.sqrt(2.0 / m))
+
+
+def phi1_ref(x, wt):
+    m = wt.shape[1]
+    return matmul_act_ref(x, wt, act=1, scale=math.sqrt(2.0 / m))
+
+
+def tensor_srht_ref(a, b, d1, d2, sel1t, sel2t):
+    """Oracle TensorSRHT: dense Hadamard + explicit gather."""
+    pa, m = sel1t.shape
+    pb, _ = sel2t.shape
+    ap = jnp.pad(a, ((0, 0), (0, pa - a.shape[1]))) * d1[None, :]
+    bp = jnp.pad(b, ((0, 0), (0, pb - b.shape[1]))) * d2[None, :]
+    sa = fwht_norm_ref(ap)
+    sb = fwht_norm_ref(bp)
+    i1 = np.argmax(np.asarray(sel1t), axis=0)
+    i2 = np.argmax(np.asarray(sel2t), axis=0)
+    scale = math.sqrt(pa * pb / m)
+    return sa[:, i1] * sb[:, i2] * scale
+
+
+def kappa0(alpha):
+    a = np.clip(alpha, -1.0, 1.0)
+    return (np.pi - np.arccos(a)) / np.pi
+
+
+def kappa1(alpha):
+    a = np.clip(alpha, -1.0, 1.0)
+    return (np.sqrt(np.maximum(0.0, 1.0 - a * a)) + a * (np.pi - np.arccos(a))) / np.pi
+
+
+def theta_ntk_ref(y, z, depth: int):
+    """Exact fully-connected ReLU NTK (Definition 1 + Eq. 5), numpy."""
+    ny = float(np.linalg.norm(y))
+    nz = float(np.linalg.norm(z))
+    if ny == 0.0 or nz == 0.0:
+        return 0.0
+    cos = float(np.clip(np.dot(y, z) / (ny * nz), -1.0, 1.0))
+    sig = cos
+    k = cos
+    for _ in range(depth):
+        sd = float(kappa0(sig))
+        sig = float(kappa1(sig))
+        k = k * sd + sig
+    return ny * nz * k

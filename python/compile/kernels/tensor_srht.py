@@ -1,0 +1,63 @@
+"""L1: degree-2 TensorSRHT Q²(a ⊗ b) (paper §1.3, Algorithm 2 line 6).
+
+Q²(a⊗b)[k] = √(Pa·Pb/m) · (H D₁ a)[i_k] · (H D₂ b)[j_k]
+
+TPU adaptation: the coordinate gather (a warp-level scatter on GPU) is
+expressed as two one-hot *selection matmuls* — Sel₁ [m, Pa], Sel₂ [m, Pb]
+with a single 1 per row — so the whole transform is FWHT-stage matmuls,
+two selection matmuls and one fused elementwise product: all MXU work.
+"""
+
+import math
+
+import jax.numpy as jnp
+
+from . import fwht, matmul
+
+
+def next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def tensor_srht(a, b, d1, d2, sel1t, sel2t, hblocks=None, *, interpret: bool = True):
+    """Q²(a ⊗ b) for batches.
+
+    a: [B, da], b: [B, db]
+    d1: [Pa] signs (Pa = next_pow2(da)), d2: [Pb] signs
+    sel1t: [Pa, m] one-hot columns, sel2t: [Pb, m]
+    hblocks: size -> Hadamard block (traced params for AOT; see fwht.py)
+    returns [B, m]
+    """
+    bsz, da = a.shape
+    _, db = b.shape
+    pa, m = sel1t.shape
+    pb, m2 = sel2t.shape
+    assert m == m2
+    assert pa == next_pow2(da) and pb == next_pow2(db), "selection dims must match padding"
+    ap = jnp.pad(a, ((0, 0), (0, pa - da))) * d1[None, :]
+    bp = jnp.pad(b, ((0, 0), (0, pb - db))) * d2[None, :]
+    sa = fwht.fwht_norm(ap, hblocks, interpret=interpret)
+    sb = fwht.fwht_norm(bp, hblocks, interpret=interpret)
+    ga = matmul.matmul_act(sa, sel1t, interpret=interpret)
+    gb = matmul.matmul_act(sb, sel2t, interpret=interpret)
+    scale = math.sqrt(pa * pb / m)
+    return ga * gb * scale
+
+
+def make_params(rng, da: int, db: int, m: int):
+    """Numpy parameter pack for one TensorSRHT instance."""
+    import numpy as np
+
+    pa, pb = next_pow2(da), next_pow2(db)
+    d1 = rng.choice([-1.0, 1.0], size=pa).astype(np.float32)
+    d2 = rng.choice([-1.0, 1.0], size=pb).astype(np.float32)
+    i1 = rng.randint(0, pa, size=m)
+    i2 = rng.randint(0, pb, size=m)
+    sel1t = np.zeros((pa, m), dtype=np.float32)
+    sel1t[i1, np.arange(m)] = 1.0
+    sel2t = np.zeros((pb, m), dtype=np.float32)
+    sel2t[i2, np.arange(m)] = 1.0
+    return d1, d2, sel1t, sel2t

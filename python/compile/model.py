@@ -1,0 +1,125 @@
+"""L2: the NTKRF feature map (paper Algorithm 2) as a JAX program calling
+the L1 Pallas kernels.
+
+    φ⁰ = ψ⁰ = x/‖x‖
+    per layer ℓ: φ̇^ℓ = Φ₀(φ^{ℓ−1}); φ^ℓ = Φ₁(φ^{ℓ−1});
+                 ψ^ℓ = φ^ℓ ⊕ Q²(φ̇^ℓ ⊗ ψ^{ℓ−1})
+    Ψ(x) = ‖x‖·ψ^L   ∈ ℝ^{m₁+m_s}
+
+Parameters are generated in numpy (`init_params`) with a deterministic
+seed, serialized by aot.py, and fed back in as HLO inputs by the Rust
+runtime — Python never runs on the request path.
+"""
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import arccos, fwht, tensor_srht
+
+
+@dataclass(frozen=True)
+class NtkRfConfig:
+    depth: int = 2
+    d: int = 64
+    m0: int = 128
+    m1: int = 512
+    ms: int = 128
+    batch: int = 64
+
+    @property
+    def feature_dim(self) -> int:
+        return self.m1 + self.ms
+
+
+def hadamard_sizes(cfg: NtkRfConfig):
+    """Hadamard block sizes the model's FWHT stages contract against.
+    These ride along as parameters: `as_hlo_text()` elides large baked-in
+    constants and the old XLA text parser reads the elision as zeros."""
+    sizes = set()
+    psi_dim = cfg.d
+    for _ in range(cfg.depth):
+        sizes |= fwht.needed_block_sizes(tensor_srht.next_pow2(cfg.m0))
+        sizes |= fwht.needed_block_sizes(tensor_srht.next_pow2(psi_dim))
+        psi_dim = cfg.m1 + cfg.ms
+    return sorted(sizes)
+
+
+def init_params(cfg: NtkRfConfig, seed: int = 0):
+    """Flat, ordered list of numpy parameter arrays (one entry per HLO
+    input after x). Order per layer:
+      w0t [prev, m0], w1t [prev, m1], d1 [Pa], d2 [Pb],
+      sel1t [Pa, ms], sel2t [Pb, ms]
+    followed by the shared Hadamard blocks (ascending size).
+    """
+    rng = np.random.RandomState(seed)
+    params = []
+    phi_dim = cfg.d
+    psi_dim = cfg.d
+    for _ in range(cfg.depth):
+        params.append(rng.randn(phi_dim, cfg.m0).astype(np.float32))  # w0t
+        params.append(rng.randn(phi_dim, cfg.m1).astype(np.float32))  # w1t
+        d1, d2, sel1t, sel2t = tensor_srht.make_params(rng, cfg.m0, psi_dim, cfg.ms)
+        params.extend([d1, d2, sel1t, sel2t])
+        phi_dim = cfg.m1
+        psi_dim = cfg.m1 + cfg.ms
+    for size in hadamard_sizes(cfg):
+        params.append(fwht.hadamard_matrix(size))
+    return params
+
+
+def param_layout(cfg: NtkRfConfig):
+    """Shapes (in order) of init_params output — for the manifest."""
+    shapes = []
+    phi_dim = cfg.d
+    psi_dim = cfg.d
+    for _ in range(cfg.depth):
+        pa = tensor_srht.next_pow2(cfg.m0)
+        pb = tensor_srht.next_pow2(psi_dim)
+        shapes.append(("w0t", (phi_dim, cfg.m0)))
+        shapes.append(("w1t", (phi_dim, cfg.m1)))
+        shapes.append(("d1", (pa,)))
+        shapes.append(("d2", (pb,)))
+        shapes.append(("sel1t", (pa, cfg.ms)))
+        shapes.append(("sel2t", (pb, cfg.ms)))
+        phi_dim = cfg.m1
+        psi_dim = cfg.m1 + cfg.ms
+    for size in hadamard_sizes(cfg):
+        shapes.append((f"hadamard_{size}", (size, size)))
+    return shapes
+
+
+def ntk_rf_features(cfg: NtkRfConfig, x, *params, interpret: bool = True):
+    """Batched Algorithm 2: x [B, d] -> features [B, m1+ms]."""
+    assert x.shape[1] == cfg.d
+    sizes = hadamard_sizes(cfg)
+    hblocks = {
+        size: params[len(params) - len(sizes) + i] for i, size in enumerate(sizes)
+    }
+    norms = jnp.sqrt(jnp.sum(x * x, axis=1, keepdims=True))
+    safe = jnp.maximum(norms, 1e-12)
+    phi = x / safe
+    psi = phi
+    idx = 0
+    for _ in range(cfg.depth):
+        w0t, w1t, d1, d2, sel1t, sel2t = params[idx : idx + 6]
+        idx += 6
+        phi_dot = arccos.phi0(phi, w0t, interpret=interpret)
+        phi_new = arccos.phi1(phi, w1t, interpret=interpret)
+        q2 = tensor_srht.tensor_srht(
+            phi_dot, psi, d1, d2, sel1t, sel2t, hblocks, interpret=interpret
+        )
+        psi = jnp.concatenate([phi_new, q2], axis=1)
+        phi = phi_new
+    # zero inputs map to zero features (norm factor restores scale)
+    return psi * norms
+
+
+def build_fn(cfg: NtkRfConfig, interpret: bool = True):
+    """Return f(x, *params) suitable for jax.jit / AOT lowering."""
+
+    def fn(x, *params):
+        return (ntk_rf_features(cfg, x, *params, interpret=interpret),)
+
+    return fn

@@ -1,0 +1,74 @@
+"""Arc-cosine feature kernels and TensorSRHT vs oracles + statistics."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import arccos, ref, tensor_srht
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 12), d=st.integers(1, 24), m=st.integers(1, 48), seed=st.integers(0, 2**31 - 1))
+def test_phi_kernels_match_ref(b, d, m, seed):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(b, d).astype(np.float32)
+    wt = rng.randn(d, m).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(arccos.phi0(x, wt)), np.asarray(ref.phi0_ref(x, wt)), rtol=1e-4, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(arccos.phi1(x, wt)), np.asarray(ref.phi1_ref(x, wt)), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_phi_expectations_estimate_arc_cosine_kernels():
+    # E<Φ0(y),Φ0(z)> = κ0(cos), E<Φ1(y),Φ1(z)> = κ1(cos) for unit y, z
+    rng = np.random.RandomState(7)
+    d, m = 10, 200_000
+    y = rng.randn(d).astype(np.float32)
+    z = rng.randn(d).astype(np.float32)
+    y /= np.linalg.norm(y)
+    z /= np.linalg.norm(z)
+    wt = rng.randn(d, m).astype(np.float32)
+    x = np.stack([y, z])
+    f0 = np.asarray(arccos.phi0(x, wt))
+    f1 = np.asarray(arccos.phi1(x, wt))
+    cos = float(y @ z)
+    assert abs(f0[0] @ f0[1] - ref.kappa0(cos)) < 0.01
+    assert abs(f1[0] @ f1[1] - ref.kappa1(cos)) < 0.01
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    da=st.integers(1, 20),
+    db=st.integers(1, 20),
+    m=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tensor_srht_matches_ref(b, da, db, m, seed):
+    rng = np.random.RandomState(seed)
+    a = rng.randn(b, da).astype(np.float32)
+    bb = rng.randn(b, db).astype(np.float32)
+    d1, d2, sel1t, sel2t = tensor_srht.make_params(rng, da, db, m)
+    got = np.asarray(tensor_srht.tensor_srht(a, bb, d1, d2, sel1t, sel2t))
+    want = np.asarray(ref.tensor_srht_ref(a, bb, d1, d2, sel1t, sel2t))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_tensor_srht_unbiased_inner_product():
+    # E<Q²(a⊗b), Q²(a'⊗b')> = <a,a'>·<b,b'>
+    rng = np.random.RandomState(11)
+    da, db, m = 12, 9, 64
+    a, a2 = rng.randn(da).astype(np.float32), rng.randn(da).astype(np.float32)
+    b, b2 = rng.randn(db).astype(np.float32), rng.randn(db).astype(np.float32)
+    exact = float((a @ a2) * (b @ b2))
+    trials = 400
+    acc = 0.0
+    for _ in range(trials):
+        d1, d2, sel1t, sel2t = tensor_srht.make_params(rng, da, db, m)
+        qa = np.asarray(
+            tensor_srht.tensor_srht(np.stack([a, a2]), np.stack([b, b2]), d1, d2, sel1t, sel2t)
+        )
+        acc += float(qa[0] @ qa[1])
+    mean = acc / trials
+    assert abs(mean - exact) < 0.2 * (abs(exact) + 1.0), f"mean={mean} exact={exact}"

@@ -1,0 +1,55 @@
+"""Blocked-FWHT kernel vs dense Hadamard oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fwht
+from compile.kernels import ref
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 16),
+    logn=st.integers(0, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fwht_matches_dense(b, logn, seed):
+    n = 1 << logn
+    rng = np.random.RandomState(seed)
+    x = rng.randn(b, n).astype(np.float32)
+    got = np.asarray(fwht.fwht_norm(x))
+    want = np.asarray(ref.fwht_norm_ref(x))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_fwht_is_isometry():
+    rng = np.random.RandomState(3)
+    x = rng.randn(4, 512).astype(np.float32)
+    y = np.asarray(fwht.fwht_norm(x))
+    np.testing.assert_allclose(
+        np.linalg.norm(x, axis=1), np.linalg.norm(y, axis=1), rtol=1e-4
+    )
+
+
+def test_fwht_involution():
+    rng = np.random.RandomState(4)
+    x = rng.randn(2, 256).astype(np.float32)
+    y = np.asarray(fwht.fwht_norm(np.asarray(fwht.fwht_norm(x))))
+    np.testing.assert_allclose(y, x, rtol=1e-3, atol=1e-4)
+
+
+def test_multi_stage_factorization():
+    # n = 2^14 exercises the two-stage (H_a ⊗ I)(I ⊗ H_c) path
+    fs = fwht._factor(1 << 14)
+    assert all(f <= 128 for f in fs)
+    assert np.prod(fs) == 1 << 14
+    rng = np.random.RandomState(5)
+    x = rng.randn(1, 1 << 14).astype(np.float32)
+    y = np.asarray(fwht.fwht_norm(x))
+    # isometry is a sufficient smoke check at this size
+    np.testing.assert_allclose(np.linalg.norm(y), np.linalg.norm(x), rtol=1e-4)
+
+
+def test_hadamard_matrix_orthogonal():
+    h = fwht.hadamard_matrix(64)
+    np.testing.assert_allclose(h @ h.T, 64 * np.eye(64), atol=1e-5)

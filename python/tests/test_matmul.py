@@ -1,0 +1,65 @@
+"""Hypothesis sweeps of the Pallas matmul+activation kernel vs ref."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul
+from compile.kernels import ref
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 48),
+    k=st.integers(1, 40),
+    n=st.integers(1, 48),
+    act=st.sampled_from([matmul.ACT_NONE, matmul.ACT_RELU, matmul.ACT_STEP]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_act_matches_ref(b, k, n, act, seed):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(b, k).astype(np.float32)
+    wt = rng.randn(k, n).astype(np.float32)
+    got = np.asarray(matmul.matmul_act(x, wt, act=act, scale=0.5))
+    want = np.asarray(ref.matmul_act_ref(x, wt, act=act, scale=0.5))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_dtypes(dtype):
+    # (jax keeps the default x64-disabled config: float64 inputs are
+    # traced as f32, so f32 + bf16 below are the supported dtypes)
+    rng = np.random.RandomState(0)
+    x = rng.randn(8, 16).astype(dtype)
+    wt = rng.randn(16, 8).astype(dtype)
+    got = np.asarray(matmul.matmul_act(x, wt, act=matmul.ACT_RELU))
+    want = np.asarray(ref.matmul_act_ref(x, wt, act=matmul.ACT_RELU))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+    assert got.dtype == dtype
+
+
+def test_bf16_runs():
+    import jax.numpy as jnp
+
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(16, 32), dtype=jnp.bfloat16)
+    wt = jnp.asarray(rng.randn(32, 16), dtype=jnp.bfloat16)
+    got = np.asarray(matmul.matmul_act(x, wt, act=matmul.ACT_RELU), dtype=np.float32)
+    want = np.asarray(
+        ref.matmul_act_ref(x.astype(jnp.float32), wt.astype(jnp.float32), act=matmul.ACT_RELU)
+    )
+    # bf16 has ~3 decimal digits
+    np.testing.assert_allclose(got, want, rtol=0.1, atol=0.1)
+
+
+def test_pick_block_divides():
+    for n in [1, 7, 64, 100, 128, 129, 384, 1000]:
+        b = matmul.pick_block(n)
+        assert n % b == 0 and b <= 128
+
+
+def test_vmem_estimate_reasonable():
+    # 128-tile matmul over k=512: x tile 256 KiB + w tile 256 KiB + out 64 KiB
+    est = matmul.vmem_bytes_estimate(128, 512, 128)
+    assert est == 4 * (128 * 512 + 512 * 128 + 128 * 128)
+    assert est < 2 * 1024 * 1024  # DESIGN §Perf budget

@@ -1,0 +1,75 @@
+"""L2 model: shapes, homogeneity, and statistical agreement with the
+exact NTK (Theorem 2)."""
+
+import numpy as np
+
+from compile.model import NtkRfConfig, build_fn, init_params, param_layout
+from compile.kernels import ref
+
+
+def test_shapes_and_layout():
+    cfg = NtkRfConfig(depth=2, d=16, m0=32, m1=64, ms=32, batch=4)
+    params = init_params(cfg, seed=0)
+    layout = param_layout(cfg)
+    assert len(params) == len(layout)
+    assert len(layout) >= 12  # 6 per layer + shared hadamard blocks
+    for p, (_, shape) in zip(params, layout):
+        assert p.shape == tuple(shape)
+    fn = build_fn(cfg)
+    x = np.random.RandomState(0).randn(4, 16).astype(np.float32)
+    (feats,) = fn(x, *params)
+    assert feats.shape == (4, cfg.feature_dim)
+
+
+def test_scale_homogeneity_and_zero():
+    cfg = NtkRfConfig(depth=2, d=8, m0=16, m1=32, ms=16, batch=3)
+    params = init_params(cfg, seed=1)
+    fn = build_fn(cfg)
+    rng = np.random.RandomState(2)
+    x = rng.randn(3, 8).astype(np.float32)
+    x[2] = 0.0
+    (f1,) = fn(x, *params)
+    (f2,) = fn(2.0 * x, *params)
+    f1, f2 = np.asarray(f1), np.asarray(f2)
+    np.testing.assert_allclose(f2[:2], 2.0 * f1[:2], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(f1[2], 0.0, atol=1e-6)
+
+
+def test_inner_products_approximate_ntk():
+    # Theorem 2: <Ψ(y),Ψ(z)> ≈ Θ^{(L)}(y,z); average over fresh parameter
+    # draws and compare with the exact Definition-1 value.
+    depth, d = 2, 10
+    cfg = NtkRfConfig(depth=depth, d=d, m0=512, m1=2048, ms=512, batch=2)
+    rng = np.random.RandomState(3)
+    y = rng.randn(d).astype(np.float32)
+    z = rng.randn(d).astype(np.float32)
+    x = np.stack([y, z])
+    exact = ref.theta_ntk_ref(y, z, depth)
+    fn = build_fn(cfg)
+    trials = 6
+    acc = 0.0
+    for t in range(trials):
+        params = init_params(cfg, seed=100 + t)
+        (f,) = fn(x, *params)
+        f = np.asarray(f)
+        acc += float(f[0] @ f[1])
+    mean = acc / trials
+    assert abs(mean - exact) < 0.12 * (abs(exact) + 1.0), f"mean={mean} exact={exact}"
+
+
+def test_self_kernel_tracks_depth_plus_one():
+    depth, d = 3, 8
+    cfg = NtkRfConfig(depth=depth, d=d, m0=256, m1=1024, ms=256, batch=1)
+    rng = np.random.RandomState(4)
+    x = rng.randn(1, d).astype(np.float32)
+    n2 = float((x**2).sum())
+    fn = build_fn(cfg)
+    acc = 0.0
+    trials = 6
+    for t in range(trials):
+        params = init_params(cfg, seed=200 + t)
+        (f,) = fn(x, *params)
+        acc += float((np.asarray(f) ** 2).sum())
+    mean = acc / trials
+    exact = (depth + 1) * n2
+    assert abs(mean - exact) < 0.15 * exact, f"mean={mean} exact={exact}"

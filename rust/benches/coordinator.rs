@@ -1,0 +1,93 @@
+//! Coordinator benches: dynamic-batcher policy sweep (deadline vs batch
+//! size — the DESIGN.md ablation) and streaming-pipeline throughput vs
+//! worker count, over a Rust-native backend (PJRT path measured in
+//! examples/serve_features.rs).
+
+use ntk_sketch::bench::Table;
+use ntk_sketch::coordinator::{
+    train_streaming, BatchPolicy, FeatureServer, NativeBackend, PipelineConfig,
+};
+use ntk_sketch::features::ntk_rf::{NtkRf, NtkRfConfig};
+use ntk_sketch::rng::Rng;
+use ntk_sketch::tensor::Mat;
+use std::time::Duration;
+
+fn main() {
+    let d = 64;
+    let cfg = NtkRfConfig::for_budget(2, 512);
+
+    println!("== batcher policy sweep: 2000 closed-loop requests, 4 clients ==");
+    let t = Table::new(&["max_batch", "deadline", "req/s", "p50", "p99", "fill%"]);
+    for &max_batch in &[16usize, 64, 256] {
+        for &deadline_ms in &[1u64, 5, 20] {
+            let (server, client) = FeatureServer::start(
+                move || {
+                    let mut rng = Rng::new(7);
+                    NativeBackend {
+                        featurizer: NtkRf::new(d, cfg, &mut rng),
+                        batch: max_batch,
+                        input_dim: d,
+                    }
+                },
+                2,
+                BatchPolicy { max_batch, max_delay: Duration::from_millis(deadline_ms) },
+                32,
+            );
+            let n_req = 2000;
+            let clients = 4;
+            let t0 = std::time::Instant::now();
+            std::thread::scope(|s| {
+                for c in 0..clients {
+                    let cl = client.clone();
+                    s.spawn(move || {
+                        let mut rng = Rng::new(100 + c as u64);
+                        for _ in 0..n_req / clients {
+                            let _ = cl.featurize(rng.gauss_vec(d));
+                        }
+                    });
+                }
+            });
+            let secs = t0.elapsed().as_secs_f64();
+            let m = &server.metrics;
+            let fill = 1.0
+                - ntk_sketch::coordinator::Metrics::get(&m.pad_rows) as f64
+                    / (ntk_sketch::coordinator::Metrics::get(&m.batches) as f64
+                        * max_batch as f64).max(1.0);
+            t.row(&[
+                format!("{max_batch}"),
+                format!("{deadline_ms}ms"),
+                format!("{:.0}", n_req as f64 / secs),
+                format!("{}us", m.request_latency.quantile_us(0.5)),
+                format!("{}us", m.request_latency.quantile_us(0.99)),
+                format!("{:.0}%", 100.0 * fill),
+            ]);
+            drop(client);
+            server.join();
+        }
+    }
+
+    println!("\n== streaming pipeline: rows/s vs workers (n=4096, m=512) ==");
+    let t = Table::new(&["workers", "wall", "rows/s"]);
+    let mut rng = Rng::new(8);
+    let n = 4096;
+    let x = Mat::from_vec(n, d, rng.gauss_vec(n * d));
+    let y = Mat::from_vec(n, 1, rng.gauss_vec(n));
+    for &workers in &[1usize, 2, 4, 8] {
+        let mut rng2 = Rng::new(9);
+        let rf = NtkRf::new(d, cfg, &mut rng2);
+        let t0 = std::time::Instant::now();
+        let (_reg, stats) = train_streaming(
+            &x,
+            &y,
+            rf.cfg.m1 + rf.cfg.ms,
+            || |xs: &Mat| ntk_sketch::features::Featurizer::transform(&rf, xs),
+            PipelineConfig { shard_rows: 256, workers, queue_depth: 4 },
+        );
+        let secs = t0.elapsed().as_secs_f64();
+        t.row(&[
+            format!("{workers}"),
+            format!("{:.2}s", secs),
+            format!("{:.0}", stats.rows as f64 / secs),
+        ]);
+    }
+}

@@ -1,0 +1,75 @@
+//! Figure 2b regeneration (scaled): CIFAR-like test accuracy of
+//! CNTKSketch vs GradRF(CNN) as feature dimension sweeps. Paper shape:
+//! CNTKSketch dominates GradRF at every budget and grows with dimension.
+
+use ntk_sketch::bench::{full_scale, Table};
+use ntk_sketch::data::{cifar_like, split};
+use ntk_sketch::features::cntk_sketch::{CntkSketch, CntkSketchConfig};
+use ntk_sketch::features::grad_rf::GradRfCnn;
+use ntk_sketch::features::ImageFeaturizer;
+use ntk_sketch::regression::cv::{lambda_grid, select_lambda_classification};
+use ntk_sketch::regression::{accuracy, RidgeRegressor};
+use ntk_sketch::rng::Rng;
+use ntk_sketch::util::timer::{fmt_secs, timed};
+
+fn main() {
+    let (n, side, dims, depth) = if full_scale() {
+        (1000, 12, vec![256usize, 512, 1024], 3)
+    } else {
+        (400, 8, vec![128usize, 256], 3)
+    };
+    let q = 3;
+    let ds = cifar_like::generate(n, side, 21);
+    let (train0, test) = split::train_test_images(&ds, 0.2, 22);
+    let (train, val) = split::train_test_images(&train0, 0.15, 23);
+    println!(
+        "Fig 2b (scaled): cifar-like n={n} {side}x{side}x3 depth={depth}; train/val/test = {}/{}/{}",
+        train.n(),
+        val.n(),
+        test.n()
+    );
+    let table = Table::new(&["dim", "method", "test acc", "featurize"]);
+    let y_onehot = train.one_hot_centered();
+    let val_labels: Vec<f32> = val.labels.iter().map(|&l| l as f32).collect();
+    let test_labels: Vec<f32> = test.labels.iter().map(|&l| l as f32).collect();
+    for &dim in &dims {
+        let mut rng = Rng::new(2000 + dim as u64);
+        let methods: Vec<(&str, Box<dyn ImageFeaturizer>)> = vec![
+            (
+                "GradRF(CNN)",
+                Box::new(GradRfCnn::for_feature_dim(side, side, 3, depth, q, dim, &mut rng)),
+            ),
+            (
+                "CNTKSketch",
+                Box::new(CntkSketch::new(
+                    side,
+                    side,
+                    3,
+                    CntkSketchConfig::for_budget(depth, q, dim),
+                    &mut rng,
+                )),
+            ),
+        ];
+        for (name, f) in methods {
+            let (blocks, t_feat) = timed(|| {
+                (
+                    f.transform_images(&train.images),
+                    f.transform_images(&val.images),
+                    f.transform_images(&test.images),
+                )
+            });
+            let (ftr, fval, fte) = blocks;
+            let (lam, _) =
+                select_lambda_classification(&ftr, &y_onehot, &fval, &val_labels, &lambda_grid());
+            let r = RidgeRegressor::fit(&ftr, &y_onehot, lam).unwrap();
+            let acc = accuracy(&r.predict(&fte), &test_labels);
+            table.row(&[
+                format!("{}", f.dim()),
+                name.to_string(),
+                format!("{:.1}%", 100.0 * acc),
+                fmt_secs(t_feat),
+            ]);
+        }
+    }
+    println!("\npaper shape: CNTKSketch above GradRF at every feature dimension (Fig 2b).");
+}

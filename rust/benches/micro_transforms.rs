@@ -1,0 +1,89 @@
+//! Micro-benchmarks of the sketching primitives (Lemma 1 cost model):
+//! FWHT scaling, SRHT, TensorSRHT, PolySketch power-family by degree, and
+//! the OSNAP-leaves-vs-SRHT-leaves ablation (sparse vs dense input mode
+//! from the Lemma 1 proof).
+
+use ntk_sketch::bench::{bench, Table};
+use ntk_sketch::rng::Rng;
+use ntk_sketch::transforms::{fwht, LeafMode, PolySketch, Srht, TensorSrht};
+
+fn main() {
+    let mut rng = Rng::new(61);
+
+    println!("== FWHT (n log n) ==");
+    let t = Table::new(&["n", "median", "Melem/s"]);
+    for logn in [8usize, 10, 12, 14] {
+        let n = 1 << logn;
+        let mut x = rng.gauss_vec(n);
+        let timing = bench(0.2, || fwht::fwht(std::hint::black_box(&mut x)));
+        t.row(&[
+            format!("{n}"),
+            format!("{:.1}us", 1e6 * timing.median_s),
+            format!("{:.0}", n as f64 / timing.median_s / 1e6),
+        ]);
+    }
+
+    println!("\n== SRHT d -> m=256 ==");
+    let t = Table::new(&["d", "median"]);
+    for d in [256usize, 1024, 4096, 16384] {
+        let s = Srht::new(d, 256, &mut rng);
+        let x = rng.gauss_vec(d);
+        let timing = bench(0.2, || {
+            std::hint::black_box(s.apply(&x));
+        });
+        t.row(&[format!("{d}"), format!("{:.1}us", 1e6 * timing.median_s)]);
+    }
+
+    println!("\n== degree-2 TensorSRHT (m=512) ==");
+    let t = Table::new(&["d1 x d2", "median"]);
+    for d in [128usize, 512, 2048] {
+        let ts = TensorSrht::new(d, d, 512, &mut rng);
+        let a = rng.gauss_vec(d);
+        let b = rng.gauss_vec(d);
+        let timing = bench(0.2, || {
+            std::hint::black_box(ts.apply(&a, &b));
+        });
+        t.row(&[format!("{d}x{d}"), format!("{:.1}us", 1e6 * timing.median_s)]);
+    }
+
+    println!("\n== PolySketch power family Q^p(x^⊗l ⊗ e1^…), d=256, m=512 ==");
+    let t = Table::new(&["degree p", "leaves", "median", "per combine"]);
+    for p in [2usize, 4, 8, 13] {
+        for (lname, mode) in [("OSNAP(4)", LeafMode::Osnap(4)), ("SRHT", LeafMode::Srht)] {
+            let q = PolySketch::new(p, 256, 512, mode, &mut rng);
+            let x = rng.gauss_vec(256);
+            let timing = bench(0.3, || {
+                std::hint::black_box(q.sketch_power_family(&x));
+            });
+            t.row(&[
+                format!("{p}"),
+                lname.into(),
+                format!("{:.2}ms", 1e3 * timing.median_s),
+                format!("{:.0}us", 1e6 * timing.median_s / (2 * p) as f64),
+            ]);
+        }
+    }
+
+    println!("\n== OSNAP leaves win on sparse inputs (Lemma 1 sparse mode) ==");
+    let t = Table::new(&["nnz/d", "OSNAP(4)", "SRHT"]);
+    let d = 4096;
+    for nnz in [16usize, 256, 4096] {
+        let mut x = vec![0.0f32; d];
+        for i in 0..nnz {
+            x[i * (d / nnz)] = 1.0;
+        }
+        let qo = PolySketch::new(4, d, 256, LeafMode::Osnap(4), &mut rng);
+        let qs = PolySketch::new(4, d, 256, LeafMode::Srht, &mut rng);
+        let to = bench(0.2, || {
+            std::hint::black_box(qo.sketch_power(&x));
+        });
+        let ts = bench(0.2, || {
+            std::hint::black_box(qs.sketch_power(&x));
+        });
+        t.row(&[
+            format!("{nnz}/{d}"),
+            format!("{:.0}us", 1e6 * to.median_s),
+            format!("{:.0}us", 1e6 * ts.median_s),
+        ]);
+    }
+}

@@ -1,0 +1,104 @@
+//! Micro-benchmark harness + table printer for `cargo bench` targets
+//! (the offline registry has no criterion). Each bench target is a plain
+//! binary (`harness = false`) that prints the paper-table rows it
+//! regenerates plus timing statistics.
+
+use std::time::Instant;
+
+/// Result of timing a closure.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+}
+
+impl Timing {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.median_s.max(1e-12)
+    }
+}
+
+/// Time `f` adaptively: warm up, then run enough iterations to fill
+/// ~`budget_s` seconds (at least 3 iters).
+pub fn bench<F: FnMut()>(budget_s: f64, mut f: F) -> Timing {
+    // warmup
+    let t0 = Instant::now();
+    f();
+    let first = t0.elapsed().as_secs_f64();
+    let iters = ((budget_s / first.max(1e-9)).ceil() as usize).clamp(3, 10_000);
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    Timing {
+        iters,
+        mean_s: mean,
+        median_s: samples[samples.len() / 2],
+        min_s: samples[0],
+    }
+}
+
+/// Simple fixed-width table printer.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        let headers: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+        let widths = headers.iter().map(|h| h.len().max(10) + 2).collect();
+        let t = Table { headers, widths };
+        t.print_header();
+        t
+    }
+
+    fn print_header(&self) {
+        let mut line = String::new();
+        for (h, w) in self.headers.iter().zip(&self.widths) {
+            line.push_str(&format!("{h:>w$}", w = w));
+        }
+        println!("{line}");
+        println!("{}", "-".repeat(line.len()));
+    }
+
+    pub fn row(&self, cells: &[String]) {
+        let mut line = String::new();
+        for (c, w) in cells.iter().zip(&self.widths) {
+            line.push_str(&format!("{c:>w$}", w = w));
+        }
+        println!("{line}");
+    }
+}
+
+/// Bench-scale knob: NTK_BENCH_SCALE=small|full (default small so the
+/// suite completes in minutes; full reproduces closer-to-paper sizes).
+pub fn full_scale() -> bool {
+    std::env::var("NTK_BENCH_SCALE").map(|v| v == "full").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let t = bench(0.02, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(t.iters >= 3);
+        assert!(t.min_s <= t.median_s && t.median_s <= t.mean_s * 3.0);
+    }
+
+    #[test]
+    fn table_prints() {
+        let t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+}

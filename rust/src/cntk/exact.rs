@@ -1,0 +1,363 @@
+//! Exact ReLU-CNTK with Global Average Pooling — the dynamic program of
+//! Definition 2 (equivalent to Arora et al.'s CNTK DP by Lemma 10).
+//!
+//! Cost per image pair is Θ((d₁d₂)²·q²·L): each layer holds the full
+//! four-index tensors Γ, Γ̇, Π ∈ ℝ^{d₁×d₂×d₁×d₂}. This quadratic-in-pixels
+//! cost is exactly what Table 1 shows exploding (>10⁶ s on CIFAR-10) and
+//! what CNTKSketch (Theorem 4) reduces to linear.
+
+use super::{Image, Patch};
+use crate::linalg::DMat;
+use crate::ntk::arccos::{kappa0, kappa1};
+use crate::util::par;
+
+/// Exact CNTK evaluator for depth L and q×q filters.
+#[derive(Clone, Copy, Debug)]
+pub struct CntkExact {
+    pub depth: usize,
+    pub patch: Patch,
+}
+
+/// Full per-pair result with the per-layer diagnostics the Appendix-F
+/// lemmas constrain (used by tests and the crossover bench).
+pub struct CntkResult {
+    pub theta: f64,
+    /// diag(Π^{(h)})(p,p) for h = 1..=L (y-vs-z pairing).
+    pub pi_diag: Vec<Vec<f64>>,
+    /// N^{(h)}(y) for h = 0..=L.
+    pub n_y: Vec<Vec<f64>>,
+    /// N^{(h)}(z) for h = 0..=L.
+    pub n_z: Vec<Vec<f64>>,
+}
+
+impl CntkExact {
+    pub fn new(depth: usize, q: usize) -> CntkExact {
+        assert!(depth >= 1);
+        CntkExact { depth, patch: Patch::new(q) }
+    }
+
+    /// Θ_cntk^{(L)}(y, z).
+    pub fn theta(&self, y: &Image, z: &Image) -> f64 {
+        self.run(y, z).theta
+    }
+
+    /// Full DP with diagnostics.
+    pub fn run(&self, y: &Image, z: &Image) -> CntkResult {
+        assert_eq!((y.h, y.w, y.c), (z.h, z.w, z.c), "CNTK: image shapes must match");
+        let (h, w) = (y.h, y.w);
+        let p = h * w;
+        let q2 = (self.patch.q * self.patch.q) as f64;
+        let l_total = self.depth;
+
+        // N^{(0)}_{ij}(x) = q² Σ_l x_{ijl}²  (Definition 2 step 1)
+        let n0 = |x: &Image| -> Vec<f64> {
+            (0..p)
+                .map(|pp| {
+                    let (i, j) = (pp / w, pp % w);
+                    q2 * x.pixel(i, j).iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+                })
+                .collect()
+        };
+        let mut n_y = vec![n0(y)];
+        let mut n_z = vec![n0(z)];
+        for _hh in 1..=l_total {
+            n_y.push(self.n_step(n_y.last().unwrap(), h, w, q2));
+            n_z.push(self.n_step(n_z.last().unwrap(), h, w, q2));
+        }
+
+        // Γ^{(0)} = Σ_l y_{(:,:,l)} ⊗ z_{(:,:,l)}
+        let mut gamma = vec![0.0f64; p * p];
+        for pp in 0..p {
+            let (i, j) = (pp / w, pp % w);
+            let py = y.pixel(i, j);
+            for pq in 0..p {
+                let (i2, j2) = (pq / w, pq % w);
+                let pz = z.pixel(i2, j2);
+                gamma[pp * p + pq] =
+                    py.iter().zip(pz.iter()).map(|(&a, &b)| a as f64 * b as f64).sum();
+            }
+        }
+
+        let mut pi = vec![0.0f64; p * p]; // Π^{(0)} = 0
+        let mut pi_diag = Vec::with_capacity(l_total);
+
+        for hh in 1..=l_total {
+            // patch sums of Γ^{(h-1)} with diagonal (shared) offsets
+            let psum = self.patch_sum_diag(&gamma, h, w);
+            let ny = &n_y[hh];
+            let nz = &n_z[hh];
+            // Γ^{(h)} (Eq. 104) and Γ̇^{(h)} (Eq. 105)
+            let mut gamma_new = vec![0.0f64; p * p];
+            let mut gamma_dot = vec![0.0f64; p * p];
+            for pp in 0..p {
+                for pq in 0..p {
+                    let denom = (ny[pp] * nz[pq]).sqrt();
+                    let arg = if denom > 0.0 {
+                        (psum[pp * p + pq] / denom).clamp(-1.0, 1.0)
+                    } else {
+                        0.0
+                    };
+                    gamma_new[pp * p + pq] = denom / q2 * kappa1(arg);
+                    gamma_dot[pp * p + pq] = kappa0(arg) / q2;
+                }
+            }
+            // Π update (Eqs. 106–107)
+            if hh < l_total {
+                let mut combined = vec![0.0f64; p * p];
+                for k in 0..p * p {
+                    combined[k] = pi[k] * gamma_dot[k] + gamma_new[k];
+                }
+                pi = self.patch_sum_diag(&combined, h, w);
+            } else {
+                for k in 0..p * p {
+                    pi[k] *= gamma_dot[k];
+                }
+            }
+            pi_diag.push((0..p).map(|k| pi[k * p + k]).collect());
+            gamma = gamma_new;
+        }
+
+        // GAP (Eq. 108)
+        let theta = pi.iter().sum::<f64>() / ((p * p) as f64);
+        CntkResult { theta, pi_diag, n_y, n_z }
+    }
+
+    /// N^{(h)} = (1/q²) Σ_{a,b} N^{(h-1)}_{i+a,j+b} (zero-padded).
+    fn n_step(&self, prev: &[f64], h: usize, w: usize, q2: f64) -> Vec<f64> {
+        let mut out = vec![0.0f64; h * w];
+        for i in 0..h {
+            for j in 0..w {
+                let mut s = 0.0;
+                for (ii, jj) in self.patch.offsets(i, j, h, w) {
+                    s += prev[ii * w + jj];
+                }
+                out[i * w + j] = s / q2;
+            }
+        }
+        out
+    }
+
+    /// S[p,p'] = Σ_{a,b} T[(i+a, j+b), (i'+a, j'+b)] — both pixels shifted
+    /// by the *same* offset (the convolution's weight sharing), zero pad.
+    fn patch_sum_diag(&self, t: &[f64], h: usize, w: usize) -> Vec<f64> {
+        let p = h * w;
+        let mut out = vec![0.0f64; p * p];
+        let r = self.patch.radius();
+        for i in 0..h {
+            for j in 0..w {
+                let pp = i * w + j;
+                for i2 in 0..h {
+                    for j2 in 0..w {
+                        let pq = i2 * w + j2;
+                        let mut s = 0.0;
+                        for a in -r..=r {
+                            for b in -r..=r {
+                                let (ia, ja) = (i as isize + a, j as isize + b);
+                                let (ib, jb) = (i2 as isize + a, j2 as isize + b);
+                                if ia >= 0
+                                    && ja >= 0
+                                    && ib >= 0
+                                    && jb >= 0
+                                    && (ia as usize) < h
+                                    && (ja as usize) < w
+                                    && (ib as usize) < h
+                                    && (jb as usize) < w
+                                {
+                                    s += t[(ia as usize * w + ja as usize) * p
+                                        + (ib as usize * w + jb as usize)];
+                                }
+                            }
+                        }
+                        out[pp * p + pq] = s;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Exact CNTK Gram matrix over a set of images — the Table 1 baseline.
+    pub fn gram(&self, imgs: &[Image]) -> DMat {
+        let n = imgs.len();
+        let mut out = DMat::zeros(n, n);
+        // upper triangle in parallel over i
+        let vals = std::sync::Mutex::new(&mut out.data);
+        par::par_chunks(n, |lo, hi| {
+            for i in lo..hi {
+                let mut row = vec![0.0f64; n];
+                for j in i..n {
+                    row[j] = self.theta(&imgs[i], &imgs[j]);
+                }
+                let mut g = vals.lock().unwrap();
+                g[i * n + i..i * n + n].copy_from_slice(&row[i..]);
+            }
+        });
+        for i in 0..n {
+            for j in 0..i {
+                out.data[i * n + j] = out.data[j * n + i];
+            }
+        }
+        out
+    }
+
+    /// Cross Gram K[i,j] = Θ(a_i, b_j).
+    pub fn cross_gram(&self, a: &[Image], b: &[Image]) -> DMat {
+        let (na, nb) = (a.len(), b.len());
+        let mut out = DMat::zeros(na, nb);
+        let vals = std::sync::Mutex::new(&mut out.data);
+        par::par_chunks(na, |lo, hi| {
+            for i in lo..hi {
+                let mut row = vec![0.0f64; nb];
+                for j in 0..nb {
+                    row[j] = self.theta(&a[i], &b[j]);
+                }
+                let mut g = vals.lock().unwrap();
+                g[i * nb..(i + 1) * nb].copy_from_slice(&row);
+            }
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ntk::relu_ntk::{sigma, sigma_dot};
+    use crate::rng::Rng;
+
+    fn rand_image(rng: &mut Rng, h: usize, w: usize, c: usize) -> Image {
+        Image::from_vec(h, w, c, rng.gauss_vec(h * w * c))
+    }
+
+    #[test]
+    fn one_by_one_image_reduces_to_scalar_recursion() {
+        // For 1×1 images and q=1 the DP collapses to:
+        //   t^(0)=0; t^(h)=t^(h-1)·Σ̇^(h)(cos)+Σ^(h)(cos) (h<L);
+        //   Θ = ‖y‖‖z‖·t^(L-1)·Σ̇^(L)(cos)
+        let mut rng = Rng::new(111);
+        let c = 6;
+        let y = rand_image(&mut rng, 1, 1, c);
+        let z = rand_image(&mut rng, 1, 1, c);
+        let ny = y.frob_norm();
+        let nz = z.frob_norm();
+        let cos = y
+            .data
+            .iter()
+            .zip(z.data.iter())
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum::<f64>()
+            / (ny * nz);
+        for l in 2..=4 {
+            let cntk = CntkExact::new(l, 1);
+            let got = cntk.theta(&y, &z);
+            let mut t = 0.0;
+            for hh in 1..l {
+                t = t * sigma_dot(hh, cos) + sigma(hh, cos);
+            }
+            let expect = ny * nz * t * sigma_dot(l, cos);
+            assert!(
+                (got - expect).abs() < 1e-9 * expect.abs().max(1.0),
+                "L={l}: {got} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn pi_diag_matches_lemma13_norm_values() {
+        // Lemma 13: Π^{(h)}_{ij,ij}(y,y) = h·N^{(h+1)}_{ij}(y) for h < L,
+        // and Π^{(L)} diag = (L-1)/q² · N^{(L)}.
+        let mut rng = Rng::new(112);
+        let y = rand_image(&mut rng, 4, 3, 2);
+        let l = 3;
+        let cntk = CntkExact::new(l, 3);
+        let res = cntk.run(&y, &y);
+        let q2 = 9.0;
+        for hh in 1..l {
+            let diag = &res.pi_diag[hh - 1];
+            for (p_idx, &v) in diag.iter().enumerate() {
+                let expect = hh as f64 * res.n_y[hh + 1][p_idx];
+                assert!(
+                    (v - expect).abs() < 1e-7 * expect.abs().max(1.0),
+                    "h={hh} p={p_idx}: {v} vs {expect}"
+                );
+            }
+        }
+        let diag_l = &res.pi_diag[l - 1];
+        for (p_idx, &v) in diag_l.iter().enumerate() {
+            let expect = (l as f64 - 1.0) / q2 * res.n_y[l][p_idx];
+            assert!(
+                (v - expect).abs() < 1e-7 * expect.abs().max(1.0),
+                "p={p_idx}: {v} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn theta_symmetric() {
+        let mut rng = Rng::new(113);
+        let y = rand_image(&mut rng, 3, 3, 3);
+        let z = rand_image(&mut rng, 3, 3, 3);
+        let cntk = CntkExact::new(2, 3);
+        let a = cntk.theta(&y, &z);
+        let b = cntk.theta(&z, &y);
+        assert!((a - b).abs() < 1e-9 * a.abs().max(1.0));
+    }
+
+    #[test]
+    fn gram_psd_and_matches_pointwise() {
+        let mut rng = Rng::new(114);
+        let imgs: Vec<Image> = (0..6).map(|_| rand_image(&mut rng, 3, 3, 2)).collect();
+        let cntk = CntkExact::new(2, 3);
+        let g = cntk.gram(&imgs);
+        for i in 0..6 {
+            for j in 0..6 {
+                assert!((g.at(i, j) - cntk.theta(&imgs[i], &imgs[j])).abs() < 1e-9);
+            }
+        }
+        let (eigs, _) = crate::linalg::jacobi_eigen(&g, 60);
+        assert!(eigs[0] > -1e-8 * eigs.last().unwrap().abs(), "min eig {}", eigs[0]);
+    }
+
+    #[test]
+    fn n_step_conserves_total_mass_interior() {
+        // On an all-ones image, N at a pixel stays constant as long as the
+        // receptive field (radius h) stays in bounds; once it reaches the
+        // zero-padded border it strictly decreases.
+        let im = Image::from_vec(5, 5, 1, vec![1.0; 25]);
+        let cntk = CntkExact::new(3, 3);
+        let res = cntk.run(&im, &im);
+        // pixel (2,2): border distance 2 ⇒ constant through h = 2
+        for hh in 0..=2 {
+            assert!((res.n_y[hh][2 * 5 + 2] - 9.0).abs() < 1e-9, "h={hh}");
+        }
+        // at h = 3 the field hits the border
+        assert!(res.n_y[3][2 * 5 + 2] < 9.0 - 1e-6);
+    }
+
+    #[test]
+    fn gap_scale_invariance() {
+        // Θ(c·y, z) = c·Θ(y, z): every layer is 1-homogeneous in each arg.
+        let mut rng = Rng::new(115);
+        let y = rand_image(&mut rng, 3, 3, 2);
+        let z = rand_image(&mut rng, 3, 3, 2);
+        let mut y2 = y.clone();
+        for v in &mut y2.data {
+            *v *= 2.5;
+        }
+        let cntk = CntkExact::new(3, 3);
+        let t1 = cntk.theta(&y, &z);
+        let t2 = cntk.theta(&y2, &z);
+        assert!((t2 - 2.5 * t1).abs() < 1e-8 * t1.abs().max(1.0), "{t1} {t2}");
+    }
+
+    #[test]
+    fn cross_gram_shape() {
+        let mut rng = Rng::new(116);
+        let a: Vec<Image> = (0..3).map(|_| rand_image(&mut rng, 2, 2, 2)).collect();
+        let b: Vec<Image> = (0..2).map(|_| rand_image(&mut rng, 2, 2, 2)).collect();
+        let cntk = CntkExact::new(2, 3);
+        let g = cntk.cross_gram(&a, &b);
+        assert_eq!((g.rows, g.cols), (3, 2));
+        assert!((g.at(1, 1) - cntk.theta(&a[1], &b[1])).abs() < 1e-12);
+    }
+}

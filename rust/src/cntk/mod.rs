@@ -1,0 +1,114 @@
+//! Convolutional NTK: image type, patch geometry, and the exact
+//! ReLU-CNTK dynamic program (Definition 2 / Appendix F), with Global
+//! Average Pooling. This is the Ω((d₁d₂)²·L) baseline whose cost motivates
+//! CNTKSketch (Theorem 4).
+
+pub mod exact;
+
+/// A dense H×W×C image, channel-minor layout: data[(i*w + j)*c + l].
+#[derive(Clone, Debug)]
+pub struct Image {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<f32>,
+}
+
+impl Image {
+    pub fn zeros(h: usize, w: usize, c: usize) -> Image {
+        Image { h, w, c, data: vec![0.0; h * w * c] }
+    }
+
+    pub fn from_vec(h: usize, w: usize, c: usize, data: Vec<f32>) -> Image {
+        assert_eq!(data.len(), h * w * c);
+        Image { h, w, c, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize, l: usize) -> f32 {
+        self.data[(i * self.w + j) * self.c + l]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize, l: usize) -> &mut f32 {
+        &mut self.data[(i * self.w + j) * self.c + l]
+    }
+
+    /// Channel vector at pixel (i, j).
+    #[inline]
+    pub fn pixel(&self, i: usize, j: usize) -> &[f32] {
+        &self.data[(i * self.w + j) * self.c..(i * self.w + j) * self.c + self.c]
+    }
+
+    /// Flatten to a plain vector (for NTK-on-pixels baselines).
+    pub fn flatten(&self) -> Vec<f32> {
+        self.data.clone()
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+}
+
+/// Convolution patch geometry: odd q×q filters, zero padding (the
+/// convention of Arora et al.'s CNTK and Definition 2's patch sums).
+#[derive(Clone, Copy, Debug)]
+pub struct Patch {
+    pub q: usize,
+}
+
+impl Patch {
+    pub fn new(q: usize) -> Patch {
+        assert!(q % 2 == 1, "filter size must be odd (paper uses q×q, q odd)");
+        Patch { q }
+    }
+
+    pub fn radius(&self) -> isize {
+        (self.q as isize - 1) / 2
+    }
+
+    /// Iterate valid in-bounds offsets (a, b) for pixel (i, j) in an h×w
+    /// grid — out-of-range taps are zero-padded, i.e. skipped.
+    pub fn offsets(&self, i: usize, j: usize, h: usize, w: usize) -> Vec<(usize, usize)> {
+        let r = self.radius();
+        let mut out = Vec::with_capacity(self.q * self.q);
+        for a in -r..=r {
+            for b in -r..=r {
+                let ii = i as isize + a;
+                let jj = j as isize + b;
+                if ii >= 0 && jj >= 0 && (ii as usize) < h && (jj as usize) < w {
+                    out.push((ii as usize, jj as usize));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_indexing() {
+        let mut im = Image::zeros(2, 3, 4);
+        *im.at_mut(1, 2, 3) = 7.0;
+        assert_eq!(im.at(1, 2, 3), 7.0);
+        assert_eq!(im.pixel(1, 2)[3], 7.0);
+        assert_eq!(im.flatten().len(), 24);
+    }
+
+    #[test]
+    fn patch_offsets_interior_and_border() {
+        let p = Patch::new(3);
+        assert_eq!(p.offsets(1, 1, 3, 3).len(), 9);
+        assert_eq!(p.offsets(0, 0, 3, 3).len(), 4);
+        assert_eq!(p.offsets(0, 1, 3, 3).len(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "odd")]
+    fn rejects_even_filters() {
+        Patch::new(4);
+    }
+}

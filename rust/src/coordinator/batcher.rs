@@ -1,0 +1,186 @@
+//! Dynamic batching policy: accumulate requests until the batch is full
+//! or the oldest request's deadline expires — the standard serving
+//! trade-off (throughput needs full fixed-shape batches for the PJRT
+//! executable; latency wants early flushes). Pure state machine, driven
+//! by the server loop; unit-testable without threads.
+
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// flush when this many requests are pending (= executable batch).
+    pub max_batch: usize,
+    /// flush when the oldest pending request has waited this long.
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 64, max_delay: Duration::from_millis(2) }
+    }
+}
+
+/// Accumulator for pending items of type T.
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    pending: Vec<T>,
+    oldest: Option<Instant>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Batcher<T> {
+        assert!(policy.max_batch >= 1);
+        Batcher { policy, pending: Vec::with_capacity(policy.max_batch), oldest: None }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Add an item; returns a full batch if this push filled it.
+    pub fn push(&mut self, item: T, now: Instant) -> Option<Vec<T>> {
+        if self.pending.is_empty() {
+            self.oldest = Some(now);
+        }
+        self.pending.push(item);
+        if self.pending.len() >= self.policy.max_batch {
+            return Some(self.take());
+        }
+        None
+    }
+
+    /// Flush if the oldest item's deadline has passed.
+    pub fn poll(&mut self, now: Instant) -> Option<Vec<T>> {
+        match self.oldest {
+            Some(t0) if !self.pending.is_empty() && now.duration_since(t0) >= self.policy.max_delay => {
+                Some(self.take())
+            }
+            _ => None,
+        }
+    }
+
+    /// Time until the current deadline (for recv_timeout), if any.
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.oldest.map(|t0| {
+            let elapsed = now.duration_since(t0);
+            self.policy.max_delay.saturating_sub(elapsed)
+        })
+    }
+
+    /// Drain whatever is pending (shutdown path).
+    pub fn take(&mut self) -> Vec<T> {
+        self.oldest = None;
+        std::mem::take(&mut self.pending)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(max_batch: usize, ms: u64) -> BatchPolicy {
+        BatchPolicy { max_batch, max_delay: Duration::from_millis(ms) }
+    }
+
+    #[test]
+    fn flushes_on_full_batch() {
+        let mut b = Batcher::new(policy(3, 1000));
+        let t = Instant::now();
+        assert!(b.push(1, t).is_none());
+        assert!(b.push(2, t).is_none());
+        let out = b.push(3, t).expect("full batch");
+        assert_eq!(out, vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b = Batcher::new(policy(10, 5));
+        let t0 = Instant::now();
+        b.push(1, t0);
+        b.push(2, t0);
+        assert!(b.poll(t0).is_none());
+        assert!(b.poll(t0 + Duration::from_millis(4)).is_none());
+        let out = b.poll(t0 + Duration::from_millis(5)).expect("deadline flush");
+        assert_eq!(out, vec![1, 2]);
+    }
+
+    #[test]
+    fn deadline_tracks_oldest_item() {
+        let mut b = Batcher::new(policy(10, 10));
+        let t0 = Instant::now();
+        b.push(1, t0);
+        b.push(2, t0 + Duration::from_millis(8));
+        // deadline measured from item 1
+        assert!(b.poll(t0 + Duration::from_millis(10)).is_some());
+    }
+
+    #[test]
+    fn time_to_deadline_counts_down() {
+        let mut b: Batcher<u32> = Batcher::new(policy(10, 10));
+        let t0 = Instant::now();
+        assert!(b.time_to_deadline(t0).is_none());
+        b.push(1, t0);
+        let ttd = b.time_to_deadline(t0 + Duration::from_millis(3)).unwrap();
+        assert!(ttd <= Duration::from_millis(7));
+        let ttd2 = b.time_to_deadline(t0 + Duration::from_millis(30)).unwrap();
+        assert_eq!(ttd2, Duration::ZERO);
+    }
+
+    #[test]
+    fn empty_poll_none_and_take_resets() {
+        let mut b: Batcher<u32> = Batcher::new(policy(2, 1));
+        assert!(b.poll(Instant::now()).is_none());
+        b.push(7, Instant::now());
+        let v = b.take();
+        assert_eq!(v, vec![7]);
+        assert!(b.is_empty());
+        assert!(b.time_to_deadline(Instant::now()).is_none());
+    }
+
+    /// Property: no item is lost or duplicated across a random sequence
+    /// of pushes and polls.
+    #[test]
+    fn conservation_property() {
+        use crate::rng::Rng;
+        use crate::util::prop::{self, Config};
+        prop::check("batcher conservation", Config { cases: 32, seed: 99 }, |rng: &mut Rng| {
+            let mb = 1 + rng.below(8);
+            let mut b = Batcher::new(policy(mb, 3));
+            let t0 = Instant::now();
+            let n = 50 + rng.below(100);
+            let mut out: Vec<u64> = Vec::new();
+            let mut now = t0;
+            for i in 0..n as u64 {
+                now += Duration::from_millis(rng.below(3) as u64);
+                if let Some(batch) = b.push(i, now) {
+                    if batch.len() > mb {
+                        return Err(format!("oversized batch {}", batch.len()));
+                    }
+                    out.extend(batch);
+                }
+                if rng.bernoulli(0.3) {
+                    if let Some(batch) = b.poll(now) {
+                        out.extend(batch);
+                    }
+                }
+            }
+            out.extend(b.take());
+            if out.len() != n {
+                return Err(format!("lost items: {} of {n}", out.len()));
+            }
+            let mut sorted = out.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != n {
+                return Err("duplicated items".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,137 @@
+//! Lightweight serving metrics: counters and a log-bucketed latency
+//! histogram with quantile extraction (p50/p95/p99 for the serve bench).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log-bucketed histogram over microsecond latencies: bucket k covers
+/// [2^k, 2^(k+1)) µs, k = 0..=39.
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            buckets: (0..40).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, dur: std::time::Duration) {
+        let us = dur.as_micros().max(1) as u64;
+        let k = (63 - us.leading_zeros() as usize).min(39);
+        self.buckets[k].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    /// Upper edge of the bucket containing quantile `q` (0..1).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (k, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (k + 1);
+            }
+        }
+        1u64 << 40
+    }
+}
+
+/// Aggregate serving metrics shared across threads.
+#[derive(Default)]
+pub struct Metrics {
+    /// end-to-end request latency
+    pub request_latency: LatencyHistogram,
+    /// executable invocation latency
+    pub exec_latency: LatencyHistogram,
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub rows: AtomicU64,
+    /// rows of padding added to fill fixed-shape batches
+    pub pad_rows: AtomicU64,
+}
+
+impl Metrics {
+    pub fn inc(counter: &AtomicU64, by: u64) {
+        counter.fetch_add(by, Ordering::Relaxed);
+    }
+
+    pub fn get(counter: &AtomicU64) -> u64 {
+        counter.load(Ordering::Relaxed)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} batches={} rows={} pad={} req_p50={}us req_p99={}us exec_mean={:.0}us",
+            Self::get(&self.requests),
+            Self::get(&self.batches),
+            Self::get(&self.rows),
+            Self::get(&self.pad_rows),
+            self.request_latency.quantile_us(0.5),
+            self.request_latency.quantile_us(0.99),
+            self.exec_latency.mean_us(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = LatencyHistogram::new();
+        for us in [10u64, 20, 40, 80, 160, 320, 640, 1280, 2560, 100_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 10);
+        let p50 = h.quantile_us(0.5);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 >= 64 && p50 <= 256, "p50={p50}");
+        assert!(p99 >= 100_000, "p99={p99}");
+    }
+
+    #[test]
+    fn mean_tracks_records() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(100));
+        h.record(Duration::from_micros(300));
+        assert!((h.mean_us() - 200.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile_us(0.5), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+}

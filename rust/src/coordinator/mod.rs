@@ -1,0 +1,14 @@
+//! Layer-3 coordinator: the serving/streaming system around the feature
+//! maps — dynamic batcher (size/deadline), worker pool over PJRT or
+//! native backends, streaming featurize→accumulate training pipeline,
+//! and serving metrics.
+
+pub mod batcher;
+pub mod metrics;
+pub mod pipeline;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::Metrics;
+pub use pipeline::{train_streaming, PipelineConfig, PipelineStats};
+pub use server::{BatchBackend, FeatureClient, FeatureServer, NativeBackend};

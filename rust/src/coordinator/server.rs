@@ -1,0 +1,305 @@
+//! FeatureServer: the request path. Clients submit rows; a batcher thread
+//! forms fixed-shape batches (size/deadline policy); worker threads run
+//! the backend (PJRT executable or a Rust-native featurizer) and route
+//! feature rows back to the callers.
+//!
+//! Thread topology:
+//!   clients → mpsc → [batcher thread] → crossbeam-free spmc via a shared
+//!   Mutex<Receiver> → [worker × W] → per-request oneshot channels.
+//! Backends are created *per worker* through a factory (PJRT handles are
+//! not Send).
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::Metrics;
+use crate::tensor::Mat;
+
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// A fixed-batch featurization backend (implemented by `runtime::Engine`
+/// adapters and by Rust-native featurizers).
+pub trait BatchBackend {
+    /// Preferred batch size (the executable's lowered batch).
+    fn batch(&self) -> usize;
+    fn input_dim(&self) -> usize;
+    fn feature_dim(&self) -> usize;
+    /// Featurize exactly `batch()` rows.
+    fn run(&self, x: &Mat) -> Mat;
+}
+
+/// Rust-native adapter: any `Featurizer` serves as a backend.
+pub struct NativeBackend<F: crate::features::Featurizer> {
+    pub featurizer: F,
+    pub batch: usize,
+    pub input_dim: usize,
+}
+
+impl<F: crate::features::Featurizer> BatchBackend for NativeBackend<F> {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+    fn feature_dim(&self) -> usize {
+        self.featurizer.dim()
+    }
+    fn run(&self, x: &Mat) -> Mat {
+        self.featurizer.transform(x)
+    }
+}
+
+struct Request {
+    row: Vec<f32>,
+    t0: Instant,
+    resp: Sender<Vec<f32>>,
+}
+
+/// Handle for submitting rows to a running server.
+#[derive(Clone)]
+pub struct FeatureClient {
+    tx: SyncSender<Request>,
+    input_dim: usize,
+    feature_dim: usize,
+}
+
+impl FeatureClient {
+    /// Submit one row; returns a receiver for its feature vector.
+    pub fn submit(&self, row: Vec<f32>) -> Receiver<Vec<f32>> {
+        assert_eq!(row.len(), self.input_dim, "submit: wrong input dim");
+        let (tx, rx) = channel();
+        let req = Request { row, t0: Instant::now(), resp: tx };
+        self.tx.send(req).expect("server gone");
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn featurize(&self, row: Vec<f32>) -> Vec<f32> {
+        self.submit(row).recv().expect("server dropped response")
+    }
+
+    pub fn feature_dim(&self) -> usize {
+        self.feature_dim
+    }
+}
+
+/// A running feature server; drop (after dropping all clients) to stop.
+pub struct FeatureServer {
+    pub metrics: Arc<Metrics>,
+    batcher_handle: Option<std::thread::JoinHandle<()>>,
+    worker_handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl FeatureServer {
+    /// Start a server with `workers` threads, each owning a backend built
+    /// by `factory`. Queue depth bounds give backpressure.
+    pub fn start<B, FB>(
+        factory: FB,
+        workers: usize,
+        policy: BatchPolicy,
+        queue_depth: usize,
+    ) -> (FeatureServer, FeatureClient)
+    where
+        B: BatchBackend + 'static,
+        FB: Fn() -> B + Send + Sync + 'static,
+    {
+        assert!(workers >= 1);
+        let probe = factory();
+        let input_dim = probe.input_dim();
+        let feature_dim = probe.feature_dim();
+        let exec_batch = probe.batch();
+        drop(probe);
+        let policy = BatchPolicy { max_batch: exec_batch.min(policy.max_batch), ..policy };
+
+        let metrics = Arc::new(Metrics::default());
+        let (req_tx, req_rx) = sync_channel::<Request>(queue_depth);
+        let (batch_tx, batch_rx) = sync_channel::<Vec<Request>>(queue_depth);
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+
+        // batcher thread
+        let m2 = metrics.clone();
+        let batcher_handle = std::thread::spawn(move || {
+            let mut batcher = Batcher::new(policy);
+            loop {
+                let timeout = batcher
+                    .time_to_deadline(Instant::now())
+                    .unwrap_or(std::time::Duration::from_millis(50));
+                match req_rx.recv_timeout(timeout) {
+                    Ok(req) => {
+                        Metrics::inc(&m2.requests, 1);
+                        if let Some(batch) = batcher.push(req, Instant::now()) {
+                            if batch_tx.send(batch).is_err() {
+                                return;
+                            }
+                        }
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                        // flush the tail and exit
+                        let tail = batcher.take();
+                        if !tail.is_empty() {
+                            let _ = batch_tx.send(tail);
+                        }
+                        return;
+                    }
+                }
+                if let Some(batch) = batcher.poll(Instant::now()) {
+                    if batch_tx.send(batch).is_err() {
+                        return;
+                    }
+                }
+            }
+        });
+
+        // worker threads
+        let factory = Arc::new(factory);
+        let mut worker_handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let rx = batch_rx.clone();
+            let m = metrics.clone();
+            let f = factory.clone();
+            worker_handles.push(std::thread::spawn(move || {
+                let backend = f();
+                let b = backend.batch();
+                let d = backend.input_dim();
+                loop {
+                    let batch = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    let Ok(reqs) = batch else { return };
+                    // pack (pad to fixed shape)
+                    let mut x = Mat::zeros(b, d);
+                    for (k, r) in reqs.iter().enumerate() {
+                        x.row_mut(k).copy_from_slice(&r.row);
+                    }
+                    Metrics::inc(&m.pad_rows, (b - reqs.len()) as u64);
+                    let t_exec = Instant::now();
+                    let feats = backend.run(&x);
+                    m.exec_latency.record(t_exec.elapsed());
+                    Metrics::inc(&m.batches, 1);
+                    Metrics::inc(&m.rows, reqs.len() as u64);
+                    for (k, r) in reqs.into_iter().enumerate() {
+                        m.request_latency.record(r.t0.elapsed());
+                        let _ = r.resp.send(feats.row(k).to_vec());
+                    }
+                }
+            }));
+        }
+
+        let client = FeatureClient { tx: req_tx, input_dim, feature_dim };
+        (
+            FeatureServer {
+                metrics,
+                batcher_handle: Some(batcher_handle),
+                worker_handles,
+            },
+            client,
+        )
+    }
+
+    /// Wait for shutdown (all clients dropped ⇒ batcher exits ⇒ workers
+    /// exit once the batch channel drains).
+    pub fn join(mut self) {
+        if let Some(h) = self.batcher_handle.take() {
+            let _ = h.join();
+        }
+        for h in self.worker_handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    pub fn requests_served(&self) -> u64 {
+        Metrics::get(&self.metrics.requests)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::Featurizer;
+    use std::time::Duration;
+
+    /// Deterministic toy featurizer: f(x) = [sum(x), 2·sum(x)].
+    struct Toy;
+    impl Featurizer for Toy {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn transform(&self, x: &Mat) -> Mat {
+            let mut out = Mat::zeros(x.rows, 2);
+            for i in 0..x.rows {
+                let s: f32 = x.row(i).iter().sum();
+                *out.at_mut(i, 0) = s;
+                *out.at_mut(i, 1) = 2.0 * s;
+            }
+            out
+        }
+    }
+
+    fn start_toy(workers: usize, max_batch: usize) -> (FeatureServer, FeatureClient) {
+        FeatureServer::start(
+            move || NativeBackend { featurizer: Toy, batch: max_batch, input_dim: 3 },
+            workers,
+            BatchPolicy { max_batch, max_delay: Duration::from_millis(1) },
+            16,
+        )
+    }
+
+    #[test]
+    fn serves_correct_features() {
+        let (server, client) = start_toy(2, 4);
+        let mut rxs = Vec::new();
+        for i in 0..20 {
+            rxs.push((i, client.submit(vec![i as f32, 1.0, 2.0])));
+        }
+        for (i, rx) in rxs {
+            let f = rx.recv_timeout(Duration::from_secs(5)).expect("response");
+            assert_eq!(f, vec![i as f32 + 3.0, 2.0 * (i as f32 + 3.0)]);
+        }
+        drop(client);
+        server.join();
+    }
+
+    #[test]
+    fn partial_batches_flush_on_deadline() {
+        let (server, client) = start_toy(1, 64);
+        // a single request must still come back (deadline flush)
+        let f = client.featurize(vec![1.0, 2.0, 3.0]);
+        assert_eq!(f, vec![6.0, 12.0]);
+        assert!(Metrics::get(&server.metrics.pad_rows) >= 63);
+        drop(client);
+        server.join();
+    }
+
+    #[test]
+    fn many_concurrent_clients() {
+        let (server, client) = start_toy(4, 8);
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let c = client.clone();
+                std::thread::spawn(move || {
+                    for i in 0..50 {
+                        let v = (t * 50 + i) as f32;
+                        let f = c.featurize(vec![v, 0.0, 0.0]);
+                        assert_eq!(f[0], v);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(server.requests_served(), 400);
+        drop(client);
+        server.join();
+    }
+
+    #[test]
+    #[should_panic(expected = "wrong input dim")]
+    fn rejects_bad_dim() {
+        let (_server, client) = start_toy(1, 4);
+        let _ = client.submit(vec![1.0]);
+    }
+}

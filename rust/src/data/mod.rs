@@ -1,0 +1,91 @@
+//! Dataset substrates. The paper evaluates on MNIST, CIFAR-10 and four
+//! large UCI regression sets; none are shippable offline, so these
+//! generators produce *synthetic stand-ins that preserve the properties
+//! each experiment exercises* (see DESIGN.md §3 for the substitution
+//! argument). All generators are deterministic from a seed.
+
+pub mod cifar_like;
+pub mod mnist_like;
+pub mod split;
+pub mod synth;
+pub mod uci_like;
+
+use crate::cntk::Image;
+use crate::tensor::Mat;
+
+/// A labelled vector dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// n×d features.
+    pub x: Mat,
+    /// n targets (regression) or class ids cast to f32 (classification).
+    pub y: Vec<f32>,
+    /// number of classes (0 ⇒ regression).
+    pub classes: usize,
+    pub name: &'static str,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.x.rows
+    }
+    pub fn d(&self) -> usize {
+        self.x.cols
+    }
+
+    /// One-hot (zero-mean) label matrix for ridge classification — the
+    /// encoding the paper uses (§5.1).
+    pub fn one_hot_centered(&self) -> Mat {
+        assert!(self.classes >= 2);
+        let k = self.classes;
+        let mut y = Mat::zeros(self.n(), k);
+        let off = -1.0 / k as f32;
+        for i in 0..self.n() {
+            let c = self.y[i] as usize;
+            for j in 0..k {
+                *y.at_mut(i, j) = if j == c { 1.0 + off } else { off };
+            }
+        }
+        y
+    }
+
+    /// Targets as an n×1 matrix (regression).
+    pub fn y_mat(&self) -> Mat {
+        Mat::from_vec(self.n(), 1, self.y.clone())
+    }
+}
+
+/// A labelled image dataset.
+#[derive(Clone, Debug)]
+pub struct ImageDataset {
+    pub images: Vec<Image>,
+    pub labels: Vec<usize>,
+    pub classes: usize,
+    pub name: &'static str,
+}
+
+impl ImageDataset {
+    pub fn n(&self) -> usize {
+        self.images.len()
+    }
+
+    /// Flatten images to a vector dataset (for NTK-on-pixels baselines).
+    pub fn flatten(&self) -> Dataset {
+        let n = self.n();
+        let d = self.images[0].data.len();
+        let mut x = Mat::zeros(n, d);
+        for i in 0..n {
+            x.row_mut(i).copy_from_slice(&self.images[i].data);
+        }
+        Dataset {
+            x,
+            y: self.labels.iter().map(|&l| l as f32).collect(),
+            classes: self.classes,
+            name: self.name,
+        }
+    }
+
+    pub fn one_hot_centered(&self) -> Mat {
+        self.flatten().one_hot_centered()
+    }
+}

@@ -1,0 +1,97 @@
+//! Train/test splits and k-fold cross-validation (Table 2 uses 4-fold CV).
+
+use super::{Dataset, ImageDataset};
+use crate::rng::Rng;
+
+/// Split a dataset into (train, test) with `test_frac` held out.
+pub fn train_test(ds: &Dataset, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
+    let n = ds.n();
+    let n_test = ((n as f64) * test_frac).round() as usize;
+    let mut rng = Rng::new(seed);
+    let perm = rng.permutation(n);
+    let (test_idx, train_idx) = perm.split_at(n_test);
+    (subset(ds, train_idx), subset(ds, test_idx))
+}
+
+/// Extract a subset by row indices.
+pub fn subset(ds: &Dataset, idx: &[usize]) -> Dataset {
+    Dataset {
+        x: ds.x.gather_rows(idx),
+        y: idx.iter().map(|&i| ds.y[i]).collect(),
+        classes: ds.classes,
+        name: ds.name,
+    }
+}
+
+/// Split an image dataset.
+pub fn train_test_images(
+    ds: &ImageDataset,
+    test_frac: f64,
+    seed: u64,
+) -> (ImageDataset, ImageDataset) {
+    let n = ds.n();
+    let n_test = ((n as f64) * test_frac).round() as usize;
+    let mut rng = Rng::new(seed);
+    let perm = rng.permutation(n);
+    let pick = |idx: &[usize]| ImageDataset {
+        images: idx.iter().map(|&i| ds.images[i].clone()).collect(),
+        labels: idx.iter().map(|&i| ds.labels[i]).collect(),
+        classes: ds.classes,
+        name: ds.name,
+    };
+    let (test_idx, train_idx) = perm.split_at(n_test);
+    (pick(train_idx), pick(test_idx))
+}
+
+/// k-fold index partition.
+pub fn k_folds(n: usize, k: usize, seed: u64) -> Vec<Vec<usize>> {
+    assert!(k >= 2 && k <= n);
+    let mut rng = Rng::new(seed);
+    let perm = rng.permutation(n);
+    let mut folds = vec![Vec::new(); k];
+    for (pos, &i) in perm.iter().enumerate() {
+        folds[pos % k].push(i);
+    }
+    folds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture;
+
+    #[test]
+    fn split_partitions() {
+        let ds = gaussian_mixture(100, 4, 2, 0.2, 1);
+        let (tr, te) = train_test(&ds, 0.25, 2);
+        assert_eq!(tr.n(), 75);
+        assert_eq!(te.n(), 25);
+        assert_eq!(tr.d(), 4);
+    }
+
+    #[test]
+    fn folds_cover_everything_once() {
+        let folds = k_folds(103, 4, 3);
+        assert_eq!(folds.len(), 4);
+        let mut seen = vec![false; 103];
+        for f in &folds {
+            for &i in f {
+                assert!(!seen[i]);
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+        // balanced within 1
+        let sizes: Vec<usize> = folds.iter().map(|f| f.len()).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn subset_preserves_labels() {
+        let ds = gaussian_mixture(20, 3, 2, 0.2, 4);
+        let sub = subset(&ds, &[5, 7, 9]);
+        assert_eq!(sub.n(), 3);
+        assert_eq!(sub.y[1], ds.y[7]);
+        assert_eq!(sub.x.row(2), ds.x.row(9));
+    }
+}

@@ -1,0 +1,97 @@
+//! Small synthetic vector datasets for quickstarts and unit tests.
+
+use super::Dataset;
+use crate::rng::Rng;
+use crate::tensor::Mat;
+
+/// k-class Gaussian mixture with unit-scale class means.
+pub fn gaussian_mixture(n: usize, d: usize, k: usize, spread: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let means: Vec<Vec<f32>> = (0..k).map(|_| rng.gauss_vec(d)).collect();
+    let mut x = Mat::zeros(n, d);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % k;
+        let row = x.row_mut(i);
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = means[c][j] + (spread as f32) * rng.gauss_f32();
+        }
+        y.push(c as f32);
+    }
+    let perm = rng.permutation(n);
+    let x = x.gather_rows(&perm);
+    let y: Vec<f32> = perm.iter().map(|&i| y[i]).collect();
+    Dataset { x, y, classes: k, name: "gaussian-mixture" }
+}
+
+/// Two interleaved spirals — a classically non-linear 2-class problem.
+pub fn two_spirals(n: usize, noise: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = Mat::zeros(n, 2);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % 2;
+        let t = 0.25 + 3.0 * rng.uniform();
+        let angle = t * std::f64::consts::TAU * 0.75 + if c == 1 { std::f64::consts::PI } else { 0.0 };
+        let r = t / 3.5;
+        *x.at_mut(i, 0) = (r * angle.cos() + noise * rng.gauss()) as f32;
+        *x.at_mut(i, 1) = (r * angle.sin() + noise * rng.gauss()) as f32;
+        y.push(c as f32);
+    }
+    Dataset { x, y, classes: 2, name: "two-spirals" }
+}
+
+/// Nonlinear regression: y = sin(π u·x) + (v·x)² + noise.
+pub fn nonlinear_regression(n: usize, d: usize, noise: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let u: Vec<f32> = rng.gauss_vec(d);
+    let v: Vec<f32> = rng.gauss_vec(d);
+    let mut x = Mat::from_vec(n, d, rng.gauss_vec(n * d));
+    x.scale(1.0 / (d as f32).sqrt());
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let ux = crate::tensor::dot(&u, x.row(i)) as f64;
+        let vx = crate::tensor::dot(&v, x.row(i)) as f64;
+        y.push(((std::f64::consts::PI * ux).sin() + vx * vx + noise * rng.gauss()) as f32);
+    }
+    Dataset { x, y, classes: 0, name: "nonlinear-regression" }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixture_shapes() {
+        let ds = gaussian_mixture(60, 5, 3, 0.3, 1);
+        assert_eq!((ds.n(), ds.d(), ds.classes), (60, 5, 3));
+        assert!(ds.y.iter().all(|&c| c < 3.0));
+    }
+
+    #[test]
+    fn spirals_two_classes() {
+        let ds = two_spirals(100, 0.01, 2);
+        assert_eq!(ds.classes, 2);
+        assert_eq!(ds.d(), 2);
+    }
+
+    #[test]
+    fn regression_has_no_classes() {
+        let ds = nonlinear_regression(50, 6, 0.1, 3);
+        assert_eq!(ds.classes, 0);
+        assert_eq!(ds.n(), 50);
+    }
+
+    #[test]
+    fn one_hot_encoding() {
+        let ds = gaussian_mixture(9, 3, 3, 0.1, 4);
+        let oh = ds.one_hot_centered();
+        assert_eq!((oh.rows, oh.cols), (9, 3));
+        for i in 0..9 {
+            let s: f32 = oh.row(i).iter().sum();
+            assert!(s.abs() < 1e-6, "rows sum to zero");
+            let c = ds.y[i] as usize;
+            assert!((oh.at(i, c) - (1.0 - 1.0 / 3.0)).abs() < 1e-6);
+        }
+    }
+}

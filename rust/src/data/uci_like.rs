@@ -1,0 +1,184 @@
+//! Synthetic stand-ins for the four large UCI regression sets of Table 2
+//! (MillionSongs, WorkLoads, CT slices, Protein). Each family matches the
+//! original's input dimension and a qualitatively similar target process
+//! (smooth nonlinear + noise), at a configurable scaled-down n.
+
+use super::Dataset;
+use crate::rng::Rng;
+use crate::tensor::Mat;
+
+/// Which Table-2 dataset to mimic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UciFamily {
+    /// MillionSongs: d=90 timbre features → release year.
+    MillionSongs,
+    /// WorkLoads: d=21 system counters → runtime.
+    WorkLoads,
+    /// CT: d=384 histogram features → slice location.
+    CtSlices,
+    /// Protein: d=9 physicochemical features → RMSD.
+    Protein,
+}
+
+impl UciFamily {
+    pub fn name(self) -> &'static str {
+        match self {
+            UciFamily::MillionSongs => "millionsongs-like",
+            UciFamily::WorkLoads => "workloads-like",
+            UciFamily::CtSlices => "ct-like",
+            UciFamily::Protein => "protein-like",
+        }
+    }
+
+    pub fn dim(self) -> usize {
+        match self {
+            UciFamily::MillionSongs => 90,
+            UciFamily::WorkLoads => 21,
+            UciFamily::CtSlices => 384,
+            UciFamily::Protein => 9,
+        }
+    }
+
+    /// The paper's full-size n (recorded for the scale substitution note).
+    pub fn paper_n(self) -> usize {
+        match self {
+            UciFamily::MillionSongs => 467_315,
+            UciFamily::WorkLoads => 179_585,
+            UciFamily::CtSlices => 53_500,
+            UciFamily::Protein => 39_617,
+        }
+    }
+
+    fn noise(self) -> f64 {
+        match self {
+            UciFamily::MillionSongs => 0.6,
+            UciFamily::WorkLoads => 0.3,
+            UciFamily::CtSlices => 0.15,
+            UciFamily::Protein => 0.5,
+        }
+    }
+
+    fn latent_rank(self) -> usize {
+        match self {
+            UciFamily::MillionSongs => 12,
+            UciFamily::WorkLoads => 6,
+            UciFamily::CtSlices => 16,
+            UciFamily::Protein => 4,
+        }
+    }
+}
+
+/// Generate n samples: x = A·u + small noise with latent u, target a
+/// smooth nonlinear function of u (Friedman-style) + observation noise.
+/// Inputs are scaled to ‖x‖₂ ≤ 1 rows, as Theorem 3 assumes.
+pub fn generate(family: UciFamily, n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let d = family.dim();
+    let k = family.latent_rank();
+    // mixing matrix
+    let a = Mat::from_vec(d, k, rng.gauss_vec(d * k));
+    let mut x = Mat::zeros(n, d);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let u: Vec<f32> = rng.gauss_vec(k);
+        // x_i = A u + eps
+        let row = x.row_mut(i);
+        for p in 0..d {
+            let mut s = 0.0f32;
+            for q in 0..k {
+                s += a.at(p, q) * u[q];
+            }
+            row[p] = s + 0.1 * rng.gauss_f32();
+        }
+        // Friedman-like smooth target on the latent coords
+        let t = (std::f64::consts::PI * u[0] as f64 * u[1 % k] as f64).sin()
+            + 2.0 * (u[2 % k] as f64 - 0.5).powi(2)
+            + u[3 % k] as f64
+            + 0.5 * (u[0] as f64).tanh();
+        y.push((t + family.noise() * rng.gauss()) as f32);
+    }
+    // row-normalize inputs to the unit ball (Theorem 3's precondition)
+    let mut max_norm = 0.0f32;
+    for i in 0..n {
+        let nrm = crate::tensor::dot(x.row(i), x.row(i)).sqrt();
+        max_norm = max_norm.max(nrm);
+    }
+    if max_norm > 0.0 {
+        x.scale(1.0 / max_norm);
+    }
+    // center targets
+    let mean: f32 = y.iter().sum::<f32>() / n as f32;
+    for v in &mut y {
+        *v -= mean;
+    }
+    Dataset { x, y, classes: 0, name: family.name() }
+}
+
+pub const ALL_FAMILIES: [UciFamily; 4] = [
+    UciFamily::MillionSongs,
+    UciFamily::WorkLoads,
+    UciFamily::CtSlices,
+    UciFamily::Protein,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_match_paper() {
+        assert_eq!(UciFamily::MillionSongs.dim(), 90);
+        assert_eq!(UciFamily::WorkLoads.dim(), 21);
+        assert_eq!(UciFamily::CtSlices.dim(), 384);
+        assert_eq!(UciFamily::Protein.dim(), 9);
+    }
+
+    #[test]
+    fn rows_in_unit_ball_and_targets_centered() {
+        for fam in ALL_FAMILIES {
+            let ds = generate(fam, 200, 17);
+            assert_eq!(ds.d(), fam.dim());
+            for i in 0..ds.n() {
+                let nrm = crate::tensor::dot(ds.x.row(i), ds.x.row(i)).sqrt();
+                assert!(nrm <= 1.0 + 1e-5, "{}: ‖x‖={nrm}", fam.name());
+            }
+            let mean: f64 = ds.y.iter().map(|&v| v as f64).sum::<f64>() / ds.n() as f64;
+            assert!(mean.abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn signal_is_learnable() {
+        // targets must correlate with inputs more than pure noise: a crude
+        // 1-NN regressor should beat predicting 0.
+        let ds = generate(UciFamily::Protein, 400, 23);
+        let mut err_nn = 0.0f64;
+        let mut err_zero = 0.0f64;
+        for i in 300..400 {
+            let mut best = (f32::MAX, 0usize);
+            for j in 0..300 {
+                let d2: f32 = ds
+                    .x
+                    .row(i)
+                    .iter()
+                    .zip(ds.x.row(j).iter())
+                    .map(|(&a, &b)| (a - b) * (a - b))
+                    .sum();
+                if d2 < best.0 {
+                    best = (d2, j);
+                }
+            }
+            err_nn += ((ds.y[i] - ds.y[best.1]) as f64).powi(2);
+            err_zero += (ds.y[i] as f64).powi(2);
+        }
+        assert!(err_nn < 0.9 * err_zero, "1-NN {err_nn} vs zero {err_zero}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(UciFamily::CtSlices, 50, 3);
+        let b = generate(UciFamily::CtSlices, 50, 3);
+        assert_eq!(a.x.data, b.x.data);
+        assert_eq!(a.y, b.y);
+    }
+}

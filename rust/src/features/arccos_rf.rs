@@ -1,0 +1,271 @@
+//! Arc-cosine random features (Cho & Saul; paper Eq. 11), the modified
+//! leverage-score distribution (Eq. 15) and its Gibbs sampler
+//! (Algorithm 3) used for the spectral guarantee of Theorem 3.
+
+use crate::rng::Rng;
+use crate::tensor::Mat;
+
+/// Φ₀(x) = √(2/m)·Step(Wᵀx): 0th-order arc-cosine features.
+/// E⟨Φ₀(y),Φ₀(z)⟩ = κ₀(cos∠(y,z)).
+#[derive(Clone, Debug)]
+pub struct Phi0 {
+    pub d: usize,
+    pub m: usize,
+    w: Mat, // m×d
+}
+
+impl Phi0 {
+    pub fn new(d: usize, m: usize, rng: &mut Rng) -> Phi0 {
+        Phi0 { d, m, w: Mat::from_vec(m, d, rng.gauss_vec(m * d)) }
+    }
+
+    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+        let s = (2.0 / self.m as f32).sqrt();
+        (0..self.m)
+            .map(|i| if crate::tensor::dot(self.w.row(i), x) > 0.0 { s } else { 0.0 })
+            .collect()
+    }
+
+    pub fn apply_mat(&self, x: &Mat) -> Mat {
+        let mut out = x.matmul_nt(&self.w);
+        let s = (2.0 / self.m as f32).sqrt();
+        for v in &mut out.data {
+            *v = if *v > 0.0 { s } else { 0.0 };
+        }
+        out
+    }
+}
+
+/// Φ₁(x) = √(2/m)·ReLU(Wᵀx): 1st-order arc-cosine features.
+/// E⟨Φ₁(y),Φ₁(z)⟩ = ‖y‖‖z‖·κ₁(cos∠(y,z)).
+#[derive(Clone, Debug)]
+pub struct Phi1 {
+    pub d: usize,
+    pub m: usize,
+    w: Mat, // m×d
+}
+
+impl Phi1 {
+    pub fn new(d: usize, m: usize, rng: &mut Rng) -> Phi1 {
+        Phi1 { d, m, w: Mat::from_vec(m, d, rng.gauss_vec(m * d)) }
+    }
+
+    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+        let s = (2.0 / self.m as f32).sqrt();
+        (0..self.m)
+            .map(|i| s * crate::tensor::dot(self.w.row(i), x).max(0.0))
+            .collect()
+    }
+
+    pub fn apply_mat(&self, x: &Mat) -> Mat {
+        let mut out = x.matmul_nt(&self.w);
+        let s = (2.0 / self.m as f32).sqrt();
+        for v in &mut out.data {
+            *v = s * v.max(0.0);
+        }
+        out
+    }
+}
+
+/// Error function (Abramowitz–Stegun 7.1.26, |err| ≤ 1.5e-7) — needed for
+/// the Gibbs conditional CDF; no libm erf in std.
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Standard normal CDF.
+fn norm_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Conditional CDF of the Gibbs coordinate update (Algorithm 3 footnote):
+/// for q(w_j | rest) ∝ (z + w_j²)·exp(−w_j²/2) with z = Σ_{k≠j} w_k²,
+/// F(x) = Φ(x) − x·exp(−x²/2)/(√(2π)·(z+1)).
+pub fn gibbs_conditional_cdf(x: f64, z: f64) -> f64 {
+    norm_cdf(x) - x * (-0.5 * x * x).exp() / ((2.0 * std::f64::consts::PI).sqrt() * (z + 1.0))
+}
+
+/// Invert the conditional CDF by bisection (monotone in x).
+fn gibbs_inverse_cdf(u: f64, z: f64) -> f64 {
+    let (mut lo, mut hi) = (-12.0f64, 12.0f64);
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        if gibbs_conditional_cdf(mid, z) < u {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Draw m i.i.d. samples from q(w) = ‖w‖²/d · N(w; 0, I_d) via Gibbs
+/// sampling with inverse-transform conditionals (Algorithm 3). T=1 sweep
+/// is enough in practice (paper §E.2).
+pub fn gibbs_sample_leverage(d: usize, m: usize, sweeps: usize, rng: &mut Rng) -> Mat {
+    let mut w = Mat::from_vec(m, d, rng.gauss_vec(m * d));
+    for i in 0..m {
+        let row = w.row_mut(i);
+        let mut sq: f64 = row.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        for _t in 0..sweeps {
+            for j in 0..d {
+                let old = row[j] as f64;
+                let z = (sq - old * old).max(0.0);
+                let u = rng.uniform().clamp(1e-12, 1.0 - 1e-12);
+                let new = gibbs_inverse_cdf(u, z);
+                row[j] = new as f32;
+                sq = z + new * new;
+            }
+        }
+    }
+    w
+}
+
+/// Leverage-score-modified 1st-order features Φ̃₁ (Eq. 15):
+/// Φ̃₁(x) = √(2d/m)·ReLU(xᵀ w_i / ‖w_i‖), w_i ~ q(w).
+/// Same expectation as Φ₁ but with the variance profile needed for the
+/// spectral bound (Theorem 7 / Eq. 16).
+#[derive(Clone, Debug)]
+pub struct LeveragePhi1 {
+    pub d: usize,
+    pub m: usize,
+    /// Unit-normalized sample directions (m×d).
+    w_unit: Mat,
+}
+
+impl LeveragePhi1 {
+    pub fn new(d: usize, m: usize, sweeps: usize, rng: &mut Rng) -> LeveragePhi1 {
+        let mut w = gibbs_sample_leverage(d, m, sweeps, rng);
+        w.normalize_rows();
+        LeveragePhi1 { d, m, w_unit: w }
+    }
+
+    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+        let s = (2.0 * self.d as f32 / self.m as f32).sqrt();
+        (0..self.m)
+            .map(|i| s * crate::tensor::dot(self.w_unit.row(i), x).max(0.0))
+            .collect()
+    }
+
+    pub fn apply_mat(&self, x: &Mat) -> Mat {
+        let mut out = x.matmul_nt(&self.w_unit);
+        let s = (2.0 * self.d as f32 / self.m as f32).sqrt();
+        for v in &mut out.data {
+            *v = s * v.max(0.0);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ntk::arccos::{kappa0, kappa1};
+    use crate::tensor::dot;
+
+    fn unit(rng: &mut Rng, d: usize) -> Vec<f32> {
+        let mut v = rng.gauss_vec(d);
+        let n = dot(&v, &v).sqrt();
+        for x in &mut v {
+            *x /= n;
+        }
+        v
+    }
+
+    #[test]
+    fn phi0_estimates_kappa0() {
+        let mut rng = Rng::new(131);
+        let d = 9;
+        let y = unit(&mut rng, d);
+        let z = unit(&mut rng, d);
+        let cos = dot(&y, &z) as f64;
+        let phi = Phi0::new(d, 60_000, &mut rng);
+        let est = dot(&phi.apply(&y), &phi.apply(&z)) as f64;
+        assert!((est - kappa0(cos)).abs() < 0.02, "est={est} exact={}", kappa0(cos));
+    }
+
+    #[test]
+    fn phi1_estimates_kappa1() {
+        let mut rng = Rng::new(132);
+        let d = 9;
+        let y = unit(&mut rng, d);
+        let z = unit(&mut rng, d);
+        let cos = dot(&y, &z) as f64;
+        let phi = Phi1::new(d, 60_000, &mut rng);
+        let est = dot(&phi.apply(&y), &phi.apply(&z)) as f64;
+        assert!((est - kappa1(cos)).abs() < 0.02, "est={est} exact={}", kappa1(cos));
+    }
+
+    #[test]
+    fn erf_known_values() {
+        assert!(erf(0.0).abs() < 1e-6);
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
+        assert!((erf(3.0) - 0.9999779095).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gibbs_cdf_is_valid_cdf() {
+        for &z in &[0.1, 1.0, 5.0, 20.0] {
+            assert!(gibbs_conditional_cdf(-12.0, z) < 1e-6);
+            assert!(gibbs_conditional_cdf(12.0, z) > 1.0 - 1e-6);
+            let mut prev = 0.0;
+            for k in 0..=100 {
+                let x = -8.0 + 16.0 * k as f64 / 100.0;
+                let f = gibbs_conditional_cdf(x, z);
+                assert!(f >= prev - 1e-9, "z={z} x={x}");
+                prev = f;
+            }
+        }
+    }
+
+    #[test]
+    fn gibbs_samples_match_target_moments() {
+        // under q(w) = ‖w‖²/d N(w): E‖w‖² = E_N‖w‖⁴/d = d + 2
+        let mut rng = Rng::new(133);
+        let d = 6;
+        let w = gibbs_sample_leverage(d, 4000, 2, &mut rng);
+        let mean_sq: f64 = (0..w.rows)
+            .map(|i| w.row(i).iter().map(|&v| (v as f64).powi(2)).sum::<f64>())
+            .sum::<f64>()
+            / w.rows as f64;
+        let expect = d as f64 + 2.0;
+        assert!((mean_sq - expect).abs() < 0.25, "E‖w‖²={mean_sq} expect={expect}");
+    }
+
+    #[test]
+    fn leverage_features_estimate_kappa1() {
+        // importance weighting cancels exactly: E⟨Φ̃₁(y),Φ̃₁(z)⟩ = κ₁.
+        let mut rng = Rng::new(134);
+        let d = 8;
+        let y = unit(&mut rng, d);
+        let z = unit(&mut rng, d);
+        let cos = dot(&y, &z) as f64;
+        let phi = LeveragePhi1::new(d, 40_000, 1, &mut rng);
+        let est = dot(&phi.apply(&y), &phi.apply(&z)) as f64;
+        assert!((est - kappa1(cos)).abs() < 0.03, "est={est} exact={}", kappa1(cos));
+    }
+
+    #[test]
+    fn batch_consistency() {
+        let mut rng = Rng::new(135);
+        let d = 7;
+        let phi0 = Phi0::new(d, 33, &mut rng);
+        let phi1 = Phi1::new(d, 33, &mut rng);
+        let x = Mat::from_vec(4, d, rng.gauss_vec(4 * d));
+        let b0 = phi0.apply_mat(&x);
+        let b1 = phi1.apply_mat(&x);
+        for i in 0..4 {
+            assert_eq!(b0.row(i), &phi0.apply(x.row(i))[..]);
+            assert_eq!(b1.row(i), &phi1.apply(x.row(i))[..]);
+        }
+    }
+}

@@ -1,0 +1,358 @@
+//! CNTKSketch — Definition 3 (Theorem 4): sketched features for the
+//! convolutional NTK with GAP, in time **linear** in the number of pixels
+//! (vs. the quadratic exact DP of `cntk::exact`).
+//!
+//! Per pixel (i,j) and layer h:
+//!   μ^h_{ij}  = ⊕_{(a,b)} φ^{h−1}_{i+a,j+b} / √N^h_{ij}       (Eq. 110)
+//!   φ^h_{ij}  = √N^h_{ij}/q · T·⊕_l √c_l Q^{2p+2}(μ^{⊗l}⊗e1…) (κ₁ block)
+//!   φ̇^h_{ij} = 1/q · W·⊕_l √b_l Q^{2p'+1}(μ^{⊗l}⊗e1…)        (κ₀ block)
+//!   η^h_{ij}  = Q²(ψ^{h−1}_{ij} ⊗ φ̇^h_{ij}) ⊕ φ^h_{ij}
+//!   ψ^h_{ij}  = R·⊕_{(a,b)} η^h_{i+a,j+b}          (patch sum = conv)
+//!   ψ^L_{ij}  = Q²(ψ^{L−1}_{ij} ⊗ φ̇^L_{ij})                  (Eq. 113)
+//! Output Ψ(x) = (1/d₁d₂)·G·Σ_{ij} ψ^L_{ij} (GAP + Gaussian JL, Eq. 114).
+//! All sketch instances are shared across pixels and inputs (oblivious).
+
+use super::ImageFeaturizer;
+use crate::cntk::{Image, Patch};
+use crate::ntk::arccos::{kappa0_coeffs, kappa1_coeffs};
+use crate::rng::Rng;
+use crate::tensor::Mat;
+use crate::transforms::{GaussianJl, LeafMode, PolySketch, Srht, TensorSrht};
+
+/// Dimension/truncation knobs of CNTKSketch (Definition 3's s, r, n₁, m).
+#[derive(Clone, Copy, Debug)]
+pub struct CntkSketchConfig {
+    pub depth: usize,
+    /// filter size q (odd).
+    pub q: usize,
+    /// κ₁ truncation p (degree 2p+2).
+    pub p1: usize,
+    /// κ₀ truncation p' (degree 2p'+1).
+    pub p0: usize,
+    /// φ dimension r.
+    pub r: usize,
+    /// ψ / φ̇ dimension s.
+    pub s: usize,
+    /// PolySketch internal dim.
+    pub m_inner: usize,
+    /// output dimension s*.
+    pub s_out: usize,
+}
+
+impl CntkSketchConfig {
+    pub fn for_budget(depth: usize, q: usize, s_out: usize) -> CntkSketchConfig {
+        let s = s_out.clamp(64, 2048);
+        CntkSketchConfig { depth, q, p1: 1, p0: 2, r: s, s, m_inner: s, s_out }
+    }
+}
+
+struct LayerSketch {
+    q_phi: PolySketch,
+    c_sqrt: Vec<f32>,
+    t: Srht,
+    q_dot: PolySketch,
+    b_sqrt: Vec<f32>,
+    w: Srht,
+    q2: TensorSrht,
+    r_mix: Srht,
+}
+
+/// An instantiated CNTKSketch for fixed image geometry (h×w×c).
+pub struct CntkSketch {
+    pub cfg: CntkSketchConfig,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    patch: Patch,
+    s_in: Srht,
+    layers: Vec<LayerSketch>,
+    g: GaussianJl,
+}
+
+impl CntkSketch {
+    pub fn new(h: usize, w: usize, c: usize, cfg: CntkSketchConfig, rng: &mut Rng) -> CntkSketch {
+        assert!(cfg.depth >= 2, "CNTKSketch needs depth ≥ 2 (Π^{{(1)}} ≡ 0 otherwise)");
+        let patch = Patch::new(cfg.q);
+        let q2 = cfg.q * cfg.q;
+        let s_in = Srht::new(c, cfg.r, rng);
+        let deg1 = 2 * cfg.p1 + 2;
+        let deg0 = 2 * cfg.p0 + 1;
+        let c_sqrt: Vec<f32> = kappa1_coeffs(cfg.p1).iter().map(|&x| (x as f32).sqrt()).collect();
+        let b_sqrt: Vec<f32> = kappa0_coeffs(cfg.p0).iter().map(|&x| (x as f32).sqrt()).collect();
+        let mut layers = Vec::with_capacity(cfg.depth);
+        for _ in 0..cfg.depth {
+            layers.push(LayerSketch {
+                q_phi: PolySketch::new(deg1, q2 * cfg.r, cfg.m_inner, LeafMode::Srht, rng),
+                c_sqrt: c_sqrt.clone(),
+                t: Srht::new((deg1 + 1) * cfg.m_inner, cfg.r, rng),
+                q_dot: PolySketch::new(deg0, q2 * cfg.r, cfg.m_inner, LeafMode::Srht, rng),
+                b_sqrt: b_sqrt.clone(),
+                w: Srht::new((deg0 + 1) * cfg.m_inner, cfg.s, rng),
+                q2: TensorSrht::new(cfg.s, cfg.s, cfg.s, rng),
+                r_mix: Srht::new(q2 * (cfg.s + cfg.r), cfg.s, rng),
+            });
+        }
+        let g = GaussianJl::new(cfg.s, cfg.s_out, rng);
+        CntkSketch { cfg, h, w, c, patch, s_in, layers, g }
+    }
+
+    /// N^{(h)} arrays for h = 0..=L (Eq. 103; shared with Definition 2).
+    fn n_layers(&self, x: &Image) -> Vec<Vec<f64>> {
+        let (h, w) = (self.h, self.w);
+        let q2 = (self.cfg.q * self.cfg.q) as f64;
+        let mut n0 = vec![0.0f64; h * w];
+        for i in 0..h {
+            for j in 0..w {
+                n0[i * w + j] =
+                    q2 * x.pixel(i, j).iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+            }
+        }
+        let mut out = vec![n0];
+        for _ in 1..=self.cfg.depth {
+            let prev = out.last().unwrap();
+            let mut next = vec![0.0f64; h * w];
+            for i in 0..h {
+                for j in 0..w {
+                    let mut s = 0.0;
+                    for (ii, jj) in self.patch.offsets(i, j, h, w) {
+                        s += prev[ii * w + jj];
+                    }
+                    next[i * w + j] = s / q2;
+                }
+            }
+            out.push(next);
+        }
+        out
+    }
+
+    /// μ^{(h)}_{ij}: concatenated (zero-padded) neighbour features scaled
+    /// by 1/√N (Eq. 110). `phi` holds per-pixel vectors of length r.
+    fn mu(&self, phi: &[Vec<f32>], i: usize, j: usize, n_h: f64) -> Vec<f32> {
+        let r = self.patch.radius();
+        let q = self.cfg.q;
+        let blk = self.cfg.r;
+        let mut out = vec![0.0f32; q * q * blk];
+        if n_h <= 0.0 {
+            return out;
+        }
+        let inv = (1.0 / n_h.sqrt()) as f32;
+        let mut slot = 0usize;
+        for a in -r..=r {
+            for b in -r..=r {
+                let (ia, ja) = (i as isize + a, j as isize + b);
+                if ia >= 0 && ja >= 0 && (ia as usize) < self.h && (ja as usize) < self.w {
+                    let src = &phi[ia as usize * self.w + ja as usize];
+                    for (k, &v) in src.iter().enumerate() {
+                        out[slot * blk + k] = inv * v;
+                    }
+                }
+                slot += 1;
+            }
+        }
+        out
+    }
+
+    /// Feature map for one image.
+    pub fn features(&self, x: &Image) -> Vec<f32> {
+        assert_eq!((x.h, x.w, x.c), (self.h, self.w, self.c), "CntkSketch: geometry mismatch");
+        let (h, w) = (self.h, self.w);
+        let p = h * w;
+        let q = self.cfg.q as f32;
+        let n = self.n_layers(x);
+
+        // step 2: φ⁰_{ij} = S·x_{(i,j,:)}
+        let mut phi: Vec<Vec<f32>> = (0..p)
+            .map(|pp| self.s_in.apply(x.pixel(pp / w, pp % w)))
+            .collect();
+        let mut psi: Vec<Vec<f32>> = vec![vec![0.0f32; self.cfg.s]; p];
+
+        for (hh, layer) in self.layers.iter().enumerate() {
+            let lvl = hh + 1;
+            let n_h = &n[lvl];
+            // per-pixel φ^h and φ̇^h
+            let mut phi_new: Vec<Vec<f32>> = Vec::with_capacity(p);
+            let mut phi_dot: Vec<Vec<f32>> = Vec::with_capacity(p);
+            for pp in 0..p {
+                let (i, j) = (pp / w, pp % w);
+                let mu = self.mu(&phi, i, j, n_h[pp]);
+                let mut f = super::poly_block(&layer.q_phi, &layer.c_sqrt, &layer.t, &mu);
+                let scale = (n_h[pp].sqrt() as f32) / q;
+                for v in &mut f {
+                    *v *= scale;
+                }
+                phi_new.push(f);
+                let mut fd = super::poly_block(&layer.q_dot, &layer.b_sqrt, &layer.w, &mu);
+                for v in &mut fd {
+                    *v /= q;
+                }
+                phi_dot.push(fd);
+            }
+            if lvl < self.cfg.depth {
+                // η then patch-summed ψ (Eq. 112)
+                let eta: Vec<Vec<f32>> = (0..p)
+                    .map(|pp| {
+                        let mut e = layer.q2.apply(&psi[pp], &phi_dot[pp]);
+                        e.extend_from_slice(&phi_new[pp]);
+                        e
+                    })
+                    .collect();
+                let blk = self.cfg.s + self.cfg.r;
+                let qq = self.cfg.q;
+                let rrad = self.patch.radius();
+                let mut psi_new: Vec<Vec<f32>> = Vec::with_capacity(p);
+                for pp in 0..p {
+                    let (i, j) = (pp / w, pp % w);
+                    let mut cat = vec![0.0f32; qq * qq * blk];
+                    let mut slot = 0usize;
+                    for a in -rrad..=rrad {
+                        for b in -rrad..=rrad {
+                            let (ia, ja) = (i as isize + a, j as isize + b);
+                            if ia >= 0
+                                && ja >= 0
+                                && (ia as usize) < self.h
+                                && (ja as usize) < self.w
+                            {
+                                let src = &eta[ia as usize * self.w + ja as usize];
+                                cat[slot * blk..slot * blk + blk].copy_from_slice(src);
+                            }
+                            slot += 1;
+                        }
+                    }
+                    psi_new.push(layer.r_mix.apply(&cat));
+                }
+                psi = psi_new;
+            } else {
+                // final layer (Eq. 113): ψ^L = Q²(ψ^{L−1} ⊗ φ̇^L)
+                for pp in 0..p {
+                    psi[pp] = layer.q2.apply(&psi[pp], &phi_dot[pp]);
+                }
+            }
+            phi = phi_new;
+        }
+
+        // step 6 (Eq. 114): GAP + Gaussian JL
+        let mut pooled = vec![0.0f32; self.cfg.s];
+        for pp in 0..p {
+            for (k, &v) in psi[pp].iter().enumerate() {
+                pooled[k] += v;
+            }
+        }
+        let inv = 1.0 / p as f32;
+        for v in &mut pooled {
+            *v *= inv;
+        }
+        self.g.apply(&pooled)
+    }
+}
+
+impl ImageFeaturizer for CntkSketch {
+    fn dim(&self) -> usize {
+        self.cfg.s_out
+    }
+
+    fn transform_images(&self, imgs: &[Image]) -> Mat {
+        let rows: Vec<Vec<f32>> =
+            crate::util::par::par_map(imgs.len(), |i| self.features(&imgs[i]));
+        let mut out = Mat::zeros(imgs.len(), self.cfg.s_out);
+        for (i, r) in rows.into_iter().enumerate() {
+            out.row_mut(i).copy_from_slice(&r);
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "CNTKSketch"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cntk::exact::CntkExact;
+    use crate::tensor::dot;
+
+    fn rand_image(rng: &mut Rng, h: usize, w: usize, c: usize) -> Image {
+        Image::from_vec(h, w, c, rng.gauss_vec(h * w * c))
+    }
+
+    fn cfg_small() -> CntkSketchConfig {
+        CntkSketchConfig { depth: 2, q: 3, p1: 2, p0: 4, r: 256, s: 256, m_inner: 256, s_out: 256 }
+    }
+
+    #[test]
+    fn approximates_exact_cntk() {
+        let mut rng = Rng::new(171);
+        let (h, w, c) = (4, 4, 2);
+        let y = rand_image(&mut rng, h, w, c);
+        let z = rand_image(&mut rng, h, w, c);
+        let exact = CntkExact::new(2, 3).theta(&y, &z);
+        let trials = 5;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let sk = CntkSketch::new(h, w, c, cfg_small(), &mut rng);
+            acc += dot(&sk.features(&y), &sk.features(&z)) as f64;
+        }
+        let mean = acc / trials as f64;
+        assert!(
+            (mean - exact).abs() < 0.25 * exact.abs().max(1.0),
+            "mean={mean} exact={exact}"
+        );
+    }
+
+    #[test]
+    fn norm_approximates_exact_diagonal() {
+        let mut rng = Rng::new(172);
+        let (h, w, c) = (4, 4, 2);
+        let y = rand_image(&mut rng, h, w, c);
+        let exact = CntkExact::new(2, 3).theta(&y, &y);
+        let trials = 5;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let sk = CntkSketch::new(h, w, c, cfg_small(), &mut rng);
+            let f = sk.features(&y);
+            acc += dot(&f, &f) as f64;
+        }
+        let mean = acc / trials as f64;
+        assert!(
+            (mean - exact).abs() < 0.25 * exact.abs().max(1.0),
+            "mean={mean} exact={exact}"
+        );
+    }
+
+    #[test]
+    fn linear_scaling_structure_in_pixels() {
+        // runtime is linear in pixel count: structurally, feature dims do
+        // not depend on image size, and per-pixel state is O(r+s).
+        let mut rng = Rng::new(173);
+        let cfg = CntkSketchConfig::for_budget(2, 3, 64);
+        let a = CntkSketch::new(2, 2, 1, cfg, &mut rng);
+        let b = CntkSketch::new(6, 6, 1, cfg, &mut rng);
+        assert_eq!(a.dim(), b.dim());
+        let ia = rand_image(&mut rng, 2, 2, 1);
+        let ib = rand_image(&mut rng, 6, 6, 1);
+        assert_eq!(a.features(&ia).len(), b.features(&ib).len());
+    }
+
+    #[test]
+    fn batch_consistency() {
+        let mut rng = Rng::new(174);
+        let cfg = CntkSketchConfig::for_budget(2, 3, 64);
+        let sk = CntkSketch::new(3, 3, 2, cfg, &mut rng);
+        let imgs: Vec<Image> = (0..3).map(|_| rand_image(&mut rng, 3, 3, 2)).collect();
+        let out = sk.transform_images(&imgs);
+        assert_eq!((out.rows, out.cols), (3, 64));
+        for i in 0..3 {
+            let f = sk.features(&imgs[i]);
+            crate::util::prop::assert_close(out.row(i), &f, 1e-6, 1e-6).unwrap();
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "depth")]
+    fn rejects_depth_one() {
+        let mut rng = Rng::new(175);
+        let mut cfg = CntkSketchConfig::for_budget(2, 3, 32);
+        cfg.depth = 1;
+        let _ = CntkSketch::new(2, 2, 1, cfg, &mut rng);
+    }
+}

@@ -1,0 +1,595 @@
+//! GradRF — the gradient-features baseline (Fig. 2, Table 1): features are
+//! ∇_θ f(x) of a randomly-initialized finite-width network in NTK
+//! parametrization (Arora et al.; "Monte Carlo NTK" of Novak et al.).
+//! As width → ∞, ⟨∇f(y), ∇f(z)⟩ → Θ_ntk / Θ_cntk; at the finite widths
+//! matching a feature budget it is the weakest method — which is exactly
+//! the paper's empirical point.
+
+use super::{Featurizer, ImageFeaturizer};
+use crate::cntk::Image;
+use crate::rng::Rng;
+use crate::tensor::Mat;
+
+// ---------------------------------------------------------------- MLP --
+
+/// Fully-connected GradRF: L hidden ReLU layers of width w, scalar head.
+pub struct GradRfMlp {
+    pub d: usize,
+    pub depth: usize,
+    pub width: usize,
+    /// A₁ (w×d), A₂..A_L (w×w).
+    weights: Vec<Mat>,
+    /// head a (w).
+    head: Vec<f32>,
+    dim: usize,
+}
+
+impl GradRfMlp {
+    pub fn new(d: usize, depth: usize, width: usize, rng: &mut Rng) -> GradRfMlp {
+        assert!(depth >= 1 && width >= 1);
+        let mut weights = Vec::with_capacity(depth);
+        weights.push(Mat::from_vec(width, d, rng.gauss_vec(width * d)));
+        for _ in 1..depth {
+            weights.push(Mat::from_vec(width, width, rng.gauss_vec(width * width)));
+        }
+        let head = rng.gauss_vec(width);
+        let dim = width * d + (depth - 1) * width * width + width;
+        GradRfMlp { d, depth, width, weights, head, dim }
+    }
+
+    /// Pick the width whose parameter count best matches `target_dim`
+    /// (the paper reports GradRF by its feature dimension = #params).
+    pub fn for_feature_dim(d: usize, depth: usize, target_dim: usize, rng: &mut Rng) -> GradRfMlp {
+        let mut best_w = 1;
+        let mut best_err = usize::MAX;
+        for w in 1..=4096 {
+            let dim = w * d + (depth - 1) * w * w + w;
+            let err = dim.abs_diff(target_dim);
+            if err < best_err {
+                best_err = err;
+                best_w = w;
+            }
+            if dim > 2 * target_dim {
+                break;
+            }
+        }
+        GradRfMlp::new(d, depth, best_w, rng)
+    }
+
+    /// ∇_θ f(x), flattened in layer order then head.
+    pub fn grad_features(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.d);
+        let w = self.width;
+        let scale = (2.0 / w as f32).sqrt();
+        // forward, caching pre-activations z_ℓ and activations g_ℓ
+        let mut gs: Vec<Vec<f32>> = Vec::with_capacity(self.depth + 1);
+        gs.push(x.to_vec());
+        let mut zs: Vec<Vec<f32>> = Vec::with_capacity(self.depth);
+        for a in &self.weights {
+            let prev = gs.last().unwrap();
+            let z: Vec<f32> =
+                (0..w).map(|i| scale * crate::tensor::dot(a.row(i), prev)).collect();
+            gs.push(z.iter().map(|&v| v.max(0.0)).collect());
+            zs.push(z);
+        }
+        // backward
+        let mut out = vec![0.0f32; self.dim];
+        // head gradient: ∂f/∂a = g_L — goes in the last slot block
+        let head_off = self.dim - w;
+        out[head_off..].copy_from_slice(gs.last().unwrap());
+        // δ over z_L: a ⊙ step(z_L)
+        let mut delta: Vec<f32> = (0..w)
+            .map(|i| if zs[self.depth - 1][i] > 0.0 { self.head[i] } else { 0.0 })
+            .collect();
+        let mut offsets: Vec<usize> = Vec::with_capacity(self.depth);
+        let mut off = 0usize;
+        offsets.push(0);
+        off += w * self.d;
+        for _ in 1..self.depth {
+            offsets.push(off);
+            off += w * w;
+        }
+        for ell in (0..self.depth).rev() {
+            // grad A_ℓ = scale · δ ⊗ g_{ℓ-1}
+            let g_prev = &gs[ell];
+            let base = offsets[ell];
+            let cols = g_prev.len();
+            for i in 0..w {
+                if delta[i] == 0.0 {
+                    continue;
+                }
+                let di = scale * delta[i];
+                let row = &mut out[base + i * cols..base + (i + 1) * cols];
+                for (k, &gp) in g_prev.iter().enumerate() {
+                    row[k] = di * gp;
+                }
+            }
+            if ell > 0 {
+                // δ_{ℓ-1} = scale · A_ℓᵀ δ ⊙ step(z_{ℓ-1})
+                let a = &self.weights[ell];
+                let prev_w = gs[ell].len();
+                let mut nd = vec![0.0f32; prev_w];
+                for i in 0..w {
+                    if delta[i] == 0.0 {
+                        continue;
+                    }
+                    let di = scale * delta[i];
+                    for (k, v) in nd.iter_mut().enumerate() {
+                        *v += di * a.at(i, k);
+                    }
+                }
+                for (k, v) in nd.iter_mut().enumerate() {
+                    if zs[ell - 1][k] <= 0.0 {
+                        *v = 0.0;
+                    }
+                }
+                delta = nd;
+            }
+        }
+        out
+    }
+
+    /// Scalar network output (used by the finite-difference tests).
+    pub fn forward(&self, x: &[f32]) -> f32 {
+        let w = self.width;
+        let scale = (2.0 / w as f32).sqrt();
+        let mut g = x.to_vec();
+        for a in &self.weights {
+            g = (0..w)
+                .map(|i| (scale * crate::tensor::dot(a.row(i), &g)).max(0.0))
+                .collect();
+        }
+        crate::tensor::dot(&self.head, &g)
+    }
+
+    /// Perturb one flat parameter (for finite-difference checks).
+    #[cfg(test)]
+    fn perturb(&mut self, flat_idx: usize, eps: f32) {
+        let w = self.width;
+        let mut idx = flat_idx;
+        if idx < w * self.d {
+            self.weights[0].data[idx] += eps;
+            return;
+        }
+        idx -= w * self.d;
+        for ell in 1..self.depth {
+            if idx < w * w {
+                self.weights[ell].data[idx] += eps;
+                return;
+            }
+            idx -= w * w;
+        }
+        self.head[idx] += eps;
+    }
+}
+
+impl Featurizer for GradRfMlp {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn transform(&self, x: &Mat) -> Mat {
+        super::rows_to_mat(x.rows, self.dim, |i| self.grad_features(x.row(i)))
+    }
+
+    fn name(&self) -> &'static str {
+        "GradRF"
+    }
+}
+
+// ---------------------------------------------------------------- CNN --
+
+/// Convolutional GradRF: L conv(q×q, same-pad) + ReLU layers of `width`
+/// channels, GAP, linear head — the finite-width counterpart of the CNTK
+/// (Fig. 2b / Table 1 baseline).
+pub struct GradRfCnn {
+    pub h: usize,
+    pub w_img: usize,
+    pub c_in: usize,
+    pub depth: usize,
+    pub width: usize,
+    pub q: usize,
+    /// filters[h]: (c_out × c_in(h) × q × q) flattened row-major.
+    filters: Vec<Vec<f32>>,
+    chans: Vec<usize>,
+    head: Vec<f32>,
+    dim: usize,
+}
+
+impl GradRfCnn {
+    pub fn new(
+        h: usize,
+        w_img: usize,
+        c_in: usize,
+        depth: usize,
+        width: usize,
+        q: usize,
+        rng: &mut Rng,
+    ) -> GradRfCnn {
+        assert!(q % 2 == 1 && depth >= 1);
+        let mut chans = vec![c_in];
+        for _ in 0..depth {
+            chans.push(width);
+        }
+        let mut filters = Vec::with_capacity(depth);
+        let mut dim = 0;
+        for hh in 0..depth {
+            let sz = chans[hh + 1] * chans[hh] * q * q;
+            filters.push(rng.gauss_vec(sz));
+            dim += sz;
+        }
+        let head = rng.gauss_vec(width);
+        dim += width;
+        GradRfCnn { h, w_img, c_in, depth, width, q, filters, chans, head, dim }
+    }
+
+    /// Match a target feature dimension (#params) by channel width.
+    pub fn for_feature_dim(
+        h: usize,
+        w_img: usize,
+        c_in: usize,
+        depth: usize,
+        q: usize,
+        target_dim: usize,
+        rng: &mut Rng,
+    ) -> GradRfCnn {
+        let mut best_w = 1;
+        let mut best_err = usize::MAX;
+        for w in 1..=1024 {
+            let mut dim = w * c_in * q * q + w;
+            for _ in 1..depth {
+                dim += w * w * q * q;
+            }
+            let err = dim.abs_diff(target_dim);
+            if err < best_err {
+                best_err = err;
+                best_w = w;
+            }
+            if dim > 2 * target_dim {
+                break;
+            }
+        }
+        GradRfCnn::new(h, w_img, c_in, depth, best_w, q, rng)
+    }
+
+    #[inline]
+    fn fidx(&self, layer_cin: usize, o: usize, i: usize, a: usize, b: usize) -> usize {
+        ((o * layer_cin + i) * self.q + a) * self.q + b
+    }
+
+    /// conv with same-padding + NTK scale √(2/(q²·c_in)).
+    fn conv_forward(&self, input: &[f32], c_in: usize, filt: &[f32], c_out: usize) -> Vec<f32> {
+        let (hh, ww, q) = (self.h, self.w_img, self.q);
+        let r = (q / 2) as isize;
+        let scale = (2.0 / (q * q * c_in) as f32).sqrt();
+        let mut out = vec![0.0f32; hh * ww * c_out];
+        for i in 0..hh {
+            for j in 0..ww {
+                for o in 0..c_out {
+                    let mut acc = 0.0f32;
+                    for a in 0..q {
+                        for b in 0..q {
+                            let ia = i as isize + a as isize - r;
+                            let jb = j as isize + b as isize - r;
+                            if ia < 0 || jb < 0 || ia as usize >= hh || jb as usize >= ww {
+                                continue;
+                            }
+                            let base = (ia as usize * ww + jb as usize) * c_in;
+                            for ci in 0..c_in {
+                                acc += filt[self.fidx(c_in, o, ci, a, b)] * input[base + ci];
+                            }
+                        }
+                    }
+                    out[(i * ww + j) * c_out + o] = scale * acc;
+                }
+            }
+        }
+        out
+    }
+
+    /// Forward pass caching pre-activations per layer.
+    fn forward_cached(&self, x: &Image) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let mut acts = vec![x.data.clone()];
+        let mut pre = Vec::with_capacity(self.depth);
+        for hh in 0..self.depth {
+            let z = self.conv_forward(
+                acts.last().unwrap(),
+                self.chans[hh],
+                &self.filters[hh],
+                self.chans[hh + 1],
+            );
+            acts.push(z.iter().map(|&v| v.max(0.0)).collect());
+            pre.push(z);
+        }
+        (acts, pre)
+    }
+
+    /// Scalar output: GAP then head.
+    pub fn forward(&self, x: &Image) -> f32 {
+        let (acts, _) = self.forward_cached(x);
+        let last = acts.last().unwrap();
+        let p = self.h * self.w_img;
+        let mut pooled = vec![0.0f32; self.width];
+        for pp in 0..p {
+            for o in 0..self.width {
+                pooled[o] += last[pp * self.width + o];
+            }
+        }
+        let inv = 1.0 / p as f32;
+        crate::tensor::dot(&pooled, &self.head) * inv
+    }
+
+    /// ∇_θ f(x) flattened: filters layer-by-layer, then head.
+    pub fn grad_features(&self, x: &Image) -> Vec<f32> {
+        let (acts, pre) = self.forward_cached(x);
+        let (hh, ww, q) = (self.h, self.w_img, self.q);
+        let p = hh * ww;
+        let r = (q / 2) as isize;
+        let mut out = vec![0.0f32; self.dim];
+
+        // head grad: GAP of last activations
+        let last = acts.last().unwrap();
+        let head_off = self.dim - self.width;
+        let inv = 1.0 / p as f32;
+        for pp in 0..p {
+            for o in 0..self.width {
+                out[head_off + o] += inv * last[pp * self.width + o];
+            }
+        }
+        // δ over last pre-activation: (1/P)·head[o]·step(z)
+        let mut delta: Vec<f32> = (0..p * self.width)
+            .map(|k| {
+                if pre[self.depth - 1][k] > 0.0 {
+                    inv * self.head[k % self.width]
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+
+        let mut offsets = Vec::with_capacity(self.depth);
+        let mut off = 0usize;
+        for l in 0..self.depth {
+            offsets.push(off);
+            off += self.chans[l + 1] * self.chans[l] * q * q;
+        }
+
+        for layer in (0..self.depth).rev() {
+            let c_in = self.chans[layer];
+            let c_out = self.chans[layer + 1];
+            let scale = (2.0 / (q * q * c_in) as f32).sqrt();
+            let input = &acts[layer];
+            let base = offsets[layer];
+            // grad W[o,i,a,b] = scale Σ_{ij} δ[ij,o]·input[(i+a-r)(j+b-r),i]
+            for i in 0..hh {
+                for j in 0..ww {
+                    let dbase = (i * ww + j) * c_out;
+                    for a in 0..q {
+                        for b in 0..q {
+                            let ia = i as isize + a as isize - r;
+                            let jb = j as isize + b as isize - r;
+                            if ia < 0 || jb < 0 || ia as usize >= hh || jb as usize >= ww {
+                                continue;
+                            }
+                            let ibase = (ia as usize * ww + jb as usize) * c_in;
+                            for o in 0..c_out {
+                                let d = delta[dbase + o];
+                                if d == 0.0 {
+                                    continue;
+                                }
+                                let ds = scale * d;
+                                for ci in 0..c_in {
+                                    out[base + self.fidx(c_in, o, ci, a, b)] +=
+                                        ds * input[ibase + ci];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            if layer > 0 {
+                // δ_prev[(i'j'),ci] = scale Σ_{(a,b),o} δ[(i,j),o] W[o,ci,a,b]
+                //   where i = i' - (a - r), j = j' - (b - r)   (transposed conv)
+                let mut nd = vec![0.0f32; p * c_in];
+                let filt = &self.filters[layer];
+                for i in 0..hh {
+                    for j in 0..ww {
+                        let dbase = (i * ww + j) * c_out;
+                        for a in 0..q {
+                            for b in 0..q {
+                                let ia = i as isize + a as isize - r;
+                                let jb = j as isize + b as isize - r;
+                                if ia < 0 || jb < 0 || ia as usize >= hh || jb as usize >= ww {
+                                    continue;
+                                }
+                                let nbase = (ia as usize * ww + jb as usize) * c_in;
+                                for o in 0..c_out {
+                                    let d = delta[dbase + o];
+                                    if d == 0.0 {
+                                        continue;
+                                    }
+                                    let ds = scale * d;
+                                    for ci in 0..c_in {
+                                        nd[nbase + ci] += ds * filt[self.fidx(c_in, o, ci, a, b)];
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                // gate by step of previous pre-activation
+                for (k, v) in nd.iter_mut().enumerate() {
+                    if pre[layer - 1][k] <= 0.0 {
+                        *v = 0.0;
+                    }
+                }
+                delta = nd;
+            }
+        }
+        out
+    }
+
+    #[cfg(test)]
+    fn perturb(&mut self, flat_idx: usize, eps: f32) {
+        let mut idx = flat_idx;
+        for l in 0..self.depth {
+            let sz = self.filters[l].len();
+            if idx < sz {
+                self.filters[l][idx] += eps;
+                return;
+            }
+            idx -= sz;
+        }
+        self.head[idx] += eps;
+    }
+}
+
+impl ImageFeaturizer for GradRfCnn {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn transform_images(&self, imgs: &[Image]) -> Mat {
+        let rows: Vec<Vec<f32>> =
+            crate::util::par::par_map(imgs.len(), |i| self.grad_features(&imgs[i]));
+        let mut out = Mat::zeros(imgs.len(), self.dim);
+        for (i, r) in rows.into_iter().enumerate() {
+            out.row_mut(i).copy_from_slice(&r);
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "GradRF(CNN)"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ntk::theta_ntk;
+    use crate::tensor::dot;
+
+    #[test]
+    fn mlp_gradient_matches_finite_differences() {
+        let mut rng = Rng::new(181);
+        let net = GradRfMlp::new(5, 2, 7, &mut rng);
+        let x = rng.gauss_vec(5);
+        let g = net.grad_features(&x);
+        assert_eq!(g.len(), net.dim());
+        let eps = 1e-3f32;
+        // probe a spread of parameter slots
+        for &idx in &[0usize, 3, 5 * 7 - 1, 5 * 7 + 3, 5 * 7 + 7 * 7 - 1, net.dim() - 2] {
+            let mut plus = net.clone_for_test();
+            plus.perturb(idx, eps);
+            let mut minus = net.clone_for_test();
+            minus.perturb(idx, -eps);
+            let fd = (plus.forward(&x) - minus.forward(&x)) / (2.0 * eps);
+            assert!(
+                (fd - g[idx]).abs() < 2e-2 * g[idx].abs().max(0.5),
+                "idx={idx}: fd={fd} grad={}",
+                g[idx]
+            );
+        }
+    }
+
+    impl GradRfMlp {
+        fn clone_for_test(&self) -> GradRfMlp {
+            GradRfMlp {
+                d: self.d,
+                depth: self.depth,
+                width: self.width,
+                weights: self.weights.clone(),
+                head: self.head.clone(),
+                dim: self.dim,
+            }
+        }
+    }
+
+    impl GradRfCnn {
+        fn clone_for_test(&self) -> GradRfCnn {
+            GradRfCnn {
+                h: self.h,
+                w_img: self.w_img,
+                c_in: self.c_in,
+                depth: self.depth,
+                width: self.width,
+                q: self.q,
+                filters: self.filters.clone(),
+                chans: self.chans.clone(),
+                head: self.head.clone(),
+                dim: self.dim,
+            }
+        }
+    }
+
+    #[test]
+    fn mlp_kernel_converges_to_ntk() {
+        // ⟨∇f(y), ∇f(z)⟩ → Θ_ntk^{(L)}(y,z) as width → ∞ (Arora et al.);
+        // this is the self-consistency check between grad_rf and relu_ntk.
+        let mut rng = Rng::new(182);
+        let d = 6;
+        let y = rng.gauss_vec(d);
+        let z = rng.gauss_vec(d);
+        let exact = theta_ntk(2, &y, &z);
+        let trials = 12;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let net = GradRfMlp::new(d, 2, 512, &mut rng);
+            acc += dot(&net.grad_features(&y), &net.grad_features(&z)) as f64;
+        }
+        let mean = acc / trials as f64;
+        assert!(
+            (mean - exact).abs() < 0.1 * exact.abs().max(1.0),
+            "mean={mean} exact={exact}"
+        );
+    }
+
+    #[test]
+    fn cnn_gradient_matches_finite_differences() {
+        let mut rng = Rng::new(183);
+        let net = GradRfCnn::new(3, 3, 2, 2, 3, 3, &mut rng);
+        let x = Image::from_vec(3, 3, 2, rng.gauss_vec(18));
+        let g = net.grad_features(&x);
+        assert_eq!(g.len(), net.dim);
+        let eps = 1e-3f32;
+        let probes = [0usize, 7, net.filters[0].len() - 1, net.filters[0].len() + 5, net.dim - 1];
+        for &idx in &probes {
+            let mut plus = net.clone_for_test();
+            plus.perturb(idx, eps);
+            let mut minus = net.clone_for_test();
+            minus.perturb(idx, -eps);
+            let fd = (plus.forward(&x) - minus.forward(&x)) / (2.0 * eps);
+            assert!(
+                (fd - g[idx]).abs() < 3e-2 * g[idx].abs().max(0.2),
+                "idx={idx}: fd={fd} grad={}",
+                g[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn feature_dim_targeting() {
+        let mut rng = Rng::new(184);
+        let net = GradRfMlp::for_feature_dim(10, 2, 5000, &mut rng);
+        assert!(net.dim().abs_diff(5000) < 2500, "dim={}", net.dim());
+        let cnn = GradRfCnn::for_feature_dim(4, 4, 3, 2, 3, 4000, &mut rng);
+        assert!(cnn.dim.abs_diff(4000) < 2000, "dim={}", cnn.dim);
+    }
+
+    #[test]
+    fn cnn_gram_psd() {
+        let mut rng = Rng::new(185);
+        let net = GradRfCnn::new(3, 3, 1, 2, 4, 3, &mut rng);
+        let imgs: Vec<Image> =
+            (0..5).map(|_| Image::from_vec(3, 3, 1, rng.gauss_vec(9))).collect();
+        let f = net.transform_images(&imgs);
+        let g = crate::linalg::DMat::gram_of(&f.transpose());
+        // Gram of features is PSD by construction; check diag nonneg & sym
+        let gg = crate::linalg::DMat::gram_of(&f.transpose());
+        assert_eq!(g.data.len(), gg.data.len());
+        for i in 0..5 {
+            assert!(crate::tensor::dot(f.row(i), f.row(i)) >= 0.0);
+        }
+    }
+}

@@ -1,0 +1,67 @@
+//! Feature maps: the paper's algorithms (NTKSketch, NTKRF, CNTKSketch,
+//! leverage-score features) and the baselines they are benchmarked
+//! against (RFF, GradRF). All implement [`Featurizer`] (vectors) or
+//! [`ImageFeaturizer`] (images) so the regression stack and the
+//! coordinator treat them uniformly.
+
+pub mod arccos_rf;
+pub mod cntk_sketch;
+pub mod grad_rf;
+pub mod ntk_poly_sketch;
+pub mod ntk_rf;
+pub mod ntk_sketch;
+pub mod rff;
+
+use crate::cntk::Image;
+use crate::tensor::Mat;
+
+/// A (randomized) feature map over row vectors.
+pub trait Featurizer: Send + Sync {
+    /// Output feature dimension.
+    fn dim(&self) -> usize;
+    /// Map each row of `x` (n×d) to a feature row (n×dim).
+    fn transform(&self, x: &Mat) -> Mat;
+    /// Human-readable name for tables.
+    fn name(&self) -> &'static str {
+        "featurizer"
+    }
+}
+
+/// A (randomized) feature map over images.
+pub trait ImageFeaturizer: Send + Sync {
+    fn dim(&self) -> usize;
+    fn transform_images(&self, imgs: &[Image]) -> Mat;
+    fn name(&self) -> &'static str {
+        "image-featurizer"
+    }
+}
+
+/// Shared helper for Algorithms 1 / CNTKSketch: sketch the polynomial
+/// kernel block ⊕_l √coef_l · Q(u^{⊗l} ⊗ e1^{⊗(D−l)}) and mix it down
+/// with an SRHT.
+pub(crate) fn poly_block(
+    q: &crate::transforms::PolySketch,
+    coef_sqrt: &[f32],
+    mix: &crate::transforms::Srht,
+    u: &[f32],
+) -> Vec<f32> {
+    let fam = q.sketch_power_family(u);
+    let mut concat = Vec::with_capacity(coef_sqrt.len() * q.m);
+    for (l, &cl) in coef_sqrt.iter().enumerate() {
+        for &v in &fam[l] {
+            concat.push(cl * v);
+        }
+    }
+    mix.apply(&concat)
+}
+
+/// Helper: run a per-row closure in parallel and collect into a Mat.
+pub(crate) fn rows_to_mat(n: usize, dim: usize, f: impl Fn(usize) -> Vec<f32> + Sync) -> Mat {
+    let mut out = Mat::zeros(n, dim);
+    crate::util::par::par_rows(&mut out.data, n, dim, |i, row| {
+        let v = f(i);
+        debug_assert_eq!(v.len(), dim);
+        row.copy_from_slice(&v);
+    });
+    out
+}

@@ -1,0 +1,114 @@
+//! NTK polynomial sketch — the Remark 1 fast path.
+//!
+//! Since the NTK is the normalized dot-product kernel
+//! Θ^{(L)}(y,z) = ‖y‖‖z‖·K_relu^{(L)}(cos), fit a low-degree non-negative
+//! polynomial to K_relu^{(L)} once (O(L) per node) and sketch the induced
+//! polynomial kernel directly with PolySketch — one sketching stage
+//! instead of L, which is how the paper recommends scaling NTKSketch to
+//! deeper networks.
+
+use super::Featurizer;
+use crate::ntk::poly_fit::{fit_k_relu, PolyFit};
+use crate::rng::Rng;
+use crate::tensor::Mat;
+use crate::transforms::{LeafMode, PolyKernelSketch};
+
+pub struct NtkPolySketch {
+    pub d: usize,
+    pub depth: usize,
+    pub fit: PolyFit,
+    pk: PolyKernelSketch,
+}
+
+impl NtkPolySketch {
+    /// `deg`: polynomial degree of the K_relu fit (8 reproduces Fig. 1
+    /// right); `m_inner`/`m_out`: PolySketch dims.
+    pub fn new(
+        d: usize,
+        depth: usize,
+        deg: usize,
+        m_inner: usize,
+        m_out: usize,
+        rng: &mut Rng,
+    ) -> NtkPolySketch {
+        let fit = fit_k_relu(depth, deg);
+        let pk = PolyKernelSketch::new(&fit.coeffs, d, m_inner, m_out, LeafMode::Osnap(4), rng);
+        NtkPolySketch { d, depth, fit, pk }
+    }
+
+    pub fn features(&self, x: &[f32]) -> Vec<f32> {
+        let norm = crate::tensor::dot(x, x).sqrt();
+        if norm == 0.0 {
+            return vec![0.0; self.pk.m_out];
+        }
+        let xin: Vec<f32> = x.iter().map(|&v| v / norm).collect();
+        let mut f = self.pk.features(&xin);
+        for v in &mut f {
+            *v *= norm;
+        }
+        f
+    }
+}
+
+impl Featurizer for NtkPolySketch {
+    fn dim(&self) -> usize {
+        self.pk.m_out
+    }
+
+    fn transform(&self, x: &Mat) -> Mat {
+        super::rows_to_mat(x.rows, self.dim(), |i| self.features(x.row(i)))
+    }
+
+    fn name(&self) -> &'static str {
+        "NTKSketch(poly)"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ntk::theta_ntk;
+    use crate::tensor::dot;
+
+    #[test]
+    fn approximates_deep_ntk() {
+        let mut rng = Rng::new(161);
+        let d = 10;
+        let y = rng.gauss_vec(d);
+        let z = rng.gauss_vec(d);
+        for depth in [3usize, 5] {
+            let exact = theta_ntk(depth, &y, &z);
+            let mut acc = 0.0;
+            let trials = 6;
+            for _ in 0..trials {
+                let sk = NtkPolySketch::new(d, depth, 8, 512, 512, &mut rng);
+                acc += dot(&sk.features(&y), &sk.features(&z)) as f64;
+            }
+            let mean = acc / trials as f64;
+            assert!(
+                (mean - exact).abs() < 0.15 * exact.abs().max(1.0),
+                "depth={depth} mean={mean} exact={exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn fit_quality_exposed() {
+        let mut rng = Rng::new(162);
+        let sk = NtkPolySketch::new(6, 3, 8, 64, 64, &mut rng);
+        assert!(sk.fit.relative_err() < 0.05);
+        assert_eq!(sk.dim(), 64);
+    }
+
+    #[test]
+    fn batch_consistency() {
+        let mut rng = Rng::new(163);
+        let sk = NtkPolySketch::new(5, 2, 6, 64, 32, &mut rng);
+        let x = Mat::from_vec(2, 5, rng.gauss_vec(10));
+        let out = sk.transform(&x);
+        for i in 0..2 {
+            crate::util::prop::assert_close(out.row(i), &sk.features(x.row(i)), 1e-6, 1e-6)
+                .unwrap();
+        }
+    }
+}

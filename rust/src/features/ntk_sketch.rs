@@ -1,0 +1,305 @@
+//! NTKSketch — Algorithm 1 (Theorem 1): an oblivious sketch for the
+//! fully-connected ReLU NTK built from truncated Taylor expansions of the
+//! arc-cosine kernels and PolySketch.
+//!
+//! Per layer ℓ (starting from φ⁰ = Q¹(x/‖x‖) ∈ ℝ^r, ψ⁰ = V φ⁰ ∈ ℝ^s):
+//!   Z_l   = Q^{2p+2}(φ^{ℓ−1 ⊗ l} ⊗ e1^{⊗(2p+2−l)})          l = 0..2p+2
+//!   φ^ℓ   = T · ⊕_l √c_l Z_l                 (sketch of κ₁ ∘ Σ^{ℓ−1})
+//!   Y_l   = Q^{2p'+1}(φ^{ℓ−1 ⊗ l} ⊗ e1^{⊗(2p'+1−l)})        l = 0..2p'+1
+//!   φ̇^ℓ  = W · ⊕_l √b_l Y_l                 (sketch of κ₀ ∘ Σ^{ℓ−1})
+//!   ψ^ℓ   = R · (Q²(ψ^{ℓ−1} ⊗ φ̇^ℓ) ⊕ φ^ℓ)   (Eq. 4 recursion, sketched)
+//! Output Ψ(x) = ‖x‖·G·ψ^L ∈ ℝ^{s*}.
+
+use super::Featurizer;
+use crate::ntk::arccos::{kappa0_coeffs, kappa1_coeffs};
+use crate::rng::Rng;
+use crate::tensor::Mat;
+use crate::transforms::{GaussianJl, LeafMode, PolySketch, Srht, TensorSrht};
+
+/// Dimensions / truncation degrees of Algorithm 1. The theory sizes
+/// (line 2) are polynomial in L/ε and huge; these expose the knobs so the
+/// benches can sweep practical values.
+#[derive(Clone, Copy, Debug)]
+pub struct NtkSketchConfig {
+    pub depth: usize,
+    /// κ₁ Taylor truncation p (polynomial degree 2p+2).
+    pub p1: usize,
+    /// κ₀ Taylor truncation p' (polynomial degree 2p'+1).
+    pub p0: usize,
+    /// φ dimension r.
+    pub r: usize,
+    /// ψ / φ̇ dimension s.
+    pub s: usize,
+    /// internal PolySketch dims (m for Q^{2p+2}, n₁ for Q^{2p'+1}).
+    pub m_inner: usize,
+    /// output dimension s*.
+    pub s_out: usize,
+    /// leaf mode for the degree-1 input sketch Q¹ (OSNAP ⇒ nnz-time).
+    pub leaf: LeafMode,
+}
+
+impl NtkSketchConfig {
+    /// Practical defaults for a feature budget `s_out`.
+    pub fn for_budget(depth: usize, s_out: usize) -> NtkSketchConfig {
+        let s = (2 * s_out).clamp(128, 4096);
+        NtkSketchConfig {
+            depth,
+            p1: 2,
+            p0: 4,
+            r: s,
+            s,
+            m_inner: s,
+            s_out,
+            leaf: LeafMode::Osnap(4),
+        }
+    }
+}
+
+struct LayerSketch {
+    /// Q^{2p+2} over ℝ^r inputs.
+    q_phi: PolySketch,
+    /// √c_l coefficients, l = 0..2p+2.
+    c_sqrt: Vec<f32>,
+    /// T: (2p+3)·m → r.
+    t: Srht,
+    /// Q^{2p'+1} over ℝ^r inputs.
+    q_dot: PolySketch,
+    /// √b_l coefficients, l = 0..2p'+1.
+    b_sqrt: Vec<f32>,
+    /// W: (2p'+2)·n₁ → s.
+    w: Srht,
+    /// Q²: ψ^{ℓ−1} ⊗ φ̇^ℓ → s.
+    q2: TensorSrht,
+    /// R: (s + r) → s.
+    r_mix: Srht,
+}
+
+/// An instantiated NTKSketch.
+pub struct NtkSketch {
+    pub cfg: NtkSketchConfig,
+    pub d: usize,
+    q1: PolySketch,
+    v: Srht,
+    layers: Vec<LayerSketch>,
+    g: GaussianJl,
+}
+
+impl NtkSketch {
+    pub fn new(d: usize, cfg: NtkSketchConfig, rng: &mut Rng) -> NtkSketch {
+        assert!(cfg.depth >= 1);
+        // line 4-5: Q¹ : d → r, V : r → s
+        let q1 = PolySketch::new(1, d, cfg.r, cfg.leaf, rng);
+        let v = Srht::new(cfg.r, cfg.s, rng);
+        let deg1 = 2 * cfg.p1 + 2;
+        let deg0 = 2 * cfg.p0 + 1;
+        let c: Vec<f32> = kappa1_coeffs(cfg.p1).iter().map(|&x| (x as f32).sqrt()).collect();
+        let b: Vec<f32> = kappa0_coeffs(cfg.p0).iter().map(|&x| (x as f32).sqrt()).collect();
+        debug_assert_eq!(c.len(), deg1 + 1);
+        debug_assert_eq!(b.len(), deg0 + 1);
+        let mut layers = Vec::with_capacity(cfg.depth);
+        for _ in 0..cfg.depth {
+            layers.push(LayerSketch {
+                q_phi: PolySketch::new(deg1, cfg.r, cfg.m_inner, LeafMode::Srht, rng),
+                c_sqrt: c.clone(),
+                t: Srht::new((deg1 + 1) * cfg.m_inner, cfg.r, rng),
+                q_dot: PolySketch::new(deg0, cfg.r, cfg.m_inner, LeafMode::Srht, rng),
+                b_sqrt: b.clone(),
+                w: Srht::new((deg0 + 1) * cfg.m_inner, cfg.s, rng),
+                q2: TensorSrht::new(cfg.s, cfg.s, cfg.s, rng),
+                r_mix: Srht::new(cfg.s + cfg.r, cfg.s, rng),
+            });
+        }
+        let g = GaussianJl::new(cfg.s, cfg.s_out, rng);
+        NtkSketch { cfg, d, q1, v, layers, g }
+    }
+
+    /// Feature map for one vector.
+    pub fn features(&self, x: &[f32]) -> Vec<f32> {
+        let norm = crate::tensor::dot(x, x).sqrt();
+        if norm == 0.0 {
+            return vec![0.0; self.cfg.s_out];
+        }
+        let xin: Vec<f32> = x.iter().map(|&v| v / norm).collect();
+        // φ⁰ = Q¹ x̂ ∈ ℝ^r ; ψ⁰ = V φ⁰ ∈ ℝ^s
+        let mut phi = {
+            let fam = self.q1.sketch_power_family(&xin);
+            fam.into_iter().next_back().unwrap()
+        };
+        let mut psi = self.v.apply(&phi);
+        for layer in &self.layers {
+            // Eq. (7): φ^ℓ
+            let phi_new = super::poly_block(&layer.q_phi, &layer.c_sqrt, &layer.t, &phi);
+            // Eq. (8): φ̇^ℓ
+            let phi_dot = super::poly_block(&layer.q_dot, &layer.b_sqrt, &layer.w, &phi);
+            // Eq. (9): ψ^ℓ = R (Q²(ψ ⊗ φ̇) ⊕ φ)
+            let q2 = layer.q2.apply(&psi, &phi_dot);
+            let mut cat = Vec::with_capacity(q2.len() + phi_new.len());
+            cat.extend_from_slice(&q2);
+            cat.extend_from_slice(&phi_new);
+            psi = layer.r_mix.apply(&cat);
+            phi = phi_new;
+        }
+        // Eq. (10): Ψ = ‖x‖ G ψ^L
+        let mut out = self.g.apply(&psi);
+        for v in &mut out {
+            *v *= norm;
+        }
+        out
+    }
+}
+
+impl Featurizer for NtkSketch {
+    fn dim(&self) -> usize {
+        self.cfg.s_out
+    }
+
+    fn transform(&self, x: &Mat) -> Mat {
+        super::rows_to_mat(x.rows, self.dim(), |i| self.features(x.row(i)))
+    }
+
+    fn name(&self) -> &'static str {
+        "NTKSketch"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ntk::arccos::polyval;
+    use crate::ntk::theta_ntk;
+    use crate::tensor::dot;
+
+    fn avg_inner(d: usize, cfg: NtkSketchConfig, y: &[f32], z: &[f32], trials: usize, seed: u64) -> f64 {
+        let mut rng = Rng::new(seed);
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let sk = NtkSketch::new(d, cfg, &mut rng);
+            acc += dot(&sk.features(y), &sk.features(z)) as f64;
+        }
+        acc / trials as f64
+    }
+
+    /// The sketch's *expectation*: the Definition-1 recursion with the
+    /// truncated polynomials P/Ṗ in place of κ₁/κ₀ (Lemma 5's target).
+    /// Comparing against this isolates sketch variance from Taylor
+    /// truncation error.
+    fn poly_recursion_oracle(cfg: &NtkSketchConfig, alpha: f64) -> f64 {
+        let c = kappa1_coeffs(cfg.p1);
+        let b = kappa0_coeffs(cfg.p0);
+        let mut sig = alpha;
+        let mut k = alpha;
+        for _ in 0..cfg.depth {
+            let sig_dot = polyval(&b, sig);
+            sig = polyval(&c, sig);
+            k = k * sig_dot + sig;
+        }
+        k
+    }
+
+    fn cos_of(y: &[f32], z: &[f32]) -> f64 {
+        let ny = dot(y, y).sqrt() as f64;
+        let nz = dot(z, z).sqrt() as f64;
+        dot(y, z) as f64 / (ny * nz)
+    }
+
+    #[test]
+    fn approximates_ntk_depth2() {
+        let mut rng = Rng::new(151);
+        let d = 10;
+        let y = rng.gauss_vec(d);
+        let z = rng.gauss_vec(d);
+        let cfg = NtkSketchConfig {
+            depth: 2,
+            p1: 2,
+            p0: 3,
+            r: 1024,
+            s: 1024,
+            m_inner: 1024,
+            s_out: 1024,
+            leaf: LeafMode::Osnap(4),
+        };
+        let norms = (dot(&y, &y).sqrt() * dot(&z, &z).sqrt()) as f64;
+        let oracle = norms * poly_recursion_oracle(&cfg, cos_of(&y, &z));
+        let exact = theta_ntk(2, &y, &z);
+        // truncation alone keeps the oracle near the exact kernel here
+        assert!((oracle - exact).abs() < 0.1 * exact.abs(), "oracle={oracle} exact={exact}");
+        let mean = avg_inner(d, cfg, &y, &z, 8, 152);
+        assert!(
+            (mean - oracle).abs() < 0.15 * oracle.abs().max(1.0),
+            "mean={mean} oracle={oracle} exact={exact}"
+        );
+    }
+
+    #[test]
+    fn norm_estimates_poly_recursion_at_one() {
+        // ⟨Ψ(x),Ψ(x)⟩ concentrates on ‖x‖²·K_poly(1), the truncated
+        // recursion at α=1 (slightly below (L+1) because the κ₀ Taylor
+        // series converges slowly at the endpoint).
+        let mut rng = Rng::new(153);
+        let d = 8;
+        let x = rng.gauss_vec(d);
+        let n2: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
+        let cfg = NtkSketchConfig {
+            depth: 3,
+            p1: 2,
+            p0: 3,
+            r: 1024,
+            s: 1024,
+            m_inner: 1024,
+            s_out: 1024,
+            leaf: LeafMode::Srht,
+        };
+        let oracle = n2 * poly_recursion_oracle(&cfg, 1.0);
+        let mean = avg_inner(d, cfg, &x, &x, 8, 154);
+        // At α = 1 every stage is a convex (power) function of the previous
+        // stage's norm fluctuation, so the *second moment* carries an
+        // upward bias at practical sketch sizes — Lemma 5 suppresses it
+        // with m = Ω(L⁶/ε⁴); we assert a concentration band instead of a
+        // tight mean.
+        assert!(
+            mean > 0.6 * oracle && mean < 1.6 * oracle,
+            "mean={mean} oracle={oracle}"
+        );
+        // and the oracle itself is within truncation distance of L+1
+        assert!((poly_recursion_oracle(&cfg, 1.0) - 4.0).abs() < 0.7);
+    }
+
+    #[test]
+    fn zero_maps_to_zero_and_dims() {
+        let mut rng = Rng::new(155);
+        let cfg = NtkSketchConfig::for_budget(2, 64);
+        let sk = NtkSketch::new(7, cfg, &mut rng);
+        let f = sk.features(&[0.0; 7]);
+        assert_eq!(f.len(), 64);
+        assert!(f.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn scale_homogeneous() {
+        // Ψ(c·x) = c·Ψ(x) exactly (normalization + final rescale)
+        let mut rng = Rng::new(156);
+        let cfg = NtkSketchConfig::for_budget(2, 128);
+        let sk = NtkSketch::new(9, cfg, &mut rng);
+        let x = rng.gauss_vec(9);
+        let x2: Vec<f32> = x.iter().map(|&v| 4.0 * v).collect();
+        let f1 = sk.features(&x);
+        let f2 = sk.features(&x2);
+        for (a, b) in f1.iter().zip(f2.iter()) {
+            assert!((4.0 * a - b).abs() < 1e-4 * b.abs().max(1e-3));
+        }
+    }
+
+    #[test]
+    fn transform_consistent_with_features() {
+        let mut rng = Rng::new(157);
+        let cfg = NtkSketchConfig::for_budget(1, 64);
+        let sk = NtkSketch::new(5, cfg, &mut rng);
+        let x = Mat::from_vec(3, 5, rng.gauss_vec(15));
+        let out = sk.transform(&x);
+        assert_eq!((out.rows, out.cols), (3, 64));
+        for i in 0..3 {
+            let f = sk.features(x.row(i));
+            crate::util::prop::assert_close(out.row(i), &f, 1e-6, 1e-6).unwrap();
+        }
+    }
+}

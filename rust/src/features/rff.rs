@@ -1,0 +1,160 @@
+//! Random Fourier Features (Rahimi–Recht 2007) for the Gaussian/RBF
+//! kernel — the classical baseline in Table 2.
+//!
+//! k(x,y) = exp(−‖x−y‖²/(2σ²)) ≈ ⟨φ(x), φ(y)⟩ with
+//! φ(x) = √(2/m)·cos(Wx + b), W ~ N(0, σ⁻²I), b ~ U[0, 2π].
+
+use super::Featurizer;
+use crate::rng::Rng;
+use crate::tensor::Mat;
+
+#[derive(Clone, Debug)]
+pub struct Rff {
+    pub d: usize,
+    pub m: usize,
+    pub sigma: f64,
+    w: Mat, // m×d
+    b: Vec<f32>,
+}
+
+impl Rff {
+    pub fn new(d: usize, m: usize, sigma: f64, rng: &mut Rng) -> Rff {
+        assert!(sigma > 0.0);
+        let scale = (1.0 / sigma) as f32;
+        let mut w = Mat::from_vec(m, d, rng.gauss_vec(m * d));
+        w.scale(scale);
+        let b: Vec<f32> = (0..m).map(|_| rng.uniform_in(0.0, 2.0 * std::f64::consts::PI) as f32).collect();
+        Rff { d, m, sigma, w, b }
+    }
+
+    /// Exact RBF kernel value (for baselines/tests).
+    pub fn kernel(&self, x: &[f32], y: &[f32]) -> f64 {
+        let d2: f64 = x
+            .iter()
+            .zip(y.iter())
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum();
+        (-d2 / (2.0 * self.sigma * self.sigma)).exp()
+    }
+
+    /// RBF Gram matrix (exact-kernel baseline path).
+    pub fn gram(x: &Mat, sigma: f64) -> crate::linalg::DMat {
+        let n = x.rows;
+        let mut g = crate::linalg::DMat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let d2: f64 = x
+                    .row(i)
+                    .iter()
+                    .zip(x.row(j).iter())
+                    .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                    .sum();
+                let v = (-d2 / (2.0 * sigma * sigma)).exp();
+                *g.at_mut(i, j) = v;
+                *g.at_mut(j, i) = v;
+            }
+        }
+        g
+    }
+
+    /// Median-heuristic bandwidth from a data sample.
+    pub fn median_sigma(x: &Mat, rng: &mut Rng) -> f64 {
+        let n = x.rows.min(200);
+        let idx = rng.sample_indices(x.rows, n);
+        let mut d2s = Vec::new();
+        for i in 0..n {
+            for j in 0..i {
+                let d2: f64 = x
+                    .row(idx[i])
+                    .iter()
+                    .zip(x.row(idx[j]).iter())
+                    .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                    .sum();
+                d2s.push(d2);
+            }
+        }
+        d2s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if d2s.is_empty() {
+            return 1.0;
+        }
+        (d2s[d2s.len() / 2]).sqrt().max(1e-9)
+    }
+}
+
+impl Featurizer for Rff {
+    fn dim(&self) -> usize {
+        self.m
+    }
+
+    fn transform(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols, self.d);
+        let mut out = x.matmul_nt(&self.w);
+        let scale = (2.0 / self.m as f32).sqrt();
+        for i in 0..out.rows {
+            let row = out.row_mut(i);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = scale * (*v + self.b[j]).cos();
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "RFF"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::dot;
+
+    #[test]
+    fn approximates_rbf_kernel() {
+        let mut rng = Rng::new(121);
+        let d = 10;
+        let x: Vec<f32> = rng.gauss_vec(d);
+        let y: Vec<f32> = rng.gauss_vec(d);
+        let rff = Rff::new(d, 16384, 2.0, &mut rng);
+        let exact = rff.kernel(&x, &y);
+        let mx = Mat::from_vec(1, d, x);
+        let my = Mat::from_vec(1, d, y);
+        let fx = rff.transform(&mx);
+        let fy = rff.transform(&my);
+        let approx = dot(fx.row(0), fy.row(0)) as f64;
+        assert!((approx - exact).abs() < 0.03, "approx={approx} exact={exact}");
+    }
+
+    #[test]
+    fn self_kernel_is_one() {
+        let mut rng = Rng::new(122);
+        let d = 6;
+        let rff = Rff::new(d, 8192, 1.5, &mut rng);
+        let x = Mat::from_vec(1, d, rng.gauss_vec(d));
+        let f = rff.transform(&x);
+        let n = dot(f.row(0), f.row(0)) as f64;
+        assert!((n - 1.0).abs() < 0.05, "norm {n}");
+    }
+
+    #[test]
+    fn gram_matches_kernel() {
+        let mut rng = Rng::new(123);
+        let x = Mat::from_vec(5, 4, rng.gauss_vec(20));
+        let g = Rff::gram(&x, 2.0);
+        let rff = Rff::new(4, 8, 2.0, &mut rng);
+        for i in 0..5 {
+            assert!((g.at(i, i) - 1.0).abs() < 1e-12);
+            for j in 0..5 {
+                assert!((g.at(i, j) - rff.kernel(x.row(i), x.row(j))).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn median_sigma_positive() {
+        let mut rng = Rng::new(124);
+        let x = Mat::from_vec(50, 8, rng.gauss_vec(400));
+        let s = Rff::median_sigma(&x, &mut rng);
+        assert!(s > 0.5 && s < 20.0, "sigma={s}");
+    }
+}

@@ -1,0 +1,28 @@
+//! # ntk-sketch
+//!
+//! Full-system reproduction of *Scaling Neural Tangent Kernels via
+//! Sketching and Random Features* (Zandieh, Han, Avron, Shoham, Kim, Shin —
+//! NeurIPS 2021) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)**: feature-map serving & streaming-regression
+//!   coordinator, plus reference implementations of every algorithm and
+//!   baseline in the paper (NTKSketch, NTKRF, CNTKSketch, GradRF, RFF,
+//!   leverage-score features, exact NTK/CNTK dynamic programs).
+//! - **L2/L1 (python/compile)**: the NTKRF feature map in JAX calling
+//!   Pallas kernels, AOT-lowered to HLO text executed here via PJRT.
+//!
+//! See DESIGN.md for the module inventory and the per-experiment index.
+
+pub mod util;
+pub mod rng;
+pub mod tensor;
+pub mod linalg;
+pub mod transforms;
+pub mod ntk;
+pub mod features;
+pub mod data;
+pub mod regression;
+pub mod cntk;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;

@@ -1,0 +1,700 @@
+//! f64 numerical linear algebra for the solver side.
+//!
+//! Feature matrices stay f32 (`tensor::Mat`); everything that conditions a
+//! solve — Gram/normal-equation matrices, Cholesky, CG, eigenvalues for the
+//! spectral-approximation checks, NNLS for the Remark-1 polynomial fit —
+//! runs in f64 here.
+
+use crate::tensor::Mat;
+
+/// Row-major dense f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl DMat {
+    pub fn zeros(rows: usize, cols: usize) -> DMat {
+        DMat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> DMat {
+        assert_eq!(data.len(), rows * cols);
+        DMat { rows, cols, data }
+    }
+
+    pub fn from_fn<F: FnMut(usize, usize) -> f64>(rows: usize, cols: usize, mut f: F) -> DMat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        DMat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> DMat {
+        DMat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// Widen an f32 matrix.
+    pub fn from_mat(m: &Mat) -> DMat {
+        DMat {
+            rows: m.rows,
+            cols: m.cols,
+            data: m.data.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    /// Narrow to f32.
+    pub fn to_mat(&self) -> Mat {
+        Mat::from_vec(self.rows, self.cols, self.data.iter().map(|&x| x as f32).collect())
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> DMat {
+        DMat::from_fn(self.cols, self.rows, |i, j| self.at(j, i))
+    }
+
+    pub fn matmul(&self, other: &DMat) -> DMat {
+        assert_eq!(self.cols, other.rows);
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = DMat::zeros(m, n);
+        for i in 0..m {
+            for kk in 0..k {
+                let aik = self.data[i * k + kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
+                    *o += aik * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(x.iter()).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    pub fn add_diag(&mut self, lambda: f64) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self.data[i * self.cols + i] += lambda;
+        }
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    /// Gram of an f32 matrix in f64: Aᵀ A (cols×cols). This is the
+    /// numerically-critical accumulation for streaming ridge; it is the
+    /// solver-side hot path (§Perf), so the upper triangle is computed in
+    /// parallel over feature-index chunks balanced by triangle area.
+    pub fn gram_of(a: &Mat) -> DMat {
+        let (n, d) = (a.rows, a.cols);
+        let mut out = DMat::zeros(d, d);
+        // split rows p of the upper triangle into chunks of roughly equal
+        // area Σ (d − p); each thread writes a disjoint slice of `out`.
+        let nt = crate::util::par::num_threads().min(d.max(1));
+        let mut bounds = vec![0usize];
+        let total_area = d * (d + 1) / 2;
+        let per = total_area.div_ceil(nt.max(1));
+        let mut acc = 0usize;
+        for p in 0..d {
+            acc += d - p;
+            if acc >= per && *bounds.last().unwrap() < p + 1 {
+                bounds.push(p + 1);
+                acc = 0;
+            }
+        }
+        if *bounds.last().unwrap() != d {
+            bounds.push(d);
+        }
+        std::thread::scope(|s| {
+            let mut rest: &mut [f64] = &mut out.data;
+            let mut prev = 0usize;
+            for w in bounds.windows(2) {
+                let (lo, hi) = (w[0], w[1]);
+                let (head, tail) = rest.split_at_mut((hi - prev) * d);
+                // head covers output rows lo..hi (offset by lo*d globally)
+                rest = tail;
+                prev = hi;
+                s.spawn(move || {
+                    for i in 0..n {
+                        let r = a.row(i);
+                        for p in lo..hi {
+                            let rp = r[p] as f64;
+                            if rp == 0.0 {
+                                continue;
+                            }
+                            let orow = &mut head[(p - lo) * d..(p - lo + 1) * d];
+                            for (q, o) in orow.iter_mut().enumerate().skip(p) {
+                                *o += rp * r[q] as f64;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        for p in 0..d {
+            for q in 0..p {
+                out.data[p * d + q] = out.data[q * d + p];
+            }
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, other: &DMat) -> f64 {
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Cholesky factorization A = L Lᵀ of a symmetric positive-definite matrix.
+/// Returns the lower factor. Fails if a pivot is non-positive.
+///
+/// Small matrices use the classic serial algorithm; larger ones the
+/// blocked right-looking variant with a parallel trailing update (§Perf:
+/// the solve at feature dim 2-8k is the solver-side hot path).
+pub fn cholesky(a: &DMat) -> Result<DMat, String> {
+    assert_eq!(a.rows, a.cols);
+    if a.rows <= 128 {
+        cholesky_serial(a)
+    } else {
+        cholesky_blocked(a, 96)
+    }
+}
+
+fn cholesky_serial(a: &DMat) -> Result<DMat, String> {
+    let n = a.rows;
+    let mut l = DMat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.at(i, j);
+            for k in 0..j {
+                s -= l.at(i, k) * l.at(j, k);
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return Err(format!("cholesky: non-PD pivot {s} at {i}"));
+                }
+                *l.at_mut(i, j) = s.sqrt();
+            } else {
+                *l.at_mut(i, j) = s / l.at(j, j);
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Blocked right-looking Cholesky: factor a panel, triangular-solve the
+/// sub-panel, then rank-kb update the trailing matrix in parallel — the
+/// O(n³) work lives in the (parallel) trailing update.
+fn cholesky_blocked(a: &DMat, bs: usize) -> Result<DMat, String> {
+    let n = a.rows;
+    // work in-place on a lower-triangular copy
+    let mut m = a.clone();
+    let failed = std::sync::atomic::AtomicUsize::new(usize::MAX);
+    let mut k = 0usize;
+    while k < n {
+        let kb = bs.min(n - k);
+        // 1. factor the diagonal block serially
+        for i in k..k + kb {
+            for j in k..=i {
+                let mut s = m.at(i, j);
+                for t in k..j {
+                    s -= m.at(i, t) * m.at(j, t);
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return Err(format!("cholesky: non-PD pivot {s} at {i}"));
+                    }
+                    *m.at_mut(i, j) = s.sqrt();
+                } else {
+                    *m.at_mut(i, j) = s / m.at(j, j);
+                }
+            }
+        }
+        let rest = k + kb;
+        if rest < n {
+            // 2. L21 = A21 · L11⁻ᵀ (parallel over trailing rows)
+            {
+                let diag: Vec<f64> = (k..k + kb).map(|j| m.at(j, j)).collect();
+                let l11: Vec<f64> = (k..k + kb)
+                    .flat_map(|i| (k..k + kb).map(move |j| (i, j)))
+                    .map(|(i, j)| m.at(i, j))
+                    .collect();
+                let cols = m.cols;
+                let data = std::sync::Mutex::new(&mut m.data);
+                crate::util::par::par_chunks(n - rest, |lo, hi| {
+                    // copy rows, solve, write back
+                    let mut rows: Vec<Vec<f64>> = {
+                        let g = data.lock().unwrap();
+                        (lo..hi)
+                            .map(|r| g[(rest + r) * cols + k..(rest + r) * cols + k + kb].to_vec())
+                            .collect()
+                    };
+                    for row in rows.iter_mut() {
+                        for j in 0..kb {
+                            let mut s = row[j];
+                            for t in 0..j {
+                                s -= row[t] * l11[j * kb + t];
+                            }
+                            row[j] = s / diag[j];
+                        }
+                    }
+                    let mut g = data.lock().unwrap();
+                    for (r, row) in rows.into_iter().enumerate() {
+                        g[(rest + lo + r) * cols + k..(rest + lo + r) * cols + k + kb]
+                            .copy_from_slice(&row);
+                    }
+                });
+            }
+            // 3. trailing update A22 -= L21 L21ᵀ (parallel, lower triangle)
+            {
+                let cols = m.cols;
+                let snapshot: Vec<f64> = m.data.clone(); // read L21 from snapshot
+                let data = std::sync::Mutex::new(&mut m.data);
+                crate::util::par::par_chunks(n - rest, |lo, hi| {
+                    let mut local: Vec<(usize, Vec<f64>)> = Vec::with_capacity(hi - lo);
+                    for r in lo..hi {
+                        let i = rest + r;
+                        let li = &snapshot[i * cols + k..i * cols + k + kb];
+                        let mut row = snapshot[i * cols + rest..i * cols + i + 1].to_vec();
+                        for (jj, v) in row.iter_mut().enumerate() {
+                            let j = rest + jj;
+                            let lj = &snapshot[j * cols + k..j * cols + k + kb];
+                            let mut s = 0.0;
+                            for t in 0..kb {
+                                s += li[t] * lj[t];
+                            }
+                            *v -= s;
+                        }
+                        local.push((i, row));
+                    }
+                    let mut g = data.lock().unwrap();
+                    for (i, row) in local {
+                        g[i * cols + rest..i * cols + i + 1].copy_from_slice(&row);
+                    }
+                });
+            }
+        }
+        k += kb;
+    }
+    let _ = failed;
+    // zero the strict upper triangle
+    for i in 0..n {
+        for j in (i + 1)..n {
+            m.data[i * n + j] = 0.0;
+        }
+    }
+    Ok(m)
+}
+
+/// Solve L y = b (lower triangular, forward substitution).
+pub fn solve_lower(l: &DMat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l.at(i, k) * y[k];
+        }
+        y[i] = s / l.at(i, i);
+    }
+    y
+}
+
+/// Solve Lᵀ x = y (backward substitution on the lower factor).
+pub fn solve_lower_t(l: &DMat, y: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in (i + 1)..n {
+            s -= l.at(k, i) * x[k];
+        }
+        x[i] = s / l.at(i, i);
+    }
+    x
+}
+
+/// Solve (A) x = b for SPD A via Cholesky, retrying with growing jitter.
+pub fn solve_spd(a: &DMat, b: &[f64]) -> Result<Vec<f64>, String> {
+    let mut jitter = 0.0;
+    for attempt in 0..6 {
+        let mut aj = a.clone();
+        if jitter > 0.0 {
+            aj.add_diag(jitter);
+        }
+        match cholesky(&aj) {
+            Ok(l) => {
+                let y = solve_lower(&l, b);
+                return Ok(solve_lower_t(&l, &y));
+            }
+            Err(_) if attempt < 5 => {
+                let scale = (0..a.rows).map(|i| a.at(i, i)).fold(0.0, f64::max).max(1e-12);
+                jitter = if jitter == 0.0 { 1e-10 * scale } else { jitter * 100.0 };
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    unreachable!()
+}
+
+/// Solve A X = B column-by-column for SPD A (multi-RHS).
+pub fn solve_spd_multi(a: &DMat, b: &DMat) -> Result<DMat, String> {
+    let l = {
+        let mut jitter = 0.0;
+        loop {
+            let mut aj = a.clone();
+            if jitter > 0.0 {
+                aj.add_diag(jitter);
+            }
+            match cholesky(&aj) {
+                Ok(l) => break l,
+                Err(e) => {
+                    if jitter > 1e3 {
+                        return Err(e);
+                    }
+                    let scale =
+                        (0..a.rows).map(|i| a.at(i, i)).fold(0.0, f64::max).max(1e-12);
+                    jitter = if jitter == 0.0 { 1e-10 * scale } else { jitter * 100.0 };
+                }
+            }
+        }
+    };
+    let n = a.rows;
+    let k = b.cols;
+    let mut x = DMat::zeros(n, k);
+    let mut col = vec![0.0; n];
+    for j in 0..k {
+        for i in 0..n {
+            col[i] = b.at(i, j);
+        }
+        let y = solve_lower(&l, &col);
+        let xj = solve_lower_t(&l, &y);
+        for i in 0..n {
+            *x.at_mut(i, j) = xj[i];
+        }
+    }
+    Ok(x)
+}
+
+/// Conjugate gradient for SPD systems; returns (x, iterations).
+pub fn cg(a: &DMat, b: &[f64], tol: f64, max_iter: usize) -> (Vec<f64>, usize) {
+    let n = b.len();
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut p = r.clone();
+    let mut rs: f64 = r.iter().map(|v| v * v).sum();
+    let b_norm = rs.sqrt().max(1e-300);
+    for it in 0..max_iter {
+        if rs.sqrt() / b_norm < tol {
+            return (x, it);
+        }
+        let ap = a.matvec(&p);
+        let pap: f64 = p.iter().zip(ap.iter()).map(|(u, v)| u * v).sum();
+        if pap.abs() < 1e-300 {
+            return (x, it);
+        }
+        let alpha = rs / pap;
+        for i in 0..n {
+            x[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        let rs_new: f64 = r.iter().map(|v| v * v).sum();
+        let beta = rs_new / rs;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        rs = rs_new;
+    }
+    (x, max_iter)
+}
+
+/// Jacobi eigenvalue algorithm for a symmetric matrix.
+/// Returns (eigenvalues ascending, eigenvectors as columns of V).
+pub fn jacobi_eigen(a: &DMat, max_sweeps: usize) -> (Vec<f64>, DMat) {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = DMat::eye(n);
+    for _sweep in 0..max_sweeps {
+        // off-diagonal norm
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m.at(i, j) * m.at(i, j);
+            }
+        }
+        if off.sqrt() < 1e-12 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.at(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m.at(p, p);
+                let aqq = m.at(q, q);
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p,q of m
+                for k in 0..n {
+                    let mkp = m.at(k, p);
+                    let mkq = m.at(k, q);
+                    *m.at_mut(k, p) = c * mkp - s * mkq;
+                    *m.at_mut(k, q) = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m.at(p, k);
+                    let mqk = m.at(q, k);
+                    *m.at_mut(p, k) = c * mpk - s * mqk;
+                    *m.at_mut(q, k) = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v.at(k, p);
+                    let vkq = v.at(k, q);
+                    *v.at_mut(k, p) = c * vkp - s * vkq;
+                    *v.at_mut(k, q) = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let mut eig: Vec<(f64, usize)> = (0..n).map(|i| (m.at(i, i), i)).collect();
+    eig.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let vals: Vec<f64> = eig.iter().map(|e| e.0).collect();
+    let mut vecs = DMat::zeros(n, n);
+    for (newcol, &(_, oldcol)) in eig.iter().enumerate() {
+        for r in 0..n {
+            *vecs.at_mut(r, newcol) = v.at(r, oldcol);
+        }
+    }
+    (vals, vecs)
+}
+
+/// Spectral norm (largest singular value) of a symmetric matrix via power
+/// iteration. Good enough for step-size/scale estimates.
+pub fn power_iter_sym(a: &DMat, iters: usize, seed: u64) -> f64 {
+    let n = a.rows;
+    let mut rng = crate::rng::Rng::new(seed);
+    let mut x: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+    let mut lam = 0.0;
+    for _ in 0..iters {
+        let y = a.matvec(&x);
+        let nrm: f64 = y.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if nrm < 1e-300 {
+            return 0.0;
+        }
+        lam = nrm;
+        for i in 0..n {
+            x[i] = y[i] / nrm;
+        }
+    }
+    lam
+}
+
+/// Non-negative least squares min ||A x - b||², x >= 0, via projected
+/// gradient with Nesterov-ish restart. Used by the Remark-1 polynomial fit
+/// (dot-product kernels need non-negative coefficients to stay PSD).
+pub fn nnls(a: &DMat, b: &[f64], iters: usize) -> Vec<f64> {
+    let at = a.transpose();
+    let atb = at.matvec(b);
+    let ata = at.matmul(a);
+    let n = a.cols;
+    let lip = power_iter_sym(&ata, 50, 42).max(1e-12);
+    let step = 1.0 / lip;
+    let mut x = vec![0.0; n];
+    let mut y = x.clone();
+    let mut t = 1.0f64;
+    for _ in 0..iters {
+        let grad = {
+            let mut g = ata.matvec(&y);
+            for i in 0..n {
+                g[i] -= atb[i];
+            }
+            g
+        };
+        let mut x_new = vec![0.0; n];
+        for i in 0..n {
+            x_new[i] = (y[i] - step * grad[i]).max(0.0);
+        }
+        let t_new = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
+        for i in 0..n {
+            y[i] = x_new[i] + (t - 1.0) / t_new * (x_new[i] - x[i]);
+        }
+        x = x_new;
+        t = t_new;
+    }
+    x
+}
+
+/// Statistical dimension s_λ(K) = tr(K (K + λ I)^{-1}) of a PSD matrix,
+/// computed from its eigenvalues (paper §1.3 notation).
+pub fn statistical_dimension(eigs: &[f64], lambda: f64) -> f64 {
+    eigs.iter().map(|&e| {
+        let e = e.max(0.0);
+        e / (e + lambda)
+    }).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::util::prop::{self, Config};
+
+    fn rand_spd(rng: &mut Rng, n: usize) -> DMat {
+        let b = DMat::from_fn(n, n, |_, _| rng.gauss());
+        let mut a = b.transpose().matmul(&b);
+        a.add_diag(0.5 * n as f64);
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        prop::check("chol", Config { cases: 16, seed: 21 }, |rng| {
+            let n = prop::size_in(rng, 1, 12);
+            let a = rand_spd(rng, n);
+            let l = cholesky(&a).map_err(|e| e)?;
+            let llt = l.matmul(&l.transpose());
+            if a.max_abs_diff(&llt) > 1e-8 * (n as f64) {
+                return Err(format!("||A - LL^T|| = {}", a.max_abs_diff(&llt)));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn solve_spd_accurate() {
+        prop::check("solve_spd", Config { cases: 16, seed: 22 }, |rng| {
+            let n = prop::size_in(rng, 1, 15);
+            let a = rand_spd(rng, n);
+            let x_true: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+            let b = a.matvec(&x_true);
+            let x = solve_spd(&a, &b).map_err(|e| e)?;
+            for i in 0..n {
+                if (x[i] - x_true[i]).abs() > 1e-6 {
+                    return Err(format!("x[{i}]={} vs {}", x[i], x_true[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = DMat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigs 3, -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn cg_matches_direct() {
+        let mut rng = Rng::new(23);
+        let n = 20;
+        let a = rand_spd(&mut rng, n);
+        let b: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        let direct = solve_spd(&a, &b).unwrap();
+        let (x, iters) = cg(&a, &b, 1e-12, 10 * n);
+        assert!(iters <= 10 * n);
+        for i in 0..n {
+            assert!((x[i] - direct[i]).abs() < 1e-6, "i={i}");
+        }
+    }
+
+    #[test]
+    fn jacobi_eigen_diagonalizes() {
+        let mut rng = Rng::new(24);
+        let n = 10;
+        let a = rand_spd(&mut rng, n);
+        let (vals, vecs) = jacobi_eigen(&a, 50);
+        // ascending
+        for w in vals.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12);
+        }
+        // A v_i = lambda_i v_i
+        for i in 0..n {
+            let v: Vec<f64> = (0..n).map(|r| vecs.at(r, i)).collect();
+            let av = a.matvec(&v);
+            for r in 0..n {
+                assert!((av[r] - vals[i] * v[r]).abs() < 1e-7, "eigpair {i}");
+            }
+        }
+        // trace preserved
+        let tr: f64 = (0..n).map(|i| a.at(i, i)).sum();
+        let sum: f64 = vals.iter().sum();
+        assert!((tr - sum).abs() < 1e-8);
+    }
+
+    #[test]
+    fn power_iteration_matches_jacobi_top() {
+        let mut rng = Rng::new(25);
+        let a = rand_spd(&mut rng, 12);
+        let (vals, _) = jacobi_eigen(&a, 60);
+        let top = vals.last().unwrap();
+        let pi = power_iter_sym(&a, 500, 7);
+        assert!((pi - top).abs() / top < 1e-6, "pi={pi} top={top}");
+    }
+
+    #[test]
+    fn nnls_nonneg_and_fits() {
+        let mut rng = Rng::new(26);
+        let (m, n) = (40, 6);
+        let a = DMat::from_fn(m, n, |_, _| rng.uniform());
+        let x_true: Vec<f64> = (0..n).map(|i| if i % 2 == 0 { 1.5 } else { 0.0 }).collect();
+        let b = a.matvec(&x_true);
+        let x = nnls(&a, &b, 3000);
+        assert!(x.iter().all(|&v| v >= 0.0));
+        let res = a.matvec(&x).iter().zip(b.iter()).map(|(u, v)| (u - v).powi(2)).sum::<f64>();
+        assert!(res < 1e-6, "residual {res}");
+    }
+
+    #[test]
+    fn gram_of_matches_explicit() {
+        let mut rng = Rng::new(27);
+        let a = Mat::from_vec(7, 4, rng.gauss_vec(28));
+        let g = DMat::gram_of(&a);
+        let ad = DMat::from_mat(&a);
+        let g2 = ad.transpose().matmul(&ad);
+        assert!(g.max_abs_diff(&g2) < 1e-6);
+    }
+
+    #[test]
+    fn statistical_dimension_limits() {
+        let eigs = vec![1.0; 10];
+        assert!((statistical_dimension(&eigs, 0.0) - 10.0).abs() < 1e-12);
+        assert!(statistical_dimension(&eigs, 1e12) < 1e-10);
+    }
+}

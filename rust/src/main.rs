@@ -1,0 +1,155 @@
+//! ntk-sketch CLI — the coordinator entrypoint.
+//!
+//! Subcommands:
+//!   info                         show artifact + build info
+//!   golden                       verify AOT golden parity through PJRT
+//!   kernel   --depth L           print K_relu^{(L)} on a grid (Fig. 1 data)
+//!   train    --family F ...      feature-map ridge regression on a
+//!                                UCI-like dataset (Table 2 single cell)
+//!   serve    --requests N        micro serving benchmark over the artifact
+
+use ntk_sketch::coordinator::{BatchBackend, BatchPolicy, FeatureServer};
+use ntk_sketch::data::uci_like::{self, UciFamily};
+use ntk_sketch::features::ntk_rf::{NtkRf, NtkRfConfig};
+use ntk_sketch::features::ntk_sketch::{NtkSketch, NtkSketchConfig};
+use ntk_sketch::features::rff::Rff;
+use ntk_sketch::features::Featurizer;
+use ntk_sketch::ntk::k_relu;
+use ntk_sketch::regression::cv::kfold_mse;
+use ntk_sketch::rng::Rng;
+use ntk_sketch::runtime::{artifacts_dir, Engine};
+use ntk_sketch::tensor::Mat;
+use ntk_sketch::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => info(),
+        "golden" => golden(),
+        "kernel" => kernel(&args),
+        "train" => train(&args),
+        "serve" => serve(&args),
+        _ => {
+            eprintln!(
+                "usage: ntk-sketch <info|golden|kernel|train|serve> [--flags]\n\
+                 examples:\n\
+                 \tntk-sketch kernel --depth 3\n\
+                 \tntk-sketch train --family protein --method ntkrf --m 1024 --n 1000\n\
+                 \tntk-sketch serve --requests 1000"
+            );
+        }
+    }
+}
+
+fn info() {
+    println!("ntk-sketch — Scaling Neural Tangent Kernels via Sketching and Random Features (NeurIPS 2021)");
+    println!("artifacts dir: {}", artifacts_dir().display());
+    match Engine::load(&artifacts_dir(), "ntk_rf") {
+        Ok(e) => println!(
+            "artifact ntk_rf: depth={} d={} batch={} feature_dim={}",
+            e.artifact.depth,
+            e.input_dim(),
+            e.batch(),
+            e.feature_dim()
+        ),
+        Err(err) => println!("no artifact loaded ({err}); run `make artifacts`"),
+    }
+}
+
+fn golden() {
+    let e = Engine::load(&artifacts_dir(), "ntk_rf").expect("load artifact");
+    let rel = e.verify_golden(1e-3, 1e-4).expect("golden parity");
+    println!("golden parity OK (max relative error {rel:.2e})");
+}
+
+fn kernel(args: &Args) {
+    let depth = args.usize("depth", 3);
+    let points = args.usize("points", 21);
+    println!("alpha,K_relu^{depth}");
+    for k in 0..points {
+        let a = -1.0 + 2.0 * k as f64 / (points - 1) as f64;
+        println!("{a:.3},{:.6}", k_relu(depth, a));
+    }
+}
+
+fn parse_family(name: &str) -> UciFamily {
+    match name {
+        "millionsongs" => UciFamily::MillionSongs,
+        "workloads" => UciFamily::WorkLoads,
+        "ct" => UciFamily::CtSlices,
+        _ => UciFamily::Protein,
+    }
+}
+
+fn train(args: &Args) {
+    let fam = parse_family(args.get_or("family", "protein"));
+    let n = args.usize("n", 1000);
+    let m = args.usize("m", 1024);
+    let lambda = args.f64("lambda", 1e-3);
+    let method = args.get_or("method", "ntkrf");
+    let depth = args.usize("depth", 1);
+    let ds = uci_like::generate(fam, n, args.u64("seed", 7));
+    let mut rng = Rng::new(args.u64("seed", 7) + 1);
+    let f: Box<dyn Featurizer> = match method {
+        "rff" => {
+            let sigma = Rff::median_sigma(&ds.x, &mut rng);
+            Box::new(Rff::new(ds.d(), m, sigma, &mut rng))
+        }
+        "ntksketch" => {
+            Box::new(NtkSketch::new(ds.d(), NtkSketchConfig::for_budget(depth, m), &mut rng))
+        }
+        _ => Box::new(NtkRf::new(ds.d(), NtkRfConfig::for_budget(depth, m), &mut rng)),
+    };
+    let t = std::time::Instant::now();
+    let e = kfold_mse(&ds, |x| f.transform(x), lambda, 4, 9);
+    println!(
+        "{} n={n} method={method} m={} lambda={lambda}: 4-fold MSE = {e:.4} ({:.2}s)",
+        fam.name(),
+        f.dim(),
+        t.elapsed().as_secs_f64()
+    );
+}
+
+struct PjrtBackend {
+    engine: Engine,
+}
+
+impl BatchBackend for PjrtBackend {
+    fn batch(&self) -> usize {
+        self.engine.batch()
+    }
+    fn input_dim(&self) -> usize {
+        self.engine.input_dim()
+    }
+    fn feature_dim(&self) -> usize {
+        self.engine.feature_dim()
+    }
+    fn run(&self, x: &Mat) -> Mat {
+        self.engine.run_batch(x).expect("pjrt batch")
+    }
+}
+
+fn serve(args: &Args) {
+    let dir = artifacts_dir();
+    let n_req = args.usize("requests", 1000);
+    let (server, client) = FeatureServer::start(
+        move || PjrtBackend { engine: Engine::load(&dir, "ntk_rf").expect("engine") },
+        args.usize("workers", 1),
+        BatchPolicy::default(),
+        32,
+    );
+    let mut rng = Rng::new(3);
+    let d = 64;
+    let t = std::time::Instant::now();
+    let rows: Vec<Vec<f32>> = (0..n_req).map(|_| rng.gauss_vec(d)).collect();
+    let rxs: Vec<_> = rows.into_iter().map(|r| client.submit(r)).collect();
+    for rx in rxs {
+        let _ = rx.recv().expect("response");
+    }
+    let secs = t.elapsed().as_secs_f64();
+    println!("{n_req} requests in {secs:.2}s = {:.0} req/s", n_req as f64 / secs);
+    println!("{}", server.metrics.summary());
+    drop(client);
+    server.join();
+}

@@ -1,0 +1,177 @@
+//! Arc-cosine kernels of order 0 and 1 (Cho & Saul 2009) and their
+//! truncated Taylor expansions — Definition 1 Eq. (2) and Algorithm 1
+//! Eq. (6) of the paper.
+
+/// κ₀(α) = (π − arccos α)/π, the 0th-order arc-cosine kernel.
+pub fn kappa0(alpha: f64) -> f64 {
+    let a = alpha.clamp(-1.0, 1.0);
+    (std::f64::consts::PI - a.acos()) / std::f64::consts::PI
+}
+
+/// κ₁(α) = (√(1−α²) + α(π − arccos α))/π, the 1st-order arc-cosine kernel.
+pub fn kappa1(alpha: f64) -> f64 {
+    let a = alpha.clamp(-1.0, 1.0);
+    ((1.0 - a * a).max(0.0).sqrt() + a * (std::f64::consts::PI - a.acos()))
+        / std::f64::consts::PI
+}
+
+/// Central-binomial ratio r_i = (2i)! / (2^{2i} (i!)²), computed
+/// iteratively: r_0 = 1, r_i = r_{i-1} · (2i−1)/(2i).
+fn central_ratio(i: usize) -> f64 {
+    let mut r = 1.0;
+    for k in 1..=i {
+        r *= (2 * k - 1) as f64 / (2 * k) as f64;
+    }
+    r
+}
+
+/// Taylor coefficients of P_relu^{(p)} ≈ κ₁ (Eq. 6): degree 2p+2,
+/// returns c_0..c_{2p+2} with c_j ≥ 0.
+///
+/// κ₁(α) = 1/π + α/2 + (1/π) Σ_{i≥0} r_i / ((2i+1)(2i+2)) α^{2i+2}.
+pub fn kappa1_coeffs(p: usize) -> Vec<f64> {
+    let deg = 2 * p + 2;
+    let mut c = vec![0.0; deg + 1];
+    c[0] = 1.0 / std::f64::consts::PI;
+    c[1] = 0.5;
+    let mut r = 1.0; // r_i
+    for i in 0..=p {
+        if i > 0 {
+            r *= (2 * i - 1) as f64 / (2 * i) as f64;
+        }
+        c[2 * i + 2] = r / (((2 * i + 1) * (2 * i + 2)) as f64 * std::f64::consts::PI);
+    }
+    c
+}
+
+/// Taylor coefficients of Ṗ_relu^{(p')} ≈ κ₀ (Eq. 6): degree 2p'+1,
+/// returns b_0..b_{2p'+1} with b_j ≥ 0.
+///
+/// κ₀(α) = 1/2 + (1/π) Σ_{i≥0} r_i / (2i+1) α^{2i+1}.
+pub fn kappa0_coeffs(p: usize) -> Vec<f64> {
+    let deg = 2 * p + 1;
+    let mut b = vec![0.0; deg + 1];
+    b[0] = 0.5;
+    let mut r = 1.0;
+    for i in 0..=p {
+        if i > 0 {
+            r *= (2 * i - 1) as f64 / (2 * i) as f64;
+        }
+        b[2 * i + 1] = r / ((2 * i + 1) as f64 * std::f64::consts::PI);
+    }
+    b
+}
+
+/// Evaluate a polynomial with coefficients `c` (c[j] multiplies α^j).
+pub fn polyval(c: &[f64], alpha: f64) -> f64 {
+    let mut acc = 0.0;
+    for &cj in c.iter().rev() {
+        acc = acc * alpha + cj;
+    }
+    acc
+}
+
+/// Truncation degree p for κ₁ to hit error ε (Lemma 3: p ≥ (1/9)ε^{-2/3}).
+pub fn kappa1_degree_for(eps: f64) -> usize {
+    ((1.0 / (9.0 * eps.powf(2.0 / 3.0))).ceil() as usize).max(1)
+}
+
+/// Truncation degree p' for κ₀ to hit error ε (Lemma 3: p' ≥ (1/26)ε^{-2}).
+pub fn kappa0_degree_for(eps: f64) -> usize {
+    ((1.0 / (26.0 * eps * eps)).ceil() as usize).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kappa_endpoint_values() {
+        assert!((kappa0(1.0) - 1.0).abs() < 1e-12);
+        assert!(kappa0(-1.0).abs() < 1e-12);
+        assert!((kappa0(0.0) - 0.5).abs() < 1e-12);
+        assert!((kappa1(1.0) - 1.0).abs() < 1e-12);
+        assert!(kappa1(-1.0).abs() < 1e-12);
+        assert!((kappa1(0.0) - 1.0 / std::f64::consts::PI).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kappas_monotone_on_interval() {
+        let mut prev0 = kappa0(-1.0);
+        let mut prev1 = kappa1(-1.0);
+        for k in 1..=200 {
+            let a = -1.0 + 2.0 * k as f64 / 200.0;
+            let v0 = kappa0(a);
+            let v1 = kappa1(a);
+            assert!(v0 >= prev0 - 1e-12, "kappa0 not monotone at {a}");
+            assert!(v1 >= prev1 - 1e-12, "kappa1 not monotone at {a}");
+            prev0 = v0;
+            prev1 = v1;
+        }
+    }
+
+    #[test]
+    fn kappa0_is_derivative_of_kappa1() {
+        // κ0 = d/dα κ1 (paper remark in Appendix C)
+        for &a in &[-0.9, -0.5, 0.0, 0.3, 0.7, 0.95] {
+            let h = 1e-6;
+            let num = (kappa1(a + h) - kappa1(a - h)) / (2.0 * h);
+            assert!((num - kappa0(a)).abs() < 1e-5, "at {a}: {num} vs {}", kappa0(a));
+        }
+    }
+
+    #[test]
+    fn taylor_coeffs_nonneg_and_converge() {
+        let c = kappa1_coeffs(50);
+        let b = kappa0_coeffs(50);
+        assert!(c.iter().all(|&x| x >= 0.0));
+        assert!(b.iter().all(|&x| x >= 0.0));
+        // sum of coeffs -> kappa(1) = 1 as degree grows
+        let s1: f64 = c.iter().sum();
+        let s0: f64 = b.iter().sum();
+        assert!((s1 - 1.0).abs() < 5e-3, "sum kappa1 coeffs {s1}");
+        assert!((s0 - 1.0).abs() < 5e-2, "sum kappa0 coeffs {s0}");
+    }
+
+    #[test]
+    fn taylor_approximates_kappa1_lemma3() {
+        // Lemma 3: max error over [-1,1] <= eps for p >= (1/9) eps^{-2/3}
+        for &eps in &[0.1f64, 0.05, 0.02] {
+            let p = kappa1_degree_for(eps);
+            let c = kappa1_coeffs(p);
+            let mut max_err: f64 = 0.0;
+            for k in 0..=400 {
+                let a = -1.0 + 2.0 * k as f64 / 400.0;
+                max_err = max_err.max((polyval(&c, a) - kappa1(a)).abs());
+            }
+            assert!(max_err <= eps, "eps={eps} p={p} err={max_err}");
+        }
+    }
+
+    #[test]
+    fn taylor_approximates_kappa0_lemma3() {
+        for &eps in &[0.2f64, 0.1, 0.05] {
+            let p = kappa0_degree_for(eps);
+            let b = kappa0_coeffs(p);
+            let mut max_err: f64 = 0.0;
+            for k in 0..=400 {
+                let a = -1.0 + 2.0 * k as f64 / 400.0;
+                max_err = max_err.max((polyval(&b, a) - kappa0(a)).abs());
+            }
+            assert!(max_err <= eps, "eps={eps} err={max_err}");
+        }
+    }
+
+    #[test]
+    fn central_ratio_values() {
+        assert_eq!(central_ratio(0), 1.0);
+        assert!((central_ratio(1) - 0.5).abs() < 1e-15);
+        assert!((central_ratio(2) - 0.375).abs() < 1e-15);
+    }
+
+    #[test]
+    fn polyval_horner() {
+        // 2 + 3a + a^2 at a=2 -> 12
+        assert!((polyval(&[2.0, 3.0, 1.0], 2.0) - 12.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,11 @@
+//! The ReLU Neural Tangent Kernel: arc-cosine kernels and Taylor
+//! expansions (§2, Eq. 6), the K_relu recursion (Definition 1), the exact
+//! NTK (Eq. 5) and the Remark-1 polynomial fit.
+
+pub mod arccos;
+pub mod poly_fit;
+pub mod relu_ntk;
+
+pub use arccos::{kappa0, kappa1};
+pub use poly_fit::{fit_k_relu, PolyFit};
+pub use relu_ntk::{k_relu, ntk_cross_gram, ntk_gram, theta_ntk};

@@ -1,0 +1,129 @@
+//! Remark 1: fit a low-degree polynomial with non-negative coefficients to
+//! the ReLU-NTK function K_relu^{(L)} on [−1, 1], so that PolySketch can be
+//! applied directly to the induced dot-product kernel (the practical
+//! fast path for deeper networks; Fig. 1 right shows a degree-8 fit of
+//! K_relu^{(3)}).
+
+use super::relu_ntk::k_relu;
+use crate::linalg::{nnls, DMat};
+
+/// Result of a polynomial fit.
+#[derive(Clone, Debug)]
+pub struct PolyFit {
+    /// Coefficients c_0..c_D (all ≥ 0), k(α) ≈ Σ c_j α^j.
+    pub coeffs: Vec<f64>,
+    /// Max absolute error on a dense grid over [−1, 1].
+    pub max_err: f64,
+    /// Network depth the fit targets.
+    pub depth: usize,
+}
+
+/// Chebyshev nodes on [−1, 1] (n points).
+pub fn chebyshev_nodes(n: usize) -> Vec<f64> {
+    assert!(n >= 2);
+    (0..n)
+        .map(|k| (std::f64::consts::PI * k as f64 / (n - 1) as f64).cos())
+        .collect()
+}
+
+/// Fit K_relu^{(L)} by a degree-`deg` polynomial with non-negative
+/// coefficients (keeps the kernel PSD), least squares on Chebyshev nodes.
+pub fn fit_k_relu(depth: usize, deg: usize) -> PolyFit {
+    fit_fn(|a| k_relu(depth, a), depth, deg)
+}
+
+/// Fit an arbitrary target function on [−1,1] with non-negative
+/// polynomial coefficients.
+pub fn fit_fn<F: Fn(f64) -> f64>(target: F, depth: usize, deg: usize) -> PolyFit {
+    let n_nodes = (4 * (deg + 1)).max(64);
+    let nodes = chebyshev_nodes(n_nodes);
+    // Vandermonde (n_nodes × deg+1)
+    let a = DMat::from_fn(n_nodes, deg + 1, |i, j| nodes[i].powi(j as i32));
+    let b: Vec<f64> = nodes.iter().map(|&x| target(x)).collect();
+    let coeffs = nnls(&a, &b, 20_000);
+    // dense-grid error
+    let mut max_err: f64 = 0.0;
+    for k in 0..=1000 {
+        let x = -1.0 + 2.0 * k as f64 / 1000.0;
+        let mut acc = 0.0;
+        let mut pw = 1.0;
+        for &c in &coeffs {
+            acc += c * pw;
+            pw *= x;
+        }
+        max_err = max_err.max((acc - target(x)).abs());
+    }
+    PolyFit { coeffs, max_err, depth }
+}
+
+impl PolyFit {
+    pub fn eval(&self, alpha: f64) -> f64 {
+        let mut acc = 0.0;
+        let mut pw = 1.0;
+        for &c in &self.coeffs {
+            acc += c * pw;
+            pw *= alpha;
+        }
+        acc
+    }
+
+    /// Relative error against K_relu(1) = L+1 — the scale-aware quality
+    /// measure used in Fig. 1 (right).
+    pub fn relative_err(&self) -> f64 {
+        self.max_err / (self.depth as f64 + 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chebyshev_nodes_span_interval() {
+        let n = chebyshev_nodes(9);
+        assert!((n[0] - 1.0).abs() < 1e-12);
+        assert!((n[8] + 1.0).abs() < 1e-12);
+        assert!(n.windows(2).all(|w| w[0] > w[1]));
+    }
+
+    #[test]
+    fn degree8_fits_depth3_tightly() {
+        // Fig 1 (right): a degree-8 polynomial tightly approximates the
+        // depth-3 ReLU-NTK. With the non-negativity constraint (needed to
+        // keep the sketched kernel PSD) the fit lands ≈4% of the K(1)=4
+        // scale; assert < 5%.
+        let fit = fit_k_relu(3, 8);
+        assert!(fit.coeffs.iter().all(|&c| c >= 0.0));
+        assert!(fit.relative_err() < 0.05, "rel err {}", fit.relative_err());
+    }
+
+    #[test]
+    fn error_decreases_with_degree() {
+        let e4 = fit_k_relu(3, 4).max_err;
+        let e8 = fit_k_relu(3, 8).max_err;
+        let e12 = fit_k_relu(3, 12).max_err;
+        assert!(e8 <= e4 + 1e-9, "e4={e4} e8={e8}");
+        assert!(e12 <= e8 + 1e-9, "e8={e8} e12={e12}");
+    }
+
+    #[test]
+    fn eval_matches_target_at_nodes() {
+        let fit = fit_k_relu(2, 8);
+        for &a in &[-0.9, -0.3, 0.0, 0.5, 0.99] {
+            assert!(
+                (fit.eval(a) - k_relu(2, a)).abs() < 0.15,
+                "alpha={a}: {} vs {}",
+                fit.eval(a),
+                k_relu(2, a)
+            );
+        }
+    }
+
+    #[test]
+    fn deeper_nets_still_fittable() {
+        // Remark 1's point: cost of the fit is O(L) per node; deg ~ 8-16
+        // suffices even for deeper nets at a few-% scale error.
+        let fit = fit_k_relu(8, 16);
+        assert!(fit.relative_err() < 0.08, "rel err {}", fit.relative_err());
+    }
+}

@@ -1,0 +1,136 @@
+//! λ selection on a validation split (the paper searches the ridge
+//! parameter on a random subset, §5.1) and k-fold CV MSE (Table 2).
+
+use super::metrics::{accuracy, mse};
+use super::ridge::RidgeRegressor;
+use crate::data::{split, Dataset};
+use crate::tensor::Mat;
+
+/// Standard λ grid (log-spaced).
+pub fn lambda_grid() -> Vec<f64> {
+    vec![1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0]
+}
+
+/// Pick λ maximizing validation accuracy (classification) from
+/// pre-featurized train/val blocks.
+pub fn select_lambda_classification(
+    f_train: &Mat,
+    y_train: &Mat,
+    f_val: &Mat,
+    labels_val: &[f32],
+    grid: &[f64],
+) -> (f64, f64) {
+    let mut best = (grid[0], -1.0f64);
+    for &lam in grid {
+        if let Ok(r) = RidgeRegressor::fit(f_train, y_train, lam) {
+            let acc = accuracy(&r.predict(f_val), labels_val);
+            if acc > best.1 {
+                best = (lam, acc);
+            }
+        }
+    }
+    best
+}
+
+/// Pick λ minimizing validation MSE (regression).
+pub fn select_lambda_regression(
+    f_train: &Mat,
+    y_train: &Mat,
+    f_val: &Mat,
+    y_val: &Mat,
+    grid: &[f64],
+) -> (f64, f64) {
+    let mut best = (grid[0], f64::MAX);
+    for &lam in grid {
+        if let Ok(r) = RidgeRegressor::fit(f_train, y_train, lam) {
+            let e = mse(&r.predict(f_val), y_val);
+            if e < best.1 {
+                best = (lam, e);
+            }
+        }
+    }
+    best
+}
+
+/// k-fold CV MSE of a feature map + ridge on a regression dataset
+/// (Table 2 protocol: averaged MSE over folds).
+pub fn kfold_mse<F: Fn(&Mat) -> Mat>(
+    ds: &Dataset,
+    featurize: F,
+    lambda: f64,
+    k: usize,
+    seed: u64,
+) -> f64 {
+    let folds = split::k_folds(ds.n(), k, seed);
+    let mut total = 0.0;
+    for held in 0..k {
+        let test_idx = &folds[held];
+        let train_idx: Vec<usize> = (0..k)
+            .filter(|&f| f != held)
+            .flat_map(|f| folds[f].iter().copied())
+            .collect();
+        let tr = split::subset(ds, &train_idx);
+        let te = split::subset(ds, test_idx);
+        let ftr = featurize(&tr.x);
+        let fte = featurize(&te.x);
+        let r = RidgeRegressor::fit(&ftr, &tr.y_mat(), lambda).expect("ridge solve");
+        total += mse(&r.predict(&fte), &te.y_mat());
+    }
+    total / k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::rng::Rng;
+
+    #[test]
+    fn lambda_selection_prefers_fitting_value() {
+        let mut rng = Rng::new(211);
+        // clean linear problem: small lambda should win
+        let x = Mat::from_vec(80, 5, rng.gauss_vec(400));
+        let w = Mat::from_vec(5, 1, rng.gauss_vec(5));
+        let y = x.matmul(&w);
+        let xv = Mat::from_vec(20, 5, rng.gauss_vec(100));
+        let yv = xv.matmul(&w);
+        let (lam, err) = select_lambda_regression(&x, &y, &xv, &yv, &lambda_grid());
+        assert!(lam <= 1e-3, "picked {lam}");
+        assert!(err < 1e-3, "err {err}");
+    }
+
+    #[test]
+    fn kfold_mse_reasonable_on_linear_features() {
+        let ds = synth::nonlinear_regression(160, 6, 0.05, 212);
+        // identity featurization = plain linear regression
+        let e_linear = kfold_mse(&ds, |x| x.clone(), 1e-4, 4, 213);
+        // a quadratic feature expansion must do better on this target
+        let expand = |x: &Mat| {
+            let mut out = Mat::zeros(x.rows, x.cols * 2);
+            for i in 0..x.rows {
+                for j in 0..x.cols {
+                    *out.at_mut(i, j) = x.at(i, j);
+                    *out.at_mut(i, x.cols + j) = x.at(i, j) * x.at(i, j);
+                }
+            }
+            out
+        };
+        let e_quad = kfold_mse(&ds, expand, 1e-4, 4, 213);
+        assert!(e_quad < e_linear, "quad {e_quad} vs linear {e_linear}");
+    }
+
+    #[test]
+    fn classification_lambda_search_runs() {
+        let ds = synth::gaussian_mixture(120, 6, 3, 0.4, 214);
+        let (tr, te) = crate::data::split::train_test(&ds, 0.25, 215);
+        let (lam, acc) = select_lambda_classification(
+            &tr.x,
+            &tr.one_hot_centered(),
+            &te.x,
+            &te.y,
+            &lambda_grid(),
+        );
+        assert!(lam > 0.0);
+        assert!(acc > 0.6, "acc {acc}");
+    }
+}

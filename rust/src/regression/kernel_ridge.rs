@@ -1,0 +1,83 @@
+//! Kernel ridge regression — the exact-kernel baseline path (Table 2's
+//! "NTK"/"RBF Kernel" rows): α = (K + λ n I)⁻¹ Y, prediction K_test α.
+//! O(n²) memory / O(n³) time: the cost profile the paper's feature maps
+//! exist to avoid.
+
+use crate::linalg::{solve_spd_multi, DMat};
+use crate::tensor::Mat;
+
+pub struct KernelRidge {
+    /// dual coefficients (n_train × k).
+    alpha: DMat,
+}
+
+impl KernelRidge {
+    /// Fit from a train Gram matrix (n×n) and targets (n×k).
+    pub fn fit(k_train: &DMat, targets: &Mat, lambda: f64) -> Result<KernelRidge, String> {
+        assert_eq!(k_train.rows, k_train.cols);
+        assert_eq!(k_train.rows, targets.rows);
+        let n = k_train.rows;
+        let mut a = k_train.clone();
+        a.add_diag(lambda * n as f64);
+        let y = DMat::from_mat(targets);
+        let alpha = solve_spd_multi(&a, &y)?;
+        Ok(KernelRidge { alpha })
+    }
+
+    /// Predict from a cross Gram (n_test × n_train).
+    pub fn predict(&self, k_cross: &DMat) -> Mat {
+        assert_eq!(k_cross.cols, self.alpha.rows);
+        k_cross.matmul(&self.alpha).to_mat()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ntk::{ntk_cross_gram, ntk_gram};
+    use crate::regression::ridge::RidgeRegressor;
+    use crate::rng::Rng;
+
+    #[test]
+    fn interpolates_with_tiny_lambda() {
+        let mut rng = Rng::new(201);
+        let x = Mat::from_vec(20, 4, rng.gauss_vec(80));
+        let y = Mat::from_vec(20, 1, rng.gauss_vec(20));
+        let k = ntk_gram(2, &x);
+        let kr = KernelRidge::fit(&k, &y, 1e-10).unwrap();
+        let pred = kr.predict(&k);
+        crate::util::prop::assert_close(&pred.data, &y.data, 1e-2, 1e-2).unwrap();
+    }
+
+    #[test]
+    fn cross_prediction_shape() {
+        let mut rng = Rng::new(202);
+        let xtr = Mat::from_vec(15, 3, rng.gauss_vec(45));
+        let xte = Mat::from_vec(5, 3, rng.gauss_vec(15));
+        let y = Mat::from_vec(15, 2, rng.gauss_vec(30));
+        let kr = KernelRidge::fit(&ntk_gram(1, &xtr), &y, 0.01).unwrap();
+        let pred = kr.predict(&ntk_cross_gram(1, &xte, &xtr));
+        assert_eq!((pred.rows, pred.cols), (5, 2));
+    }
+
+    #[test]
+    fn dual_matches_primal_for_linear_kernel() {
+        // With k(x,y) = <x,y> (explicit features = identity), kernel ridge
+        // must agree with primal ridge.
+        let mut rng = Rng::new(203);
+        let (n, d) = (30, 5);
+        let x = Mat::from_vec(n, d, rng.gauss_vec(n * d));
+        let y = Mat::from_vec(n, 1, rng.gauss_vec(n));
+        let lambda = 0.05;
+        let k = {
+            let xd = DMat::from_mat(&x);
+            xd.matmul(&xd.transpose())
+        };
+        let kr = KernelRidge::fit(&k, &y, lambda).unwrap();
+        let pred_dual = kr.predict(&k);
+        let pr = RidgeRegressor::fit(&x, &y, lambda).unwrap();
+        let pred_primal = pr.predict(&x);
+        crate::util::prop::assert_close(&pred_dual.data, &pred_primal.data, 1e-3, 1e-3)
+            .unwrap();
+    }
+}

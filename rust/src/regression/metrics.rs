@@ -1,0 +1,81 @@
+//! Evaluation metrics: MSE (Table 2), classification accuracy via argmax
+//! over one-hot ridge outputs (Fig. 2 / Table 1), R².
+
+use crate::tensor::Mat;
+
+/// Mean squared error over all entries.
+pub fn mse(pred: &Mat, target: &Mat) -> f64 {
+    assert_eq!((pred.rows, pred.cols), (target.rows, target.cols));
+    let n = (pred.rows * pred.cols).max(1);
+    pred.data
+        .iter()
+        .zip(target.data.iter())
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        / n as f64
+}
+
+/// R² coefficient of determination (column-pooled).
+pub fn r2(pred: &Mat, target: &Mat) -> f64 {
+    let mean: f64 =
+        target.data.iter().map(|&v| v as f64).sum::<f64>() / target.data.len().max(1) as f64;
+    let ss_tot: f64 = target.data.iter().map(|&v| (v as f64 - mean).powi(2)).sum();
+    let ss_res: f64 = pred
+        .data
+        .iter()
+        .zip(target.data.iter())
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum();
+    if ss_tot <= 0.0 {
+        return 0.0;
+    }
+    1.0 - ss_res / ss_tot
+}
+
+/// Argmax-decoding accuracy: predictions are n×k scores, labels are class
+/// indices.
+pub fn accuracy(pred_scores: &Mat, labels: &[f32]) -> f64 {
+    assert_eq!(pred_scores.rows, labels.len());
+    let mut correct = 0usize;
+    for i in 0..pred_scores.rows {
+        let row = pred_scores.row(i);
+        let mut best = (f32::MIN, 0usize);
+        for (c, &v) in row.iter().enumerate() {
+            if v > best.0 {
+                best = (v, c);
+            }
+        }
+        if best.1 == labels[i] as usize {
+            correct += 1;
+        }
+    }
+    correct as f64 / pred_scores.rows.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mse_zero_on_equal() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(mse(&a, &a), 0.0);
+        let b = Mat::from_vec(2, 2, vec![2.0, 2.0, 3.0, 4.0]);
+        assert!((mse(&a, &b) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn r2_perfect_and_mean() {
+        let t = Mat::from_vec(4, 1, vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((r2(&t, &t) - 1.0).abs() < 1e-12);
+        let mean_pred = Mat::from_vec(4, 1, vec![2.5; 4]);
+        assert!(r2(&mean_pred, &t).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_argmax() {
+        let scores = Mat::from_vec(3, 2, vec![0.9, 0.1, 0.2, 0.8, 0.6, 0.4]);
+        let labels = [0.0f32, 1.0, 1.0];
+        assert!((accuracy(&scores, &labels) - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

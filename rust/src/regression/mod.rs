@@ -1,0 +1,12 @@
+//! The downstream learners: streaming primal ridge over feature maps (the
+//! paper's "linear regressor trained on our features"), kernel ridge for
+//! the exact-kernel baselines, metrics, and λ search.
+
+pub mod cv;
+pub mod kernel_ridge;
+pub mod metrics;
+pub mod ridge;
+
+pub use kernel_ridge::KernelRidge;
+pub use metrics::{accuracy, mse, r2};
+pub use ridge::RidgeRegressor;

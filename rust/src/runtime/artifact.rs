@@ -1,0 +1,160 @@
+//! AOT artifact bundle: manifest.json + HLO text + weights blob + golden
+//! pair, as written by `python/compile/aot.py` (`make artifacts`).
+
+use crate::util::json::{self, Json};
+use std::path::{Path, PathBuf};
+
+/// One named parameter tensor in the weights blob.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed manifest + resolved file paths.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub depth: usize,
+    pub d: usize,
+    pub batch: usize,
+    pub feature_dim: usize,
+    pub params: Vec<ParamSpec>,
+    pub hlo_path: PathBuf,
+    pub weights_path: PathBuf,
+    pub golden_in_path: PathBuf,
+    pub golden_out_path: PathBuf,
+}
+
+impl Artifact {
+    /// Load `<dir>/<name>.manifest.json`.
+    pub fn load(dir: &Path, name: &str) -> Result<Artifact, String> {
+        let man_path = dir.join(format!("{name}.manifest.json"));
+        let text = std::fs::read_to_string(&man_path)
+            .map_err(|e| format!("read {}: {e}", man_path.display()))?;
+        let j = json::parse(&text)?;
+        let field = |k: &str| -> Result<&Json, String> {
+            j.get(k).ok_or_else(|| format!("manifest missing '{k}'"))
+        };
+        let as_str = |k: &str| -> Result<String, String> {
+            Ok(field(k)?.as_str().ok_or_else(|| format!("'{k}' not a string"))?.to_string())
+        };
+        let as_usize = |k: &str| -> Result<usize, String> {
+            field(k)?.as_usize().ok_or_else(|| format!("'{k}' not a number"))
+        };
+        let mut params = Vec::new();
+        for p in field("params")?.as_arr().ok_or("'params' not an array")? {
+            let name = p
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or("param missing name")?
+                .to_string();
+            let shape: Vec<usize> = p
+                .get("shape")
+                .and_then(|v| v.as_arr())
+                .ok_or("param missing shape")?
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect();
+            params.push(ParamSpec { name, shape });
+        }
+        Ok(Artifact {
+            name: as_str("name")?,
+            depth: as_usize("depth")?,
+            d: as_usize("d")?,
+            batch: as_usize("batch")?,
+            feature_dim: as_usize("feature_dim")?,
+            params,
+            hlo_path: dir.join(as_str("hlo")?),
+            weights_path: dir.join(as_str("weights")?),
+            golden_in_path: dir.join(as_str("golden_in")?),
+            golden_out_path: dir.join(as_str("golden_out")?),
+        })
+    }
+
+    /// Read the weights blob, split per parameter.
+    pub fn load_weights(&self) -> Result<Vec<Vec<f32>>, String> {
+        let blob = read_f32_file(&self.weights_path)?;
+        let total: usize = self.params.iter().map(|p| p.numel()).sum();
+        if blob.len() != total {
+            return Err(format!(
+                "weights blob has {} floats, manifest wants {total}",
+                blob.len()
+            ));
+        }
+        let mut out = Vec::with_capacity(self.params.len());
+        let mut off = 0;
+        for p in &self.params {
+            out.push(blob[off..off + p.numel()].to_vec());
+            off += p.numel();
+        }
+        Ok(out)
+    }
+
+    pub fn load_golden(&self) -> Result<(Vec<f32>, Vec<f32>), String> {
+        Ok((read_f32_file(&self.golden_in_path)?, read_f32_file(&self.golden_out_path)?))
+    }
+}
+
+/// Read a little-endian f32 binary file.
+pub fn read_f32_file(path: &Path) -> Result<Vec<f32>, String> {
+    let bytes = std::fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        return Err(format!("{}: length not a multiple of 4", path.display()));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tmp_bundle(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let man = r#"{
+ "name": "t", "depth": 1, "d": 2, "batch": 2, "feature_dim": 3,
+ "hlo": "t.hlo.txt", "weights": "t.weights.bin",
+ "golden_in": "t.golden_in.bin", "golden_out": "t.golden_out.bin",
+ "params": [{"name": "w", "shape": [2, 2]}, {"name": "b", "shape": [3]}]
+}"#;
+        std::fs::write(dir.join("t.manifest.json"), man).unwrap();
+        let weights: Vec<f32> = (0..7).map(|i| i as f32).collect();
+        let bytes: Vec<u8> = weights.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join("t.weights.bin"), &bytes).unwrap();
+        let gi: Vec<u8> = [1.0f32; 4].iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join("t.golden_in.bin"), &gi).unwrap();
+        let go: Vec<u8> = [2.0f32; 6].iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join("t.golden_out.bin"), &go).unwrap();
+    }
+
+    #[test]
+    fn parses_manifest_and_weights() {
+        let dir = std::env::temp_dir().join("ntk_artifact_test");
+        write_tmp_bundle(&dir);
+        let art = Artifact::load(&dir, "t").unwrap();
+        assert_eq!(art.feature_dim, 3);
+        assert_eq!(art.params.len(), 2);
+        let w = art.load_weights().unwrap();
+        assert_eq!(w[0], vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(w[1], vec![4.0, 5.0, 6.0]);
+        let (gi, go) = art.load_golden().unwrap();
+        assert_eq!(gi.len(), 4);
+        assert_eq!(go.len(), 6);
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = std::env::temp_dir().join("ntk_artifact_missing");
+        let err = Artifact::load(&dir, "nope").unwrap_err();
+        assert!(err.contains("read"));
+    }
+}

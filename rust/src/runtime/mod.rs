@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! (L2 jax model + L1 Pallas kernels lowered to HLO text) and executes
+//! them on the request path. Python never runs here.
+
+pub mod artifact;
+pub mod engine;
+
+pub use artifact::Artifact;
+pub use engine::Engine;
+
+/// Default artifact directory (repo-root/artifacts), overridable via
+/// the NTK_ARTIFACTS env var.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(d) = std::env::var("NTK_ARTIFACTS") {
+        return d.into();
+    }
+    std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}

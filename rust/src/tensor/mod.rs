@@ -1,0 +1,398 @@
+//! Dense f32 matrices — the library's data-plane type.
+//!
+//! Row-major `Mat` with a blocked, multi-threaded matmul and the handful
+//! of BLAS-1/2 pieces the featurizers and solvers need. Feature matrices
+//! are f32 (they are large); the solver side accumulates in f64 (see
+//! `linalg::DMat`).
+
+use crate::util::par;
+
+/// Row-major dense f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "Mat::from_vec shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn<F: FnMut(usize, usize) -> f32>(rows: usize, cols: usize, mut f: F) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Mat {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of rows [lo, hi).
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.rows);
+        Mat {
+            rows: hi - lo,
+            cols: self.cols,
+            data: self.data[lo * self.cols..hi * self.cols].to_vec(),
+        }
+    }
+
+    /// Gather a subset of rows by index.
+    pub fn gather_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (k, &i) in idx.iter().enumerate() {
+            out.row_mut(k).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Vertical stack.
+    pub fn vstack(blocks: &[&Mat]) -> Mat {
+        assert!(!blocks.is_empty());
+        let cols = blocks[0].cols;
+        let rows: usize = blocks.iter().map(|b| b.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for b in blocks {
+            assert_eq!(b.cols, cols, "vstack: column mismatch");
+            data.extend_from_slice(&b.data);
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Horizontal stack (concatenate feature blocks).
+    pub fn hstack(blocks: &[&Mat]) -> Mat {
+        assert!(!blocks.is_empty());
+        let rows = blocks[0].rows;
+        let cols: usize = blocks.iter().map(|b| b.cols).sum();
+        let mut out = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            let mut off = 0;
+            for b in blocks {
+                assert_eq!(b.rows, rows, "hstack: row mismatch");
+                out.row_mut(i)[off..off + b.cols].copy_from_slice(b.row(i));
+                off += b.cols;
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        // simple blocked transpose
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += b;
+        }
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// `self @ other` — blocked, parallel over row chunks of `self`.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul: inner dim mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        let a = &self.data;
+        let b = &other.data;
+        par::par_rows(&mut out.data, m, n, |i, orow| {
+            // ikj loop: stream B rows, accumulate into the output row.
+            let arow = &a[i * k..(i + 1) * k];
+            for (kk, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                    *o += aik * bv;
+                }
+            }
+        });
+        out
+    }
+
+    /// `self @ other^T` — the common featurizer shape (x @ W^T); parallel.
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_nt: inner dim mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = Mat::zeros(m, n);
+        let a = &self.data;
+        let b = &other.data;
+        par::par_rows(&mut out.data, m, n, |i, orow| {
+            let arow = &a[i * k..(i + 1) * k];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                // unrolled-by-4 dot product
+                let mut p = 0;
+                while p + 4 <= k {
+                    acc += arow[p] * brow[p]
+                        + arow[p + 1] * brow[p + 1]
+                        + arow[p + 2] * brow[p + 2]
+                        + arow[p + 3] * brow[p + 3];
+                    p += 4;
+                }
+                while p < k {
+                    acc += arow[p] * brow[p];
+                    p += 1;
+                }
+                *o = acc;
+            }
+        });
+        out
+    }
+
+    /// Gram matrix `self @ self^T` (n×n), parallel, symmetric fill.
+    pub fn gram(&self) -> Mat {
+        let n = self.rows;
+        let k = self.cols;
+        let a = &self.data;
+        let mut out = Mat::zeros(n, n);
+        par::par_rows(&mut out.data, n, n, |i, orow| {
+            let ri = &a[i * k..(i + 1) * k];
+            for (j, o) in orow.iter_mut().enumerate().take(i + 1) {
+                let rj = &a[j * k..(j + 1) * k];
+                *o = dot(ri, rj);
+            }
+        });
+        // mirror upper triangle
+        for i in 0..n {
+            for j in (i + 1)..n {
+                out.data[i * n + j] = out.data[j * n + i];
+            }
+        }
+        out
+    }
+
+    /// Row-wise L2 norms.
+    pub fn row_norms(&self) -> Vec<f32> {
+        (0..self.rows).map(|i| dot(self.row(i), self.row(i)).sqrt()).collect()
+    }
+
+    /// Normalize each row to unit L2 norm (zero rows left untouched).
+    pub fn normalize_rows(&mut self) {
+        let c = self.cols;
+        par::par_rows(&mut self.data, self.rows, c, |_i, row| {
+            let n = dot(row, row).sqrt();
+            if n > 0.0 {
+                let inv = 1.0 / n;
+                for x in row {
+                    *x *= inv;
+                }
+            }
+        });
+    }
+}
+
+/// Dot product of two equal-length slices.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    let k = a.len();
+    let mut p = 0;
+    while p + 4 <= k {
+        acc0 += a[p] * b[p];
+        acc1 += a[p + 1] * b[p + 1];
+        acc2 += a[p + 2] * b[p + 2];
+        acc3 += a[p + 3] * b[p + 3];
+        p += 4;
+    }
+    let mut acc = acc0 + acc1 + acc2 + acc3;
+    while p < k {
+        acc += a[p] * b[p];
+        p += 1;
+    }
+    acc
+}
+
+/// axpy: y += alpha * x
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::util::prop::{self, Config};
+
+    fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_vec(r, c, rng.gauss_vec(r * c))
+    }
+
+    fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                *out.at_mut(i, j) = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive_property() {
+        prop::check("matmul==naive", Config { cases: 24, seed: 11 }, |rng| {
+            let m = prop::size_in(rng, 1, 17);
+            let k = prop::size_in(rng, 1, 23);
+            let n = prop::size_in(rng, 1, 19);
+            let a = rand_mat(rng, m, k);
+            let b = rand_mat(rng, k, n);
+            let c1 = a.matmul(&b);
+            let c2 = matmul_naive(&a, &b);
+            prop::assert_close(&c1.data, &c2.data, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn matmul_nt_matches_transpose_path() {
+        prop::check("matmul_nt", Config { cases: 24, seed: 12 }, |rng| {
+            let m = prop::size_in(rng, 1, 13);
+            let k = prop::size_in(rng, 1, 29);
+            let n = prop::size_in(rng, 1, 11);
+            let a = rand_mat(rng, m, k);
+            let b = rand_mat(rng, n, k);
+            let c1 = a.matmul_nt(&b);
+            let c2 = a.matmul(&b.transpose());
+            prop::assert_close(&c1.data, &c2.data, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd_diag() {
+        let mut rng = Rng::new(13);
+        let a = rand_mat(&mut rng, 9, 5);
+        let g = a.gram();
+        for i in 0..9 {
+            assert!(g.at(i, i) >= -1e-6);
+            for j in 0..9 {
+                assert!((g.at(i, j) - g.at(j, i)).abs() < 1e-5);
+            }
+        }
+        let gt = a.matmul(&a.transpose());
+        prop::assert_close(&g.data, &gt.data, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(14);
+        let a = rand_mat(&mut rng, 37, 21);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn hstack_vstack_shapes() {
+        let a = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        let b = Mat::from_fn(2, 2, |i, j| 100.0 + (i * 2 + j) as f32);
+        let h = Mat::hstack(&[&a, &b]);
+        assert_eq!((h.rows, h.cols), (2, 5));
+        assert_eq!(h.at(1, 3), 102.0);
+        let c = Mat::from_fn(1, 3, |_, j| -(j as f32));
+        let v = Mat::vstack(&[&a, &c]);
+        assert_eq!((v.rows, v.cols), (3, 3));
+        assert_eq!(v.at(2, 2), -2.0);
+    }
+
+    #[test]
+    fn normalize_rows_unit_norm() {
+        let mut rng = Rng::new(15);
+        let mut a = rand_mat(&mut rng, 8, 6);
+        a.normalize_rows();
+        for n in a.row_norms() {
+            assert!((n - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gather_and_slice() {
+        let a = Mat::from_fn(5, 2, |i, j| (10 * i + j) as f32);
+        let s = a.slice_rows(1, 3);
+        assert_eq!(s.data, vec![10.0, 11.0, 20.0, 21.0]);
+        let g = a.gather_rows(&[4, 0]);
+        assert_eq!(g.data, vec![40.0, 41.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn dot_and_axpy() {
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = vec![5.0, 4.0, 3.0, 2.0, 1.0];
+        assert_eq!(dot(&a, &b), 35.0);
+        let mut y = b.clone();
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, vec![7.0, 8.0, 9.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn eye_matmul_identity() {
+        let mut rng = Rng::new(16);
+        let a = rand_mat(&mut rng, 6, 6);
+        let i = Mat::eye(6);
+        prop::assert_close(&a.matmul(&i).data, &a.data, 1e-6, 1e-6).unwrap();
+    }
+}

@@ -1,0 +1,127 @@
+//! CountSketch / OSNAP sparse embeddings (Nelson–Nguyên; paper Fig. 3
+//! leaves). Each input coordinate is hashed into `s` buckets with random
+//! signs and weight 1/√s; runtime O(s · nnz(x)). These are the leaves of
+//! the PolySketch tree that give the near-input-sparsity runtime of
+//! Theorem 1.
+
+use crate::rng::Rng;
+
+/// OSNAP transform d → m with sparsity s per column.
+#[derive(Clone, Debug)]
+pub struct CountSketch {
+    pub d: usize,
+    pub m: usize,
+    pub s: usize,
+    /// bucket[j*s + k]: target row of the k-th copy of coordinate j.
+    buckets: Vec<u32>,
+    /// sign[j*s + k]: ±1/√s weight.
+    weights: Vec<f32>,
+}
+
+impl CountSketch {
+    pub fn new(d: usize, m: usize, s: usize, rng: &mut Rng) -> CountSketch {
+        assert!(d > 0 && m > 0 && s > 0);
+        let mut buckets = Vec::with_capacity(d * s);
+        let mut weights = Vec::with_capacity(d * s);
+        let w = 1.0 / (s as f32).sqrt();
+        for _ in 0..d {
+            for _ in 0..s {
+                buckets.push(rng.below(m) as u32);
+                weights.push(rng.sign() * w);
+            }
+        }
+        CountSketch { d, m, s, buckets, weights }
+    }
+
+    /// Apply to a dense vector.
+    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.d);
+        let mut out = vec![0.0f32; self.m];
+        for (j, &v) in x.iter().enumerate() {
+            if v == 0.0 {
+                continue;
+            }
+            let base = j * self.s;
+            for k in 0..self.s {
+                out[self.buckets[base + k] as usize] += self.weights[base + k] * v;
+            }
+        }
+        out
+    }
+
+    /// Apply to a sparse vector given as (index, value) pairs.
+    pub fn apply_sparse(&self, x: &[(usize, f32)]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.m];
+        for &(j, v) in x {
+            debug_assert!(j < self.d);
+            let base = j * self.s;
+            for k in 0..self.s {
+                out[self.buckets[base + k] as usize] += self.weights[base + k] * v;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::dot;
+
+    #[test]
+    fn unbiased_inner_product() {
+        let mut rng = Rng::new(51);
+        let d = 40;
+        let x = rng.gauss_vec(d);
+        let y = rng.gauss_vec(d);
+        let exact = dot(&x, &y) as f64;
+        let trials = 400;
+        let mut acc = 0.0f64;
+        for _ in 0..trials {
+            let cs = CountSketch::new(d, 64, 4, &mut rng);
+            acc += dot(&cs.apply(&x), &cs.apply(&y)) as f64;
+        }
+        let mean = acc / trials as f64;
+        assert!((mean - exact).abs() < 0.15 * (exact.abs() + 1.0), "mean={mean} exact={exact}");
+    }
+
+    #[test]
+    fn sparse_dense_agree() {
+        let mut rng = Rng::new(52);
+        let d = 30;
+        let cs = CountSketch::new(d, 16, 2, &mut rng);
+        let mut x = vec![0.0f32; d];
+        x[3] = 1.5;
+        x[17] = -2.0;
+        x[29] = 0.25;
+        let dense = cs.apply(&x);
+        let sparse = cs.apply_sparse(&[(3, 1.5), (17, -2.0), (29, 0.25)]);
+        assert_eq!(dense, sparse);
+    }
+
+    #[test]
+    fn runtime_scales_with_nnz_shape() {
+        // structural check: zero entries contribute nothing
+        let mut rng = Rng::new(53);
+        let cs = CountSketch::new(100, 32, 3, &mut rng);
+        let zeros = vec![0.0f32; 100];
+        assert!(cs.apply(&zeros).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn norm_preserved_on_average() {
+        let mut rng = Rng::new(54);
+        let d = 25;
+        let x = rng.gauss_vec(d);
+        let n0 = dot(&x, &x) as f64;
+        let trials = 300;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let cs = CountSketch::new(d, 128, 2, &mut rng);
+            let sx = cs.apply(&x);
+            acc += dot(&sx, &sx) as f64;
+        }
+        let mean = acc / trials as f64;
+        assert!((mean - n0).abs() < 0.1 * n0, "mean={mean} n0={n0}");
+    }
+}

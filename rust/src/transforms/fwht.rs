@@ -1,0 +1,136 @@
+//! Fast Walsh–Hadamard transform.
+//!
+//! The workhorse of SRHT / TensorSRHT (paper §1.3, Lemma 1/2). In-place
+//! O(n log n) butterfly over power-of-two lengths; `fwht_norm` applies the
+//! orthonormal scaling 1/√n so the transform is an isometry.
+
+/// In-place unnormalized Walsh–Hadamard transform. `x.len()` must be a
+/// power of two.
+pub fn fwht(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "fwht: length {n} not a power of two");
+    let mut h = 1;
+    while h < n {
+        let stride = h * 2;
+        let mut base = 0;
+        while base < n {
+            for i in base..base + h {
+                let a = x[i];
+                let b = x[i + h];
+                x[i] = a + b;
+                x[i + h] = a - b;
+            }
+            base += stride;
+        }
+        h = stride;
+    }
+}
+
+/// In-place orthonormal Walsh–Hadamard transform (scales by 1/√n).
+pub fn fwht_norm(x: &mut [f32]) {
+    fwht(x);
+    let scale = 1.0 / (x.len() as f32).sqrt();
+    for v in x.iter_mut() {
+        *v *= scale;
+    }
+}
+
+/// Smallest power of two >= n (>= 1).
+pub fn next_pow2(n: usize) -> usize {
+    n.max(1).next_power_of_two()
+}
+
+/// Copy `x` into a zero-padded power-of-two buffer.
+pub fn pad_pow2(x: &[f32]) -> Vec<f32> {
+    let n = next_pow2(x.len());
+    let mut out = vec![0.0; n];
+    out[..x.len()].copy_from_slice(x);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::util::prop::{self, Config};
+
+    /// Dense Hadamard matrix H_n (entries ±1), for oracles.
+    pub fn hadamard_dense(n: usize) -> Vec<f32> {
+        assert!(n.is_power_of_two());
+        let mut h = vec![0.0f32; n * n];
+        h[0] = 1.0;
+        let mut size = 1;
+        while size < n {
+            for i in 0..size {
+                for j in 0..size {
+                    let v = h[i * n + j];
+                    h[i * n + (j + size)] = v;
+                    h[(i + size) * n + j] = v;
+                    h[(i + size) * n + (j + size)] = -v;
+                }
+            }
+            size *= 2;
+        }
+        h
+    }
+
+    #[test]
+    fn matches_dense_hadamard() {
+        prop::check("fwht==dense", Config { cases: 20, seed: 31 }, |rng| {
+            let n = prop::pow2_in(rng, 1, 256);
+            let x: Vec<f32> = rng.gauss_vec(n);
+            let mut y = x.clone();
+            fwht(&mut y);
+            let h = hadamard_dense(n);
+            let dense: Vec<f32> = (0..n)
+                .map(|i| (0..n).map(|j| h[i * n + j] * x[j]).sum())
+                .collect();
+            prop::assert_close(&y, &dense, 1e-3, 1e-4)
+        });
+    }
+
+    #[test]
+    fn involution_up_to_scale() {
+        let mut rng = Rng::new(32);
+        let x = rng.gauss_vec(128);
+        let mut y = x.clone();
+        fwht(&mut y);
+        fwht(&mut y);
+        // H H = n I
+        for (a, b) in x.iter().zip(y.iter()) {
+            assert!((b - 128.0 * a).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn orthonormal_preserves_norm() {
+        prop::check("fwht_norm isometry", Config { cases: 20, seed: 33 }, |rng| {
+            let n = prop::pow2_in(rng, 2, 1024);
+            let x = rng.gauss_vec(n);
+            let n0: f32 = x.iter().map(|v| v * v).sum();
+            let mut y = x;
+            fwht_norm(&mut y);
+            let n1: f32 = y.iter().map(|v| v * v).sum();
+            if (n0 - n1).abs() > 1e-2 * n0.max(1.0) {
+                return Err(format!("norms {n0} vs {n1}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pad_and_next_pow2() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(5), 8);
+        assert_eq!(next_pow2(8), 8);
+        let p = pad_pow2(&[1.0, 2.0, 3.0]);
+        assert_eq!(p, vec![1.0, 2.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_pow2() {
+        let mut x = vec![0.0; 3];
+        fwht(&mut x);
+    }
+}

@@ -1,0 +1,89 @@
+//! Dense Gaussian Johnson–Lindenstrauss transform — the final compression
+//! G ~ N(0, 1/s*) in Algorithm 1 line 10 and CNTKSketch step 6.
+
+use crate::rng::Rng;
+use crate::tensor::Mat;
+
+/// G : ℝ^d → ℝ^m with i.i.d. N(0, 1/m) entries.
+#[derive(Clone, Debug)]
+pub struct GaussianJl {
+    pub d: usize,
+    pub m: usize,
+    /// m×d, row-major.
+    g: Mat,
+}
+
+impl GaussianJl {
+    pub fn new(d: usize, m: usize, rng: &mut Rng) -> GaussianJl {
+        let scale = 1.0 / (m as f32).sqrt();
+        let mut g = Mat::from_vec(m, d, rng.gauss_vec(m * d));
+        g.scale(scale);
+        GaussianJl { d, m, g }
+    }
+
+    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.d);
+        (0..self.m).map(|i| crate::tensor::dot(self.g.row(i), x)).collect()
+    }
+
+    /// Row-wise application: (n×d) → (n×m).
+    pub fn apply_mat(&self, x: &Mat) -> Mat {
+        x.matmul_nt(&self.g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::dot;
+
+    #[test]
+    fn unbiased_inner_products() {
+        let mut rng = Rng::new(81);
+        let d = 20;
+        let x = rng.gauss_vec(d);
+        let y = rng.gauss_vec(d);
+        let exact = dot(&x, &y) as f64;
+        // per-trial var ≈ (<x,y>² + ‖x‖²‖y‖²)/m; pick tolerance ≈ 5σ of
+        // the mean so the (seeded) test is far from the noise floor.
+        let trials = 1000;
+        let m = 128;
+        let mut acc = 0.0f64;
+        for _ in 0..trials {
+            let g = GaussianJl::new(d, m, &mut rng);
+            acc += dot(&g.apply(&x), &g.apply(&y)) as f64;
+        }
+        let mean = acc / trials as f64;
+        let nx = dot(&x, &x) as f64;
+        let ny = dot(&y, &y) as f64;
+        let sigma_mean = ((exact * exact + nx * ny) / m as f64 / trials as f64).sqrt();
+        assert!(
+            (mean - exact).abs() < 5.0 * sigma_mean,
+            "mean={mean} exact={exact} sigma={sigma_mean}"
+        );
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let mut rng = Rng::new(82);
+        let g = GaussianJl::new(11, 6, &mut rng);
+        let x = Mat::from_vec(4, 11, rng.gauss_vec(44));
+        let out = g.apply_mat(&x);
+        for i in 0..4 {
+            let single = g.apply(x.row(i));
+            crate::util::prop::assert_close(out.row(i), &single, 1e-5, 1e-5).unwrap();
+        }
+    }
+
+    #[test]
+    fn norm_concentration_large_m() {
+        let mut rng = Rng::new(83);
+        let d = 50;
+        let x = rng.gauss_vec(d);
+        let n0 = dot(&x, &x);
+        let g = GaussianJl::new(d, 4096, &mut rng);
+        let gx = g.apply(&x);
+        let n1 = dot(&gx, &gx);
+        assert!((n1 - n0).abs() < 0.15 * n0, "{n0} vs {n1}");
+    }
+}

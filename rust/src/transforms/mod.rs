@@ -1,0 +1,20 @@
+//! Sketching primitives (paper §1.3 and Lemma 1): FWHT, SRHT,
+//! CountSketch/OSNAP, degree-2 TensorSRHT, the PolySketch binary tree for
+//! high-degree tensor products, Gaussian JL, and the polynomial
+//! dot-product-kernel sketch built from them.
+
+pub mod countsketch;
+pub mod fwht;
+pub mod gaussian;
+pub mod poly_kernel;
+pub mod polysketch;
+pub mod srht;
+pub mod tensor_srht;
+
+pub use countsketch::CountSketch;
+pub use fwht::{fwht, fwht_norm};
+pub use gaussian::GaussianJl;
+pub use poly_kernel::PolyKernelSketch;
+pub use polysketch::{LeafMode, PolySketch};
+pub use srht::Srht;
+pub use tensor_srht::TensorSrht;

@@ -1,0 +1,148 @@
+//! Sketching a non-negative-coefficient dot-product (polynomial) kernel
+//! k(x,y) = Σ_l c_l ⟨x,y⟩^l via PolySketch — the building block that
+//! Algorithm 1 applies to the truncated Taylor series of κ₀/κ₁ and that
+//! Remark 1 applies directly to a polynomial fit of K_relu^{(L)}.
+//!
+//! Feature map: Φ(x) = S · ⊕_{l=0}^{D} √c_l · Q^D(x^{⊗l} ⊗ e1^{⊗(D−l)}),
+//! with one shared Q^D and a final SRHT S down to the target dimension, so
+//! ⟨Φ(x),Φ(y)⟩ ≈ Σ_l c_l ⟨x,y⟩^l for (near-)unit-norm inputs.
+
+use super::polysketch::{LeafMode, PolySketch};
+use super::srht::Srht;
+use crate::rng::Rng;
+use crate::tensor::Mat;
+
+/// An instantiated polynomial-kernel sketch.
+#[derive(Clone, Debug)]
+pub struct PolyKernelSketch {
+    /// Taylor/fit coefficients c_0..c_D (all ≥ 0).
+    pub coeffs: Vec<f64>,
+    /// Shared degree-D PolySketch.
+    q: PolySketch,
+    /// Final SRHT over the concatenated blocks.
+    s: Srht,
+    /// Internal sketch dim per block.
+    pub m_inner: usize,
+    /// Output feature dim.
+    pub m_out: usize,
+}
+
+impl PolyKernelSketch {
+    /// `coeffs[l]` multiplies ⟨x,y⟩^l; degree D = coeffs.len()-1.
+    pub fn new(
+        coeffs: &[f64],
+        d: usize,
+        m_inner: usize,
+        m_out: usize,
+        mode: LeafMode,
+        rng: &mut Rng,
+    ) -> PolyKernelSketch {
+        assert!(!coeffs.is_empty());
+        assert!(coeffs.iter().all(|&c| c >= 0.0), "poly kernel needs non-negative coefficients");
+        let deg = (coeffs.len() - 1).max(1);
+        let q = PolySketch::new(deg, d, m_inner, mode, rng);
+        let s = Srht::new(coeffs.len() * m_inner, m_out, rng);
+        PolyKernelSketch { coeffs: coeffs.to_vec(), q, s, m_inner, m_out }
+    }
+
+    /// Feature map for one input vector.
+    pub fn features(&self, x: &[f32]) -> Vec<f32> {
+        let fam = self.q.sketch_power_family(x);
+        let mut concat = Vec::with_capacity(self.coeffs.len() * self.m_inner);
+        for (l, c) in self.coeffs.iter().enumerate() {
+            let sq = (*c as f32).sqrt();
+            // family entry l = Q(x^{⊗l} ⊗ e1^{⊗(D−l)})
+            for &v in &fam[l] {
+                concat.push(sq * v);
+            }
+        }
+        self.s.apply(&concat)
+    }
+
+    /// Row-wise feature map.
+    pub fn features_mat(&self, x: &Mat) -> Mat {
+        let mut out = Mat::zeros(x.rows, self.m_out);
+        let rows: Vec<Vec<f32>> =
+            crate::util::par::par_map(x.rows, |i| self.features(x.row(i)));
+        for (i, r) in rows.into_iter().enumerate() {
+            out.row_mut(i).copy_from_slice(&r);
+        }
+        out
+    }
+
+    /// Exact kernel value this sketch approximates (for tests/benches).
+    pub fn kernel(&self, alpha: f64) -> f64 {
+        let mut acc = 0.0;
+        let mut pow = 1.0;
+        for &c in &self.coeffs {
+            acc += c * pow;
+            pow *= alpha;
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::dot;
+
+    fn unit(rng: &mut Rng, d: usize) -> Vec<f32> {
+        let mut v = rng.gauss_vec(d);
+        let n = dot(&v, &v).sqrt();
+        for x in &mut v {
+            *x /= n;
+        }
+        v
+    }
+
+    #[test]
+    fn approximates_polynomial_kernel() {
+        let mut rng = Rng::new(91);
+        let d = 10;
+        let coeffs = [0.3, 0.5, 0.0, 0.2, 0.1];
+        let x = unit(&mut rng, d);
+        let y = unit(&mut rng, d);
+        let alpha = dot(&x, &y) as f64;
+        let trials = 400;
+        let mut acc = 0.0f64;
+        for _ in 0..trials {
+            let pk = PolyKernelSketch::new(&coeffs, d, 128, 128, LeafMode::Srht, &mut rng);
+            acc += dot(&pk.features(&x), &pk.features(&y)) as f64;
+        }
+        let mean = acc / trials as f64;
+        let exact: f64 = coeffs
+            .iter()
+            .enumerate()
+            .map(|(l, &c)| c * alpha.powi(l as i32))
+            .sum();
+        assert!((mean - exact).abs() < 0.2 * (exact.abs() + 0.3), "mean={mean} exact={exact}");
+    }
+
+    #[test]
+    fn kernel_eval() {
+        let mut rng = Rng::new(92);
+        let pk = PolyKernelSketch::new(&[1.0, 2.0, 3.0], 4, 8, 8, LeafMode::Srht, &mut rng);
+        assert!((pk.kernel(0.5) - (1.0 + 1.0 + 0.75)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let mut rng = Rng::new(93);
+        let pk = PolyKernelSketch::new(&[0.5, 0.5], 6, 16, 12, LeafMode::Osnap(1), &mut rng);
+        let x = Mat::from_vec(3, 6, rng.gauss_vec(18));
+        let out = pk.features_mat(&x);
+        assert_eq!((out.rows, out.cols), (3, 12));
+        for i in 0..3 {
+            let f = pk.features(x.row(i));
+            crate::util::prop::assert_close(out.row(i), &f, 1e-5, 1e-5).unwrap();
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative")]
+    fn rejects_negative_coefficients() {
+        let mut rng = Rng::new(94);
+        let _ = PolyKernelSketch::new(&[1.0, -0.5], 4, 8, 8, LeafMode::Srht, &mut rng);
+    }
+}

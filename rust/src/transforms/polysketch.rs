@@ -1,0 +1,307 @@
+//! PolySketch: oblivious sketching of high-degree tensor products
+//! (Ahle–Kapralov–Knudsen–Pagh–Velingker–Woodruff–Zandieh, SODA 2020;
+//! paper Lemma 1 / Fig. 3).
+//!
+//! Q^p : ℝ^{d^p} → ℝ^m is a complete binary tree with p leaves: each leaf
+//! sketches one input factor (OSNAP for sparse inputs, SRHT for dense —
+//! the two modes in the Lemma 1 proof), and each internal node merges two
+//! child sketches with an independent degree-2 TensorSRHT. Applying Q^p to
+//! v₁ ⊗ … ⊗ v_p costs O(p·m log m + p·(leaf cost)) — never materializing
+//! the d^p-dimensional tensor.
+//!
+//! `sketch_power_family` computes Q^p(x^{⊗l} ⊗ e1^{⊗(p−l)}) for all
+//! l = 0..=p in one bottom-up pass (the quantity Algorithms 1/CNTKSketch
+//! need for every Taylor term), re-using subtree results so the family
+//! costs O(p) combines total rather than O(p²).
+
+use super::countsketch::CountSketch;
+use super::srht::Srht;
+use super::tensor_srht::TensorSrht;
+use crate::rng::Rng;
+
+/// Leaf sketch mode (Lemma 1: OSNAP leaves give nnz-time for sparse
+/// inputs; dropping them — i.e. SRHT leaves — is faster for dense inputs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LeafMode {
+    /// OSNAP / CountSketch leaves with the given per-column sparsity.
+    Osnap(usize),
+    /// SRHT leaves (dense-input mode).
+    Srht,
+}
+
+#[derive(Clone, Debug)]
+enum Leaf {
+    Osnap(CountSketch),
+    Srht(Srht),
+}
+
+impl Leaf {
+    fn apply(&self, x: &[f32]) -> Vec<f32> {
+        match self {
+            Leaf::Osnap(cs) => cs.apply(x),
+            Leaf::Srht(s) => s.apply(x),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Tree {
+    Leaf(usize),
+    Node { node: usize, left: Box<Tree>, right: Box<Tree>, span: usize },
+}
+
+impl Tree {
+    fn span(&self) -> usize {
+        match self {
+            Tree::Leaf(_) => 1,
+            Tree::Node { span, .. } => *span,
+        }
+    }
+}
+
+/// A degree-p PolySketch instance Q^p : ℝ^{d^p} → ℝ^m.
+#[derive(Clone, Debug)]
+pub struct PolySketch {
+    pub p: usize,
+    pub d: usize,
+    pub m: usize,
+    leaves: Vec<Leaf>,
+    nodes: Vec<TensorSrht>,
+    tree: Tree,
+    /// Cached per-leaf sketches of e1 (input-independent; §Perf — they
+    /// were ~40% of the leaf work in `sketch_power_family`).
+    leaf_e1: Vec<Vec<f32>>,
+}
+
+impl PolySketch {
+    pub fn new(p: usize, d: usize, m: usize, mode: LeafMode, rng: &mut Rng) -> PolySketch {
+        assert!(p >= 1 && d >= 1 && m >= 1);
+        let mut leaves = Vec::with_capacity(p);
+        for _ in 0..p {
+            leaves.push(match mode {
+                LeafMode::Osnap(s) => Leaf::Osnap(CountSketch::new(d, m, s.max(1), rng)),
+                LeafMode::Srht => Leaf::Srht(Srht::new(d, m, rng)),
+            });
+        }
+        let mut nodes = Vec::new();
+        let tree = Self::build(0, p, &mut nodes, m, rng);
+        let mut e1 = vec![0.0f32; d];
+        e1[0] = 1.0;
+        let leaf_e1: Vec<Vec<f32>> = leaves.iter().map(|l| l.apply(&e1)).collect();
+        PolySketch { p, d, m, leaves, nodes, tree, leaf_e1 }
+    }
+
+    fn build(lo: usize, hi: usize, nodes: &mut Vec<TensorSrht>, m: usize, rng: &mut Rng) -> Tree {
+        let span = hi - lo;
+        if span == 1 {
+            return Tree::Leaf(lo);
+        }
+        let mid = lo + span.div_ceil(2);
+        let left = Self::build(lo, mid, nodes, m, rng);
+        let right = Self::build(mid, hi, nodes, m, rng);
+        let idx = nodes.len();
+        nodes.push(TensorSrht::new(m, m, m, rng));
+        Tree::Node { node: idx, left: Box::new(left), right: Box::new(right), span }
+    }
+
+    /// Sketch a general rank-1 tensor v₁ ⊗ … ⊗ v_p (vs.len() == p).
+    pub fn sketch_tensor(&self, vs: &[&[f32]]) -> Vec<f32> {
+        assert_eq!(vs.len(), self.p, "sketch_tensor: need {} factors", self.p);
+        self.eval(&self.tree, &mut |leaf_idx| self.leaves[leaf_idx].apply(vs[leaf_idx]))
+    }
+
+    fn eval(&self, t: &Tree, leaf_val: &mut dyn FnMut(usize) -> Vec<f32>) -> Vec<f32> {
+        match t {
+            Tree::Leaf(i) => leaf_val(*i),
+            Tree::Node { node, left, right, .. } => {
+                let l = self.eval(left, leaf_val);
+                let r = self.eval(right, leaf_val);
+                self.nodes[*node].apply(&l, &r)
+            }
+        }
+    }
+
+    /// Q^p(x^{⊗p}).
+    pub fn sketch_power(&self, x: &[f32]) -> Vec<f32> {
+        let family = self.sketch_power_family(x);
+        family.into_iter().next_back().unwrap()
+    }
+
+    /// Q^p(x^{⊗l} ⊗ e1^{⊗(p−l)}) for l = 0..=p (x occupies the first l
+    /// leaves). Shared randomness across the family — exactly what
+    /// Algorithm 1 lines 7–8 consume.
+    pub fn sketch_power_family(&self, x: &[f32]) -> Vec<Vec<f32>> {
+        assert_eq!(x.len(), self.d);
+        // per-leaf sketches of x (e1 sketches are cached in the instance)
+        let leaf_x: Vec<Vec<f32>> = self.leaves.iter().map(|l| l.apply(x)).collect();
+        // bottom-up: each subtree returns Vec indexed by t = number of its
+        // leaves (a prefix) assigned x, t = 0..=span.
+        let fam = self.family_rec(&self.tree, 0, &leaf_x, &self.leaf_e1);
+        debug_assert_eq!(fam.len(), self.p + 1);
+        fam
+    }
+
+    fn family_rec(
+        &self,
+        t: &Tree,
+        base: usize,
+        leaf_x: &[Vec<f32>],
+        leaf_e: &[Vec<f32>],
+    ) -> Vec<Vec<f32>> {
+        match t {
+            Tree::Leaf(i) => {
+                debug_assert_eq!(*i, base);
+                vec![leaf_e[*i].clone(), leaf_x[*i].clone()]
+            }
+            Tree::Node { node, left, right, span } => {
+                let sl = left.span();
+                let fl = self.family_rec(left, base, leaf_x, leaf_e);
+                let fr = self.family_rec(right, base + sl, leaf_x, leaf_e);
+                let ts = &self.nodes[*node];
+                // Precompute spectra once per distinct child value.
+                let sp_l: Vec<Vec<f32>> = fl.iter().map(|v| ts.spectrum1(v)).collect();
+                let sp_r: Vec<Vec<f32>> = fr.iter().map(|v| ts.spectrum2(v)).collect();
+                (0..=*span)
+                    .map(|t| {
+                        let tl = t.min(sl);
+                        let tr = t - tl;
+                        ts.combine(&sp_l[tl], &sp_r[tr])
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::dot;
+
+    fn unit(rng: &mut Rng, d: usize) -> Vec<f32> {
+        let mut v = rng.gauss_vec(d);
+        let n = dot(&v, &v).sqrt();
+        for x in &mut v {
+            *x /= n;
+        }
+        v
+    }
+
+    #[test]
+    fn degree2_matches_tensor_inner_product() {
+        let mut rng = Rng::new(71);
+        let d = 8;
+        let x = unit(&mut rng, d);
+        let y = unit(&mut rng, d);
+        let exact = (dot(&x, &y) as f64).powi(2);
+        let trials = 300;
+        let mut acc = 0.0f64;
+        for _ in 0..trials {
+            let q = PolySketch::new(2, d, 64, LeafMode::Srht, &mut rng);
+            acc += dot(&q.sketch_power(&x), &q.sketch_power(&y)) as f64;
+        }
+        let mean = acc / trials as f64;
+        assert!((mean - exact).abs() < 0.15 * (exact.abs() + 0.2), "mean={mean} exact={exact}");
+    }
+
+    #[test]
+    fn high_degree_unbiased() {
+        for p in [3usize, 4, 5, 7] {
+            let mut rng = Rng::new(72 + p as u64);
+            let d = 6;
+            let x = unit(&mut rng, d);
+            let y = unit(&mut rng, d);
+            let exact = (dot(&x, &y) as f64).powi(p as i32);
+            let trials = 250;
+            let mut acc = 0.0f64;
+            for _ in 0..trials {
+                let q = PolySketch::new(p, d, 64, LeafMode::Osnap(2), &mut rng);
+                acc += dot(&q.sketch_power(&x), &q.sketch_power(&y)) as f64;
+            }
+            let mean = acc / trials as f64;
+            assert!(
+                (mean - exact).abs() < 0.2 * (exact.abs() + 0.2),
+                "p={p} mean={mean} exact={exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn family_matches_explicit_assignment() {
+        // Q(x^{⊗l} ⊗ e1^{⊗(p-l)}) from the family pass must equal
+        // sketch_tensor with the explicit factor list (same instance).
+        let mut rng = Rng::new(73);
+        let (p, d, m) = (5, 7, 32);
+        let q = PolySketch::new(p, d, m, LeafMode::Srht, &mut rng);
+        let x = unit(&mut rng, d);
+        let mut e1 = vec![0.0f32; d];
+        e1[0] = 1.0;
+        let fam = q.sketch_power_family(&x);
+        assert_eq!(fam.len(), p + 1);
+        for l in 0..=p {
+            let factors: Vec<&[f32]> = (0..p)
+                .map(|i| if i < l { x.as_slice() } else { e1.as_slice() })
+                .collect();
+            let direct = q.sketch_tensor(&factors);
+            crate::util::prop::assert_close(&fam[l], &direct, 1e-5, 1e-5)
+                .unwrap_or_else(|e| panic!("l={l}: {e}"));
+        }
+    }
+
+    #[test]
+    fn family_inner_products_follow_powers() {
+        // <Q(x^l ⊗ e1^{p-l}), Q(y^l ⊗ e1^{p-l})> ≈ <x,y>^l for unit x,y
+        let mut rng = Rng::new(74);
+        let (p, d) = (4, 6);
+        let x = unit(&mut rng, d);
+        let y = unit(&mut rng, d);
+        let alpha = dot(&x, &y) as f64;
+        let trials = 300;
+        let mut acc = vec![0.0f64; p + 1];
+        for _ in 0..trials {
+            let q = PolySketch::new(p, d, 64, LeafMode::Srht, &mut rng);
+            let fx = q.sketch_power_family(&x);
+            let fy = q.sketch_power_family(&y);
+            for l in 0..=p {
+                acc[l] += dot(&fx[l], &fy[l]) as f64;
+            }
+        }
+        for l in 0..=p {
+            let mean = acc[l] / trials as f64;
+            let exact = alpha.powi(l as i32);
+            assert!(
+                (mean - exact).abs() < 0.2 * (exact.abs() + 0.2),
+                "l={l} mean={mean} exact={exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn rank1_mixed_factors() {
+        // <Q(u⊗v⊗w), Q(u'⊗v'⊗w')> ≈ <u,u'><v,v'><w,w'>
+        let mut rng = Rng::new(75);
+        let d = 5;
+        let (u, v, w) = (unit(&mut rng, d), unit(&mut rng, d), unit(&mut rng, d));
+        let (u2, v2, w2) = (unit(&mut rng, d), unit(&mut rng, d), unit(&mut rng, d));
+        let exact = (dot(&u, &u2) * dot(&v, &v2) * dot(&w, &w2)) as f64;
+        let trials = 400;
+        let mut acc = 0.0f64;
+        for _ in 0..trials {
+            let q = PolySketch::new(3, d, 64, LeafMode::Srht, &mut rng);
+            let a = q.sketch_tensor(&[&u, &v, &w]);
+            let b = q.sketch_tensor(&[&u2, &v2, &w2]);
+            acc += dot(&a, &b) as f64;
+        }
+        let mean = acc / trials as f64;
+        assert!((mean - exact).abs() < 0.15 * (exact.abs() + 0.2), "mean={mean} exact={exact}");
+    }
+
+    #[test]
+    fn output_dims() {
+        let mut rng = Rng::new(76);
+        let q = PolySketch::new(6, 10, 48, LeafMode::Osnap(1), &mut rng);
+        let x = unit(&mut rng, 10);
+        assert_eq!(q.sketch_power(&x).len(), 48);
+        assert_eq!(q.sketch_power_family(&x).len(), 7);
+    }
+}

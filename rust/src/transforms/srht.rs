@@ -1,0 +1,123 @@
+//! Subsampled Randomized Hadamard Transform (Ailon–Chazelle; paper Lemma 2).
+//!
+//! S = √(D/m) · P · H · D_σ : ℝ^d → ℝ^m, where D_σ flips signs, H is the
+//! orthonormal Hadamard transform over the padded power-of-two dimension D,
+//! and P samples m coordinates uniformly. Unbiased for inner products and a
+//! (1±ε) isometry with m = O(ε⁻² log²(1/εδ)).
+
+use super::fwht::{fwht_norm, next_pow2};
+use crate::rng::Rng;
+use crate::tensor::Mat;
+
+/// An instantiated SRHT sketch d → m.
+#[derive(Clone, Debug)]
+pub struct Srht {
+    pub d: usize,
+    pub m: usize,
+    padded: usize,
+    signs: Vec<f32>,
+    idx: Vec<u32>,
+    scale: f32,
+}
+
+impl Srht {
+    pub fn new(d: usize, m: usize, rng: &mut Rng) -> Srht {
+        assert!(d > 0 && m > 0);
+        let padded = next_pow2(d);
+        let signs = rng.sign_vec(padded);
+        let idx: Vec<u32> = (0..m).map(|_| rng.below(padded) as u32).collect();
+        // orthonormal H preserves norm of the padded vector; uniform
+        // sampling of m of D coordinates needs sqrt(D/m).
+        let scale = (padded as f32 / m as f32).sqrt();
+        Srht { d, m, padded, signs, idx, scale }
+    }
+
+    /// Apply to one vector (length d).
+    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.d, "Srht::apply: dim mismatch");
+        let mut buf = vec![0.0f32; self.padded];
+        for (i, &v) in x.iter().enumerate() {
+            buf[i] = v * self.signs[i];
+        }
+        fwht_norm(&mut buf);
+        self.idx.iter().map(|&i| self.scale * buf[i as usize]).collect()
+    }
+
+    /// Apply row-wise to a matrix (n×d → n×m).
+    pub fn apply_mat(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols, self.d);
+        let mut out = Mat::zeros(x.rows, self.m);
+        let rows: Vec<Vec<f32>> = (0..x.rows).map(|i| self.apply(x.row(i))).collect();
+        for (i, r) in rows.into_iter().enumerate() {
+            out.row_mut(i).copy_from_slice(&r);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::dot;
+    use crate::util::prop::{self, Config};
+
+    #[test]
+    fn unbiased_inner_product() {
+        // Average over independent sketches; the mean must converge to <x,y>.
+        let mut rng = Rng::new(41);
+        let d = 33;
+        let x = rng.gauss_vec(d);
+        let y = rng.gauss_vec(d);
+        let exact = dot(&x, &y);
+        let trials = 300;
+        let m = 64;
+        let mut acc = 0.0f64;
+        for _ in 0..trials {
+            let s = Srht::new(d, m, &mut rng);
+            acc += dot(&s.apply(&x), &s.apply(&y)) as f64;
+        }
+        let mean = acc / trials as f64;
+        assert!(
+            (mean - exact as f64).abs() < 0.15 * (exact.abs() as f64 + 1.0),
+            "mean={mean} exact={exact}"
+        );
+    }
+
+    #[test]
+    fn norm_concentration() {
+        prop::check("srht norm", Config { cases: 10, seed: 42 }, |rng| {
+            let d = prop::size_in(rng, 4, 200);
+            let m = 2048;
+            let x = rng.gauss_vec(d);
+            let n0 = dot(&x, &x);
+            let s = Srht::new(d, m, rng);
+            let sx = s.apply(&x);
+            let n1 = dot(&sx, &sx);
+            if (n1 - n0).abs() > 0.35 * n0 {
+                return Err(format!("norm {n0} -> {n1}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn output_dim_and_batch_consistency() {
+        let mut rng = Rng::new(43);
+        let s = Srht::new(10, 7, &mut rng);
+        let x = Mat::from_vec(3, 10, rng.gauss_vec(30));
+        let out = s.apply_mat(&x);
+        assert_eq!((out.rows, out.cols), (3, 7));
+        for i in 0..3 {
+            let single = s.apply(x.row(i));
+            assert_eq!(out.row(i), &single[..]);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_rng_seed() {
+        let x: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        let a = Srht::new(9, 5, &mut Rng::new(7)).apply(&x);
+        let b = Srht::new(9, 5, &mut Rng::new(7)).apply(&x);
+        assert_eq!(a, b);
+    }
+}

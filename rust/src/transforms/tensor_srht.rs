@@ -1,0 +1,173 @@
+//! Degree-2 TensorSRHT (Ahle et al. 2020; paper §1.3).
+//!
+//! Sketches x ⊗ y without forming it:
+//!   Q(x ⊗ y)[k] = √(Dx·Dy/m) · (H D₁ x)[i_k] · (H D₂ y)[j_k]
+//! with orthonormal H over the padded dimensions and i.i.d. uniform index
+//! pairs (i_k, j_k). Unbiased: E⟨Q(x⊗y), Q(x'⊗y')⟩ = ⟨x,x'⟩·⟨y,y'⟩.
+//! These are the internal nodes of the PolySketch tree and the layer
+//! combiner Q² in Algorithms 1 and 2.
+
+use super::fwht::{fwht_norm, next_pow2};
+use crate::rng::Rng;
+
+/// A degree-2 TensorSRHT instance: ℝ^{d1} ⊗ ℝ^{d2} → ℝ^m.
+#[derive(Clone, Debug)]
+pub struct TensorSrht {
+    pub d1: usize,
+    pub d2: usize,
+    pub m: usize,
+    p1: usize,
+    p2: usize,
+    signs1: Vec<f32>,
+    signs2: Vec<f32>,
+    idx1: Vec<u32>,
+    idx2: Vec<u32>,
+    scale: f32,
+}
+
+impl TensorSrht {
+    pub fn new(d1: usize, d2: usize, m: usize, rng: &mut Rng) -> TensorSrht {
+        let p1 = next_pow2(d1);
+        let p2 = next_pow2(d2);
+        let signs1 = rng.sign_vec(p1);
+        let signs2 = rng.sign_vec(p2);
+        let idx1: Vec<u32> = (0..m).map(|_| rng.below(p1) as u32).collect();
+        let idx2: Vec<u32> = (0..m).map(|_| rng.below(p2) as u32).collect();
+        let scale = ((p1 as f32) * (p2 as f32) / m as f32).sqrt();
+        TensorSrht { d1, d2, m, p1, p2, signs1, signs2, idx1, idx2, scale }
+    }
+
+    /// Transform side-1 input into its randomized spectrum (H D₁ x).
+    pub fn spectrum1(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.d1, "TensorSrht: d1 mismatch");
+        let mut b = vec![0.0f32; self.p1];
+        for (i, &v) in x.iter().enumerate() {
+            b[i] = v * self.signs1[i];
+        }
+        fwht_norm(&mut b);
+        b
+    }
+
+    /// Transform side-2 input into its randomized spectrum (H D₂ y).
+    pub fn spectrum2(&self, y: &[f32]) -> Vec<f32> {
+        assert_eq!(y.len(), self.d2, "TensorSrht: d2 mismatch");
+        let mut b = vec![0.0f32; self.p2];
+        for (i, &v) in y.iter().enumerate() {
+            b[i] = v * self.signs2[i];
+        }
+        fwht_norm(&mut b);
+        b
+    }
+
+    /// Combine precomputed spectra into the m sketch coordinates.
+    pub fn combine(&self, s1: &[f32], s2: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(s1.len(), self.p1);
+        debug_assert_eq!(s2.len(), self.p2);
+        (0..self.m)
+            .map(|k| self.scale * s1[self.idx1[k] as usize] * s2[self.idx2[k] as usize])
+            .collect()
+    }
+
+    /// Sketch x ⊗ y.
+    pub fn apply(&self, x: &[f32], y: &[f32]) -> Vec<f32> {
+        let s1 = self.spectrum1(x);
+        let s2 = self.spectrum2(y);
+        self.combine(&s1, &s2)
+    }
+
+    /// Row-wise batched sketch: Q²(x_i ⊗ y_i) for each row i.
+    pub fn apply_mat(&self, x: &crate::tensor::Mat, y: &crate::tensor::Mat) -> crate::tensor::Mat {
+        assert_eq!(x.rows, y.rows);
+        let mut out = crate::tensor::Mat::zeros(x.rows, self.m);
+        crate::util::par::par_rows(&mut out.data, x.rows, self.m, |i, row| {
+            let v = self.apply(x.row(i), y.row(i));
+            row.copy_from_slice(&v);
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::dot;
+
+    /// Explicit x ⊗ y (row-major: index = i*len(y)+j — matches the paper's
+    /// single-dimensional-vector convention).
+    fn kron(x: &[f32], y: &[f32]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(x.len() * y.len());
+        for &a in x {
+            for &b in y {
+                out.push(a * b);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn unbiased_against_explicit_tensor_product() {
+        let mut rng = Rng::new(61);
+        let (d1, d2) = (7, 5);
+        let x = rng.gauss_vec(d1);
+        let y = rng.gauss_vec(d2);
+        let xp = rng.gauss_vec(d1);
+        let yp = rng.gauss_vec(d2);
+        let exact = dot(&kron(&x, &y), &kron(&xp, &yp)) as f64;
+        let trials = 600;
+        let m = 64;
+        let mut acc = 0.0f64;
+        for _ in 0..trials {
+            let t = TensorSrht::new(d1, d2, m, &mut rng);
+            acc += dot(&t.apply(&x, &y), &t.apply(&xp, &yp)) as f64;
+        }
+        let mean = acc / trials as f64;
+        assert!(
+            (mean - exact).abs() < 0.2 * (exact.abs() + 1.0),
+            "mean={mean} exact={exact}"
+        );
+    }
+
+    #[test]
+    fn factorizes_inner_products() {
+        // E<Q(x⊗y),Q(x'⊗y')> = <x,x'><y,y'>
+        let mut rng = Rng::new(62);
+        let (d1, d2) = (12, 9);
+        let x = rng.gauss_vec(d1);
+        let y = rng.gauss_vec(d2);
+        let xp = rng.gauss_vec(d1);
+        let yp = rng.gauss_vec(d2);
+        let exact = (dot(&x, &xp) * dot(&y, &yp)) as f64;
+        let mut acc = 0.0f64;
+        let trials = 600;
+        for _ in 0..trials {
+            let t = TensorSrht::new(d1, d2, 64, &mut rng);
+            acc += dot(&t.apply(&x, &y), &t.apply(&xp, &yp)) as f64;
+        }
+        let mean = acc / trials as f64;
+        assert!((mean - exact).abs() < 0.25 * (exact.abs() + 1.0), "mean={mean} exact={exact}");
+    }
+
+    #[test]
+    fn norm_concentrates_with_large_m() {
+        let mut rng = Rng::new(63);
+        let (d1, d2) = (16, 16);
+        let x = rng.gauss_vec(d1);
+        let y = rng.gauss_vec(d2);
+        let n0 = (dot(&x, &x) * dot(&y, &y)) as f64;
+        let t = TensorSrht::new(d1, d2, 8192, &mut rng);
+        let q = t.apply(&x, &y);
+        let n1 = dot(&q, &q) as f64;
+        assert!((n1 - n0).abs() < 0.3 * n0, "n0={n0} n1={n1}");
+    }
+
+    #[test]
+    fn spectra_reusable() {
+        let mut rng = Rng::new(64);
+        let t = TensorSrht::new(6, 4, 10, &mut rng);
+        let x = rng.gauss_vec(6);
+        let y = rng.gauss_vec(4);
+        let direct = t.apply(&x, &y);
+        let via = t.combine(&t.spectrum1(&x), &t.spectrum2(&y));
+        assert_eq!(direct, via);
+    }
+}

@@ -1,0 +1,9 @@
+//! Support substrates: JSON, CLI parsing, parallelism, timing,
+//! property-testing. These exist because the build is fully offline —
+//! serde/clap/rayon/proptest are not in the vendored registry.
+
+pub mod cli;
+pub mod json;
+pub mod par;
+pub mod prop;
+pub mod timer;

@@ -1,0 +1,149 @@
+//! Minimal data-parallel helpers over `std::thread::scope`.
+//!
+//! The offline registry has no rayon; this gives the library a
+//! `parallel_for`-style primitive: split an index range into chunks and run
+//! a closure per chunk on scoped threads. Used by the blocked matmul, the
+//! batch featurizers and the exact-kernel Gram loops.
+
+/// Number of worker threads to use (respects `NTK_THREADS`).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("NTK_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Run `f(chunk_start, chunk_end)` over `0..n` split into roughly equal
+/// contiguous chunks, one per thread. `f` must be Sync (it is shared).
+pub fn par_chunks<F>(n: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let nt = num_threads().min(n.max(1));
+    if nt <= 1 || n < 2 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(nt);
+    std::thread::scope(|s| {
+        for t in 0..nt {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let fr = &f;
+            s.spawn(move || fr(lo, hi));
+        }
+    });
+}
+
+/// Map `f(i)` over `0..n` in parallel, collecting results in order.
+pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots: Vec<std::sync::Mutex<&mut T>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        par_chunks(n, |lo, hi| {
+            for i in lo..hi {
+                **slots[i].lock().unwrap() = f(i);
+            }
+        });
+    }
+    out
+}
+
+/// Parallel iteration over disjoint mutable row-chunks of a flat buffer:
+/// `data` has `n_rows` rows of `row_len`; `f(row_index, row_slice)`.
+pub fn par_rows<F>(data: &mut [f32], n_rows: usize, row_len: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert_eq!(data.len(), n_rows * row_len, "par_rows: shape mismatch");
+    let nt = num_threads().min(n_rows.max(1));
+    if nt <= 1 || n_rows < 2 {
+        for (i, row) in data.chunks_mut(row_len.max(1)).enumerate().take(n_rows) {
+            f(i, row);
+        }
+        return;
+    }
+    let chunk = n_rows.div_ceil(nt);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut row0 = 0usize;
+        while row0 < n_rows {
+            let rows_here = chunk.min(n_rows - row0);
+            let (head, tail) = rest.split_at_mut(rows_here * row_len);
+            rest = tail;
+            let fr = &f;
+            let base = row0;
+            s.spawn(move || {
+                for (k, row) in head.chunks_mut(row_len).enumerate() {
+                    fr(base + k, row);
+                }
+            });
+            row0 += rows_here;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn par_chunks_covers_all_indices_once() {
+        let n = 1003;
+        let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        par_chunks(n, |lo, hi| {
+            for i in lo..hi {
+                counts[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn par_chunks_handles_small_n() {
+        for n in 0..4 {
+            let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            par_chunks(n, |lo, hi| {
+                for i in lo..hi {
+                    counts[i].fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            assert!(counts.iter().all(|c| c.load(Ordering::SeqCst) == 1));
+        }
+    }
+
+    #[test]
+    fn par_map_ordered() {
+        let v = par_map(100, |i| i * i);
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i * i);
+        }
+    }
+
+    #[test]
+    fn par_rows_disjoint_writes() {
+        let (n, m) = (37, 11);
+        let mut data = vec![0f32; n * m];
+        par_rows(&mut data, n, m, |i, row| {
+            for (j, x) in row.iter_mut().enumerate() {
+                *x = (i * m + j) as f32;
+            }
+        });
+        for (k, &x) in data.iter().enumerate() {
+            assert_eq!(x, k as f32);
+        }
+    }
+}

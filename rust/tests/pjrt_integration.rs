@@ -1,0 +1,132 @@
+//! Integration: the full AOT bridge. Loads the `make artifacts` bundle
+//! (L2 jax NTKRF model with L1 Pallas kernels, lowered to HLO text),
+//! compiles it on the PJRT CPU client, and checks:
+//!  1. golden parity — Rust execution reproduces the jax outputs bit-near;
+//!  2. kernel semantics — PJRT features approximate the exact NTK;
+//!  3. the serving stack composes — FeatureServer over the PJRT engine.
+
+use ntk_sketch::coordinator::{BatchBackend, BatchPolicy, FeatureServer};
+use ntk_sketch::ntk::theta_ntk;
+use ntk_sketch::rng::Rng;
+use ntk_sketch::runtime::{artifacts_dir, Engine};
+use ntk_sketch::tensor::{dot, Mat};
+
+fn artifacts_present() -> bool {
+    artifacts_dir().join("ntk_rf.manifest.json").exists()
+}
+
+#[test]
+fn golden_parity_with_jax() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::load(&artifacts_dir(), "ntk_rf").expect("load artifact");
+    let max_rel = engine.verify_golden(1e-3, 1e-4).expect("golden parity");
+    eprintln!("golden parity OK, max relative error {max_rel:.2e}");
+}
+
+#[test]
+fn pjrt_features_approximate_ntk() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::load(&artifacts_dir(), "ntk_rf").expect("load artifact");
+    let d = engine.input_dim();
+    let depth = engine.artifact.depth;
+    let mut rng = Rng::new(1234);
+    let batch = engine.batch();
+    let x = Mat::from_vec(batch, d, rng.gauss_vec(batch * d));
+    let feats = engine.run_batch(&x).expect("run");
+    // average relative kernel error over many pairs — one parameter draw,
+    // so compare in aggregate (m1 = 512 ⇒ ~10% per-pair std).
+    let mut rel_sum = 0.0f64;
+    let mut count = 0;
+    for i in 0..batch.min(16) {
+        for j in 0..i {
+            let exact = theta_ntk(depth, x.row(i), x.row(j));
+            let approx = dot(feats.row(i), feats.row(j)) as f64;
+            rel_sum += (approx - exact).abs() / exact.abs().max(1e-9);
+            count += 1;
+        }
+    }
+    let mean_rel = rel_sum / count as f64;
+    // the default artifact is demo-scale (m1 = 512, ms = 128, one
+    // parameter draw): Theorem 2 ⇒ per-pair std ≈ 1/√m1-ish compounded
+    // over 2 layers; ~30% mean relative error is the expected band.
+    assert!(mean_rel < 0.45, "mean relative kernel error {mean_rel}");
+    eprintln!("PJRT NTKRF kernel error vs exact NTK: {mean_rel:.3}");
+}
+
+#[test]
+fn run_all_pads_partial_batches() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::load(&artifacts_dir(), "ntk_rf").expect("load artifact");
+    let d = engine.input_dim();
+    let n = engine.batch() + 7; // force a padded tail batch
+    let mut rng = Rng::new(5);
+    let x = Mat::from_vec(n, d, rng.gauss_vec(n * d));
+    let all = engine.run_all(&x).expect("run_all");
+    assert_eq!((all.rows, all.cols), (n, engine.feature_dim()));
+    // row-by-row parity with a full-batch run for the first batch
+    let head = engine.run_batch(&x.slice_rows(0, engine.batch())).unwrap();
+    for i in 0..engine.batch() {
+        assert_eq!(all.row(i), head.row(i), "row {i}");
+    }
+}
+
+struct PjrtBackend {
+    engine: Engine,
+}
+
+impl BatchBackend for PjrtBackend {
+    fn batch(&self) -> usize {
+        self.engine.batch()
+    }
+    fn input_dim(&self) -> usize {
+        self.engine.input_dim()
+    }
+    fn feature_dim(&self) -> usize {
+        self.engine.feature_dim()
+    }
+    fn run(&self, x: &Mat) -> Mat {
+        self.engine.run_batch(x).expect("pjrt run")
+    }
+}
+
+#[test]
+fn feature_server_over_pjrt_engine() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let dir = artifacts_dir();
+    let (server, client) = FeatureServer::start(
+        move || PjrtBackend { engine: Engine::load(&dir, "ntk_rf").expect("engine") },
+        1,
+        BatchPolicy { max_batch: 64, max_delay: std::time::Duration::from_millis(2) },
+        8,
+    );
+    let mut rng = Rng::new(77);
+    let d = client_dim(&client);
+    // submit a wave of async requests
+    let rows: Vec<Vec<f32>> = (0..100).map(|_| rng.gauss_vec(d)).collect();
+    let rxs: Vec<_> = rows.iter().map(|r| client.submit(r.clone())).collect();
+    for rx in rxs {
+        let f = rx.recv_timeout(std::time::Duration::from_secs(30)).expect("feature row");
+        assert_eq!(f.len(), client.feature_dim());
+    }
+    eprintln!("serving metrics: {}", server.metrics.summary());
+    assert_eq!(server.requests_served(), 100);
+    drop(client);
+    server.join();
+}
+
+fn client_dim(_c: &ntk_sketch::coordinator::FeatureClient) -> usize {
+    // the artifact is lowered for d = 64 (aot.py default)
+    64
+}
