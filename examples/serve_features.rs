@@ -43,8 +43,13 @@ impl BatchBackend for PjrtBackend {
 fn main() {
     let args = Args::from_env();
     let dir = artifacts_dir();
+    if !ntk_sketch::runtime::pjrt_enabled() {
+        eprintln!("serve_features: skipped — built without the `pjrt` feature (see DESIGN.md §6)");
+        return;
+    }
     if !dir.join("ntk_rf.manifest.json").exists() {
-        eprintln!("artifacts missing — run `make artifacts` first");
+        // pjrt build without artifacts is a real failure, not a skip
+        eprintln!("serve_features: artifacts missing — run `make artifacts` first");
         std::process::exit(1);
     }
     let probe = Engine::load(&dir, "ntk_rf").expect("load artifact");

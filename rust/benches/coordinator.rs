@@ -3,7 +3,7 @@
 //! worker count, over a Rust-native backend (PJRT path measured in
 //! examples/serve_features.rs).
 
-use ntk_sketch::bench::Table;
+use ntk_sketch::bench::{smoke, Table};
 use ntk_sketch::coordinator::{
     train_streaming, BatchPolicy, FeatureServer, NativeBackend, PipelineConfig,
 };
@@ -15,11 +15,16 @@ use std::time::Duration;
 fn main() {
     let d = 64;
     let cfg = NtkRfConfig::for_budget(2, 512);
+    let (batches, deadlines, n_req): (Vec<usize>, Vec<u64>, usize) = if smoke() {
+        (vec![16], vec![1], 200)
+    } else {
+        (vec![16, 64, 256], vec![1, 5, 20], 2000)
+    };
 
-    println!("== batcher policy sweep: 2000 closed-loop requests, 4 clients ==");
+    println!("== batcher policy sweep: {n_req} closed-loop requests, 4 clients ==");
     let t = Table::new(&["max_batch", "deadline", "req/s", "p50", "p99", "fill%"]);
-    for &max_batch in &[16usize, 64, 256] {
-        for &deadline_ms in &[1u64, 5, 20] {
+    for &max_batch in &batches {
+        for &deadline_ms in &deadlines {
             let (server, client) = FeatureServer::start(
                 move || {
                     let mut rng = Rng::new(7);
@@ -33,7 +38,6 @@ fn main() {
                 BatchPolicy { max_batch, max_delay: Duration::from_millis(deadline_ms) },
                 32,
             );
-            let n_req = 2000;
             let clients = 4;
             let t0 = std::time::Instant::now();
             std::thread::scope(|s| {
@@ -66,13 +70,14 @@ fn main() {
         }
     }
 
-    println!("\n== streaming pipeline: rows/s vs workers (n=4096, m=512) ==");
+    let n = if smoke() { 512 } else { 4096 };
+    println!("\n== streaming pipeline: rows/s vs workers (n={n}, m=512) ==");
     let t = Table::new(&["workers", "wall", "rows/s"]);
     let mut rng = Rng::new(8);
-    let n = 4096;
     let x = Mat::from_vec(n, d, rng.gauss_vec(n * d));
     let y = Mat::from_vec(n, 1, rng.gauss_vec(n));
-    for &workers in &[1usize, 2, 4, 8] {
+    let worker_counts: Vec<usize> = if smoke() { vec![1, 2] } else { vec![1, 2, 4, 8] };
+    for &workers in &worker_counts {
         let mut rng2 = Rng::new(9);
         let rf = NtkRf::new(d, cfg, &mut rng2);
         let t0 = std::time::Instant::now();

@@ -5,7 +5,7 @@
 //! shape behind the paper's "150× faster than exact CNTK" claim.
 //! Also: exact NTK vs NTKRF/NTKSketch n-scaling for the FC kernel.
 
-use ntk_sketch::bench::{bench, full_scale, Table};
+use ntk_sketch::bench::{bench, full_scale, smoke, Table};
 use ntk_sketch::cntk::exact::CntkExact;
 use ntk_sketch::data::cifar_like;
 use ntk_sketch::features::cntk_sketch::{CntkSketch, CntkSketchConfig};
@@ -22,7 +22,13 @@ fn main() {
     let q = 3;
 
     println!("== CNTK: exact per-pair cost vs sketch per-image cost, by image side ==");
-    let sides: Vec<usize> = if full_scale() { vec![4, 8, 12, 16] } else { vec![4, 8, 12] };
+    let sides: Vec<usize> = if full_scale() {
+        vec![4, 8, 12, 16]
+    } else if smoke() {
+        vec![4]
+    } else {
+        vec![4, 8, 12]
+    };
     let t = Table::new(&["side", "exact/pair", "sketch/image", "pairs=images at n"]);
     let mut last_ratio = 0.0;
     for &side in &sides {
@@ -59,7 +65,13 @@ fn main() {
     );
 
     println!("\n== fully-connected: exact NTK Gram vs NTKRF featurization, by n ==");
-    let ns: Vec<usize> = if full_scale() { vec![500, 1000, 2000, 4000] } else { vec![250, 500, 1000] };
+    let ns: Vec<usize> = if full_scale() {
+        vec![500, 1000, 2000, 4000]
+    } else if smoke() {
+        vec![250]
+    } else {
+        vec![250, 500, 1000]
+    };
     let d = 64;
     let t = Table::new(&["n", "exact Gram", "NTKRF(m=1024)", "ratio"]);
     for &n in &ns {

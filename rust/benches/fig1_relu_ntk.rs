@@ -4,7 +4,7 @@
 //! Right: degree-8 polynomial approximation of the depth-3 ReLU-NTK
 //! (Remark 1 / poly_fit) with its max error, plus a degree sweep.
 
-use ntk_sketch::bench::{bench, Table};
+use ntk_sketch::bench::{bench, smoke, Table};
 use ntk_sketch::ntk::poly_fit::fit_k_relu;
 use ntk_sketch::ntk::k_relu;
 
@@ -33,7 +33,8 @@ fn main() {
 
     println!("\n== Fig 1 (right): polynomial fit of K_relu^(3) ==");
     let t2 = Table::new(&["degree", "max err", "rel err", "fit time"]);
-    for deg in [4usize, 6, 8, 12, 16] {
+    let degrees: Vec<usize> = if smoke() { vec![4, 8] } else { vec![4, 6, 8, 12, 16] };
+    for deg in degrees {
         let timing = bench(0.2, || {
             std::hint::black_box(fit_k_relu(3, deg));
         });

@@ -6,7 +6,7 @@
 //!
 //! NTK_BENCH_SCALE=full for larger n / dims.
 
-use ntk_sketch::bench::{full_scale, Table};
+use ntk_sketch::bench::{full_scale, smoke, Table};
 use ntk_sketch::data::{mnist_like, split};
 use ntk_sketch::features::grad_rf::GradRfMlp;
 use ntk_sketch::features::ntk_poly_sketch::NtkPolySketch;
@@ -21,6 +21,8 @@ use ntk_sketch::util::timer::{fmt_secs, timed};
 fn main() {
     let (n, dims, side) = if full_scale() {
         (4000, vec![256usize, 512, 1024, 2048, 4096], 16)
+    } else if smoke() {
+        (300, vec![256usize], 16)
     } else {
         (1200, vec![256usize, 512, 1024], 16)
     };

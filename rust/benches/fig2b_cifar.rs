@@ -2,7 +2,7 @@
 //! CNTKSketch vs GradRF(CNN) as feature dimension sweeps. Paper shape:
 //! CNTKSketch dominates GradRF at every budget and grows with dimension.
 
-use ntk_sketch::bench::{full_scale, Table};
+use ntk_sketch::bench::{full_scale, smoke, Table};
 use ntk_sketch::data::{cifar_like, split};
 use ntk_sketch::features::cntk_sketch::{CntkSketch, CntkSketchConfig};
 use ntk_sketch::features::grad_rf::GradRfCnn;
@@ -15,6 +15,8 @@ use ntk_sketch::util::timer::{fmt_secs, timed};
 fn main() {
     let (n, side, dims, depth) = if full_scale() {
         (1000, 12, vec![256usize, 512, 1024], 3)
+    } else if smoke() {
+        (120, 8, vec![128usize], 3)
     } else {
         (400, 8, vec![128usize, 256], 3)
     };

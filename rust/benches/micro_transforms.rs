@@ -1,21 +1,27 @@
 //! Micro-benchmarks of the sketching primitives (Lemma 1 cost model):
-//! FWHT scaling, SRHT, TensorSRHT, PolySketch power-family by degree, and
-//! the OSNAP-leaves-vs-SRHT-leaves ablation (sparse vs dense input mode
-//! from the Lemma 1 proof).
+//! FWHT scaling, SRHT, TensorSRHT, PolySketch power-family by degree, the
+//! OSNAP-leaves-vs-SRHT-leaves ablation (sparse vs dense input mode from
+//! the Lemma 1 proof), and the batched-vs-per-row comparison for the
+//! `BatchTransform` path (per-thread scratch, zero per-row allocation).
 
-use ntk_sketch::bench::{bench, Table};
+use ntk_sketch::bench::{bench, smoke, Table};
 use ntk_sketch::rng::Rng;
-use ntk_sketch::transforms::{fwht, LeafMode, PolySketch, Srht, TensorSrht};
+use ntk_sketch::tensor::Mat;
+use ntk_sketch::transforms::{
+    fwht, BatchTransform, CountSketch, LeafMode, PolySketch, Srht, TensorSrht,
+};
 
 fn main() {
     let mut rng = Rng::new(61);
+    let budget = if smoke() { 0.02 } else { 0.2 };
 
     println!("== FWHT (n log n) ==");
     let t = Table::new(&["n", "median", "Melem/s"]);
-    for logn in [8usize, 10, 12, 14] {
+    let logns: Vec<usize> = if smoke() { vec![8, 10] } else { vec![8, 10, 12, 14] };
+    for logn in logns {
         let n = 1 << logn;
         let mut x = rng.gauss_vec(n);
-        let timing = bench(0.2, || fwht::fwht(std::hint::black_box(&mut x)));
+        let timing = bench(budget, || fwht::fwht(std::hint::black_box(&mut x)));
         t.row(&[
             format!("{n}"),
             format!("{:.1}us", 1e6 * timing.median_s),
@@ -25,10 +31,11 @@ fn main() {
 
     println!("\n== SRHT d -> m=256 ==");
     let t = Table::new(&["d", "median"]);
-    for d in [256usize, 1024, 4096, 16384] {
+    let ds: Vec<usize> = if smoke() { vec![256, 1024] } else { vec![256, 1024, 4096, 16384] };
+    for d in ds {
         let s = Srht::new(d, 256, &mut rng);
         let x = rng.gauss_vec(d);
-        let timing = bench(0.2, || {
+        let timing = bench(budget, || {
             std::hint::black_box(s.apply(&x));
         });
         t.row(&[format!("{d}"), format!("{:.1}us", 1e6 * timing.median_s)]);
@@ -36,11 +43,12 @@ fn main() {
 
     println!("\n== degree-2 TensorSRHT (m=512) ==");
     let t = Table::new(&["d1 x d2", "median"]);
-    for d in [128usize, 512, 2048] {
+    let ds: Vec<usize> = if smoke() { vec![128] } else { vec![128, 512, 2048] };
+    for d in ds {
         let ts = TensorSrht::new(d, d, 512, &mut rng);
         let a = rng.gauss_vec(d);
         let b = rng.gauss_vec(d);
-        let timing = bench(0.2, || {
+        let timing = bench(budget, || {
             std::hint::black_box(ts.apply(&a, &b));
         });
         t.row(&[format!("{d}x{d}"), format!("{:.1}us", 1e6 * timing.median_s)]);
@@ -48,11 +56,12 @@ fn main() {
 
     println!("\n== PolySketch power family Q^p(x^⊗l ⊗ e1^…), d=256, m=512 ==");
     let t = Table::new(&["degree p", "leaves", "median", "per combine"]);
-    for p in [2usize, 4, 8, 13] {
+    let degrees: Vec<usize> = if smoke() { vec![2, 4] } else { vec![2, 4, 8, 13] };
+    for p in degrees {
         for (lname, mode) in [("OSNAP(4)", LeafMode::Osnap(4)), ("SRHT", LeafMode::Srht)] {
             let q = PolySketch::new(p, 256, 512, mode, &mut rng);
             let x = rng.gauss_vec(256);
-            let timing = bench(0.3, || {
+            let timing = bench(1.5 * budget, || {
                 std::hint::black_box(q.sketch_power_family(&x));
             });
             t.row(&[
@@ -67,17 +76,18 @@ fn main() {
     println!("\n== OSNAP leaves win on sparse inputs (Lemma 1 sparse mode) ==");
     let t = Table::new(&["nnz/d", "OSNAP(4)", "SRHT"]);
     let d = 4096;
-    for nnz in [16usize, 256, 4096] {
+    let nnzs: Vec<usize> = if smoke() { vec![16, 4096] } else { vec![16, 256, 4096] };
+    for nnz in nnzs {
         let mut x = vec![0.0f32; d];
         for i in 0..nnz {
             x[i * (d / nnz)] = 1.0;
         }
         let qo = PolySketch::new(4, d, 256, LeafMode::Osnap(4), &mut rng);
         let qs = PolySketch::new(4, d, 256, LeafMode::Srht, &mut rng);
-        let to = bench(0.2, || {
+        let to = bench(budget, || {
             std::hint::black_box(qo.sketch_power(&x));
         });
-        let ts = bench(0.2, || {
+        let ts = bench(budget, || {
             std::hint::black_box(qs.sketch_power(&x));
         });
         t.row(&[
@@ -86,4 +96,96 @@ fn main() {
             format!("{:.0}us", 1e6 * ts.median_s),
         ]);
     }
+
+    // ---- the BatchTransform acceptance numbers: batched path must beat
+    // the per-row path (one Vec + scratch allocation per call, serial) on
+    // large batches. Batch stays at 4096 even in smoke mode — this is the
+    // number CI checks by eye.
+    let batch = 4096;
+    let d = 1024;
+    let m = 256;
+    println!("\n== batched vs per-row (apply_batch vs apply), batch={batch} d={d} m={m} ==");
+    let t = Table::new(&["transform", "per-row", "batched", "speedup"]);
+    let x = Mat::from_vec(batch, d, rng.gauss_vec(batch * d));
+
+    let srht = Srht::new(d, m, &mut rng);
+    let mut out = Mat::zeros(batch, m);
+    let t_row = bench(budget, || {
+        for i in 0..batch {
+            std::hint::black_box(srht.apply(x.row(i)));
+        }
+    });
+    let t_batch = bench(budget, || {
+        srht.apply_batch(&x, &mut out);
+        std::hint::black_box(&out);
+    });
+    t.row(&[
+        "SRHT".into(),
+        format!("{:.1}ms", 1e3 * t_row.median_s),
+        format!("{:.1}ms", 1e3 * t_batch.median_s),
+        format!("{:.1}x", t_row.median_s / t_batch.median_s),
+    ]);
+
+    let cs = CountSketch::new(d, m, 4, &mut rng);
+    let t_row = bench(budget, || {
+        for i in 0..batch {
+            std::hint::black_box(cs.apply(x.row(i)));
+        }
+    });
+    let t_batch = bench(budget, || {
+        cs.apply_batch(&x, &mut out);
+        std::hint::black_box(&out);
+    });
+    t.row(&[
+        "CountSketch(4)".into(),
+        format!("{:.1}ms", 1e3 * t_row.median_s),
+        format!("{:.1}ms", 1e3 * t_batch.median_s),
+        format!("{:.1}x", t_row.median_s / t_batch.median_s),
+    ]);
+
+    let ts2 = TensorSrht::new(d, d, m, &mut rng);
+    let y = Mat::from_vec(batch, d, rng.gauss_vec(batch * d));
+    let t_row = bench(budget, || {
+        for i in 0..batch {
+            std::hint::black_box(ts2.apply(x.row(i), y.row(i)));
+        }
+    });
+    let t_batch = bench(budget, || {
+        ts2.apply_batch(&x, &y, &mut out);
+        std::hint::black_box(&out);
+    });
+    t.row(&[
+        "TensorSRHT".into(),
+        format!("{:.1}ms", 1e3 * t_row.median_s),
+        format!("{:.1}ms", 1e3 * t_batch.median_s),
+        format!("{:.1}x", t_row.median_s / t_batch.median_s),
+    ]);
+
+    println!("\n== batched FWHT rows (fwht_norm_rows vs serial loop), {batch}x{d} ==");
+    let t = Table::new(&["path", "median", "Melem/s"]);
+    let base = rng.gauss_vec(batch * d);
+    let mut buf = base.clone();
+    let t_serial = bench(budget, || {
+        buf.copy_from_slice(&base);
+        for row in buf.chunks_mut(d) {
+            fwht::fwht_norm(row);
+        }
+        std::hint::black_box(&buf);
+    });
+    let t_rows = bench(budget, || {
+        buf.copy_from_slice(&base);
+        fwht::fwht_norm_rows(&mut buf, batch, d);
+        std::hint::black_box(&buf);
+    });
+    for (name, tm) in [("serial loop", t_serial), ("fwht_norm_rows", t_rows)] {
+        t.row(&[
+            name.into(),
+            format!("{:.1}ms", 1e3 * tm.median_s),
+            format!("{:.0}", (batch * d) as f64 / tm.median_s / 1e6),
+        ]);
+    }
+    println!(
+        "\nacceptance: batched SRHT/CountSketch should be ≥ 2x the per-row path at batch ≥ 4096\n\
+         (parallel row blocks + one scratch per thread instead of one Vec per row)."
+    );
 }

@@ -4,7 +4,7 @@
 //! running it fully is the paper's >10⁶-second column). Reports the
 //! speedup factor corresponding to the paper's 150× headline.
 
-use ntk_sketch::bench::{full_scale, Table};
+use ntk_sketch::bench::{full_scale, smoke, Table};
 use ntk_sketch::cntk::exact::CntkExact;
 use ntk_sketch::data::{cifar_like, split};
 use ntk_sketch::features::cntk_sketch::{CntkSketch, CntkSketchConfig};
@@ -18,6 +18,8 @@ use ntk_sketch::util::timer::{fmt_secs, Timer};
 fn main() {
     let (n, side, dims) = if full_scale() {
         (800, 12, vec![256usize, 512, 1024])
+    } else if smoke() {
+        (100, 8, vec![128usize])
     } else {
         (300, 8, vec![128usize, 256])
     };
@@ -72,7 +74,14 @@ fn main() {
     }
 
     // exact CNTK: small-subset Gram for accuracy signal + extrapolated cost
-    let k_sub = if full_scale() { 120 } else { 60 }.min(train.n());
+    let k_sub = if full_scale() {
+        120
+    } else if smoke() {
+        20
+    } else {
+        60
+    }
+    .min(train.n());
     let cntk = CntkExact::new(depth, q);
     let t = Timer::start();
     let sub: Vec<_> = train.images[..k_sub].to_vec();

@@ -4,7 +4,7 @@
 //! (Protein is the exception), approximations track their exact kernels,
 //! and feature methods are far cheaper at scale.
 
-use ntk_sketch::bench::{full_scale, Table};
+use ntk_sketch::bench::{full_scale, smoke, Table};
 use ntk_sketch::data::uci_like::{generate, ALL_FAMILIES};
 use ntk_sketch::data::{split, Dataset};
 use ntk_sketch::features::ntk_rf::{NtkRf, NtkRfConfig};
@@ -56,7 +56,13 @@ fn kernel_cv(
 }
 
 fn main() {
-    let (n, m) = if full_scale() { (4000, 4096) } else { (1000, 1024) };
+    let (n, m) = if full_scale() {
+        (4000, 4096)
+    } else if smoke() {
+        (200, 256)
+    } else {
+        (1000, 1024)
+    };
     let lambda = 1e-3;
     let depth = 1;
     println!("Table 2 (scaled): n={n} per family, feature dim m={m}, 4-fold CV");

@@ -21,13 +21,15 @@ impl Timing {
 }
 
 /// Time `f` adaptively: warm up, then run enough iterations to fill
-/// ~`budget_s` seconds (at least 3 iters).
+/// ~`budget_s` seconds (at least 3 iters). Smoke mode caps the sample
+/// count so every bench binary completes in CI seconds.
 pub fn bench<F: FnMut()>(budget_s: f64, mut f: F) -> Timing {
     // warmup
     let t0 = Instant::now();
     f();
     let first = t0.elapsed().as_secs_f64();
-    let iters = ((budget_s / first.max(1e-9)).ceil() as usize).clamp(3, 10_000);
+    let cap = if smoke() { 3 } else { 10_000 };
+    let iters = ((budget_s / first.max(1e-9)).ceil() as usize).clamp(3, 10_000).min(cap);
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
         let t = Instant::now();
@@ -79,8 +81,19 @@ impl Table {
 
 /// Bench-scale knob: NTK_BENCH_SCALE=small|full (default small so the
 /// suite completes in minutes; full reproduces closer-to-paper sizes).
+/// Smoke mode overrides full scale.
 pub fn full_scale() -> bool {
-    std::env::var("NTK_BENCH_SCALE").map(|v| v == "full").unwrap_or(false)
+    !smoke() && std::env::var("NTK_BENCH_SCALE").map(|v| v == "full").unwrap_or(false)
+}
+
+/// CI smoke mode: `NTK_BENCH_SMOKE=1` caps `bench()` iteration counts and
+/// tells every bench binary to shrink its problem sizes, so the full
+/// 8-binary suite runs to completion in a CI job and can never silently
+/// rot. Numbers produced under smoke are liveness checks, not results.
+pub fn smoke() -> bool {
+    std::env::var("NTK_BENCH_SMOKE")
+        .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+        .unwrap_or(false)
 }
 
 #[cfg(test)]

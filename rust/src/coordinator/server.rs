@@ -26,6 +26,14 @@ pub trait BatchBackend {
     fn feature_dim(&self) -> usize;
     /// Featurize exactly `batch()` rows.
     fn run(&self, x: &Mat) -> Mat;
+    /// Featurize exactly `batch()` rows into a caller-owned output
+    /// (batch()×feature_dim()); worker threads reuse one output buffer
+    /// across batches. Default delegates to [`BatchBackend::run`].
+    fn run_into(&self, x: &Mat, out: &mut Mat) {
+        let r = self.run(x);
+        debug_assert_eq!((r.rows, r.cols), (out.rows, out.cols));
+        out.data.copy_from_slice(&r.data);
+    }
 }
 
 /// Rust-native adapter: any `Featurizer` serves as a backend.
@@ -47,6 +55,10 @@ impl<F: crate::features::Featurizer> BatchBackend for NativeBackend<F> {
     }
     fn run(&self, x: &Mat) -> Mat {
         self.featurizer.transform(x)
+    }
+    fn run_into(&self, x: &Mat, out: &mut Mat) {
+        // the batched featurizer path: whole batch, caller-owned output
+        self.featurizer.transform_into(x, out);
     }
 }
 
@@ -163,20 +175,28 @@ impl FeatureServer {
                 let backend = f();
                 let b = backend.batch();
                 let d = backend.input_dim();
+                // fixed-shape input and output buffers, reused across
+                // batches — the worker itself allocates nothing at steady
+                // state (featurizers may still use internal intermediates)
+                let mut x = Mat::zeros(b, d);
+                let mut feats = Mat::zeros(b, backend.feature_dim());
                 loop {
                     let batch = {
                         let guard = rx.lock().unwrap();
                         guard.recv()
                     };
                     let Ok(reqs) = batch else { return };
-                    // pack (pad to fixed shape)
-                    let mut x = Mat::zeros(b, d);
+                    // pack (pad to fixed shape; clear rows left over from
+                    // the previous batch)
                     for (k, r) in reqs.iter().enumerate() {
                         x.row_mut(k).copy_from_slice(&r.row);
                     }
+                    for k in reqs.len()..b {
+                        x.row_mut(k).fill(0.0);
+                    }
                     Metrics::inc(&m.pad_rows, (b - reqs.len()) as u64);
                     let t_exec = Instant::now();
-                    let feats = backend.run(&x);
+                    backend.run_into(&x, &mut feats);
                     m.exec_latency.record(t_exec.elapsed());
                     Metrics::inc(&m.batches, 1);
                     Metrics::inc(&m.rows, reqs.len() as u64);

@@ -154,7 +154,16 @@ impl CntkSketch {
 
     /// Feature map for one image.
     pub fn features(&self, x: &Image) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cfg.s_out];
+        self.features_into(x, &mut out);
+        out
+    }
+
+    /// Feature map for one image, written into a caller-owned slice
+    /// (len = `s_out`) — the core the batched `transform_images` reuses.
+    pub fn features_into(&self, x: &Image, out: &mut [f32]) {
         assert_eq!((x.h, x.w, x.c), (self.h, self.w, self.c), "CntkSketch: geometry mismatch");
+        assert_eq!(out.len(), self.cfg.s_out, "CntkSketch: output length mismatch");
         let (h, w) = (self.h, self.w);
         let p = h * w;
         let q = self.cfg.q as f32;
@@ -241,7 +250,7 @@ impl CntkSketch {
         for v in &mut pooled {
             *v *= inv;
         }
-        self.g.apply(&pooled)
+        self.g.apply_into(&pooled, out);
     }
 }
 
@@ -251,12 +260,10 @@ impl ImageFeaturizer for CntkSketch {
     }
 
     fn transform_images(&self, imgs: &[Image]) -> Mat {
-        let rows: Vec<Vec<f32>> =
-            crate::util::par::par_map(imgs.len(), |i| self.features(&imgs[i]));
         let mut out = Mat::zeros(imgs.len(), self.cfg.s_out);
-        for (i, r) in rows.into_iter().enumerate() {
-            out.row_mut(i).copy_from_slice(&r);
-        }
+        crate::util::par::par_rows(&mut out.data, imgs.len(), self.cfg.s_out, |i, orow| {
+            self.features_into(&imgs[i], orow);
+        });
         out
     }
 

@@ -58,7 +58,16 @@ impl GradRfMlp {
 
     /// ∇_θ f(x), flattened in layer order then head.
     pub fn grad_features(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim];
+        self.grad_features_into(x, &mut out);
+        out
+    }
+
+    /// ∇_θ f(x) written into a caller-owned slice (len = `dim()`).
+    pub fn grad_features_into(&self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.d);
+        assert_eq!(out.len(), self.dim, "GradRfMlp: output length mismatch");
+        out.fill(0.0);
         let w = self.width;
         let scale = (2.0 / w as f32).sqrt();
         // forward, caching pre-activations z_ℓ and activations g_ℓ
@@ -73,7 +82,6 @@ impl GradRfMlp {
             zs.push(z);
         }
         // backward
-        let mut out = vec![0.0f32; self.dim];
         // head gradient: ∂f/∂a = g_L — goes in the last slot block
         let head_off = self.dim - w;
         out[head_off..].copy_from_slice(gs.last().unwrap());
@@ -126,7 +134,6 @@ impl GradRfMlp {
                 delta = nd;
             }
         }
-        out
     }
 
     /// Scalar network output (used by the finite-difference tests).
@@ -169,7 +176,17 @@ impl Featurizer for GradRfMlp {
     }
 
     fn transform(&self, x: &Mat) -> Mat {
-        super::rows_to_mat(x.rows, self.dim, |i| self.grad_features(x.row(i)))
+        let mut out = Mat::zeros(x.rows, self.dim);
+        self.transform_into(x, &mut out);
+        out
+    }
+
+    fn transform_into(&self, x: &Mat, out: &mut Mat) {
+        assert_eq!(out.rows, x.rows, "GradRfMlp: output rows mismatch");
+        assert_eq!(out.cols, self.dim, "GradRfMlp: output dim mismatch");
+        crate::util::par::par_rows(&mut out.data, x.rows, self.dim, |i, orow| {
+            self.grad_features_into(x.row(i), orow);
+        });
     }
 
     fn name(&self) -> &'static str {
@@ -321,11 +338,19 @@ impl GradRfCnn {
 
     /// ∇_θ f(x) flattened: filters layer-by-layer, then head.
     pub fn grad_features(&self, x: &Image) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim];
+        self.grad_features_into(x, &mut out);
+        out
+    }
+
+    /// ∇_θ f(x) written into a caller-owned slice (len = `dim()`).
+    pub fn grad_features_into(&self, x: &Image, out: &mut [f32]) {
+        assert_eq!(out.len(), self.dim, "GradRfCnn: output length mismatch");
+        out.fill(0.0);
         let (acts, pre) = self.forward_cached(x);
         let (hh, ww, q) = (self.h, self.w_img, self.q);
         let p = hh * ww;
         let r = (q / 2) as isize;
-        let mut out = vec![0.0f32; self.dim];
 
         // head grad: GAP of last activations
         let last = acts.last().unwrap();
@@ -426,7 +451,6 @@ impl GradRfCnn {
                 delta = nd;
             }
         }
-        out
     }
 
     #[cfg(test)]
@@ -450,12 +474,10 @@ impl ImageFeaturizer for GradRfCnn {
     }
 
     fn transform_images(&self, imgs: &[Image]) -> Mat {
-        let rows: Vec<Vec<f32>> =
-            crate::util::par::par_map(imgs.len(), |i| self.grad_features(&imgs[i]));
         let mut out = Mat::zeros(imgs.len(), self.dim);
-        for (i, r) in rows.into_iter().enumerate() {
-            out.row_mut(i).copy_from_slice(&r);
-        }
+        crate::util::par::par_rows(&mut out.data, imgs.len(), self.dim, |i, orow| {
+            self.grad_features_into(&imgs[i], orow);
+        });
         out
     }
 

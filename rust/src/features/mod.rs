@@ -3,6 +3,11 @@
 //! against (RFF, GradRF). All implement [`Featurizer`] (vectors) or
 //! [`ImageFeaturizer`] (images) so the regression stack and the
 //! coordinator treat them uniformly.
+//!
+//! The serving hot path is `transform_into`: whole batches featurized
+//! into a caller-owned matrix (the coordinator's workers reuse one output
+//! buffer across batches), built on the batched transform layer
+//! (`transforms::BatchTransform`).
 
 pub mod arccos_rf;
 pub mod cntk_sketch;
@@ -19,8 +24,21 @@ use crate::tensor::Mat;
 pub trait Featurizer: Send + Sync {
     /// Output feature dimension.
     fn dim(&self) -> usize;
+
     /// Map each row of `x` (n×d) to a feature row (n×dim).
     fn transform(&self, x: &Mat) -> Mat;
+
+    /// Map each row of `x` into the matching row of a caller-owned `out`
+    /// (n×dim), overwriting its contents. Implementations with a batched
+    /// pipeline override this to write features in place; the default
+    /// featurizes into a fresh matrix and copies.
+    fn transform_into(&self, x: &Mat, out: &mut Mat) {
+        assert_eq!(out.rows, x.rows, "transform_into: row count mismatch");
+        assert_eq!(out.cols, self.dim(), "transform_into: feature dim mismatch");
+        let r = self.transform(x);
+        out.data.copy_from_slice(&r.data);
+    }
+
     /// Human-readable name for tables.
     fn name(&self) -> &'static str {
         "featurizer"
@@ -55,13 +73,32 @@ pub(crate) fn poly_block(
     mix.apply(&concat)
 }
 
-/// Helper: run a per-row closure in parallel and collect into a Mat.
-pub(crate) fn rows_to_mat(n: usize, dim: usize, f: impl Fn(usize) -> Vec<f32> + Sync) -> Mat {
-    let mut out = Mat::zeros(n, dim);
-    crate::util::par::par_rows(&mut out.data, n, dim, |i, row| {
-        let v = f(i);
-        debug_assert_eq!(v.len(), dim);
-        row.copy_from_slice(&v);
+/// Batched [`poly_block`]: one concat buffer and one SRHT scratch per
+/// worker thread, each mixed row written straight into `out`. Bit-for-bit
+/// identical to the per-row path.
+pub(crate) fn poly_block_batch(
+    q: &crate::transforms::PolySketch,
+    coef_sqrt: &[f32],
+    mix: &crate::transforms::Srht,
+    u: &Mat,
+    out: &mut Mat,
+) {
+    debug_assert_eq!(mix.d, coef_sqrt.len() * q.m, "poly_block_batch: mix input dim");
+    assert_eq!(out.rows, u.rows, "poly_block_batch: row count mismatch");
+    assert_eq!(out.cols, mix.m, "poly_block_batch: output dim mismatch");
+    crate::util::par::par_row_blocks(&mut out.data, u.rows, mix.m, |row0, block| {
+        let mut concat = vec![0.0f32; coef_sqrt.len() * q.m];
+        let mut scratch = vec![0.0f32; mix.scratch_len()];
+        for (k, orow) in block.chunks_mut(mix.m).enumerate() {
+            let fam = q.sketch_power_family(u.row(row0 + k));
+            for (l, &cl) in coef_sqrt.iter().enumerate() {
+                for (slot, &v) in
+                    concat[l * q.m..(l + 1) * q.m].iter_mut().zip(fam[l].iter())
+                {
+                    *slot = cl * v;
+                }
+            }
+            mix.apply_into(&concat, &mut scratch, orow);
+        }
     });
-    out
 }

@@ -48,6 +48,36 @@ impl NtkPolySketch {
         }
         f
     }
+
+    /// Batched feature map into a caller-owned output: per-thread input,
+    /// concat and SRHT scratch buffers, rows written in place.
+    pub fn transform_batch_into(&self, x: &Mat, out: &mut Mat) {
+        assert_eq!(x.cols, self.d, "NtkPolySketch: input dim mismatch");
+        assert_eq!(out.rows, x.rows, "NtkPolySketch: output rows mismatch");
+        assert_eq!(out.cols, self.pk.m_out, "NtkPolySketch: output dim mismatch");
+        let m_out = self.pk.m_out;
+        let (cl, sl) = self.pk.scratch_lens();
+        crate::util::par::par_row_blocks(&mut out.data, x.rows, m_out, |row0, block| {
+            let mut xin = vec![0.0f32; self.d];
+            let mut concat = vec![0.0f32; cl];
+            let mut srht_scratch = vec![0.0f32; sl];
+            for (k, orow) in block.chunks_mut(m_out).enumerate() {
+                let xr = x.row(row0 + k);
+                let norm = crate::tensor::dot(xr, xr).sqrt();
+                if norm == 0.0 {
+                    orow.fill(0.0);
+                    continue;
+                }
+                for (xi, &v) in xin.iter_mut().zip(xr.iter()) {
+                    *xi = v / norm;
+                }
+                self.pk.features_into(&xin, &mut concat, &mut srht_scratch, orow);
+                for v in orow.iter_mut() {
+                    *v *= norm;
+                }
+            }
+        });
+    }
 }
 
 impl Featurizer for NtkPolySketch {
@@ -56,7 +86,13 @@ impl Featurizer for NtkPolySketch {
     }
 
     fn transform(&self, x: &Mat) -> Mat {
-        super::rows_to_mat(x.rows, self.dim(), |i| self.features(x.row(i)))
+        let mut out = Mat::zeros(x.rows, self.dim());
+        self.transform_batch_into(x, &mut out);
+        out
+    }
+
+    fn transform_into(&self, x: &Mat, out: &mut Mat) {
+        self.transform_batch_into(x, out);
     }
 
     fn name(&self) -> &'static str {

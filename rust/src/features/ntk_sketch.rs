@@ -14,7 +14,7 @@ use super::Featurizer;
 use crate::ntk::arccos::{kappa0_coeffs, kappa1_coeffs};
 use crate::rng::Rng;
 use crate::tensor::Mat;
-use crate::transforms::{GaussianJl, LeafMode, PolySketch, Srht, TensorSrht};
+use crate::transforms::{BatchTransform, GaussianJl, LeafMode, PolySketch, Srht, TensorSrht};
 
 /// Dimensions / truncation degrees of Algorithm 1. The theory sizes
 /// (line 2) are polynomial in L/ε and huge; these expose the knobs so the
@@ -146,6 +146,63 @@ impl NtkSketch {
         }
         out
     }
+
+    /// Batched feature map into a caller-owned output (the
+    /// `Featurizer::transform` hot path): the whole Algorithm-1 recursion
+    /// runs on n×· matrices — batched Q¹/V, batched polynomial blocks
+    /// (per-thread concat + SRHT scratch), batched Q² combiner and final
+    /// JL — with no per-row output collection anywhere. Bit-for-bit equal
+    /// to `features` row by row.
+    pub fn transform_batch_into(&self, x: &Mat, out: &mut Mat) {
+        assert_eq!(x.cols, self.d, "NtkSketch: input dim mismatch");
+        assert_eq!(out.rows, x.rows, "NtkSketch: output rows mismatch");
+        assert_eq!(out.cols, self.cfg.s_out, "NtkSketch: output dim mismatch");
+        let n = x.rows;
+        let norms = x.row_norms();
+        // normalize by division so rows match `features` exactly
+        // (zero rows pass through and are zeroed by the final rescale)
+        let mut xin = x.clone();
+        for (i, &nm) in norms.iter().enumerate() {
+            if nm > 0.0 {
+                for v in xin.row_mut(i) {
+                    *v /= nm;
+                }
+            }
+        }
+        // φ⁰ = Q¹ x̂ ∈ ℝ^r ; ψ⁰ = V φ⁰ ∈ ℝ^s
+        let mut phi = self.q1.apply_batch_alloc(&xin);
+        let mut psi = self.v.apply_batch_alloc(&phi);
+        let mut phi_new = Mat::zeros(n, self.cfg.r);
+        let mut phi_dot = Mat::zeros(n, self.cfg.s);
+        let mut q2out = Mat::zeros(n, self.cfg.s);
+        let (s_dim, r_dim) = (self.cfg.s, self.cfg.r);
+        for layer in &self.layers {
+            // Eq. (7): φ^ℓ ; Eq. (8): φ̇^ℓ
+            super::poly_block_batch(&layer.q_phi, &layer.c_sqrt, &layer.t, &phi, &mut phi_new);
+            super::poly_block_batch(&layer.q_dot, &layer.b_sqrt, &layer.w, &phi, &mut phi_dot);
+            // Eq. (9): ψ^ℓ = R (Q²(ψ ⊗ φ̇) ⊕ φ)
+            layer.q2.apply_batch(&psi, &phi_dot, &mut q2out);
+            let (q2ref, pnref, rmix) = (&q2out, &phi_new, &layer.r_mix);
+            crate::util::par::par_row_blocks(&mut psi.data, n, s_dim, |row0, block| {
+                let mut cat = vec![0.0f32; s_dim + r_dim];
+                let mut scratch = vec![0.0f32; rmix.scratch_len()];
+                for (k, orow) in block.chunks_mut(s_dim).enumerate() {
+                    let i = row0 + k;
+                    cat[..s_dim].copy_from_slice(q2ref.row(i));
+                    cat[s_dim..].copy_from_slice(pnref.row(i));
+                    rmix.apply_into(&cat, &mut scratch, orow);
+                }
+            });
+            std::mem::swap(&mut phi, &mut phi_new);
+        }
+        // Eq. (10): Ψ = ‖x‖ G ψ^L
+        self.g.apply_batch(&psi, out);
+        for (i, &nm) in norms.iter().enumerate() {
+            for v in out.row_mut(i) {
+                *v *= nm;
+            }
+        }
+    }
 }
 
 impl Featurizer for NtkSketch {
@@ -154,7 +211,13 @@ impl Featurizer for NtkSketch {
     }
 
     fn transform(&self, x: &Mat) -> Mat {
-        super::rows_to_mat(x.rows, self.dim(), |i| self.features(x.row(i)))
+        let mut out = Mat::zeros(x.rows, self.dim());
+        self.transform_batch_into(x, &mut out);
+        out
+    }
+
+    fn transform_into(&self, x: &Mat, out: &mut Mat) {
+        self.transform_batch_into(x, out);
     }
 
     fn name(&self) -> &'static str {

@@ -87,16 +87,25 @@ impl Featurizer for Rff {
     }
 
     fn transform(&self, x: &Mat) -> Mat {
-        assert_eq!(x.cols, self.d);
-        let mut out = x.matmul_nt(&self.w);
-        let scale = (2.0 / self.m as f32).sqrt();
-        for i in 0..out.rows {
-            let row = out.row_mut(i);
-            for (j, v) in row.iter_mut().enumerate() {
-                *v = scale * (*v + self.b[j]).cos();
-            }
-        }
+        // delegate so both entry points share one accumulation order
+        // (bitwise-identical features from the allocating and the
+        // caller-owned-output paths)
+        let mut out = Mat::zeros(x.rows, self.m);
+        self.transform_into(x, &mut out);
         out
+    }
+
+    fn transform_into(&self, x: &Mat, out: &mut Mat) {
+        assert_eq!(x.cols, self.d);
+        assert_eq!(out.rows, x.rows, "Rff: output rows mismatch");
+        assert_eq!(out.cols, self.m, "Rff: output dim mismatch");
+        let scale = (2.0 / self.m as f32).sqrt();
+        crate::util::par::par_rows(&mut out.data, x.rows, self.m, |i, orow| {
+            let xr = x.row(i);
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o = scale * (crate::tensor::dot(self.w.row(j), xr) + self.b[j]).cos();
+            }
+        });
     }
 
     fn name(&self) -> &'static str {

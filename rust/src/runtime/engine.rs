@@ -5,118 +5,185 @@
 //! `HloModuleProto::from_text_file` → `client.compile` → `execute_b`.
 //! Weights are uploaded once as device buffers (`buffer_from_host_buffer`)
 //! so each request only copies its batch.
+//!
+//! The real engine needs the vendored `xla` bindings crate and is gated
+//! behind the `pjrt` cargo feature. The default build ships a stub with
+//! the same API whose `load` fails with a clear message, so the CLI, the
+//! serving examples and the integration tests compile — and skip
+//! gracefully — without the Python AOT step or the XLA runtime.
 
-use super::artifact::Artifact;
-use crate::tensor::Mat;
-use anyhow::{anyhow, Context, Result};
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod imp {
+    use crate::runtime::artifact::Artifact;
+    use crate::tensor::Mat;
+    use std::path::Path;
 
-/// A compiled featurizer artifact bound to a PJRT client.
-pub struct Engine {
-    pub artifact: Artifact,
-    client: xla::PjRtClient,
-    exe: xla::PjRtLoadedExecutable,
-    /// device-resident parameter buffers, in manifest order.
-    weight_bufs: Vec<xla::PjRtBuffer>,
+    /// A compiled featurizer artifact bound to a PJRT client.
+    pub struct Engine {
+        pub artifact: Artifact,
+        client: xla::PjRtClient,
+        exe: xla::PjRtLoadedExecutable,
+        /// device-resident parameter buffers, in manifest order.
+        weight_bufs: Vec<xla::PjRtBuffer>,
+    }
+
+    impl Engine {
+        /// Load + compile `<dir>/<name>.*`.
+        pub fn load(dir: &Path, name: &str) -> Result<Engine, String> {
+            let artifact = Artifact::load(dir, name)?;
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e:?}"))?;
+            let proto = xla::HloModuleProto::from_text_file(
+                artifact.hlo_path.to_str().ok_or("non-utf8 artifact path")?,
+            )
+            .map_err(|e| format!("parse hlo: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| format!("compile: {e:?}"))?;
+            let weights = artifact.load_weights()?;
+            let mut weight_bufs = Vec::with_capacity(weights.len());
+            for (spec, w) in artifact.params.iter().zip(weights.iter()) {
+                let buf = client
+                    .buffer_from_host_buffer(w, &spec.shape, None)
+                    .map_err(|e| format!("upload {}: {e:?}", spec.name))?;
+                weight_bufs.push(buf);
+            }
+            Ok(Engine { artifact, client, exe, weight_bufs })
+        }
+
+        /// Batch size the executable was lowered for.
+        pub fn batch(&self) -> usize {
+            self.artifact.batch
+        }
+
+        pub fn input_dim(&self) -> usize {
+            self.artifact.d
+        }
+
+        pub fn feature_dim(&self) -> usize {
+            self.artifact.feature_dim
+        }
+
+        /// Execute one fixed-size batch: x must be batch×d; returns batch×m.
+        pub fn run_batch(&self, x: &Mat) -> Result<Mat, String> {
+            if x.rows != self.artifact.batch || x.cols != self.artifact.d {
+                return Err(format!(
+                    "run_batch: expected {}x{}, got {}x{}",
+                    self.artifact.batch, self.artifact.d, x.rows, x.cols
+                ));
+            }
+            let xbuf = self
+                .client
+                .buffer_from_host_buffer(&x.data, &[x.rows, x.cols], None)
+                .map_err(|e| format!("upload batch: {e:?}"))?;
+            let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weight_bufs.len());
+            args.push(&xbuf);
+            for w in &self.weight_bufs {
+                args.push(w);
+            }
+            let result = self.exe.execute_b(&args).map_err(|e| format!("execute: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| format!("fetch result: {e:?}"))?;
+            // aot.py lowers with return_tuple=True → 1-tuple
+            let out = result.to_tuple1().map_err(|e| format!("untuple: {e:?}"))?;
+            let values = out.to_vec::<f32>().map_err(|e| format!("read result: {e:?}"))?;
+            if values.len() != self.artifact.batch * self.artifact.feature_dim {
+                return Err(format!("unexpected output size {}", values.len()));
+            }
+            Ok(Mat::from_vec(self.artifact.batch, self.artifact.feature_dim, values))
+        }
+
+        /// Featurize arbitrarily many rows by padding the final partial batch.
+        pub fn run_all(&self, x: &Mat) -> Result<Mat, String> {
+            if x.cols != self.artifact.d {
+                return Err("run_all: dim mismatch".into());
+            }
+            let b = self.artifact.batch;
+            let mut out = Mat::zeros(x.rows, self.artifact.feature_dim);
+            let mut lo = 0;
+            while lo < x.rows {
+                let hi = (lo + b).min(x.rows);
+                let mut batch = Mat::zeros(b, x.cols);
+                for (k, i) in (lo..hi).enumerate() {
+                    batch.row_mut(k).copy_from_slice(x.row(i));
+                }
+                let feats = self.run_batch(&batch)?;
+                for (k, i) in (lo..hi).enumerate() {
+                    out.row_mut(i).copy_from_slice(feats.row(k));
+                }
+                lo = hi;
+            }
+            Ok(out)
+        }
+
+        /// Verify the bundled golden pair end-to-end through PJRT.
+        pub fn verify_golden(&self, rtol: f32, atol: f32) -> Result<f32, String> {
+            let (gin, gout) = self.artifact.load_golden()?;
+            let x = Mat::from_vec(self.artifact.batch, self.artifact.d, gin);
+            let got = self.run_batch(&x)?;
+            let mut max_rel = 0.0f32;
+            for (a, b) in got.data.iter().zip(gout.iter()) {
+                let tol = atol + rtol * b.abs().max(a.abs());
+                let err = (a - b).abs();
+                if err > tol {
+                    return Err(format!("golden mismatch: {a} vs {b} (tol {tol})"));
+                }
+                max_rel = max_rel.max(err / b.abs().max(1e-6));
+            }
+            Ok(max_rel)
+        }
+    }
 }
 
-impl Engine {
-    /// Load + compile `<dir>/<name>.*`.
-    pub fn load(dir: &Path, name: &str) -> Result<Engine> {
-        let artifact = Artifact::load(dir, name).map_err(|e| anyhow!(e))?;
-        let client = xla::PjRtClient::cpu()?;
-        let proto = xla::HloModuleProto::from_text_file(
-            artifact.hlo_path.to_str().context("non-utf8 path")?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp)?;
-        let weights = artifact.load_weights().map_err(|e| anyhow!(e))?;
-        let mut weight_bufs = Vec::with_capacity(weights.len());
-        for (spec, w) in artifact.params.iter().zip(weights.iter()) {
-            let dims: Vec<usize> = spec.shape.clone();
-            let buf = client.buffer_from_host_buffer(w, &dims, None)?;
-            weight_bufs.push(buf);
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use crate::runtime::artifact::Artifact;
+    use crate::tensor::Mat;
+    use std::path::Path;
+
+    const DISABLED: &str =
+        "this build has no PJRT runtime (compiled without the `pjrt` feature)";
+
+    /// Stub engine for builds without the `pjrt` feature: `load` always
+    /// fails, every artifact accessor still type-checks.
+    pub struct Engine {
+        pub artifact: Artifact,
+    }
+
+    impl Engine {
+        /// Always fails. Missing artifacts are reported first (same triage
+        /// order as the real engine), then the feature gap.
+        pub fn load(dir: &Path, name: &str) -> Result<Engine, String> {
+            let _ = Artifact::load(dir, name)?;
+            Err(format!(
+                "artifact '{name}' found, but {DISABLED}; rebuild with \
+                 `--features pjrt` and the vendored xla crate (DESIGN.md §6)"
+            ))
         }
-        Ok(Engine { artifact, client, exe, weight_bufs })
-    }
 
-    /// Batch size the executable was lowered for.
-    pub fn batch(&self) -> usize {
-        self.artifact.batch
-    }
-
-    pub fn input_dim(&self) -> usize {
-        self.artifact.d
-    }
-
-    pub fn feature_dim(&self) -> usize {
-        self.artifact.feature_dim
-    }
-
-    /// Execute one fixed-size batch: x must be batch×d; returns batch×m.
-    pub fn run_batch(&self, x: &Mat) -> Result<Mat> {
-        anyhow::ensure!(
-            x.rows == self.artifact.batch && x.cols == self.artifact.d,
-            "run_batch: expected {}x{}, got {}x{}",
-            self.artifact.batch,
-            self.artifact.d,
-            x.rows,
-            x.cols
-        );
-        let xbuf =
-            self.client.buffer_from_host_buffer(&x.data, &[x.rows, x.cols], None)?;
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weight_bufs.len());
-        args.push(&xbuf);
-        for w in &self.weight_bufs {
-            args.push(w);
+        pub fn batch(&self) -> usize {
+            self.artifact.batch
         }
-        let result = self.exe.execute_b(&args)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True → 1-tuple
-        let out = result.to_tuple1()?;
-        let values = out.to_vec::<f32>()?;
-        anyhow::ensure!(
-            values.len() == self.artifact.batch * self.artifact.feature_dim,
-            "unexpected output size {}",
-            values.len()
-        );
-        Ok(Mat::from_vec(self.artifact.batch, self.artifact.feature_dim, values))
-    }
 
-    /// Featurize arbitrarily many rows by padding the final partial batch.
-    pub fn run_all(&self, x: &Mat) -> Result<Mat> {
-        anyhow::ensure!(x.cols == self.artifact.d, "dim mismatch");
-        let b = self.artifact.batch;
-        let mut out = Mat::zeros(x.rows, self.artifact.feature_dim);
-        let mut lo = 0;
-        while lo < x.rows {
-            let hi = (lo + b).min(x.rows);
-            let mut batch = Mat::zeros(b, x.cols);
-            for (k, i) in (lo..hi).enumerate() {
-                batch.row_mut(k).copy_from_slice(x.row(i));
-            }
-            let feats = self.run_batch(&batch)?;
-            for (k, i) in (lo..hi).enumerate() {
-                out.row_mut(i).copy_from_slice(feats.row(k));
-            }
-            lo = hi;
+        pub fn input_dim(&self) -> usize {
+            self.artifact.d
         }
-        Ok(out)
-    }
 
-    /// Verify the bundled golden pair end-to-end through PJRT.
-    pub fn verify_golden(&self, rtol: f32, atol: f32) -> Result<f32> {
-        let (gin, gout) = self.artifact.load_golden().map_err(|e| anyhow!(e))?;
-        let x = Mat::from_vec(self.artifact.batch, self.artifact.d, gin);
-        let got = self.run_batch(&x)?;
-        let mut max_rel = 0.0f32;
-        for (a, b) in got.data.iter().zip(gout.iter()) {
-            let tol = atol + rtol * b.abs().max(a.abs());
-            let err = (a - b).abs();
-            if err > tol {
-                anyhow::bail!("golden mismatch: {a} vs {b} (tol {tol})");
-            }
-            max_rel = max_rel.max(err / b.abs().max(1e-6));
+        pub fn feature_dim(&self) -> usize {
+            self.artifact.feature_dim
         }
-        Ok(max_rel)
+
+        pub fn run_batch(&self, _x: &Mat) -> Result<Mat, String> {
+            Err(DISABLED.into())
+        }
+
+        pub fn run_all(&self, _x: &Mat) -> Result<Mat, String> {
+            Err(DISABLED.into())
+        }
+
+        pub fn verify_golden(&self, _rtol: f32, _atol: f32) -> Result<f32, String> {
+            Err(DISABLED.into())
+        }
     }
 }
+
+pub use imp::Engine;

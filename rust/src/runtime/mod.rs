@@ -8,6 +8,13 @@ pub mod engine;
 pub use artifact::Artifact;
 pub use engine::Engine;
 
+/// Whether this build carries the real PJRT execution engine (`pjrt`
+/// cargo feature). When false, `Engine::load` fails gracefully and the
+/// golden/serve paths and the PJRT integration tests skip.
+pub fn pjrt_enabled() -> bool {
+    cfg!(feature = "pjrt")
+}
+
 /// Default artifact directory (repo-root/artifacts), overridable via
 /// the NTK_ARTIFACTS env var.
 pub fn artifacts_dir() -> std::path::PathBuf {

@@ -4,7 +4,10 @@
 //! the PolySketch tree that give the near-input-sparsity runtime of
 //! Theorem 1.
 
+use super::BatchTransform;
 use crate::rng::Rng;
+use crate::tensor::Mat;
+use crate::util::par;
 
 /// OSNAP transform d → m with sparsity s per column.
 #[derive(Clone, Debug)]
@@ -33,10 +36,12 @@ impl CountSketch {
         CountSketch { d, m, s, buckets, weights }
     }
 
-    /// Apply to a dense vector.
-    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+    /// Apply into a caller-owned output row (zeroed then scatter-added) —
+    /// the allocation-free core shared by `apply` and `apply_batch`.
+    pub fn apply_into(&self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.d);
-        let mut out = vec![0.0f32; self.m];
+        assert_eq!(out.len(), self.m, "CountSketch: output length mismatch");
+        out.fill(0.0);
         for (j, &v) in x.iter().enumerate() {
             if v == 0.0 {
                 continue;
@@ -46,6 +51,12 @@ impl CountSketch {
                 out[self.buckets[base + k] as usize] += self.weights[base + k] * v;
             }
         }
+    }
+
+    /// Apply to a dense vector.
+    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.m];
+        self.apply_into(x, &mut out);
         out
     }
 
@@ -60,6 +71,24 @@ impl CountSketch {
             }
         }
         out
+    }
+}
+
+impl BatchTransform for CountSketch {
+    fn input_dim(&self) -> usize {
+        self.d
+    }
+
+    fn output_dim(&self) -> usize {
+        self.m
+    }
+
+    fn apply_batch(&self, x: &Mat, out: &mut Mat) {
+        super::check_batch_shapes("CountSketch", x, out, self.d, self.m);
+        // scatter-adds stay row-local, so no scratch is needed
+        par::par_rows(&mut out.data, x.rows, self.m, |i, orow| {
+            self.apply_into(x.row(i), orow);
+        });
     }
 }
 

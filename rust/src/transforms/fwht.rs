@@ -35,6 +35,21 @@ pub fn fwht_norm(x: &mut [f32]) {
     }
 }
 
+/// In-place orthonormal FWHT of every row of a flat row-major buffer
+/// (`n_rows` rows of power-of-two length `row_len`), parallel over
+/// contiguous row blocks. The batched counterpart of [`fwht_norm`].
+pub fn fwht_norm_rows(data: &mut [f32], n_rows: usize, row_len: usize) {
+    assert!(
+        row_len.is_power_of_two(),
+        "fwht_norm_rows: row length {row_len} not a power of two"
+    );
+    crate::util::par::par_row_blocks(data, n_rows, row_len, |_row0, block| {
+        for row in block.chunks_mut(row_len) {
+            fwht_norm(row);
+        }
+    });
+}
+
 /// Smallest power of two >= n (>= 1).
 pub fn next_pow2(n: usize) -> usize {
     n.max(1).next_power_of_two()
@@ -116,6 +131,20 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn batched_rows_match_serial() {
+        let mut rng = Rng::new(34);
+        let (n, len) = (37usize, 64usize);
+        let data = rng.gauss_vec(n * len);
+        let mut batched = data.clone();
+        fwht_norm_rows(&mut batched, n, len);
+        for i in 0..n {
+            let mut row = data[i * len..(i + 1) * len].to_vec();
+            fwht_norm(&mut row);
+            assert_eq!(&batched[i * len..(i + 1) * len], &row[..], "row {i}");
+        }
     }
 
     #[test]

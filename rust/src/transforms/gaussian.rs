@@ -1,8 +1,10 @@
 //! Dense Gaussian Johnson–Lindenstrauss transform — the final compression
 //! G ~ N(0, 1/s*) in Algorithm 1 line 10 and CNTKSketch step 6.
 
+use super::BatchTransform;
 use crate::rng::Rng;
 use crate::tensor::Mat;
+use crate::util::par;
 
 /// G : ℝ^d → ℝ^m with i.i.d. N(0, 1/m) entries.
 #[derive(Clone, Debug)]
@@ -21,14 +23,41 @@ impl GaussianJl {
         GaussianJl { d, m, g }
     }
 
-    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+    /// Apply into a caller-owned output row.
+    pub fn apply_into(&self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.d);
-        (0..self.m).map(|i| crate::tensor::dot(self.g.row(i), x)).collect()
+        assert_eq!(out.len(), self.m, "GaussianJl: output length mismatch");
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = crate::tensor::dot(self.g.row(i), x);
+        }
     }
 
-    /// Row-wise application: (n×d) → (n×m).
+    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.m];
+        self.apply_into(x, &mut out);
+        out
+    }
+
+    /// Row-wise application: (n×d) → (n×m), batched.
     pub fn apply_mat(&self, x: &Mat) -> Mat {
-        x.matmul_nt(&self.g)
+        self.apply_batch_alloc(x)
+    }
+}
+
+impl BatchTransform for GaussianJl {
+    fn input_dim(&self) -> usize {
+        self.d
+    }
+
+    fn output_dim(&self) -> usize {
+        self.m
+    }
+
+    fn apply_batch(&self, x: &Mat, out: &mut Mat) {
+        super::check_batch_shapes("GaussianJl", x, out, self.d, self.m);
+        par::par_rows(&mut out.data, x.rows, self.m, |i, orow| {
+            self.apply_into(x.row(i), orow);
+        });
     }
 }
 

@@ -2,6 +2,13 @@
 //! CountSketch/OSNAP, degree-2 TensorSRHT, the PolySketch binary tree for
 //! high-degree tensor products, Gaussian JL, and the polynomial
 //! dot-product-kernel sketch built from them.
+//!
+//! Every row-wise sketch exposes two call shapes:
+//! - `apply(&[f32]) -> Vec<f32>` — one vector, allocating (tests, tails);
+//! - [`BatchTransform::apply_batch`] — whole batch into a caller-owned
+//!   output matrix, parallel over contiguous row blocks with one scratch
+//!   allocation per worker thread. The batched path is bit-for-bit
+//!   identical to the per-row path (enforced by `tests/batch_parity.rs`).
 
 pub mod countsketch;
 pub mod fwht;
@@ -12,9 +19,48 @@ pub mod srht;
 pub mod tensor_srht;
 
 pub use countsketch::CountSketch;
-pub use fwht::{fwht, fwht_norm};
+pub use fwht::{fwht, fwht_norm, fwht_norm_rows};
 pub use gaussian::GaussianJl;
 pub use poly_kernel::PolyKernelSketch;
 pub use polysketch::{LeafMode, PolySketch};
 pub use srht::Srht;
 pub use tensor_srht::TensorSrht;
+
+use crate::tensor::Mat;
+
+/// A sketch applied independently to each row of a batch.
+///
+/// The contract (see DESIGN.md §4):
+/// - `apply_batch(x, out)` overwrites every entry of `out` (callers may
+///   hand in a dirty reused buffer);
+/// - shapes are `x: n×input_dim`, `out: n×output_dim`, enforced by
+///   assertion;
+/// - implementations process contiguous row blocks on scoped threads
+///   (`util::par::par_row_blocks`) and allocate scratch at most once per
+///   worker, never per row;
+/// - row `i` of the output equals `apply(x.row(i))` bit-for-bit: the
+///   batched path reorders no floating-point operation.
+pub trait BatchTransform: Send + Sync {
+    /// Input (row) dimension d.
+    fn input_dim(&self) -> usize;
+
+    /// Output (row) dimension m.
+    fn output_dim(&self) -> usize;
+
+    /// Sketch each row of `x` (n×d) into the matching row of `out` (n×m).
+    fn apply_batch(&self, x: &Mat, out: &mut Mat);
+
+    /// Allocating convenience wrapper around [`BatchTransform::apply_batch`].
+    fn apply_batch_alloc(&self, x: &Mat) -> Mat {
+        let mut out = Mat::zeros(x.rows, self.output_dim());
+        self.apply_batch(x, &mut out);
+        out
+    }
+}
+
+/// Shared shape check for `apply_batch` implementations.
+pub(crate) fn check_batch_shapes(name: &str, x: &Mat, out: &Mat, d: usize, m: usize) {
+    assert_eq!(x.cols, d, "{name}::apply_batch: input dim mismatch");
+    assert_eq!(out.cols, m, "{name}::apply_batch: output dim mismatch");
+    assert_eq!(x.rows, out.rows, "{name}::apply_batch: row count mismatch");
+}

@@ -11,6 +11,7 @@ use super::polysketch::{LeafMode, PolySketch};
 use super::srht::Srht;
 use crate::rng::Rng;
 use crate::tensor::Mat;
+use crate::util::par;
 
 /// An instantiated polynomial-kernel sketch.
 #[derive(Clone, Debug)]
@@ -45,28 +46,65 @@ impl PolyKernelSketch {
         PolyKernelSketch { coeffs: coeffs.to_vec(), q, s, m_inner, m_out }
     }
 
-    /// Feature map for one input vector.
-    pub fn features(&self, x: &[f32]) -> Vec<f32> {
+    /// Scratch lengths for `features_into`: (concat buffer, SRHT buffer).
+    pub fn scratch_lens(&self) -> (usize, usize) {
+        (self.coeffs.len() * self.m_inner, self.s.scratch_len())
+    }
+
+    /// Feature map into a caller-owned output row with caller scratch —
+    /// the allocation-free core shared by the per-row and batched paths.
+    pub fn features_into(
+        &self,
+        x: &[f32],
+        concat: &mut [f32],
+        srht_scratch: &mut [f32],
+        out: &mut [f32],
+    ) {
+        assert_eq!(concat.len(), self.coeffs.len() * self.m_inner);
         let fam = self.q.sketch_power_family(x);
-        let mut concat = Vec::with_capacity(self.coeffs.len() * self.m_inner);
         for (l, c) in self.coeffs.iter().enumerate() {
             let sq = (*c as f32).sqrt();
             // family entry l = Q(x^{⊗l} ⊗ e1^{⊗(D−l)})
-            for &v in &fam[l] {
-                concat.push(sq * v);
+            for (slot, &v) in concat[l * self.m_inner..(l + 1) * self.m_inner]
+                .iter_mut()
+                .zip(fam[l].iter())
+            {
+                *slot = sq * v;
             }
         }
-        self.s.apply(&concat)
+        self.s.apply_into(concat, srht_scratch, out);
+    }
+
+    /// Feature map for one input vector.
+    pub fn features(&self, x: &[f32]) -> Vec<f32> {
+        let (cl, sl) = self.scratch_lens();
+        let mut concat = vec![0.0f32; cl];
+        let mut srht_scratch = vec![0.0f32; sl];
+        let mut out = vec![0.0f32; self.m_out];
+        self.features_into(x, &mut concat, &mut srht_scratch, &mut out);
+        out
+    }
+
+    /// Batched feature map into a caller-owned output: per-thread concat
+    /// and SRHT scratch, zero allocations per row beyond the PolySketch
+    /// tree internals.
+    pub fn features_batch(&self, x: &Mat, out: &mut Mat) {
+        assert_eq!(out.rows, x.rows, "PolyKernelSketch: row count mismatch");
+        assert_eq!(out.cols, self.m_out, "PolyKernelSketch: output dim mismatch");
+        let (cl, sl) = self.scratch_lens();
+        par::par_row_blocks(&mut out.data, x.rows, self.m_out, |row0, block| {
+            let mut concat = vec![0.0f32; cl];
+            let mut srht_scratch = vec![0.0f32; sl];
+            for (k, orow) in block.chunks_mut(self.m_out).enumerate() {
+                self.features_into(x.row(row0 + k), &mut concat, &mut srht_scratch, orow);
+            }
+        });
     }
 
     /// Row-wise feature map.
     pub fn features_mat(&self, x: &Mat) -> Mat {
         let mut out = Mat::zeros(x.rows, self.m_out);
-        let rows: Vec<Vec<f32>> =
-            crate::util::par::par_map(x.rows, |i| self.features(x.row(i)));
-        for (i, r) in rows.into_iter().enumerate() {
-            out.row_mut(i).copy_from_slice(&r);
-        }
+        self.features_batch(x, &mut out);
         out
     }
 

@@ -17,7 +17,10 @@
 use super::countsketch::CountSketch;
 use super::srht::Srht;
 use super::tensor_srht::TensorSrht;
+use super::BatchTransform;
 use crate::rng::Rng;
+use crate::tensor::Mat;
+use crate::util::par;
 
 /// Leaf sketch mode (Lemma 1: OSNAP leaves give nnz-time for sparse
 /// inputs; dropping them — i.e. SRHT leaves — is faster for dense inputs).
@@ -127,6 +130,15 @@ impl PolySketch {
         family.into_iter().next_back().unwrap()
     }
 
+    /// Q^p(x^{⊗p}) into a caller-owned output row. (The tree evaluation
+    /// still allocates per internal node; the batched entry point removes
+    /// the per-row output collection and copy.)
+    pub fn sketch_power_into(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(out.len(), self.m, "PolySketch: output length mismatch");
+        let family = self.sketch_power_family(x);
+        out.copy_from_slice(family.last().unwrap());
+    }
+
     /// Q^p(x^{⊗l} ⊗ e1^{⊗(p−l)}) for l = 0..=p (x occupies the first l
     /// leaves). Shared randomness across the family — exactly what
     /// Algorithm 1 lines 7–8 consume.
@@ -170,6 +182,25 @@ impl PolySketch {
                     .collect()
             }
         }
+    }
+}
+
+/// Batched power sketch x ↦ Q^p(x^{⊗p}): the d → m shape the regression
+/// featurizers consume.
+impl BatchTransform for PolySketch {
+    fn input_dim(&self) -> usize {
+        self.d
+    }
+
+    fn output_dim(&self) -> usize {
+        self.m
+    }
+
+    fn apply_batch(&self, x: &Mat, out: &mut Mat) {
+        super::check_batch_shapes("PolySketch", x, out, self.d, self.m);
+        par::par_rows(&mut out.data, x.rows, self.m, |i, orow| {
+            self.sketch_power_into(x.row(i), orow);
+        });
     }
 }
 

@@ -6,8 +6,10 @@
 //! (1±ε) isometry with m = O(ε⁻² log²(1/εδ)).
 
 use super::fwht::{fwht_norm, next_pow2};
+use super::BatchTransform;
 use crate::rng::Rng;
 use crate::tensor::Mat;
+use crate::util::par;
 
 /// An instantiated SRHT sketch d → m.
 #[derive(Clone, Debug)]
@@ -32,26 +34,58 @@ impl Srht {
         Srht { d, m, padded, signs, idx, scale }
     }
 
-    /// Apply to one vector (length d).
-    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
-        assert_eq!(x.len(), self.d, "Srht::apply: dim mismatch");
-        let mut buf = vec![0.0f32; self.padded];
-        for (i, &v) in x.iter().enumerate() {
-            buf[i] = v * self.signs[i];
-        }
-        fwht_norm(&mut buf);
-        self.idx.iter().map(|&i| self.scale * buf[i as usize]).collect()
+    /// Scratch length `apply_into` needs (the padded FWHT dimension).
+    pub fn scratch_len(&self) -> usize {
+        self.padded
     }
 
-    /// Apply row-wise to a matrix (n×d → n×m).
-    pub fn apply_mat(&self, x: &Mat) -> Mat {
-        assert_eq!(x.cols, self.d);
-        let mut out = Mat::zeros(x.rows, self.m);
-        let rows: Vec<Vec<f32>> = (0..x.rows).map(|i| self.apply(x.row(i))).collect();
-        for (i, r) in rows.into_iter().enumerate() {
-            out.row_mut(i).copy_from_slice(&r);
+    /// Apply into a caller-owned output using caller-owned scratch — the
+    /// allocation-free core both `apply` and `apply_batch` share.
+    pub fn apply_into(&self, x: &[f32], scratch: &mut [f32], out: &mut [f32]) {
+        assert_eq!(x.len(), self.d, "Srht::apply: dim mismatch");
+        assert_eq!(scratch.len(), self.padded, "Srht: scratch length mismatch");
+        assert_eq!(out.len(), self.m, "Srht: output length mismatch");
+        for (i, &v) in x.iter().enumerate() {
+            scratch[i] = v * self.signs[i];
         }
+        scratch[self.d..].fill(0.0);
+        fwht_norm(scratch);
+        for (o, &i) in out.iter_mut().zip(self.idx.iter()) {
+            *o = self.scale * scratch[i as usize];
+        }
+    }
+
+    /// Apply to one vector (length d).
+    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+        let mut scratch = vec![0.0f32; self.padded];
+        let mut out = vec![0.0f32; self.m];
+        self.apply_into(x, &mut scratch, &mut out);
         out
+    }
+
+    /// Apply row-wise to a matrix (n×d → n×m), batched.
+    pub fn apply_mat(&self, x: &Mat) -> Mat {
+        self.apply_batch_alloc(x)
+    }
+}
+
+impl BatchTransform for Srht {
+    fn input_dim(&self) -> usize {
+        self.d
+    }
+
+    fn output_dim(&self) -> usize {
+        self.m
+    }
+
+    fn apply_batch(&self, x: &Mat, out: &mut Mat) {
+        super::check_batch_shapes("Srht", x, out, self.d, self.m);
+        par::par_row_blocks(&mut out.data, x.rows, self.m, |row0, block| {
+            let mut scratch = vec![0.0f32; self.padded];
+            for (k, orow) in block.chunks_mut(self.m).enumerate() {
+                self.apply_into(x.row(row0 + k), &mut scratch, orow);
+            }
+        });
     }
 }
 

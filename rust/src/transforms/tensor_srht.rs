@@ -9,6 +9,8 @@
 
 use super::fwht::{fwht_norm, next_pow2};
 use crate::rng::Rng;
+use crate::tensor::Mat;
+use crate::util::par;
 
 /// A degree-2 TensorSRHT instance: ℝ^{d1} ⊗ ℝ^{d2} → ℝ^m.
 #[derive(Clone, Debug)]
@@ -37,35 +39,69 @@ impl TensorSrht {
         TensorSrht { d1, d2, m, p1, p2, signs1, signs2, idx1, idx2, scale }
     }
 
+    /// Scratch lengths for `apply_into` (padded dims of the two sides).
+    pub fn scratch_lens(&self) -> (usize, usize) {
+        (self.p1, self.p2)
+    }
+
+    /// Side-1 spectrum (H D₁ x) into a caller-owned buffer of len p1.
+    pub fn spectrum1_into(&self, x: &[f32], buf: &mut [f32]) {
+        assert_eq!(x.len(), self.d1, "TensorSrht: d1 mismatch");
+        assert_eq!(buf.len(), self.p1, "TensorSrht: spectrum1 scratch mismatch");
+        for (i, &v) in x.iter().enumerate() {
+            buf[i] = v * self.signs1[i];
+        }
+        buf[self.d1..].fill(0.0);
+        fwht_norm(buf);
+    }
+
+    /// Side-2 spectrum (H D₂ y) into a caller-owned buffer of len p2.
+    pub fn spectrum2_into(&self, y: &[f32], buf: &mut [f32]) {
+        assert_eq!(y.len(), self.d2, "TensorSrht: d2 mismatch");
+        assert_eq!(buf.len(), self.p2, "TensorSrht: spectrum2 scratch mismatch");
+        for (i, &v) in y.iter().enumerate() {
+            buf[i] = v * self.signs2[i];
+        }
+        buf[self.d2..].fill(0.0);
+        fwht_norm(buf);
+    }
+
     /// Transform side-1 input into its randomized spectrum (H D₁ x).
     pub fn spectrum1(&self, x: &[f32]) -> Vec<f32> {
-        assert_eq!(x.len(), self.d1, "TensorSrht: d1 mismatch");
         let mut b = vec![0.0f32; self.p1];
-        for (i, &v) in x.iter().enumerate() {
-            b[i] = v * self.signs1[i];
-        }
-        fwht_norm(&mut b);
+        self.spectrum1_into(x, &mut b);
         b
     }
 
     /// Transform side-2 input into its randomized spectrum (H D₂ y).
     pub fn spectrum2(&self, y: &[f32]) -> Vec<f32> {
-        assert_eq!(y.len(), self.d2, "TensorSrht: d2 mismatch");
         let mut b = vec![0.0f32; self.p2];
-        for (i, &v) in y.iter().enumerate() {
-            b[i] = v * self.signs2[i];
-        }
-        fwht_norm(&mut b);
+        self.spectrum2_into(y, &mut b);
         b
+    }
+
+    /// Combine precomputed spectra into a caller-owned output row.
+    pub fn combine_into(&self, s1: &[f32], s2: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(s1.len(), self.p1);
+        debug_assert_eq!(s2.len(), self.p2);
+        assert_eq!(out.len(), self.m, "TensorSrht: output length mismatch");
+        for (k, o) in out.iter_mut().enumerate() {
+            *o = self.scale * s1[self.idx1[k] as usize] * s2[self.idx2[k] as usize];
+        }
     }
 
     /// Combine precomputed spectra into the m sketch coordinates.
     pub fn combine(&self, s1: &[f32], s2: &[f32]) -> Vec<f32> {
-        debug_assert_eq!(s1.len(), self.p1);
-        debug_assert_eq!(s2.len(), self.p2);
-        (0..self.m)
-            .map(|k| self.scale * s1[self.idx1[k] as usize] * s2[self.idx2[k] as usize])
-            .collect()
+        let mut out = vec![0.0f32; self.m];
+        self.combine_into(s1, s2, &mut out);
+        out
+    }
+
+    /// Sketch x ⊗ y into a caller-owned output row using caller scratch.
+    pub fn apply_into(&self, x: &[f32], y: &[f32], s1: &mut [f32], s2: &mut [f32], out: &mut [f32]) {
+        self.spectrum1_into(x, s1);
+        self.spectrum2_into(y, s2);
+        self.combine_into(s1, s2, out);
     }
 
     /// Sketch x ⊗ y.
@@ -75,14 +111,30 @@ impl TensorSrht {
         self.combine(&s1, &s2)
     }
 
-    /// Row-wise batched sketch: Q²(x_i ⊗ y_i) for each row i.
-    pub fn apply_mat(&self, x: &crate::tensor::Mat, y: &crate::tensor::Mat) -> crate::tensor::Mat {
-        assert_eq!(x.rows, y.rows);
-        let mut out = crate::tensor::Mat::zeros(x.rows, self.m);
-        crate::util::par::par_rows(&mut out.data, x.rows, self.m, |i, row| {
-            let v = self.apply(x.row(i), y.row(i));
-            row.copy_from_slice(&v);
+    /// Row-wise batched sketch Q²(x_i ⊗ y_i) into a caller-owned output:
+    /// one pair of spectrum scratch buffers per worker thread, zero
+    /// allocations per row. (Two-input shape, so this sits outside the
+    /// single-input `BatchTransform` trait.)
+    pub fn apply_batch(&self, x: &Mat, y: &Mat, out: &mut Mat) {
+        assert_eq!(x.rows, y.rows, "TensorSrht::apply_batch: row count mismatch");
+        assert_eq!(x.cols, self.d1, "TensorSrht::apply_batch: d1 mismatch");
+        assert_eq!(y.cols, self.d2, "TensorSrht::apply_batch: d2 mismatch");
+        assert_eq!(out.rows, x.rows, "TensorSrht::apply_batch: output rows mismatch");
+        assert_eq!(out.cols, self.m, "TensorSrht::apply_batch: output cols mismatch");
+        par::par_row_blocks(&mut out.data, x.rows, self.m, |row0, block| {
+            let mut s1 = vec![0.0f32; self.p1];
+            let mut s2 = vec![0.0f32; self.p2];
+            for (k, orow) in block.chunks_mut(self.m).enumerate() {
+                let i = row0 + k;
+                self.apply_into(x.row(i), y.row(i), &mut s1, &mut s2, orow);
+            }
         });
+    }
+
+    /// Row-wise batched sketch: Q²(x_i ⊗ y_i) for each row i.
+    pub fn apply_mat(&self, x: &Mat, y: &Mat) -> Mat {
+        let mut out = Mat::zeros(x.rows, self.m);
+        self.apply_batch(x, y, &mut out);
         out
     }
 }

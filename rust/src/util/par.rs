@@ -43,21 +43,38 @@ where
 }
 
 /// Map `f(i)` over `0..n` in parallel, collecting results in order.
+///
+/// Each worker maps one contiguous chunk into its own Vec and the chunks
+/// are concatenated in order at join time — disjoint writes, no
+/// per-element locking (the old implementation took a `Mutex` per index,
+/// which serialized the hot path it was supposed to parallelize).
 pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
 where
-    T: Send + Default + Clone,
+    T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let mut out = vec![T::default(); n];
-    {
-        let slots: Vec<std::sync::Mutex<&mut T>> =
-            out.iter_mut().map(std::sync::Mutex::new).collect();
-        par_chunks(n, |lo, hi| {
-            for i in lo..hi {
-                **slots[i].lock().unwrap() = f(i);
-            }
-        });
+    let nt = num_threads().min(n.max(1));
+    if nt <= 1 || n < 2 {
+        return (0..n).map(f).collect();
     }
+    let chunk = n.div_ceil(nt);
+    let fr = &f;
+    let mut out = Vec::with_capacity(n);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..nt)
+            .filter_map(|t| {
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(n);
+                if lo >= hi {
+                    return None;
+                }
+                Some(s.spawn(move || (lo..hi).map(fr).collect::<Vec<T>>()))
+            })
+            .collect();
+        for h in handles {
+            out.extend(h.join().expect("par_map worker panicked"));
+        }
+    });
     out
 }
 
@@ -90,6 +107,38 @@ where
                     fr(base + k, row);
                 }
             });
+            row0 += rows_here;
+        }
+    });
+}
+
+/// Parallel iteration over disjoint contiguous *blocks* of rows of a flat
+/// row-major buffer: each worker is handed `(first_row, block)` where
+/// `block` holds whole rows. This is the per-thread-scratch shape used by
+/// the batched transforms ([`crate::transforms::BatchTransform`]): a
+/// worker allocates its scratch once and reuses it across every row in
+/// its block, instead of one allocation per row.
+pub fn par_row_blocks<F>(data: &mut [f32], n_rows: usize, row_len: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert_eq!(data.len(), n_rows * row_len, "par_row_blocks: shape mismatch");
+    let nt = num_threads().min(n_rows.max(1));
+    if nt <= 1 || n_rows < 2 {
+        f(0, data);
+        return;
+    }
+    let chunk = n_rows.div_ceil(nt);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut row0 = 0usize;
+        while row0 < n_rows {
+            let rows_here = chunk.min(n_rows - row0);
+            let (head, tail) = rest.split_at_mut(rows_here * row_len);
+            rest = tail;
+            let fr = &f;
+            let base = row0;
+            s.spawn(move || fr(base, head));
             row0 += rows_here;
         }
     });
@@ -130,6 +179,34 @@ mod tests {
         let v = par_map(100, |i| i * i);
         for (i, &x) in v.iter().enumerate() {
             assert_eq!(x, i * i);
+        }
+    }
+
+    #[test]
+    fn par_map_without_default_bound() {
+        // T needs only Send now — e.g. Vec<usize> of varying lengths.
+        let v = par_map(17, |i| vec![i; i % 3]);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(x.len(), i % 3);
+            assert!(x.iter().all(|&e| e == i));
+        }
+    }
+
+    #[test]
+    fn par_row_blocks_covers_all_rows() {
+        for n in [0usize, 1, 2, 7, 64] {
+            let m = 5;
+            let mut data = vec![-1.0f32; n * m];
+            par_row_blocks(&mut data, n, m, |row0, block| {
+                for (k, row) in block.chunks_mut(m).enumerate() {
+                    for (j, x) in row.iter_mut().enumerate() {
+                        *x = ((row0 + k) * m + j) as f32;
+                    }
+                }
+            });
+            for (k, &x) in data.iter().enumerate() {
+                assert_eq!(x, k as f32, "n={n}");
+            }
         }
     }
 

@@ -11,14 +11,24 @@ use ntk_sketch::rng::Rng;
 use ntk_sketch::runtime::{artifacts_dir, Engine};
 use ntk_sketch::tensor::{dot, Mat};
 
+/// Graceful skip: these tests need both the `pjrt` feature (the real
+/// engine; the default build ships a stub) and the `make artifacts`
+/// bundle from the Python AOT step. CI has neither.
 fn artifacts_present() -> bool {
-    artifacts_dir().join("ntk_rf.manifest.json").exists()
+    if !ntk_sketch::runtime::pjrt_enabled() {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return false;
+    }
+    if !artifacts_dir().join("ntk_rf.manifest.json").exists() {
+        eprintln!("skipping: no artifact bundle; run `make artifacts` first");
+        return false;
+    }
+    true
 }
 
 #[test]
 fn golden_parity_with_jax() {
     if !artifacts_present() {
-        eprintln!("skipping: run `make artifacts` first");
         return;
     }
     let engine = Engine::load(&artifacts_dir(), "ntk_rf").expect("load artifact");
@@ -29,7 +39,6 @@ fn golden_parity_with_jax() {
 #[test]
 fn pjrt_features_approximate_ntk() {
     if !artifacts_present() {
-        eprintln!("skipping: run `make artifacts` first");
         return;
     }
     let engine = Engine::load(&artifacts_dir(), "ntk_rf").expect("load artifact");
@@ -62,7 +71,6 @@ fn pjrt_features_approximate_ntk() {
 #[test]
 fn run_all_pads_partial_batches() {
     if !artifacts_present() {
-        eprintln!("skipping: run `make artifacts` first");
         return;
     }
     let engine = Engine::load(&artifacts_dir(), "ntk_rf").expect("load artifact");
@@ -101,7 +109,6 @@ impl BatchBackend for PjrtBackend {
 #[test]
 fn feature_server_over_pjrt_engine() {
     if !artifacts_present() {
-        eprintln!("skipping: run `make artifacts` first");
         return;
     }
     let dir = artifacts_dir();
