@@ -1,0 +1,362 @@
+//! GEMM engine benchmark: GFLOP/s of the packed register-tiled engine
+//! (tensor::gemm) vs the seed loops it replaced, across the dense shapes
+//! the experiments actually hit — tall-skinny featurize (`x @ Wᵀ`),
+//! square matmul, the f32 Gram, the f64 normal-equation SYRK, and the
+//! streaming-ridge ΨᵀY update.
+//!
+//! Acceptance (ISSUE 3): ≥ 3× GFLOP/s over the seed loops at paper-scale
+//! shapes (`NTK_BENCH_SCALE=full`: 8192×8192×256 featurize, 4096-square).
+//! Emits machine-readable `BENCH_gemm.json` (override the path with
+//! `NTK_BENCH_JSON`) so the perf trajectory is tracked across PRs.
+
+use std::collections::BTreeMap;
+
+use ntk_sketch::bench::{bench, full_scale, smoke, Table};
+use ntk_sketch::linalg::DMat;
+use ntk_sketch::rng::Rng;
+use ntk_sketch::tensor::{dot, Mat};
+use ntk_sketch::util::json::Json;
+use ntk_sketch::util::par;
+
+// ---- seed implementations (pre-ISSUE-3 hot loops), kept verbatim so the
+// speedup column measures the engine against what shipped before.
+
+/// Seed `Mat::matmul`: ikj loop, parallel over output rows.
+fn seed_matmul(a: &Mat, b: &Mat) -> Mat {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut out = Mat::zeros(m, n);
+    let ad = &a.data;
+    let bd = &b.data;
+    par::par_rows(&mut out.data, m, n, |i, orow| {
+        let arow = &ad[i * k..(i + 1) * k];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &bd[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += aik * bv;
+            }
+        }
+    });
+    out
+}
+
+/// Seed `Mat::matmul_nt`: unrolled dot products, parallel over rows.
+fn seed_matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut out = Mat::zeros(m, n);
+    let ad = &a.data;
+    let bd = &b.data;
+    par::par_rows(&mut out.data, m, n, |i, orow| {
+        let arow = &ad[i * k..(i + 1) * k];
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = dot(arow, &bd[j * k..(j + 1) * k]);
+        }
+    });
+    out
+}
+
+/// Seed `Mat::gram`: per-row dot products on the lower triangle plus the
+/// serial strided scalar-store mirror loop.
+fn seed_gram(a: &Mat) -> Mat {
+    let n = a.rows;
+    let k = a.cols;
+    let ad = &a.data;
+    let mut out = Mat::zeros(n, n);
+    par::par_rows(&mut out.data, n, n, |i, orow| {
+        let ri = &ad[i * k..(i + 1) * k];
+        for (j, o) in orow.iter_mut().enumerate().take(i + 1) {
+            *o = dot(ri, &ad[j * k..(j + 1) * k]);
+        }
+    });
+    for i in 0..n {
+        for j in (i + 1)..n {
+            out.data[i * n + j] = out.data[j * n + i];
+        }
+    }
+    out
+}
+
+/// Seed `DMat::gram_of`: branchy per-element rank-1 updates over the
+/// upper triangle (area-balanced threads), then a serial mirror.
+fn seed_gram_of(a: &Mat) -> DMat {
+    let (n, d) = (a.rows, a.cols);
+    let mut out = DMat::zeros(d, d);
+    let nt = par::num_threads().min(d.max(1));
+    let mut bounds = vec![0usize];
+    let per = (d * (d + 1) / 2).div_ceil(nt.max(1));
+    let mut acc = 0usize;
+    for p in 0..d {
+        acc += d - p;
+        if acc >= per && *bounds.last().unwrap() < p + 1 {
+            bounds.push(p + 1);
+            acc = 0;
+        }
+    }
+    if *bounds.last().unwrap() != d {
+        bounds.push(d);
+    }
+    std::thread::scope(|s| {
+        let mut rest: &mut [f64] = &mut out.data;
+        let mut prev = 0usize;
+        for w in bounds.windows(2) {
+            let (lo, hi) = (w[0], w[1]);
+            let (head, tail) = rest.split_at_mut((hi - prev) * d);
+            rest = tail;
+            prev = hi;
+            s.spawn(move || {
+                for i in 0..n {
+                    let r = a.row(i);
+                    for p in lo..hi {
+                        let rp = r[p] as f64;
+                        if rp == 0.0 {
+                            continue;
+                        }
+                        let orow = &mut head[(p - lo) * d..(p - lo + 1) * d];
+                        for (q, o) in orow.iter_mut().enumerate().skip(p) {
+                            *o += rp * r[q] as f64;
+                        }
+                    }
+                }
+            });
+        }
+    });
+    for p in 0..d {
+        for q in 0..p {
+            out.data[p * d + q] = out.data[q * d + p];
+        }
+    }
+    out
+}
+
+/// Seed ΨᵀY accumulation: the branchy per-element triple loop.
+fn seed_xty(features: &Mat, targets: &Mat, xty: &mut DMat) {
+    for i in 0..features.rows {
+        let f = features.row(i);
+        let t = targets.row(i);
+        for p in 0..features.cols {
+            let fp = f[p] as f64;
+            if fp == 0.0 {
+                continue;
+            }
+            for q in 0..targets.cols {
+                *xty.at_mut(p, q) += fp * t[q] as f64;
+            }
+        }
+    }
+}
+
+struct ShapeResult {
+    name: &'static str,
+    m: usize,
+    n: usize,
+    k: usize,
+    gflops_packed: f64,
+    gflops_seed: f64,
+}
+
+fn gflops(flops: f64, secs: f64) -> f64 {
+    flops / secs.max(1e-12) / 1e9
+}
+
+fn main() {
+    let mut rng = Rng::new(91);
+    let budget = if smoke() { 0.05 } else { 0.4 };
+    // (featurize m,k,d) / (square) / (gram n,k) / (normal-eq d,rows) /
+    // (xty dim,rows): smoke is a liveness check, full is paper scale.
+    let (feat, square, gram, normal, xty_dim) = if smoke() {
+        ((192, 160, 96), 96, (128, 64), (96, 256), (192, 256))
+    } else if full_scale() {
+        ((8192, 8192, 256), 4096, (4096, 1024), (2048, 8192), (8192, 8192))
+    } else {
+        ((2048, 2048, 256), 1024, (1024, 512), (1024, 2048), (2048, 2048))
+    };
+    let mut results: Vec<ShapeResult> = Vec::new();
+
+    println!("== packed GEMM engine vs seed loops (GFLOP/s, median) ==");
+    let table = Table::new(&["shape", "m", "n", "k", "seed", "packed", "speedup"]);
+    let mut push = |table: &Table, r: ShapeResult| {
+        table.row(&[
+            r.name.into(),
+            format!("{}", r.m),
+            format!("{}", r.n),
+            format!("{}", r.k),
+            format!("{:.2}", r.gflops_seed),
+            format!("{:.2}", r.gflops_packed),
+            format!("{:.1}x", r.gflops_packed / r.gflops_seed.max(1e-12)),
+        ]);
+        results.push(r);
+    };
+
+    // tall-skinny featurize: x (m×k) @ Wᵀ with W (n×k)
+    {
+        let (m, n, k) = feat;
+        let x = Mat::from_vec(m, k, rng.gauss_vec(m * k));
+        let w = Mat::from_vec(n, k, rng.gauss_vec(n * k));
+        let flops = 2.0 * (m * n * k) as f64;
+        let tp = bench(budget, || {
+            std::hint::black_box(x.matmul_nt(&w));
+        });
+        let ts = bench(budget, || {
+            std::hint::black_box(seed_matmul_nt(&x, &w));
+        });
+        push(
+            &table,
+            ShapeResult {
+                name: "featurize_nt",
+                m,
+                n,
+                k,
+                gflops_packed: gflops(flops, tp.median_s),
+                gflops_seed: gflops(flops, ts.median_s),
+            },
+        );
+    }
+
+    // square matmul (solver-side / kernel-ridge shape)
+    {
+        let n = square;
+        let a = Mat::from_vec(n, n, rng.gauss_vec(n * n));
+        let b = Mat::from_vec(n, n, rng.gauss_vec(n * n));
+        let flops = 2.0 * (n * n * n) as f64;
+        let tp = bench(budget, || {
+            std::hint::black_box(a.matmul(&b));
+        });
+        let ts = bench(budget, || {
+            std::hint::black_box(seed_matmul(&a, &b));
+        });
+        push(
+            &table,
+            ShapeResult {
+                name: "square",
+                m: n,
+                n,
+                k: n,
+                gflops_packed: gflops(flops, tp.median_s),
+                gflops_seed: gflops(flops, ts.median_s),
+            },
+        );
+    }
+
+    // f32 Gram (kernel matrix of a featurized batch)
+    {
+        let (n, k) = gram;
+        let a = Mat::from_vec(n, k, rng.gauss_vec(n * k));
+        let flops = (n * (n + 1) * k) as f64; // lower triangle only
+        let tp = bench(budget, || {
+            std::hint::black_box(a.gram());
+        });
+        let ts = bench(budget, || {
+            std::hint::black_box(seed_gram(&a));
+        });
+        push(
+            &table,
+            ShapeResult {
+                name: "gram_f32",
+                m: n,
+                n,
+                k,
+                gflops_packed: gflops(flops, tp.median_s),
+                gflops_seed: gflops(flops, ts.median_s),
+            },
+        );
+    }
+
+    // f64 normal equations ΨᵀΨ (the m×m solve-side accumulation)
+    {
+        let (d, rows) = normal;
+        let a = Mat::from_vec(rows, d, rng.gauss_vec(rows * d));
+        let flops = (d * (d + 1) * rows) as f64;
+        let tp = bench(budget, || {
+            std::hint::black_box(DMat::gram_of(&a));
+        });
+        let ts = bench(budget, || {
+            std::hint::black_box(seed_gram_of(&a));
+        });
+        push(
+            &table,
+            ShapeResult {
+                name: "normal_eq_f64",
+                m: d,
+                n: d,
+                k: rows,
+                gflops_packed: gflops(flops, tp.median_s),
+                gflops_seed: gflops(flops, ts.median_s),
+            },
+        );
+    }
+
+    // streaming-ridge ΨᵀY update (f32 features, f64 accumulate, 10 outputs)
+    {
+        let (dim, rows) = xty_dim;
+        let outputs = 10;
+        let psi = Mat::from_vec(rows, dim, rng.gauss_vec(rows * dim));
+        let y = Mat::from_vec(rows, outputs, rng.gauss_vec(rows * outputs));
+        let flops = 2.0 * (dim * outputs * rows) as f64;
+        let mut acc = DMat::zeros(dim, outputs);
+        let tp = bench(budget, || {
+            ntk_sketch::tensor::gemm::gemm(
+                dim,
+                outputs,
+                rows,
+                &psi.data,
+                ntk_sketch::tensor::gemm::Op::Trans,
+                &y.data,
+                ntk_sketch::tensor::gemm::Op::NoTrans,
+                &mut acc.data,
+                true,
+            );
+            std::hint::black_box(&acc);
+        });
+        let ts = bench(budget, || {
+            seed_xty(&psi, &y, &mut acc);
+            std::hint::black_box(&acc);
+        });
+        push(
+            &table,
+            ShapeResult {
+                name: "xty_update",
+                m: dim,
+                n: outputs,
+                k: rows,
+                gflops_packed: gflops(flops, tp.median_s),
+                gflops_seed: gflops(flops, ts.median_s),
+            },
+        );
+    }
+
+    // machine-readable trajectory record
+    let path = std::env::var("NTK_BENCH_JSON").unwrap_or_else(|_| "BENCH_gemm.json".to_string());
+    let shapes: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            let mut o = BTreeMap::new();
+            o.insert("name".into(), Json::Str(r.name.into()));
+            o.insert("m".into(), Json::Num(r.m as f64));
+            o.insert("n".into(), Json::Num(r.n as f64));
+            o.insert("k".into(), Json::Num(r.k as f64));
+            o.insert("gflops_packed".into(), Json::Num(r.gflops_packed));
+            o.insert("gflops_seed".into(), Json::Num(r.gflops_seed));
+            o.insert(
+                "speedup".into(),
+                Json::Num(r.gflops_packed / r.gflops_seed.max(1e-12)),
+            );
+            Json::Obj(o)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("gemm".into()));
+    root.insert("smoke".into(), Json::Bool(smoke()));
+    root.insert("full_scale".into(), Json::Bool(full_scale()));
+    root.insert("threads".into(), Json::Num(par::num_threads() as f64));
+    root.insert("shapes".into(), Json::Arr(shapes));
+    match std::fs::write(&path, Json::Obj(root).to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+    println!(
+        "acceptance: packed ≥ 3x seed GFLOP/s at paper-scale shapes \
+         (NTK_BENCH_SCALE=full: 8192x8192x256 featurize, 4096-square)."
+    );
+}

@@ -88,7 +88,7 @@ pub fn full_scale() -> bool {
 
 /// CI smoke mode: `NTK_BENCH_SMOKE=1` caps `bench()` iteration counts and
 /// tells every bench binary to shrink its problem sizes, so the full
-/// 8-binary suite runs to completion in a CI job and can never silently
+/// 9-binary suite runs to completion in a CI job and can never silently
 /// rot. Numbers produced under smoke are liveness checks, not results.
 pub fn smoke() -> bool {
     std::env::var("NTK_BENCH_SMOKE")

@@ -5,6 +5,7 @@
 //! spectral-approximation checks, NNLS for the Remark-1 polynomial fit —
 //! runs in f64 here.
 
+use crate::tensor::gemm::{self, Op};
 use crate::tensor::Mat;
 
 /// Row-major dense f64 matrix.
@@ -75,19 +76,8 @@ impl DMat {
         assert_eq!(self.cols, other.rows);
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = DMat::zeros(m, n);
-        for i in 0..m {
-            for kk in 0..k {
-                let aik = self.data[i * k + kk];
-                if aik == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[kk * n..(kk + 1) * n];
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
-                    *o += aik * b;
-                }
-            }
-        }
+        let (a, b) = (&self.data, &other.data);
+        gemm::gemm(m, n, k, a, Op::NoTrans, b, Op::NoTrans, &mut out.data, false);
         out
     }
 
@@ -113,60 +103,25 @@ impl DMat {
 
     /// Gram of an f32 matrix in f64: Aᵀ A (cols×cols). This is the
     /// numerically-critical accumulation for streaming ridge; it is the
-    /// solver-side hot path (§Perf), so the upper triangle is computed in
-    /// parallel over feature-index chunks balanced by triangle area.
+    /// solver-side hot path (§Perf), so it runs as a packed f32→f64 SYRK:
+    /// lower-triangle register tiles (widened during packing), balanced
+    /// over threads by triangle area, then a parallel blocked mirror.
     pub fn gram_of(a: &Mat) -> DMat {
-        let (n, d) = (a.rows, a.cols);
-        let mut out = DMat::zeros(d, d);
-        // split rows p of the upper triangle into chunks of roughly equal
-        // area Σ (d − p); each thread writes a disjoint slice of `out`.
-        let nt = crate::util::par::num_threads().min(d.max(1));
-        let mut bounds = vec![0usize];
-        let total_area = d * (d + 1) / 2;
-        let per = total_area.div_ceil(nt.max(1));
-        let mut acc = 0usize;
-        for p in 0..d {
-            acc += d - p;
-            if acc >= per && *bounds.last().unwrap() < p + 1 {
-                bounds.push(p + 1);
-                acc = 0;
-            }
-        }
-        if *bounds.last().unwrap() != d {
-            bounds.push(d);
-        }
-        std::thread::scope(|s| {
-            let mut rest: &mut [f64] = &mut out.data;
-            let mut prev = 0usize;
-            for w in bounds.windows(2) {
-                let (lo, hi) = (w[0], w[1]);
-                let (head, tail) = rest.split_at_mut((hi - prev) * d);
-                // head covers output rows lo..hi (offset by lo*d globally)
-                rest = tail;
-                prev = hi;
-                s.spawn(move || {
-                    for i in 0..n {
-                        let r = a.row(i);
-                        for p in lo..hi {
-                            let rp = r[p] as f64;
-                            if rp == 0.0 {
-                                continue;
-                            }
-                            let orow = &mut head[(p - lo) * d..(p - lo + 1) * d];
-                            for (q, o) in orow.iter_mut().enumerate().skip(p) {
-                                *o += rp * r[q] as f64;
-                            }
-                        }
-                    }
-                });
-            }
-        });
-        for p in 0..d {
-            for q in 0..p {
-                out.data[p * d + q] = out.data[q * d + p];
-            }
-        }
+        let mut out = DMat::zeros(a.cols, a.cols);
+        out.add_gram_of(a);
         out
+    }
+
+    /// Accumulate Aᵀ A (f32 widened to f64) onto `self`, keeping the
+    /// result fully symmetric (mirror included). For repeated streaming
+    /// accumulation, prefer what `RidgeRegressor::add_batch` does: call
+    /// `gemm::syrk_lower(.., accumulate: true)` per shard and pay
+    /// `mirror_lower_to_upper` once at solve time instead of per call.
+    pub fn add_gram_of(&mut self, a: &Mat) {
+        let (n, d) = (a.rows, a.cols);
+        assert_eq!((self.rows, self.cols), (d, d), "add_gram_of: shape mismatch");
+        gemm::syrk_lower(d, n, &a.data, Op::Trans, &mut self.data, true);
+        gemm::mirror_lower_to_upper(&mut self.data, d);
     }
 
     pub fn max_abs_diff(&self, other: &DMat) -> f64 {

@@ -7,6 +7,7 @@
 //! matrix on the large UCI sets (Table 2's OOM column).
 
 use crate::linalg::{solve_spd_multi, DMat};
+use crate::tensor::gemm::{self, Op};
 use crate::tensor::Mat;
 
 /// Accumulating ridge solver, multi-output.
@@ -15,7 +16,10 @@ pub struct RidgeRegressor {
     pub dim: usize,
     /// number of outputs k.
     pub outputs: usize,
-    /// ΨᵀΨ in f64.
+    /// ΨᵀΨ in f64. Only the lower triangle is authoritative between
+    /// solves: batches accumulate via the lower-triangle SYRK and the
+    /// mirror is paid once per `solve`, not once per batch (entries above
+    /// the diagonal may hold straddling-tile partials in the meantime).
     gram: DMat,
     /// Ψᵀ y in f64 (m×k).
     xty: DMat,
@@ -38,27 +42,35 @@ impl RidgeRegressor {
     }
 
     /// Accumulate a featurized batch (features n×m, targets n×k).
+    ///
+    /// Both normal-equation pieces go through the packed GEMM engine:
+    /// ΨᵀΨ as an accumulating f32→f64 lower-triangle SYRK directly into
+    /// `gram` (no temporary Gram matrix, no per-batch mirror), ΨᵀY as an
+    /// accumulating f32→f64 GEMM with Ψ consumed in its transposed
+    /// orientation by the panel packer.
     pub fn add_batch(&mut self, features: &Mat, targets: &Mat) {
         assert_eq!(features.cols, self.dim, "ridge: feature dim mismatch");
         assert_eq!(targets.cols, self.outputs, "ridge: target dim mismatch");
         assert_eq!(features.rows, targets.rows);
-        let g = DMat::gram_of(features);
-        for (a, b) in self.gram.data.iter_mut().zip(g.data.iter()) {
-            *a += b;
-        }
-        for i in 0..features.rows {
-            let f = features.row(i);
-            let t = targets.row(i);
-            for p in 0..self.dim {
-                let fp = f[p] as f64;
-                if fp == 0.0 {
-                    continue;
-                }
-                for q in 0..self.outputs {
-                    *self.xty.at_mut(p, q) += fp * t[q] as f64;
-                }
-            }
-        }
+        gemm::syrk_lower(
+            self.dim,
+            features.rows,
+            &features.data,
+            Op::Trans,
+            &mut self.gram.data,
+            true,
+        );
+        gemm::gemm(
+            self.dim,
+            self.outputs,
+            features.rows,
+            &features.data,
+            Op::Trans,
+            &targets.data,
+            Op::NoTrans,
+            &mut self.xty.data,
+            true,
+        );
         self.n_seen += features.rows;
         self.weights = None;
     }
@@ -66,6 +78,9 @@ impl RidgeRegressor {
     /// Solve (ΨᵀΨ + λ n I) W = Ψᵀ Y.
     pub fn solve(&mut self, lambda: f64) -> Result<(), String> {
         let mut a = self.gram.clone();
+        // `gram` accumulates lower-triangle-only; symmetrize the copy once
+        // here rather than after every batch.
+        gemm::mirror_lower_to_upper(&mut a.data, self.dim);
         a.add_diag(lambda * self.n_seen.max(1) as f64);
         let w = solve_spd_multi(&a, &self.xty)?;
         self.weights = Some(w.to_mat());
@@ -127,6 +142,33 @@ mod tests {
         let pb = batch.predict(&x);
         let ps = stream.predict(&x);
         crate::util::prop::assert_close(&pb.data, &ps.data, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn add_batch_matches_scalar_f64_oracle() {
+        // f32-features / f64-accumulate parity: the packed SYRK (ΨᵀΨ) and
+        // the packed ΨᵀY GEMM against per-element f64 loops, accumulated
+        // over two ragged shards.
+        let mut rng = Rng::new(194);
+        let (n1, n2, m, k) = (150, 73, 24, 3);
+        let x = Mat::from_vec(n1 + n2, m, rng.gauss_vec((n1 + n2) * m));
+        let y = Mat::from_vec(n1 + n2, k, rng.gauss_vec((n1 + n2) * k));
+        let mut r = RidgeRegressor::new(m, k);
+        r.add_batch(&x.slice_rows(0, n1), &y.slice_rows(0, n1));
+        r.add_batch(&x.slice_rows(n1, n1 + n2), &y.slice_rows(n1, n1 + n2));
+        for p in 0..m {
+            for q in 0..k {
+                let want: f64 = (0..n1 + n2).map(|i| x.at(i, p) as f64 * y.at(i, q) as f64).sum();
+                let got = r.xty.at(p, q);
+                assert!((got - want).abs() < 1e-9 * want.abs().max(1.0), "xty[{p},{q}]");
+            }
+            // gram is lower-triangle-authoritative between solves
+            for q in 0..=p {
+                let want: f64 = (0..n1 + n2).map(|i| x.at(i, p) as f64 * x.at(i, q) as f64).sum();
+                let got = r.gram.at(p, q);
+                assert!((got - want).abs() < 1e-9 * want.abs().max(1.0), "gram[{p},{q}]");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,724 @@
+//! Packed, register-tiled GEMM engine — the shared dense contraction under
+//! every hot path in the crate (DESIGN.md §7).
+//!
+//! Every featurizer (`x @ Wᵀ`), the streaming ridge normal equations
+//! (ΨᵀΨ, ΨᵀY) and the f64 solver side funnel through the routines here.
+//! The structure is the classic three-level blocking (Goto/BLIS):
+//!
+//! - an MR×NR **microkernel** with an explicit accumulator tile held in a
+//!   local `[[T; NR]; MR]` array, written so LLVM keeps it in registers and
+//!   autovectorizes the NR-wide inner updates — no intrinsics, no unsafe;
+//! - **panel packing**: A is repacked into KC-deep strips of MR rows
+//!   (k-major, `apack[p*MR + r]`), B into KC-deep strips of NR columns
+//!   (`bpack[p*NR + j]`), so the microkernel streams both operands from
+//!   contiguous memory regardless of the caller's layout (`Op::NoTrans` /
+//!   `Op::Trans`) — transposed inputs cost nothing extra;
+//! - **cache blocking** over MC/KC/NC so the packed A block lives in L2 and
+//!   the packed B panel is reused across the whole row slab.
+//!
+//! Parallelism: output rows are split into per-thread slabs on
+//! `util::par` scoped threads; each thread packs its own panels, so there
+//! is no sharing and no synchronization past the scope join. Mixed
+//! precision (f32 features → f64 normal equations) is handled entirely in
+//! the pack step via [`Widen`]: the microkernel always runs in the
+//! accumulator type.
+//!
+//! Numerics contract: within one KC-deep slice the accumulation order is
+//! identical to the naive `for p in 0..k` triple loop; across KC slices
+//! partial sums are associated block-wise, so results match the naive
+//! oracle to the property-test tolerances (bit-identical when k ≤ KC).
+
+use crate::util::par;
+
+/// Microkernel tile height (rows of C per register tile).
+pub const MR: usize = 8;
+/// Microkernel tile width (columns of C per register tile).
+pub const NR: usize = 8;
+/// Depth of a packed panel slice (shared by A strips and B strips).
+pub const KC: usize = 256;
+/// Rows of A packed per cache block (MC×KC block targets L2).
+pub const MC: usize = 128;
+/// Columns of B packed per panel (KC×NC panel amortizes A streaming).
+pub const NC: usize = 2048;
+
+/// Below this many multiply-adds the scoped-thread spawn is not worth it.
+const PAR_FLOP_THRESHOLD: usize = 1 << 17;
+
+/// Accumulator element: f32 or f64.
+pub trait Scalar:
+    Copy
+    + Send
+    + Sync
+    + std::ops::Add<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::AddAssign
+{
+    const ZERO: Self;
+}
+
+impl Scalar for f32 {
+    const ZERO: f32 = 0.0;
+}
+
+impl Scalar for f64 {
+    const ZERO: f64 = 0.0;
+}
+
+/// Widening conversion applied during packing: the source operand type
+/// `S` is lifted into the accumulator type once per element, so mixed
+/// f32-storage/f64-accumulate GEMMs pay no per-FLOP conversion cost.
+pub trait Widen<S>: Scalar {
+    fn widen(s: S) -> Self;
+}
+
+impl Widen<f32> for f32 {
+    #[inline(always)]
+    fn widen(s: f32) -> f32 {
+        s
+    }
+}
+
+impl Widen<f32> for f64 {
+    #[inline(always)]
+    fn widen(s: f32) -> f64 {
+        s as f64
+    }
+}
+
+impl Widen<f64> for f64 {
+    #[inline(always)]
+    fn widen(s: f64) -> f64 {
+        s
+    }
+}
+
+/// Storage orientation of an operand relative to its logical shape.
+///
+/// For the A operand (logical m×k): `NoTrans` means the slice is row-major
+/// m×k; `Trans` means the slice is row-major k×m holding Aᵀ. For the B
+/// operand (logical k×n): `NoTrans` is row-major k×n, `Trans` is row-major
+/// n×k holding Bᵀ (the `x @ Wᵀ` featurizer shape).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    NoTrans,
+    Trans,
+}
+
+/// C (m×n, row-major) = op_a(A) · op_b(B), or += when `accumulate`.
+///
+/// `a` holds the A operand in the orientation given by `op_a` (see [`Op`]
+/// for the expected slice shapes), likewise `b`; `c` must be m×n. With
+/// `accumulate == false` C is fully overwritten; with `true` the product
+/// is added onto the existing contents (the streaming-ridge update shape).
+pub fn gemm<S, T>(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[S],
+    op_a: Op,
+    b: &[S],
+    op_b: Op,
+    c: &mut [T],
+    accumulate: bool,
+) where
+    S: Copy + Send + Sync,
+    T: Widen<S>,
+{
+    assert_eq!(a.len(), m * k, "gemm: A shape mismatch");
+    assert_eq!(b.len(), k * n, "gemm: B shape mismatch");
+    assert_eq!(c.len(), m * n, "gemm: C shape mismatch");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        if !accumulate {
+            for x in c.iter_mut() {
+                *x = T::ZERO;
+            }
+        }
+        return;
+    }
+    let args = SlabArgs { m, n, k, op_a, op_b, accumulate, lower_only: false };
+    run_slabs(a, b, c, &args, |_row| n);
+}
+
+/// Lower-triangle SYRK: C (n×n) = op(X) · op(X)ᵀ with X = op-oriented `a`
+/// (logical n×k), or += when `accumulate`. Only tiles that intersect the
+/// lower triangle (col ≤ row) are computed — callers get the full
+/// symmetric matrix by following up with [`mirror_lower_to_upper`].
+/// Entries strictly above the diagonal that fall outside straddling tiles
+/// are left untouched.
+///
+/// `Op::NoTrans`: `a` is row-major n×k and C = A·Aᵀ (`Mat::gram`).
+/// `Op::Trans`: `a` is row-major k×n and C = AᵀA in the accumulator type
+/// (the f64 normal-equation accumulation `DMat::gram_of`).
+pub fn syrk_lower<S, T>(n: usize, k: usize, a: &[S], op: Op, c: &mut [T], accumulate: bool)
+where
+    S: Copy + Send + Sync,
+    T: Widen<S>,
+{
+    assert_eq!(a.len(), n * k, "syrk: A shape mismatch");
+    assert_eq!(c.len(), n * n, "syrk: C shape mismatch");
+    if n == 0 {
+        return;
+    }
+    if k == 0 {
+        if !accumulate {
+            for i in 0..n {
+                for x in &mut c[i * n..i * n + i + 1] {
+                    *x = T::ZERO;
+                }
+            }
+        }
+        return;
+    }
+    let op_b = match op {
+        Op::NoTrans => Op::Trans,
+        Op::Trans => Op::NoTrans,
+    };
+    let args = SlabArgs { m: n, n, k, op_a: op, op_b, accumulate, lower_only: true };
+    // Row i of the lower triangle holds i+1 entries; balance slabs by area.
+    run_slabs(a, a, c, &args, |row| row + 1);
+}
+
+/// Shape + flag bundle threaded to every per-thread slab.
+struct SlabArgs {
+    m: usize,
+    n: usize,
+    k: usize,
+    op_a: Op,
+    op_b: Op,
+    accumulate: bool,
+    lower_only: bool,
+}
+
+/// Split the output rows into per-thread slabs (weighted by `cost` =
+/// output entries per row, MR-aligned boundaries) and run the blocked
+/// slab routine on scoped threads. Each thread owns a contiguous span of
+/// whole C rows, so the splits are plain `split_at_mut` — no locking.
+fn run_slabs<S, T, W>(a: &[S], b: &[S], c: &mut [T], args: &SlabArgs, cost: W)
+where
+    S: Copy + Send + Sync,
+    T: Widen<S>,
+    W: Fn(usize) -> usize,
+{
+    let (m, n, k) = (args.m, args.n, args.k);
+    let total: usize = (0..m).map(&cost).sum();
+    let work = total.saturating_mul(k);
+    let nt = if work < PAR_FLOP_THRESHOLD { 1 } else { par::num_threads().min(m.div_ceil(MR)) };
+    if nt <= 1 {
+        gemm_slab(0, m, a, b, c, args);
+        return;
+    }
+    // MR-aligned boundaries with ~equal summed row cost per slab.
+    let per = total.div_ceil(nt);
+    let mut bounds = vec![0usize];
+    let mut acc = 0usize;
+    for i in 0..m {
+        acc += cost(i);
+        let edge = i + 1;
+        if acc >= per && edge % MR == 0 && edge < m {
+            bounds.push(edge);
+            acc = 0;
+        }
+    }
+    bounds.push(m);
+    std::thread::scope(|s| {
+        let mut rest = c;
+        let mut prev = 0usize;
+        for w in bounds.windows(2) {
+            let (lo, hi) = (w[0], w[1]);
+            if lo >= hi {
+                continue;
+            }
+            let (head, tail) = rest.split_at_mut((hi - prev) * n);
+            rest = tail;
+            prev = hi;
+            s.spawn(move || gemm_slab(lo, hi - lo, a, b, head, args));
+        }
+    });
+}
+
+/// Blocked single-threaded GEMM over one row slab of C: global rows
+/// [row0, row0+mb), `c` holding exactly those rows. Packs its own A
+/// blocks and B panels (thread-private buffers).
+fn gemm_slab<S, T>(row0: usize, mb: usize, a: &[S], b: &[S], c: &mut [T], args: &SlabArgs)
+where
+    S: Copy + Send + Sync,
+    T: Widen<S>,
+{
+    let (m, n, k) = (args.m, args.n, args.k);
+    // For lower-only output, columns past the slab's last row are dead.
+    let n_used = if args.lower_only { n.min(row0 + mb) } else { n };
+    let kc_max = KC.min(k);
+    let mut apack = vec![T::ZERO; MC.min(mb).div_ceil(MR) * MR * kc_max];
+    let mut bpack = vec![T::ZERO; NC.min(n_used).div_ceil(NR) * NR * kc_max];
+    let mut jc = 0usize;
+    while jc < n_used {
+        let nc = NC.min(n_used - jc);
+        let mut pc = 0usize;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            pack_b(&mut bpack, b, args.op_b, n, k, jc, nc, pc, kc);
+            // first KC slice of a non-accumulating product overwrites C;
+            // every later slice adds its block partial sum.
+            let add = args.accumulate || pc > 0;
+            let mut ic = 0usize;
+            while ic < mb {
+                let mc = MC.min(mb - ic);
+                // whole A block strictly above the diagonal: no lower tiles.
+                if args.lower_only && jc >= row0 + ic + mc {
+                    ic += mc;
+                    continue;
+                }
+                pack_a(&mut apack, a, args.op_a, m, k, row0 + ic, mc, pc, kc);
+                micro_tiles(&apack, &bpack, c, args, row0, ic, mc, jc, nc, kc, add);
+                ic += mc;
+            }
+            pc += kc;
+        }
+        jc += nc;
+    }
+}
+
+/// Run the microkernel over every MR×NR tile of one (MC block × NC panel)
+/// intersection, clipping edge tiles and skipping tiles strictly above the
+/// diagonal in lower-only (SYRK) mode.
+#[allow(clippy::too_many_arguments)]
+fn micro_tiles<T: Scalar>(
+    apack: &[T],
+    bpack: &[T],
+    c: &mut [T],
+    args: &SlabArgs,
+    row0: usize,
+    ic: usize,
+    mc: usize,
+    jc: usize,
+    nc: usize,
+    kc: usize,
+    add: bool,
+) {
+    let n = args.n;
+    let mut acc = [[T::ZERO; NR]; MR];
+    for s in 0..mc.div_ceil(MR) {
+        let i0 = ic + s * MR; // slab-local row of the tile
+        let mr_eff = MR.min(mc - s * MR);
+        let ap = &apack[s * MR * kc..(s + 1) * MR * kc];
+        for t in 0..nc.div_ceil(NR) {
+            let j0 = jc + t * NR;
+            // tile strictly above the diagonal: every column > every row.
+            if args.lower_only && j0 > row0 + i0 + MR - 1 {
+                break;
+            }
+            let nr_eff = NR.min(nc - t * NR);
+            let bp = &bpack[t * NR * kc..(t + 1) * NR * kc];
+            microkernel(kc, ap, bp, &mut acc);
+            store_tile(&acc, c, n, i0, j0, mr_eff, nr_eff, add);
+        }
+    }
+}
+
+/// The register tile: acc[i][j] += Σ_p ap[p·MR+i] · bp[p·NR+j].
+///
+/// `ap`/`bp` are zero-padded to full MR/NR strips by the packers, so the
+/// kernel has no edge branches; the fixed-size array views let LLVM hoist
+/// the bounds checks and vectorize the NR-wide update row.
+#[inline(always)]
+fn microkernel<T: Scalar>(kc: usize, ap: &[T], bp: &[T], acc: &mut [[T; NR]; MR]) {
+    *acc = [[T::ZERO; NR]; MR];
+    for p in 0..kc {
+        let av: &[T; MR] = ap[p * MR..p * MR + MR].try_into().unwrap();
+        let bv: &[T; NR] = bp[p * NR..p * NR + NR].try_into().unwrap();
+        for i in 0..MR {
+            let ai = av[i];
+            for j in 0..NR {
+                acc[i][j] += ai * bv[j];
+            }
+        }
+    }
+}
+
+/// Write (or add) the live mr_eff×nr_eff corner of the accumulator tile
+/// into C at slab-local row i0, global column j0.
+#[allow(clippy::too_many_arguments)]
+fn store_tile<T: Scalar>(
+    acc: &[[T; NR]; MR],
+    c: &mut [T],
+    ldc: usize,
+    i0: usize,
+    j0: usize,
+    mr_eff: usize,
+    nr_eff: usize,
+    add: bool,
+) {
+    for (i, arow) in acc.iter().enumerate().take(mr_eff) {
+        let crow = &mut c[(i0 + i) * ldc + j0..(i0 + i) * ldc + j0 + nr_eff];
+        if add {
+            for (o, v) in crow.iter_mut().zip(arow.iter()) {
+                *o += *v;
+            }
+        } else {
+            for (o, v) in crow.iter_mut().zip(arow.iter()) {
+                *o = *v;
+            }
+        }
+    }
+}
+
+/// Pack an mc×kc block of the A operand (global rows i0.., depth pc..)
+/// into MR-row k-major strips, widening and zero-padding ragged strips.
+fn pack_a<S, T>(
+    apack: &mut [T],
+    a: &[S],
+    op: Op,
+    m: usize,
+    k: usize,
+    i0: usize,
+    mc: usize,
+    pc: usize,
+    kc: usize,
+) where
+    S: Copy,
+    T: Widen<S>,
+{
+    for s in 0..mc.div_ceil(MR) {
+        let strip = &mut apack[s * MR * kc..(s + 1) * MR * kc];
+        let rows = MR.min(mc - s * MR);
+        match op {
+            Op::NoTrans => {
+                // a is m×k row-major: read each source row contiguously.
+                for r in 0..MR {
+                    if r < rows {
+                        let src = &a[(i0 + s * MR + r) * k + pc..][..kc];
+                        for (p, &v) in src.iter().enumerate() {
+                            strip[p * MR + r] = T::widen(v);
+                        }
+                    } else {
+                        for p in 0..kc {
+                            strip[p * MR + r] = T::ZERO;
+                        }
+                    }
+                }
+            }
+            Op::Trans => {
+                // a is k×m row-major (Aᵀ): each depth p is contiguous in r.
+                for p in 0..kc {
+                    let src = &a[(pc + p) * m + i0 + s * MR..][..rows];
+                    let dst = &mut strip[p * MR..p * MR + MR];
+                    for (d, &v) in dst.iter_mut().zip(src.iter()) {
+                        *d = T::widen(v);
+                    }
+                    for d in dst.iter_mut().skip(rows) {
+                        *d = T::ZERO;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pack a kc×nc panel of the B operand (global cols j0.., depth pc..)
+/// into NR-column strips, widening and zero-padding ragged strips.
+fn pack_b<S, T>(
+    bpack: &mut [T],
+    b: &[S],
+    op: Op,
+    n: usize,
+    k: usize,
+    j0: usize,
+    nc: usize,
+    pc: usize,
+    kc: usize,
+) where
+    S: Copy,
+    T: Widen<S>,
+{
+    for t in 0..nc.div_ceil(NR) {
+        let strip = &mut bpack[t * NR * kc..(t + 1) * NR * kc];
+        let cols = NR.min(nc - t * NR);
+        match op {
+            Op::NoTrans => {
+                // b is k×n row-major: each depth p is contiguous in j.
+                for p in 0..kc {
+                    let src = &b[(pc + p) * n + j0 + t * NR..][..cols];
+                    let dst = &mut strip[p * NR..p * NR + NR];
+                    for (d, &v) in dst.iter_mut().zip(src.iter()) {
+                        *d = T::widen(v);
+                    }
+                    for d in dst.iter_mut().skip(cols) {
+                        *d = T::ZERO;
+                    }
+                }
+            }
+            Op::Trans => {
+                // b is n×k row-major (Bᵀ): read each source row contiguously.
+                for j in 0..NR {
+                    if j < cols {
+                        let src = &b[(j0 + t * NR + j) * k + pc..][..kc];
+                        for (p, &v) in src.iter().enumerate() {
+                            strip[p * NR + j] = T::widen(v);
+                        }
+                    } else {
+                        for p in 0..kc {
+                            strip[p * NR + j] = T::ZERO;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Copy the lower triangle of a row-major n×n matrix onto its upper
+/// triangle, in parallel and cache-blocked.
+///
+/// Works panel-by-panel over destination row bands [lo, hi): the band's
+/// off-diagonal strip (columns ≥ hi) is the transpose of rows [hi, n)'s
+/// columns [lo, hi), which live past the `split_at_mut(hi·n)` point — so
+/// the writes (mutable head rows) and reads (shared tail rows) borrow
+/// disjointly and the copy runs as a tiled transpose on scoped threads.
+/// This replaces the serial strided scalar-store mirror loop that
+/// dominated `Mat::gram` at large n.
+pub fn mirror_lower_to_upper<T: Scalar>(c: &mut [T], n: usize) {
+    assert_eq!(c.len(), n * n, "mirror: shape mismatch");
+    const TB: usize = 32; // transpose tile edge
+    // Band height grows with n so the serial band loop opens a bounded
+    // number of thread scopes (~8·nt) instead of n/128; the in-band
+    // serial mirror stays O(n·pw/2) total, a sliver of the n²/2 copies.
+    let pw = 128usize.max(n.div_ceil(8 * par::num_threads().max(1)));
+    let mut lo = 0usize;
+    while lo < n {
+        let hi = (lo + pw).min(n);
+        // in-band mirror (both indices inside [lo, hi)) — serial, tiny.
+        for i in lo..hi {
+            for j in (i + 1)..hi {
+                c[i * n + j] = c[j * n + i];
+            }
+        }
+        if hi < n {
+            let (head, tail) = c.split_at_mut(hi * n); // tail = rows [hi, n)
+            let tail: &[T] = tail;
+            let band = &mut head[lo * n..hi * n];
+            par::par_row_blocks_t(band, hi - lo, n, |r0, block| {
+                let rows = block.len() / n;
+                // tiled transpose: dst[i][j] = src row (j-hi), col (lo+i).
+                let mut jb = hi;
+                while jb < n {
+                    let jend = (jb + TB).min(n);
+                    for (r, row) in block.chunks_exact_mut(n).enumerate().take(rows) {
+                        let i = lo + r0 + r;
+                        for j in jb..jend {
+                            row[j] = tail[(j - hi) * n + i];
+                        }
+                    }
+                    jb = jend;
+                }
+            });
+        }
+        lo = hi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Naive triple-loop oracle in the accumulator type, honoring ops.
+    fn oracle<S: Copy, T: Widen<S>>(
+        m: usize,
+        n: usize,
+        k: usize,
+        a: &[S],
+        op_a: Op,
+        b: &[S],
+        op_b: Op,
+    ) -> Vec<T> {
+        let at = |i: usize, p: usize| match op_a {
+            Op::NoTrans => a[i * k + p],
+            Op::Trans => a[p * m + i],
+        };
+        let bt = |p: usize, j: usize| match op_b {
+            Op::NoTrans => b[p * n + j],
+            Op::Trans => b[j * k + p],
+        };
+        let mut c = vec![T::ZERO; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = T::ZERO;
+                for p in 0..k {
+                    s += T::widen(at(i, p)) * T::widen(bt(p, j));
+                }
+                c[i * n + j] = s;
+            }
+        }
+        c
+    }
+
+    fn close_f32(a: &[f32], b: &[f32], tol: f32) -> bool {
+        a.iter().zip(b).all(|(x, y)| {
+            let scale = x.abs().max(y.abs()).max(1.0);
+            (x - y).abs() <= tol * scale
+        })
+    }
+
+    fn close_f64(a: &[f64], b: &[f64], tol: f64) -> bool {
+        a.iter().zip(b).all(|(x, y)| {
+            let scale = x.abs().max(y.abs()).max(1.0);
+            (x - y).abs() <= tol * scale
+        })
+    }
+
+    /// Shapes chosen to hit every edge: unit dims, one-off-the-register-
+    /// tile sizes, non-multiples of MC/KC/NC, and past-the-parallel-
+    /// threshold sizes.
+    fn adversarial_sizes() -> Vec<usize> {
+        vec![1, MR - 1, MR, MR + 1, 2 * MR + 3, 33]
+    }
+
+    #[test]
+    fn gemm_matches_oracle_all_ops_f32() {
+        let mut rng = Rng::new(71);
+        let sizes = adversarial_sizes();
+        for &m in &sizes {
+            for &n in &sizes {
+                for &k in &sizes {
+                    for op_a in [Op::NoTrans, Op::Trans] {
+                        for op_b in [Op::NoTrans, Op::Trans] {
+                            let a = rng.gauss_vec(m * k);
+                            let b = rng.gauss_vec(k * n);
+                            let mut c = vec![0.0f32; m * n];
+                            gemm(m, n, k, &a, op_a, &b, op_b, &mut c, false);
+                            let o: Vec<f32> = oracle(m, n, k, &a, op_a, &b, op_b);
+                            assert!(
+                                close_f32(&c, &o, 1e-4),
+                                "m={m} n={n} k={k} {op_a:?} {op_b:?}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_matches_oracle_f64_and_blocked_k() {
+        let mut rng = Rng::new(72);
+        // depths that straddle the KC boundary exercise the block-partial-
+        // sum store path (add after the first slice).
+        let shapes = [(5, 7, KC - 1), (9, 4, KC), (MR + 1, NR + 1, KC + 3), (3, 3, 2 * KC + 5)];
+        for (m, n, k) in shapes {
+            let a: Vec<f64> = rng.gauss_vec(m * k).into_iter().map(|x| x as f64).collect();
+            let b: Vec<f64> = rng.gauss_vec(k * n).into_iter().map(|x| x as f64).collect();
+            let mut c = vec![0.0f64; m * n];
+            gemm(m, n, k, &a, Op::NoTrans, &b, Op::NoTrans, &mut c, false);
+            let o: Vec<f64> = oracle(m, n, k, &a, Op::NoTrans, &b, Op::NoTrans);
+            assert!(close_f64(&c, &o, 1e-12), "m={m} n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn gemm_large_parallel_matches_oracle() {
+        // big enough to cross PAR_FLOP_THRESHOLD and split into slabs,
+        // with dims off every block multiple.
+        let mut rng = Rng::new(73);
+        let (m, n, k) = (MC + MR + 1, NC.min(70) + NR + 3, KC + 9);
+        let a = rng.gauss_vec(m * k);
+        let b = rng.gauss_vec(k * n);
+        let mut c = vec![0.0f32; m * n];
+        gemm(m, n, k, &a, Op::NoTrans, &b, Op::Trans, &mut c, false);
+        let o: Vec<f32> = oracle(m, n, k, &a, Op::NoTrans, &b, Op::Trans);
+        assert!(close_f32(&c, &o, 1e-3));
+    }
+
+    #[test]
+    fn gemm_k_zero_and_empty() {
+        let mut c = vec![7.0f32; 6];
+        gemm::<f32, f32>(2, 3, 0, &[], Op::NoTrans, &[], Op::NoTrans, &mut c, false);
+        assert!(c.iter().all(|&x| x == 0.0), "k=0 overwrite zeroes C");
+        let mut c = vec![7.0f32; 6];
+        gemm::<f32, f32>(2, 3, 0, &[], Op::NoTrans, &[], Op::NoTrans, &mut c, true);
+        assert!(c.iter().all(|&x| x == 7.0), "k=0 accumulate leaves C");
+        gemm::<f32, f32>(0, 0, 5, &[], Op::NoTrans, &[], Op::NoTrans, &mut [], false);
+    }
+
+    #[test]
+    fn gemm_accumulate_adds() {
+        let mut rng = Rng::new(74);
+        let (m, n, k) = (11, 13, 17);
+        let a = rng.gauss_vec(m * k);
+        let b = rng.gauss_vec(k * n);
+        let base = rng.gauss_vec(m * n);
+        let mut c = base.clone();
+        gemm(m, n, k, &a, Op::NoTrans, &b, Op::NoTrans, &mut c, true);
+        let o: Vec<f32> = oracle(m, n, k, &a, Op::NoTrans, &b, Op::NoTrans);
+        let want: Vec<f32> = base.iter().zip(o.iter()).map(|(x, y)| x + y).collect();
+        assert!(close_f32(&c, &want, 1e-4));
+    }
+
+    #[test]
+    fn widening_f32_to_f64_matches_f64_oracle() {
+        // the ridge-update shape: f32 storage, f64 accumulation, Aᵀ·B.
+        let mut rng = Rng::new(75);
+        let (rows, dim, outs) = (KC + 30, 37, 3);
+        let psi = rng.gauss_vec(rows * dim);
+        let y = rng.gauss_vec(rows * outs);
+        let mut c = vec![0.0f64; dim * outs];
+        gemm(dim, outs, rows, &psi, Op::Trans, &y, Op::NoTrans, &mut c, true);
+        let o: Vec<f64> = oracle(dim, outs, rows, &psi, Op::Trans, &y, Op::NoTrans);
+        assert!(close_f64(&c, &o, 1e-10));
+    }
+
+    #[test]
+    fn syrk_matches_gemm_both_ops() {
+        let mut rng = Rng::new(76);
+        for (n, k) in [(1, 1), (MR, 5), (MR + 3, KC + 2), (MC + 10, 19)] {
+            let a = rng.gauss_vec(n * k);
+            // NoTrans: a is n×k, C = A·Aᵀ
+            let mut c = vec![0.0f32; n * n];
+            syrk_lower(n, k, &a, Op::NoTrans, &mut c, false);
+            mirror_lower_to_upper(&mut c, n);
+            let mut full = vec![0.0f32; n * n];
+            gemm(n, n, k, &a, Op::NoTrans, &a, Op::Trans, &mut full, false);
+            assert!(close_f32(&c, &full, 1e-3), "NoTrans n={n} k={k}");
+            // Trans: a is k×n (so regenerate at that shape), C = AᵀA
+            let at = rng.gauss_vec(k * n);
+            let mut c = vec![0.0f64; n * n];
+            syrk_lower(n, k, &at, Op::Trans, &mut c, false);
+            mirror_lower_to_upper(&mut c, n);
+            let mut full = vec![0.0f64; n * n];
+            gemm(n, n, k, &at, Op::Trans, &at, Op::NoTrans, &mut full, false);
+            assert!(close_f64(&c, &full, 1e-6), "Trans n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn syrk_accumulates() {
+        let mut rng = Rng::new(77);
+        let (n, k) = (21, 9);
+        let a1 = rng.gauss_vec(n * k);
+        let a2 = rng.gauss_vec(n * k);
+        let mut acc = vec![0.0f32; n * n];
+        syrk_lower(n, k, &a1, Op::NoTrans, &mut acc, true);
+        syrk_lower(n, k, &a2, Op::NoTrans, &mut acc, true);
+        mirror_lower_to_upper(&mut acc, n);
+        let mut want = vec![0.0f32; n * n];
+        gemm(n, n, k, &a1, Op::NoTrans, &a1, Op::Trans, &mut want, false);
+        gemm(n, n, k, &a2, Op::NoTrans, &a2, Op::Trans, &mut want, true);
+        assert!(close_f32(&acc, &want, 1e-3));
+    }
+
+    #[test]
+    fn mirror_copies_lower_to_upper() {
+        for n in [0usize, 1, 2, 3, 129, 300] {
+            let mut c: Vec<f64> = (0..n * n).map(|x| x as f64).collect();
+            mirror_lower_to_upper(&mut c, n);
+            for i in 0..n {
+                for j in 0..n {
+                    let want = if j > i { (j * n + i) as f64 } else { (i * n + j) as f64 };
+                    assert_eq!(c[i * n + j], want, "n={n} i={i} j={j}");
+                }
+            }
+        }
+    }
+}

@@ -1,11 +1,15 @@
 //! Dense f32 matrices — the library's data-plane type.
 //!
-//! Row-major `Mat` with a blocked, multi-threaded matmul and the handful
-//! of BLAS-1/2 pieces the featurizers and solvers need. Feature matrices
-//! are f32 (they are large); the solver side accumulates in f64 (see
-//! `linalg::DMat`).
+//! Row-major `Mat` with the handful of BLAS-1/2 pieces the featurizers
+//! and solvers need. The BLAS-3 entry points (`matmul`, `matmul_nt`,
+//! `gram`) are thin wrappers over the packed register-tiled engine in
+//! [`gemm`] (DESIGN.md §7). Feature matrices are f32 (they are large);
+//! the solver side accumulates in f64 (see `linalg::DMat`).
+
+pub mod gemm;
 
 use crate::util::par;
+use gemm::Op;
 
 /// Row-major dense f32 matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -142,79 +146,36 @@ impl Mat {
         self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
     }
 
-    /// `self @ other` — blocked, parallel over row chunks of `self`.
+    /// `self @ other` — packed register-tiled GEMM, parallel over output
+    /// row slabs (see [`gemm::gemm`]).
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul: inner dim mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Mat::zeros(m, n);
-        let a = &self.data;
-        let b = &other.data;
-        par::par_rows(&mut out.data, m, n, |i, orow| {
-            // ikj loop: stream B rows, accumulate into the output row.
-            let arow = &a[i * k..(i + 1) * k];
-            for (kk, &aik) in arow.iter().enumerate() {
-                if aik == 0.0 {
-                    continue;
-                }
-                let brow = &b[kk * n..(kk + 1) * n];
-                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                    *o += aik * bv;
-                }
-            }
-        });
+        let (a, b) = (&self.data, &other.data);
+        gemm::gemm(m, n, k, a, Op::NoTrans, b, Op::NoTrans, &mut out.data, false);
         out
     }
 
-    /// `self @ other^T` — the common featurizer shape (x @ W^T); parallel.
+    /// `self @ other^T` — the common featurizer shape (x @ W^T). Same
+    /// packed engine; the transposed operand is absorbed by B-packing.
     pub fn matmul_nt(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.cols, "matmul_nt: inner dim mismatch");
         let (m, k, n) = (self.rows, self.cols, other.rows);
         let mut out = Mat::zeros(m, n);
-        let a = &self.data;
-        let b = &other.data;
-        par::par_rows(&mut out.data, m, n, |i, orow| {
-            let arow = &a[i * k..(i + 1) * k];
-            for (j, o) in orow.iter_mut().enumerate() {
-                let brow = &b[j * k..(j + 1) * k];
-                let mut acc = 0.0f32;
-                // unrolled-by-4 dot product
-                let mut p = 0;
-                while p + 4 <= k {
-                    acc += arow[p] * brow[p]
-                        + arow[p + 1] * brow[p + 1]
-                        + arow[p + 2] * brow[p + 2]
-                        + arow[p + 3] * brow[p + 3];
-                    p += 4;
-                }
-                while p < k {
-                    acc += arow[p] * brow[p];
-                    p += 1;
-                }
-                *o = acc;
-            }
-        });
+        gemm::gemm(m, n, k, &self.data, Op::NoTrans, &other.data, Op::Trans, &mut out.data, false);
         out
     }
 
-    /// Gram matrix `self @ self^T` (n×n), parallel, symmetric fill.
+    /// Gram matrix `self @ self^T` (n×n): SYRK on the lower-triangle
+    /// tiles, then a parallel blocked mirror onto the upper triangle —
+    /// half the FLOPs of a full matmul and no serial strided-store pass.
     pub fn gram(&self) -> Mat {
         let n = self.rows;
         let k = self.cols;
-        let a = &self.data;
         let mut out = Mat::zeros(n, n);
-        par::par_rows(&mut out.data, n, n, |i, orow| {
-            let ri = &a[i * k..(i + 1) * k];
-            for (j, o) in orow.iter_mut().enumerate().take(i + 1) {
-                let rj = &a[j * k..(j + 1) * k];
-                *o = dot(ri, rj);
-            }
-        });
-        // mirror upper triangle
-        for i in 0..n {
-            for j in (i + 1)..n {
-                out.data[i * n + j] = out.data[j * n + i];
-            }
-        }
+        gemm::syrk_lower(n, k, &self.data, Op::NoTrans, &mut out.data, false);
+        gemm::mirror_lower_to_upper(&mut out.data, n);
         out
     }
 

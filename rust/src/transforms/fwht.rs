@@ -6,10 +6,36 @@
 
 /// In-place unnormalized Walsh–Hadamard transform. `x.len()` must be a
 /// power of two.
+///
+/// The h=1 and h=2 stages are special-cased over contiguous 2- and
+/// 4-lane chunks: in the generic butterfly those two stages have the
+/// worst stride-to-width ratio (per-pair bookkeeping dominates), while
+/// the chunked forms are straight-line add/sub patterns LLVM vectorizes
+/// with in-register shuffles. The arithmetic (order and pairing) is
+/// identical to the generic loop, so results are bit-for-bit unchanged —
+/// the dense-Hadamard property test pins this down to n=2 and n=4.
 pub fn fwht(x: &mut [f32]) {
     let n = x.len();
     assert!(n.is_power_of_two(), "fwht: length {n} not a power of two");
-    let mut h = 1;
+    // stage h=1: (x0, x1) -> (x0+x1, x0-x1) over adjacent pairs
+    if n >= 2 {
+        for pair in x.chunks_exact_mut(2) {
+            let (a, b) = (pair[0], pair[1]);
+            pair[0] = a + b;
+            pair[1] = a - b;
+        }
+    }
+    // stage h=2: butterflies (0,2) and (1,3) within each 4-lane chunk
+    if n >= 4 {
+        for quad in x.chunks_exact_mut(4) {
+            let (a0, a1, b0, b1) = (quad[0], quad[1], quad[2], quad[3]);
+            quad[0] = a0 + b0;
+            quad[1] = a1 + b1;
+            quad[2] = a0 - b0;
+            quad[3] = a1 - b1;
+        }
+    }
+    let mut h = 4;
     while h < n {
         let stride = h * 2;
         let mut base = 0;
@@ -144,6 +170,39 @@ mod tests {
             let mut row = data[i * len..(i + 1) * len].to_vec();
             fwht_norm(&mut row);
             assert_eq!(&batched[i * len..(i + 1) * len], &row[..], "row {i}");
+        }
+    }
+
+    #[test]
+    fn special_cased_stages_bit_exact_vs_generic() {
+        // the h=1/h=2 chunked stages must be bit-for-bit the generic
+        // butterfly (same pairing, same order of adds/subs).
+        fn fwht_generic(x: &mut [f32]) {
+            let n = x.len();
+            let mut h = 1;
+            while h < n {
+                let stride = h * 2;
+                let mut base = 0;
+                while base < n {
+                    for i in base..base + h {
+                        let a = x[i];
+                        let b = x[i + h];
+                        x[i] = a + b;
+                        x[i + h] = a - b;
+                    }
+                    base += stride;
+                }
+                h = stride;
+            }
+        }
+        let mut rng = Rng::new(35);
+        for n in [1usize, 2, 4, 8, 64, 512] {
+            let base = rng.gauss_vec(n);
+            let mut a = base.clone();
+            let mut b = base;
+            fwht(&mut a);
+            fwht_generic(&mut b);
+            assert_eq!(a, b, "n={n}");
         }
     }
 

@@ -122,6 +122,16 @@ pub fn par_row_blocks<F>(data: &mut [f32], n_rows: usize, row_len: usize, f: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
 {
+    par_row_blocks_t(data, n_rows, row_len, f)
+}
+
+/// Element-type-generic [`par_row_blocks`]: the GEMM engine and the f64
+/// solver side need the same disjoint-row-block split over `&mut [f64]`.
+pub fn par_row_blocks_t<T, F>(data: &mut [T], n_rows: usize, row_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
     assert_eq!(data.len(), n_rows * row_len, "par_row_blocks: shape mismatch");
     let nt = num_threads().min(n_rows.max(1));
     if nt <= 1 || n_rows < 2 {
