@@ -11,10 +11,16 @@
 //! serves a closed-loop latency/throughput benchmark. Results are
 //! recorded in EXPERIMENTS.md.
 //!
+//! Without the `pjrt` feature (or with `--store`) it drives the model
+//! store instead (DESIGN.md §8): streaming fit with checkpoints → save
+//! to a registry → reload in-process through the golden-row check →
+//! serve *predictions* from the durable model via `NativeBackend`.
+//!
 //! Run: `make artifacts && cargo run --release --example serve_features`
 
-use ntk_sketch::coordinator::{BatchBackend, BatchPolicy, FeatureServer, Metrics};
+use ntk_sketch::coordinator::{BatchBackend, BatchPolicy, FeatureServer, Metrics, NativeBackend};
 use ntk_sketch::data::uci_like::{generate, UciFamily};
+use ntk_sketch::model::{FeaturizerSpec, ModelMeta, Registry, SavedModel, TrainCheckpoint};
 use ntk_sketch::regression::{mse, RidgeRegressor};
 use ntk_sketch::runtime::{artifacts_dir, Engine};
 use ntk_sketch::tensor::Mat;
@@ -40,11 +46,130 @@ impl BatchBackend for PjrtBackend {
     }
 }
 
+/// The store-backed driver: the whole model lifecycle in one process,
+/// ending with the coordinator serving predictions from a model that
+/// went through disk.
+fn store_demo(args: &Args) {
+    let root = std::env::var_os("NTK_MODEL_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| {
+            std::env::temp_dir().join(format!("ntk_serve_features_{}", std::process::id()))
+        });
+    let registry = Registry::open(&root);
+    let fam = UciFamily::MillionSongs;
+    let n_train = args.usize("n", 1024);
+    let n_test = 256;
+    let ds = generate(fam, n_train + n_test, 61);
+    let spec = FeaturizerSpec::NtkRf {
+        d: ds.d(),
+        depth: 2,
+        m0: 128,
+        m1: 384,
+        ms: 128,
+        leverage_sweeps: 0,
+        seed: 77,
+    };
+    let f = spec.build();
+    let meta = ModelMeta {
+        name: "serve-demo".into(),
+        version: 0,
+        family: spec.family().into(),
+        dataset: fam.name().into(),
+        data_seed: 61,
+        lambda: args.f64("lambda", 1e-3),
+        n_seen: 0,
+        input_dim: spec.input_dim(),
+        feature_dim: spec.feature_dim(),
+        outputs: 1,
+    };
+
+    // ---- phase 1: streaming fit with periodic checkpoints ----
+    let t_train = Timer::start();
+    let y = ds.y_mat();
+    let mut reg = RidgeRegressor::new(spec.feature_dim(), 1);
+    let batch_rows = 128;
+    let mut batches = 0usize;
+    let mut lo = 0;
+    while lo < n_train {
+        let hi = (lo + batch_rows).min(n_train);
+        let feats = f.transform(&ds.x.slice_rows(lo, hi));
+        reg.add_batch(&feats, &y.slice_rows(lo, hi));
+        batches += 1;
+        lo = hi;
+        if batches % 2 == 0 && lo < n_train {
+            let ck = TrainCheckpoint::capture(
+                meta.clone(),
+                spec.clone(),
+                n_train as u64,
+                batch_rows as u64,
+                2,
+                &reg,
+            );
+            registry.save_checkpoint(&ck).expect("checkpoint");
+        }
+    }
+    reg.solve(meta.lambda).expect("solve");
+    let saved = SavedModel::new(
+        "serve-demo",
+        fam.name(),
+        61,
+        meta.lambda,
+        reg.n_seen as u64,
+        spec.clone(),
+        reg.weights().expect("solved").clone(),
+        &f,
+    );
+    let version = registry.save(&saved).expect("registry save");
+    registry.clear_checkpoint("serve-demo").expect("clear checkpoint");
+    let file_bytes = std::fs::metadata(registry.artifact_path("serve-demo", version))
+        .map(|m| m.len())
+        .unwrap_or(0);
+    println!(
+        "streaming fit: {n_train} rows in {:.2}s; saved v{version} ({file_bytes} bytes vs ≈{} \
+         bytes of materialized featurizer)",
+        t_train.secs(),
+        spec.materialized_bytes()
+    );
+
+    // ---- phase 2: reload from disk (golden-row verified) and serve ----
+    let loaded = registry.load("serve-demo", None).expect("registry load");
+    let model = std::sync::Arc::new(loaded.build().expect("golden-verified build"));
+    println!("loaded {}", model.meta.banner());
+    let d = model.meta.input_dim;
+    let m2 = model.clone();
+    let (server, client) = FeatureServer::start(
+        move || NativeBackend { featurizer: m2.clone(), batch: 64, input_dim: d },
+        args.usize("workers", 2),
+        BatchPolicy { max_batch: 64, max_delay: std::time::Duration::from_millis(2) },
+        32,
+    );
+    let t_serve = Timer::start();
+    let rxs: Vec<_> = (n_train..n_train + n_test)
+        .map(|i| client.submit(ds.x.row(i).to_vec()))
+        .collect();
+    let mut pred = Mat::zeros(n_test, 1);
+    for (k, rx) in rxs.into_iter().enumerate() {
+        pred.row_mut(k).copy_from_slice(&rx.recv().expect("prediction"));
+    }
+    let test_mse = mse(&pred, &y.slice_rows(n_train, n_train + n_test));
+    println!(
+        "served {n_test} predictions from the durable model in {:.2}s (test MSE {test_mse:.4})",
+        t_serve.secs()
+    );
+    println!("metrics: {}", server.metrics.summary());
+    drop(client);
+    server.join();
+    if std::env::var_os("NTK_MODEL_DIR").is_none() {
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}
+
 fn main() {
     let args = Args::from_env();
     let dir = artifacts_dir();
-    if !ntk_sketch::runtime::pjrt_enabled() {
-        eprintln!("serve_features: skipped — built without the `pjrt` feature (see DESIGN.md §6)");
+    if !ntk_sketch::runtime::pjrt_enabled() || args.flag("store") {
+        println!("serve_features: model-store path (see DESIGN.md §8)");
+        store_demo(&args);
         return;
     }
     if !dir.join("ntk_rf.manifest.json").exists() {

@@ -1,15 +1,21 @@
 //! Coordinator benches: dynamic-batcher policy sweep (deadline vs batch
-//! size — the DESIGN.md ablation) and streaming-pipeline throughput vs
+//! size — the DESIGN.md ablation), streaming-pipeline throughput vs
 //! worker count, over a Rust-native backend (PJRT path measured in
-//! examples/serve_features.rs).
+//! examples/serve_features.rs), and the model-store lifecycle
+//! (save/load/first-predict — emitted to `BENCH_model_store.json`).
 
 use ntk_sketch::bench::{smoke, Table};
 use ntk_sketch::coordinator::{
     train_streaming, BatchPolicy, FeatureServer, NativeBackend, PipelineConfig,
 };
 use ntk_sketch::features::ntk_rf::{NtkRf, NtkRfConfig};
+use ntk_sketch::features::Featurizer;
+use ntk_sketch::model::{FeaturizerSpec, Registry, SavedModel};
+use ntk_sketch::regression::RidgeRegressor;
 use ntk_sketch::rng::Rng;
 use ntk_sketch::tensor::Mat;
+use ntk_sketch::util::json::Json;
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 fn main() {
@@ -95,4 +101,125 @@ fn main() {
             format!("{:.0}", stats.rows as f64 / secs),
         ]);
     }
+
+    model_store_bench();
+}
+
+/// Model-store lifecycle latencies: save (train → registry), load
+/// (registry → golden-verified model), first predict batch — plus a
+/// served batch through a `FeatureServer` over the loaded model, i.e.
+/// the cold-start path of a serving replica. Machine-readable record in
+/// `BENCH_model_store.json` (override with `NTK_MODEL_BENCH_JSON`).
+fn model_store_bench() {
+    let d = 64;
+    let (n_train, budget) = if smoke() { (512, 512) } else { (4096, 2048) };
+    println!("\n== model store: save / load / first-predict (d={d}, m≈{budget}) ==");
+    let root =
+        std::env::temp_dir().join(format!("ntk_model_bench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let registry = Registry::open(&root);
+
+    let c = NtkRfConfig::for_budget(2, budget);
+    let spec = FeaturizerSpec::NtkRf {
+        d,
+        depth: c.depth,
+        m0: c.m0,
+        m1: c.m1,
+        ms: c.ms,
+        leverage_sweeps: 0,
+        seed: 17,
+    };
+    let f = spec.build();
+    let mut rng = Rng::new(18);
+    let x = Mat::from_vec(n_train, d, rng.gauss_vec(n_train * d));
+    let y = Mat::from_vec(n_train, 1, rng.gauss_vec(n_train));
+    let mut reg = RidgeRegressor::new(f.dim(), 1);
+    for lo in (0..n_train).step_by(256) {
+        let hi = (lo + 256).min(n_train);
+        let feats = f.transform(&x.slice_rows(lo, hi));
+        reg.add_batch(&feats, &y.slice_rows(lo, hi));
+    }
+    reg.solve(1e-3).unwrap();
+    let saved = SavedModel::new(
+        "bench",
+        "synthetic",
+        18,
+        1e-3,
+        n_train as u64,
+        spec.clone(),
+        reg.weights().unwrap().clone(),
+        &f,
+    );
+
+    let t0 = std::time::Instant::now();
+    registry.save(&saved).unwrap();
+    let save_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let t0 = std::time::Instant::now();
+    let loaded = registry.load("bench", None).unwrap();
+    let model = loaded.build().unwrap();
+    let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let t0 = std::time::Instant::now();
+    let first = model.predict(&x.slice_rows(0, 64));
+    let first_predict_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(first.rows, 64);
+
+    // cold-start a serving replica over the durable model
+    let shared = std::sync::Arc::new(model);
+    let m2 = shared.clone();
+    let t0 = std::time::Instant::now();
+    let (server, client) = FeatureServer::start(
+        move || NativeBackend { featurizer: m2.clone(), batch: 64, input_dim: d },
+        1,
+        BatchPolicy { max_batch: 64, max_delay: Duration::from_millis(1) },
+        16,
+    );
+    let rxs: Vec<_> = (0..64).map(|i| client.submit(x.row(i).to_vec())).collect();
+    for rx in rxs {
+        let _ = rx.recv().unwrap();
+    }
+    let first_served_ms = t0.elapsed().as_secs_f64() * 1e3;
+    drop(client);
+    server.join();
+
+    let file_bytes = std::fs::metadata(registry.artifact_path("bench", 1))
+        .map(|m| m.len())
+        .unwrap_or(0);
+    let t = Table::new(&[
+        "save",
+        "load+verify",
+        "first predict (64)",
+        "first served (64)",
+        "file",
+        "materialized",
+    ]);
+    t.row(&[
+        format!("{save_ms:.1}ms"),
+        format!("{load_ms:.1}ms"),
+        format!("{first_predict_ms:.1}ms"),
+        format!("{first_served_ms:.1}ms"),
+        format!("{file_bytes}B"),
+        format!("{}B", spec.materialized_bytes()),
+    ]);
+
+    let mut o = BTreeMap::new();
+    o.insert("save_ms".to_string(), Json::Num(save_ms));
+    o.insert("load_verify_ms".to_string(), Json::Num(load_ms));
+    o.insert("first_predict_ms".to_string(), Json::Num(first_predict_ms));
+    o.insert("first_served_ms".to_string(), Json::Num(first_served_ms));
+    o.insert("file_bytes".to_string(), Json::Num(file_bytes as f64));
+    o.insert(
+        "materialized_bytes".to_string(),
+        Json::Num(spec.materialized_bytes() as f64),
+    );
+    o.insert("feature_dim".to_string(), Json::Num(spec.feature_dim() as f64));
+    let path = std::env::var("NTK_MODEL_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_model_store.json".to_string());
+    if let Err(e) = std::fs::write(&path, Json::Obj(o).to_string()) {
+        eprintln!("could not write {path}: {e}");
+    } else {
+        println!("wrote {path}");
+    }
+    let _ = std::fs::remove_dir_all(&root);
 }

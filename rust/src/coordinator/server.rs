@@ -256,6 +256,9 @@ mod tests {
             }
             out
         }
+        fn name(&self) -> &'static str {
+            "toy"
+        }
     }
 
     fn start_toy(workers: usize, max_batch: usize) -> (FeatureServer, FeatureClient) {

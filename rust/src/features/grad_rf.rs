@@ -37,9 +37,9 @@ impl GradRfMlp {
         GradRfMlp { d, depth, width, weights, head, dim }
     }
 
-    /// Pick the width whose parameter count best matches `target_dim`
-    /// (the paper reports GradRF by its feature dimension = #params).
-    pub fn for_feature_dim(d: usize, depth: usize, target_dim: usize, rng: &mut Rng) -> GradRfMlp {
+    /// The width whose parameter count best matches `target_dim` —
+    /// deterministic, so model specs can record the resolved width.
+    pub fn width_for_feature_dim(d: usize, depth: usize, target_dim: usize) -> usize {
         let mut best_w = 1;
         let mut best_err = usize::MAX;
         for w in 1..=4096 {
@@ -53,7 +53,13 @@ impl GradRfMlp {
                 break;
             }
         }
-        GradRfMlp::new(d, depth, best_w, rng)
+        best_w
+    }
+
+    /// Pick the width whose parameter count best matches `target_dim`
+    /// (the paper reports GradRF by its feature dimension = #params).
+    pub fn for_feature_dim(d: usize, depth: usize, target_dim: usize, rng: &mut Rng) -> GradRfMlp {
+        GradRfMlp::new(d, depth, Self::width_for_feature_dim(d, depth, target_dim), rng)
     }
 
     /// ∇_θ f(x), flattened in layer order then head.

@@ -45,6 +45,41 @@ pub trait Featurizer: Send + Sync {
     }
 }
 
+/// Forwarding impls so boxed/shared featurizers (models reconstructed
+/// from the store are `Box<dyn Featurizer>`, servers share them as
+/// `Arc`) keep the *overridden* batched `transform_into` and the real
+/// `name()` — without these, a `NativeBackend<Box<dyn Featurizer>>`
+/// would silently fall back to the allocate-then-copy default path.
+impl<T: Featurizer + ?Sized> Featurizer for Box<T> {
+    fn dim(&self) -> usize {
+        (**self).dim()
+    }
+    fn transform(&self, x: &Mat) -> Mat {
+        (**self).transform(x)
+    }
+    fn transform_into(&self, x: &Mat, out: &mut Mat) {
+        (**self).transform_into(x, out)
+    }
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+}
+
+impl<T: Featurizer + ?Sized> Featurizer for std::sync::Arc<T> {
+    fn dim(&self) -> usize {
+        (**self).dim()
+    }
+    fn transform(&self, x: &Mat) -> Mat {
+        (**self).transform(x)
+    }
+    fn transform_into(&self, x: &Mat, out: &mut Mat) {
+        (**self).transform_into(x, out)
+    }
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+}
+
 /// A (randomized) feature map over images.
 pub trait ImageFeaturizer: Send + Sync {
     fn dim(&self) -> usize;

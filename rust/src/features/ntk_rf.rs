@@ -124,11 +124,11 @@ impl NtkRf {
 }
 
 impl NtkRf {
-    /// Batched transform: the Φ₀/Φ₁ blocks run as full (parallel, blocked)
-    /// matmuls over the batch instead of per-row dot products — the hot
-    /// path used by `Featurizer::transform` (§Perf: ~20× over row-wise).
-    pub fn transform_batch(&self, x: &Mat) -> Mat {
-        let n = x.rows;
+    /// The layer recursion over a batch, returning row norms and the
+    /// *unscaled* ψ^L — shared by `transform_batch` (scales in place)
+    /// and `transform_into` (scales while writing into the caller's
+    /// buffer, skipping the allocate-then-copy default).
+    fn psi_batch(&self, x: &Mat) -> (Vec<f32>, Mat) {
         let norms: Vec<f32> = x.row_norms();
         let mut phi = x.clone();
         phi.normalize_rows();
@@ -143,8 +143,15 @@ impl NtkRf {
             psi = Mat::hstack(&[&phi_new, &q2]);
             phi = phi_new;
         }
-        for i in 0..n {
-            let s = norms[i];
+        (norms, psi)
+    }
+
+    /// Batched transform: the Φ₀/Φ₁ blocks run as full (parallel, blocked)
+    /// matmuls over the batch instead of per-row dot products — the hot
+    /// path used by `Featurizer::transform` (§Perf: ~20× over row-wise).
+    pub fn transform_batch(&self, x: &Mat) -> Mat {
+        let (norms, mut psi) = self.psi_batch(x);
+        for (i, &s) in norms.iter().enumerate() {
             for v in psi.row_mut(i) {
                 *v *= s;
             }
@@ -162,8 +169,23 @@ impl Featurizer for NtkRf {
         self.transform_batch(x)
     }
 
+    fn transform_into(&self, x: &Mat, out: &mut Mat) {
+        assert_eq!(x.cols, self.d, "NtkRf: input dim mismatch");
+        assert_eq!(out.rows, x.rows, "NtkRf: output rows mismatch");
+        assert_eq!(out.cols, self.dim(), "NtkRf: output dim mismatch");
+        let (norms, psi) = self.psi_batch(x);
+        for (i, &s) in norms.iter().enumerate() {
+            for (o, &v) in out.row_mut(i).iter_mut().zip(psi.row(i).iter()) {
+                *o = s * v;
+            }
+        }
+    }
+
     fn name(&self) -> &'static str {
-        "NTKRF"
+        match self.cfg.phi1_mode {
+            Phi1Mode::Plain => "NTKRF",
+            Phi1Mode::Leverage { .. } => "NTKRF(leverage)",
+        }
     }
 }
 
@@ -278,6 +300,22 @@ mod tests {
         for i in 0..3 {
             let f = rf.features(x.row(i));
             crate::util::prop::assert_close(out.row(i), &f, 1e-6, 1e-6).unwrap();
+        }
+    }
+
+    #[test]
+    fn transform_into_bitwise_matches_transform() {
+        // the caller-owned-output path (the serving hot path for models
+        // loaded from the store) must be bit-identical to `transform`
+        let mut rng = Rng::new(147);
+        let cfg = NtkRfConfig::for_budget(2, 96);
+        let rf = NtkRf::new(5, cfg, &mut rng);
+        let x = Mat::from_vec(7, 5, rng.gauss_vec(35));
+        let a = rf.transform(&x);
+        let mut b = Mat::from_vec(7, rf.dim(), vec![f32::NAN; 7 * rf.dim()]);
+        rf.transform_into(&x, &mut b);
+        for (p, q) in a.data.iter().zip(b.data.iter()) {
+            assert_eq!(p.to_bits(), q.to_bits());
         }
     }
 }

@@ -37,4 +37,5 @@ pub mod regression;
 pub mod cntk;
 pub mod runtime;
 pub mod coordinator;
+pub mod model;
 pub mod bench;

@@ -325,16 +325,27 @@ pub fn solve_spd(a: &DMat, b: &[f64]) -> Result<Vec<f64>, String> {
     unreachable!()
 }
 
-/// Solve A X = B column-by-column for SPD A (multi-RHS).
+/// Solve A X = B column-by-column for SPD A (multi-RHS). Clones `a`
+/// once; callers with a reusable system matrix (λ sweeps, streaming
+/// ridge) should use [`solve_spd_multi_scratch`] instead.
 pub fn solve_spd_multi(a: &DMat, b: &DMat) -> Result<DMat, String> {
+    let mut scratch = a.clone();
+    solve_spd_multi_scratch(&mut scratch, b)
+}
+
+/// [`solve_spd_multi`] operating on a caller-owned system matrix:
+/// `a` is consumed in place (jitter, if any, is added directly), so the
+/// per-call m² clone disappears. Jitter escalation follows the same
+/// schedule (1e-10·scale, then ×100 per retry); because deltas are
+/// added cumulatively instead of re-adding to a pristine copy, the
+/// diagonal can differ from the old clone-per-attempt path in final
+/// ULPs — reachable only on near-singular systems that already needed
+/// jitter, where the result was regularized anyway.
+pub fn solve_spd_multi_scratch(a: &mut DMat, b: &DMat) -> Result<DMat, String> {
     let l = {
         let mut jitter = 0.0;
         loop {
-            let mut aj = a.clone();
-            if jitter > 0.0 {
-                aj.add_diag(jitter);
-            }
-            match cholesky(&aj) {
+            match cholesky(a) {
                 Ok(l) => break l,
                 Err(e) => {
                     if jitter > 1e3 {
@@ -342,7 +353,9 @@ pub fn solve_spd_multi(a: &DMat, b: &DMat) -> Result<DMat, String> {
                     }
                     let scale =
                         (0..a.rows).map(|i| a.at(i, i)).fold(0.0, f64::max).max(1e-12);
-                    jitter = if jitter == 0.0 { 1e-10 * scale } else { jitter * 100.0 };
+                    let next = if jitter == 0.0 { 1e-10 * scale } else { jitter * 100.0 };
+                    a.add_diag(next - jitter);
+                    jitter = next;
                 }
             }
         }

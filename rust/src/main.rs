@@ -5,21 +5,40 @@
 //!   golden                       verify AOT golden parity through PJRT
 //!   kernel   --depth L           print K_relu^{(L)} on a grid (Fig. 1 data)
 //!   train    --family F ...      feature-map ridge regression on a
-//!                                UCI-like dataset (Table 2 single cell)
-//!   serve    --requests N        micro serving benchmark over the artifact
+//!                                UCI-like dataset (Table 2 single cell);
+//!                                with --save NAME it streams the fit,
+//!                                checkpoints every --checkpoint-every K
+//!                                batches, and persists the model to the
+//!                                registry; --resume continues an
+//!                                interrupted fit bit-identically
+//!   predict  --model NAME        load a saved model and evaluate it
+//!   serve    --model NAME        serve predictions from a saved model
+//!                                (without --model: PJRT feature serving)
+//!   models                       list the registry; --gc NAME trims old
+//!                                versions
+//!
+//! Model registry root: `--models-dir`, else `$NTK_MODEL_DIR`, else
+//! `./models` (DESIGN.md §8).
 
-use ntk_sketch::coordinator::{BatchBackend, BatchPolicy, FeatureServer};
+use ntk_sketch::coordinator::{BatchBackend, BatchPolicy, FeatureServer, NativeBackend};
 use ntk_sketch::data::uci_like::{self, UciFamily};
-use ntk_sketch::features::ntk_rf::{NtkRf, NtkRfConfig};
-use ntk_sketch::features::ntk_sketch::{NtkSketch, NtkSketchConfig};
+use ntk_sketch::data::Dataset;
+use ntk_sketch::features::grad_rf::GradRfMlp;
+use ntk_sketch::features::ntk_rf::NtkRfConfig;
+use ntk_sketch::features::ntk_sketch::NtkSketchConfig;
 use ntk_sketch::features::rff::Rff;
 use ntk_sketch::features::Featurizer;
+use ntk_sketch::model::codec::crc32;
+use ntk_sketch::model::{FeaturizerSpec, ModelMeta, Registry, SavedModel, TrainCheckpoint};
 use ntk_sketch::ntk::k_relu;
 use ntk_sketch::regression::cv::kfold_mse;
+use ntk_sketch::regression::{mse, RidgeRegressor};
 use ntk_sketch::rng::Rng;
 use ntk_sketch::runtime::{artifacts_dir, pjrt_enabled, Engine};
 use ntk_sketch::tensor::Mat;
+use ntk_sketch::transforms::LeafMode;
 use ntk_sketch::util::cli::Args;
+use std::sync::Arc;
 
 fn main() {
     let args = Args::from_env();
@@ -29,17 +48,46 @@ fn main() {
         "golden" => golden(),
         "kernel" => kernel(&args),
         "train" => train(&args),
+        "predict" => predict(&args),
         "serve" => serve(&args),
+        "models" => models_cmd(&args),
         _ => {
             eprintln!(
-                "usage: ntk-sketch <info|golden|kernel|train|serve> [--flags]\n\
+                "usage: ntk-sketch <info|golden|kernel|train|predict|serve|models> [--flags]\n\
                  examples:\n\
                  \tntk-sketch kernel --depth 3\n\
                  \tntk-sketch train --family protein --method ntkrf --m 1024 --n 1000\n\
-                 \tntk-sketch serve --requests 1000"
+                 \tntk-sketch train --family protein --method ntkrf --save m1 --checkpoint-every 1\n\
+                 \tntk-sketch train --resume\n\
+                 \tntk-sketch predict --model m1\n\
+                 \tntk-sketch serve --model m1 --requests 1000\n\
+                 \tntk-sketch models"
             );
         }
     }
+}
+
+fn fail(e: impl std::fmt::Display) -> ! {
+    eprintln!("error: {e}");
+    std::process::exit(1);
+}
+
+fn registry_from(args: &Args) -> Registry {
+    match args.get("models-dir") {
+        Some(p) => Registry::open(p),
+        None => Registry::open(Registry::default_root()),
+    }
+}
+
+/// `--version` as an explicit registry version; accepts both `3` and the
+/// `v3` form the registry itself prints. Unparseable input is a refusal,
+/// never a silent fall-through to `LATEST`.
+fn version_arg(args: &Args) -> Option<u32> {
+    args.get("version").map(|s| {
+        s.strip_prefix('v').unwrap_or(s).parse::<u32>().unwrap_or_else(|_| {
+            fail(format!("bad --version `{s}` (expected an integer like 3 or v3)"))
+        })
+    })
 }
 
 fn info() {
@@ -55,6 +103,9 @@ fn info() {
         ),
         Err(err) => println!("no artifact loaded ({err}); run `make artifacts`"),
     }
+    let registry = Registry::open(Registry::default_root());
+    let entries = registry.list();
+    println!("model registry: {} ({} models)", registry.root().display(), entries.len());
 }
 
 /// Returns false (after printing why) when this build has no PJRT
@@ -96,42 +147,310 @@ fn kernel(args: &Args) {
     }
 }
 
-fn parse_family(name: &str) -> UciFamily {
-    match name {
-        "millionsongs" => UciFamily::MillionSongs,
-        "workloads" => UciFamily::WorkLoads,
-        "ct" => UciFamily::CtSlices,
-        _ => UciFamily::Protein,
+/// Accepts both the CLI short form (`protein`) and the persisted
+/// `meta.dataset` form (`protein-like`). Unknown names are an error —
+/// never a silent fallback (a typo'd `--family`, or a model whose
+/// dataset this CLI cannot regenerate, must not evaluate against the
+/// wrong distribution).
+fn parse_family(name: &str) -> Result<UciFamily, String> {
+    match name.trim_end_matches("-like") {
+        "millionsongs" => Ok(UciFamily::MillionSongs),
+        "workloads" => Ok(UciFamily::WorkLoads),
+        "ct" => Ok(UciFamily::CtSlices),
+        "protein" => Ok(UciFamily::Protein),
+        other => Err(format!(
+            "unknown dataset family `{other}` (known: millionsongs, workloads, ct, protein)"
+        )),
+    }
+}
+
+/// Resolve a CLI method name + args into a reconstructible spec. The
+/// spec — not an ad-hoc construction — is the single source of the
+/// featurizer for both the CV path and the persistent path, so what gets
+/// saved is exactly what was trained.
+fn build_spec(method: &str, ds: &Dataset, m: usize, depth: usize, args: &Args) -> FeaturizerSpec {
+    let d = ds.d();
+    let seed = args.u64("seed", 7);
+    match method {
+        "rff" => {
+            // the median heuristic is resolved here, once; the spec
+            // stores the concrete bandwidth
+            let mut srng = Rng::new(seed + 1);
+            let sigma = Rff::median_sigma(&ds.x, &mut srng);
+            FeaturizerSpec::Rff { d, m, sigma, seed: seed + 2 }
+        }
+        "ntksketch" => {
+            let c = NtkSketchConfig::for_budget(depth, m);
+            FeaturizerSpec::NtkSketch {
+                d,
+                depth: c.depth,
+                p1: c.p1,
+                p0: c.p0,
+                r: c.r,
+                s: c.s,
+                m_inner: c.m_inner,
+                s_out: c.s_out,
+                osnap: match c.leaf {
+                    LeafMode::Osnap(s) => s as u64,
+                    LeafMode::Srht => 0,
+                },
+                seed: seed + 1,
+            }
+        }
+        "ntkpoly" => FeaturizerSpec::NtkPolySketch {
+            d,
+            depth,
+            deg: args.usize("deg", 8),
+            m_inner: m,
+            m_out: m,
+            seed: seed + 1,
+        },
+        "gradrf" => FeaturizerSpec::GradRfMlp {
+            d,
+            depth: depth.max(1),
+            width: GradRfMlp::width_for_feature_dim(d, depth.max(1), m),
+            seed: seed + 1,
+        },
+        "ntkrf" => {
+            let c = NtkRfConfig::for_budget(depth, m);
+            FeaturizerSpec::NtkRf {
+                d,
+                depth: c.depth,
+                m0: c.m0,
+                m1: c.m1,
+                ms: c.ms,
+                leverage_sweeps: args.u64("leverage-sweeps", 0),
+                seed: seed + 1,
+            }
+        }
+        // a typo'd --method must refuse, not silently train (and
+        // persist) a different family than the operator asked for
+        other => fail(format!(
+            "unknown --method `{other}` (known: rff, ntksketch, ntkpoly, gradrf, ntkrf)"
+        )),
     }
 }
 
 fn train(args: &Args) {
-    let fam = parse_family(args.get_or("family", "protein"));
+    // `--resume NAME` parses as an option with a value — accept it as
+    // naturally as the documented bare `--resume [--save NAME]` form
+    if args.flag("resume") || args.get("resume").is_some() || args.get("save").is_some() {
+        train_persistent(args);
+        return;
+    }
+    let fam = parse_family(args.get_or("family", "protein")).unwrap_or_else(|e| fail(e));
     let n = args.usize("n", 1000);
     let m = args.usize("m", 1024);
     let lambda = args.f64("lambda", 1e-3);
     let method = args.get_or("method", "ntkrf");
     let depth = args.usize("depth", 1);
     let ds = uci_like::generate(fam, n, args.u64("seed", 7));
-    let mut rng = Rng::new(args.u64("seed", 7) + 1);
-    let f: Box<dyn Featurizer> = match method {
-        "rff" => {
-            let sigma = Rff::median_sigma(&ds.x, &mut rng);
-            Box::new(Rff::new(ds.d(), m, sigma, &mut rng))
-        }
-        "ntksketch" => {
-            Box::new(NtkSketch::new(ds.d(), NtkSketchConfig::for_budget(depth, m), &mut rng))
-        }
-        _ => Box::new(NtkRf::new(ds.d(), NtkRfConfig::for_budget(depth, m), &mut rng)),
-    };
+    let spec = build_spec(method, &ds, m, depth, args);
+    let f = spec.build();
     let t = std::time::Instant::now();
     let e = kfold_mse(&ds, |x| f.transform(x), lambda, 4, 9);
     println!(
-        "{} n={n} method={method} m={} lambda={lambda}: 4-fold MSE = {e:.4} ({:.2}s)",
+        "{} n={n} method={} m={} lambda={lambda}: 4-fold MSE = {e:.4} ({:.2}s)",
         fam.name(),
+        f.name(),
         f.dim(),
         t.elapsed().as_secs_f64()
     );
+}
+
+/// The persistent path: stream the fit in fixed batches, checkpoint the
+/// normal equations every K batches, and save (spec + ridge weights +
+/// golden rows) to the registry. `--resume` restores the checkpointed
+/// accumulator and the deterministic data stream and continues exactly
+/// where the interrupted run stopped.
+fn train_persistent(args: &Args) {
+    let registry = registry_from(args);
+    let stop_after = args.usize("stop-after-batches", 0);
+    let t0 = std::time::Instant::now();
+
+    let (name, spec, mut reg, mut meta, n_total, batch_rows, ckpt_every, fresh_ds) =
+        if args.flag("resume") || args.get("resume").is_some() {
+            // `--resume NAME` names the checkpoint directly; bare
+            // `--resume` takes --save NAME or the registry-wide unique one
+            let want = args.get("resume").or_else(|| args.get("save"));
+            let (name, ck) = registry.find_checkpoint(want).unwrap_or_else(|e| fail(e));
+            let reg = ck.restore_regressor().unwrap_or_else(|e| fail(e));
+            println!(
+                "resuming `{name}` from checkpoint: {}/{} rows accumulated",
+                reg.n_seen, ck.n_total
+            );
+            // the data stream and featurizer are pinned by the checkpoint
+            // (anything else would break bit-identity with the
+            // uninterrupted run) — warn instead of silently dropping
+            // operator overrides
+            for flag in ["family", "method", "n", "m", "depth", "batch", "seed"] {
+                if args.get(flag).is_some() {
+                    eprintln!(
+                        "warning: --{flag} is ignored on --resume \
+                         (pinned by the checkpoint)"
+                    );
+                }
+            }
+            // keep the interrupted run's checkpoint cadence unless the
+            // operator explicitly overrides it
+            let ckpt_every = args.usize("checkpoint-every", ck.ckpt_every as usize);
+            (
+                name,
+                ck.spec,
+                reg,
+                ck.meta.clone(),
+                ck.n_total as usize,
+                ck.batch_rows as usize,
+                ckpt_every,
+                None,
+            )
+        } else {
+            let name = args.get("save").unwrap().to_string();
+            let fam =
+                parse_family(args.get_or("family", "protein")).unwrap_or_else(|e| fail(e));
+            let n = args.usize("n", 1000);
+            let m = args.usize("m", 1024);
+            let depth = args.usize("depth", 1);
+            let method = args.get_or("method", "ntkrf");
+            let seed = args.u64("seed", 7);
+            let lambda = args.f64("lambda", 1e-3);
+            // a fresh --save supersedes any interrupted run under the
+            // same name; drop its checkpoint so a later --resume cannot
+            // resurrect abandoned training state
+            registry.clear_checkpoint(&name).unwrap_or_else(|e| fail(e));
+            let ds = uci_like::generate(fam, n, seed);
+            let spec = build_spec(method, &ds, m, depth, args);
+            let meta = ModelMeta {
+                name: name.clone(),
+                version: 0,
+                family: spec.family().to_string(),
+                dataset: fam.name().to_string(),
+                data_seed: seed,
+                lambda,
+                n_seen: 0,
+                input_dim: spec.input_dim(),
+                feature_dim: spec.feature_dim(),
+                outputs: 1,
+            };
+            let reg = RidgeRegressor::new(spec.feature_dim(), 1);
+            let batch_rows = args.usize("batch", 128);
+            (name, spec, reg, meta, n, batch_rows, args.usize("checkpoint-every", 0), Some(ds))
+        };
+    // λ only enters at the final solve, so overriding it on resume is
+    // safe (the accumulated stream is untouched)
+    meta.lambda = args.f64("lambda", meta.lambda);
+
+    // deterministic data stream: (family, n_total, data_seed) fully
+    // defines every batch, so resume sees byte-identical shards (the
+    // fresh path already generated it for spec resolution)
+    let ds = fresh_ds.unwrap_or_else(|| {
+        let fam = parse_family(&meta.dataset).unwrap_or_else(|e| fail(e));
+        uci_like::generate(fam, n_total, meta.data_seed)
+    });
+    let y = ds.y_mat();
+    let f = spec.build();
+    assert_eq!(ds.d(), spec.input_dim(), "dataset dim changed under a checkpoint");
+
+    let mut lo = reg.n_seen;
+    let mut batches_done = lo / batch_rows;
+    // --stop-after-batches counts batches run by *this process*, so a
+    // resumed run processes the requested amount before yielding again
+    let batches_at_start = batches_done;
+    while lo < n_total {
+        let hi = (lo + batch_rows).min(n_total);
+        let feats = f.transform(&ds.x.slice_rows(lo, hi));
+        reg.add_batch(&feats, &y.slice_rows(lo, hi));
+        batches_done += 1;
+        lo = hi;
+        let at_boundary = ckpt_every > 0 && batches_done % ckpt_every == 0 && lo < n_total;
+        if at_boundary {
+            let ck = TrainCheckpoint::capture(
+                meta.clone(),
+                spec.clone(),
+                n_total as u64,
+                batch_rows as u64,
+                ckpt_every as u64,
+                &reg,
+            );
+            registry.save_checkpoint(&ck).unwrap_or_else(|e| fail(e));
+            println!("checkpoint: {lo}/{n_total} rows ({batches_done} batches)");
+        }
+        if stop_after > 0 && batches_done - batches_at_start >= stop_after && lo < n_total {
+            println!(
+                "stopping after {batches_done} batches as requested \
+                 (checkpoint {}; resume with `train --resume`)",
+                if at_boundary { "saved" } else { "NOT saved — lower --checkpoint-every" }
+            );
+            return;
+        }
+    }
+    reg.solve(meta.lambda).unwrap_or_else(|e| fail(e));
+    let weights = reg.weights().expect("solved").clone();
+    let saved = SavedModel::new(
+        &name,
+        &meta.dataset,
+        meta.data_seed,
+        meta.lambda,
+        reg.n_seen as u64,
+        spec.clone(),
+        weights,
+        &f,
+    );
+    let version = registry.save(&saved).unwrap_or_else(|e| fail(e));
+    registry.clear_checkpoint(&name).unwrap_or_else(|e| fail(e));
+    let bytes = std::fs::metadata(registry.artifact_path(&name, version))
+        .map(|m| m.len())
+        .unwrap_or(0);
+    println!(
+        "saved model {name} v{version}: {} rows → {} ({} bytes on disk, \
+         materialized featurizer ≈ {} bytes; {:.2}s total)",
+        reg.n_seen,
+        saved.meta.banner(),
+        bytes,
+        spec.materialized_bytes(),
+        t0.elapsed().as_secs_f64()
+    );
+}
+
+fn predict(args: &Args) {
+    let registry = registry_from(args);
+    let name = args.get("model").unwrap_or_else(|| fail("predict needs --model NAME"));
+    let version = version_arg(args);
+    let saved = registry.load(name, version).unwrap_or_else(|e| fail(e));
+    let model = saved.build().unwrap_or_else(|e| fail(e));
+    println!("{}", model.meta.banner());
+    let fam = parse_family(&model.meta.dataset).unwrap_or_else(|e| fail(e));
+    let n = args.usize("n", 256);
+    let seed = args.u64("seed", model.meta.data_seed + 1000);
+    let ds = uci_like::generate(fam, n, seed);
+    if ds.d() != model.meta.input_dim {
+        fail(format!(
+            "dataset {} has d={}, model expects {}",
+            fam.name(),
+            ds.d(),
+            model.meta.input_dim
+        ));
+    }
+    let t = std::time::Instant::now();
+    let pred = model.predict(&ds.x);
+    let secs = t.elapsed().as_secs_f64();
+    let e = mse(&pred, &ds.y_mat());
+    let head: Vec<String> =
+        pred.data.iter().take(4).map(|v| format!("{v:.6}")).collect();
+    println!("eval: n={n} seed={seed} mse={e:.6} ({:.1} rows/ms)", n as f64 / (secs * 1e3));
+    println!("pred[0..4] = [{}]", head.join(", "));
+    print_pred_crc(&pred.data);
+}
+
+/// Bit-level fingerprint of a prediction vector — two processes serving
+/// the same model must print the same line (CI diffs it across fresh
+/// processes, so `predict` and `serve` must share this exact format).
+fn print_pred_crc(pred: &[f32]) {
+    let mut bytes = Vec::with_capacity(pred.len() * 4);
+    for v in pred {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    println!("pred crc32 = {:08x}", crc32(&bytes));
 }
 
 struct PjrtBackend {
@@ -154,6 +473,10 @@ impl BatchBackend for PjrtBackend {
 }
 
 fn serve(args: &Args) {
+    if let Some(name) = args.get("model") {
+        serve_model(args, name);
+        return;
+    }
     if !pjrt_ready("serve") {
         return;
     }
@@ -178,4 +501,71 @@ fn serve(args: &Args) {
     println!("{}", server.metrics.summary());
     drop(client);
     server.join();
+}
+
+/// Serve a durable model from the registry: the reconstructed featurizer
+/// + ridge weights run behind the coordinator as a `NativeBackend`, so
+/// responses are predictions and every worker shares one verified model.
+fn serve_model(args: &Args, name: &str) {
+    let registry = registry_from(args);
+    let version = version_arg(args);
+    let saved = registry.load(name, version).unwrap_or_else(|e| fail(e));
+    let model = Arc::new(saved.build().unwrap_or_else(|e| fail(e)));
+    println!("serving {}", model.meta.banner());
+    let d = model.meta.input_dim;
+    let batch = args.usize("batch", 64);
+    let m2 = model.clone();
+    let (server, client) = FeatureServer::start(
+        move || NativeBackend { featurizer: m2.clone(), batch, input_dim: d },
+        args.usize("workers", 2),
+        // match the flush threshold to the backend batch (the server
+        // clamps to min(backend.batch, max_batch) anyway; aligning them
+        // avoids padding every flush when --batch > the default 64)
+        BatchPolicy { max_batch: batch, ..BatchPolicy::default() },
+        32,
+    );
+    let n_req = args.usize("requests", 1000);
+    let fam = parse_family(&model.meta.dataset).unwrap_or_else(|e| fail(e));
+    let ds = uci_like::generate(fam, n_req.min(4096), model.meta.data_seed + 2000);
+    let t = std::time::Instant::now();
+    let rxs: Vec<_> =
+        (0..n_req).map(|i| client.submit(ds.x.row(i % ds.n()).to_vec())).collect();
+    let mut pred = Vec::with_capacity(n_req);
+    for rx in rxs {
+        pred.extend(rx.recv().expect("response"));
+    }
+    let secs = t.elapsed().as_secs_f64();
+    println!("{n_req} predictions in {secs:.2}s = {:.0} req/s", n_req as f64 / secs);
+    print_pred_crc(&pred);
+    println!("{}", server.metrics.summary());
+    drop(client);
+    server.join();
+}
+
+fn models_cmd(args: &Args) {
+    let registry = registry_from(args);
+    if let Some(name) = args.get("gc") {
+        let keep = args.usize("keep", 2);
+        let removed = registry.gc(name, keep).unwrap_or_else(|e| fail(e));
+        println!(
+            "gc {name}: removed {} version(s) {:?}, kept newest {keep}",
+            removed.len(),
+            removed
+        );
+        return;
+    }
+    let entries = registry.list();
+    println!("registry {} — {} model(s)", registry.root().display(), entries.len());
+    for e in entries {
+        let ck = if registry.checkpoint_path(&e.name).exists() {
+            " [checkpoint pending]"
+        } else {
+            ""
+        };
+        let latest = match e.latest {
+            Some(v) => format!("latest v{v} ({} bytes)", e.latest_bytes),
+            None => "no saved versions".to_string(),
+        };
+        println!("  {}: {} version(s), {latest}{ck}", e.name, e.versions.len());
+    }
 }

@@ -1,0 +1,155 @@
+//! Streaming-fit checkpoints: the ridge accumulator's state serialized
+//! mid-pass so an interrupted fit over a sharded dataset resumes
+//! **bit-identically** to an uninterrupted run.
+//!
+//! What makes that possible (and what this file relies on):
+//! `RidgeRegressor` accumulates the normal equations per batch — the
+//! lower triangle of ΨᵀΨ in f64 plus ΨᵀY in f64 — and every lower
+//! triangle entry is a sum of per-batch contributions added in batch
+//! order. Saving (lower triangle, ΨᵀY, n_seen) at a batch boundary and
+//! restoring it therefore reproduces the exact f64 accumulation state;
+//! entries above the diagonal are scratch (straddling-tile partials from
+//! the SYRK) and are deliberately *not* saved — the mirror at solve time
+//! rebuilds them from the lower triangle either way.
+
+use super::codec::{put_f64s, Container, Dec, ModelError, Record};
+use super::spec::FeaturizerSpec;
+use super::ModelMeta;
+use crate::regression::RidgeRegressor;
+
+const SEC_META: [u8; 4] = *b"META";
+const SEC_SPEC: [u8; 4] = *b"SPEC";
+const SEC_GRAM: [u8; 4] = *b"GRAM";
+const SEC_XTY: [u8; 4] = *b"XTY0";
+
+const FORMAT_CHECKPOINT: &str = "checkpoint";
+
+/// A resumable snapshot of a streaming `train --save` run.
+#[derive(Debug, Clone)]
+pub struct TrainCheckpoint {
+    pub meta: ModelMeta,
+    pub spec: FeaturizerSpec,
+    /// Total rows the interrupted run was fitting.
+    pub n_total: u64,
+    /// Rows per streaming batch (checkpoints land on batch boundaries).
+    pub batch_rows: u64,
+    /// Checkpoint cadence of the interrupted run (batches between
+    /// snapshots) — persisted so `train --resume` keeps checkpointing
+    /// at the same rhythm instead of silently dropping to never.
+    pub ckpt_every: u64,
+    /// Packed lower triangle of ΨᵀΨ (row-major, i ≥ j), f64.
+    pub gram_lower: Vec<f64>,
+    /// ΨᵀY flat (feature_dim × outputs, row-major), f64.
+    pub xty: Vec<f64>,
+}
+
+impl TrainCheckpoint {
+    /// Snapshot a live accumulator. `meta.n_seen` is taken from the
+    /// regressor, not the caller.
+    pub fn capture(
+        mut meta: ModelMeta,
+        spec: FeaturizerSpec,
+        n_total: u64,
+        batch_rows: u64,
+        ckpt_every: u64,
+        reg: &RidgeRegressor,
+    ) -> TrainCheckpoint {
+        meta.n_seen = reg.n_seen as u64;
+        TrainCheckpoint {
+            meta,
+            spec,
+            n_total,
+            batch_rows,
+            ckpt_every,
+            gram_lower: reg.gram_lower_packed(),
+            xty: reg.xty_flat().to_vec(),
+        }
+    }
+
+    /// Rebuild the accumulator exactly as it was at capture time.
+    pub fn restore_regressor(&self) -> Result<RidgeRegressor, ModelError> {
+        RidgeRegressor::restore(
+            self.meta.feature_dim,
+            self.meta.outputs,
+            &self.gram_lower,
+            &self.xty,
+            self.meta.n_seen as usize,
+        )
+        .map_err(ModelError::Invalid)
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut c = Container::new();
+        let mut meta = Vec::new();
+        let mut rec = self.meta.to_record(FORMAT_CHECKPOINT);
+        rec.set_u64("n_total", self.n_total);
+        rec.set_u64("batch_rows", self.batch_rows);
+        rec.set_u64("ckpt_every", self.ckpt_every);
+        rec.encode(&mut meta);
+        c.add(SEC_META, meta);
+        let mut spec = Vec::new();
+        self.spec.to_record().encode(&mut spec);
+        c.add(SEC_SPEC, spec);
+        let mut gram = Vec::new();
+        put_f64s(&mut gram, &self.gram_lower);
+        c.add(SEC_GRAM, gram);
+        let mut xty = Vec::new();
+        put_f64s(&mut xty, &self.xty);
+        c.add(SEC_XTY, xty);
+        c.to_bytes()
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<TrainCheckpoint, ModelError> {
+        let c = Container::from_bytes(bytes)?;
+        let rec = Record::decode(&mut Dec::new(c.section(SEC_META)?, "META"))?;
+        let meta = ModelMeta::from_record(&rec, FORMAT_CHECKPOINT)?;
+        let n_total = rec.u64("n_total")?;
+        let batch_rows = rec.u64("batch_rows")?;
+        let ckpt_every = rec.u64("ckpt_every")?;
+        let spec = FeaturizerSpec::from_record(&Record::decode(&mut Dec::new(
+            c.section(SEC_SPEC)?,
+            "SPEC",
+        ))?)?;
+        let gram_lower = Dec::new(c.section(SEC_GRAM)?, "GRAM").f64s()?;
+        let xty = Dec::new(c.section(SEC_XTY)?, "XTY0").f64s()?;
+        // meta must agree with the spec it travels with — the restored
+        // accumulator feeds features from the reconstructed featurizer,
+        // and a mismatch must be a refusal here, not an assert later
+        if meta.feature_dim != spec.feature_dim() || meta.input_dim != spec.input_dim() {
+            return Err(ModelError::Invalid(format!(
+                "checkpoint meta dims {}→{} disagree with spec dims {}→{}",
+                meta.input_dim,
+                meta.feature_dim,
+                spec.input_dim(),
+                spec.feature_dim()
+            )));
+        }
+        let m = meta.feature_dim;
+        let tri = m
+            .checked_add(1)
+            .and_then(|m1| m.checked_mul(m1))
+            .map(|t| t / 2)
+            .ok_or_else(|| ModelError::Invalid(format!("feature_dim {m} too large")))?;
+        if gram_lower.len() != tri {
+            return Err(ModelError::Invalid(format!(
+                "checkpoint gram triangle has {} entries, feature_dim {m} needs {tri}",
+                gram_lower.len(),
+            )));
+        }
+        let expect_xty = m.checked_mul(meta.outputs).ok_or_else(|| {
+            ModelError::Invalid(format!("feature_dim {m} × outputs {} too large", meta.outputs))
+        })?;
+        if xty.len() != expect_xty {
+            return Err(ModelError::Invalid(format!(
+                "checkpoint xty has {} entries, expected {expect_xty}",
+                xty.len(),
+            )));
+        }
+        if batch_rows == 0 || meta.n_seen > n_total {
+            return Err(ModelError::Invalid(
+                "checkpoint progress fields inconsistent".into(),
+            ));
+        }
+        Ok(TrainCheckpoint { meta, spec, n_total, batch_rows, ckpt_every, gram_lower, xty })
+    }
+}

@@ -1,0 +1,602 @@
+//! `.ntkm` binary container — the persistence substrate of the model
+//! store (DESIGN.md §8).
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! header   16 B : magic "NTKM" | format version u16 | reserved u16
+//!                 | section count u32 | reserved u32
+//! table    24 B × count : tag [u8;4] | crc32 u32 | offset u64 | len u64
+//! payloads      : section bytes at the recorded offsets
+//! ```
+//!
+//! Every section payload carries its own CRC32 (IEEE, hand-rolled — the
+//! offline registry has no crc crate) verified up front by
+//! [`Container::from_bytes`], so a flipped byte anywhere in a payload is
+//! a readable [`ModelError::CrcMismatch`], never a garbage model. Within
+//! payloads, [`Dec`] decodes primitives/tensors with bounds checks
+//! (truncation is an error, not a panic), and [`Record`] provides a
+//! key-tagged scalar map so specs can evolve without reshuffling fixed
+//! offsets.
+
+use crate::tensor::Mat;
+use std::path::Path;
+
+/// File magic: the first four bytes of every model-store artifact.
+pub const MAGIC: [u8; 4] = *b"NTKM";
+/// Current (and only) container format version this build writes/reads.
+pub const FORMAT_VERSION: u16 = 1;
+
+// ------------------------------------------------------------- errors --
+
+/// Everything that can go wrong reading or writing a model artifact.
+/// Each variant renders a self-contained, actionable message — load
+/// failures surface to the CLI verbatim.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ModelError {
+    Io(String),
+    BadMagic { found: [u8; 4] },
+    UnsupportedVersion { found: u16, supported: u16 },
+    Truncated { what: String },
+    CrcMismatch { section: String },
+    MissingSection { section: String },
+    Invalid(String),
+}
+
+impl std::fmt::Display for ModelError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ModelError::Io(e) => write!(f, "model store I/O error: {e}"),
+            ModelError::BadMagic { found } => write!(
+                f,
+                "not a model file: magic {:02x?} (expected \"NTKM\")",
+                found
+            ),
+            ModelError::UnsupportedVersion { found, supported } => write!(
+                f,
+                "model format version {found} is not supported by this build \
+                 (supports up to {supported}); re-save the model or upgrade"
+            ),
+            ModelError::Truncated { what } => {
+                write!(f, "model file truncated while reading {what}")
+            }
+            ModelError::CrcMismatch { section } => write!(
+                f,
+                "model file corrupt: CRC mismatch in section `{section}`"
+            ),
+            ModelError::MissingSection { section } => {
+                write!(f, "model file incomplete: missing section `{section}`")
+            }
+            ModelError::Invalid(msg) => write!(f, "invalid model data: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ModelError {}
+
+impl From<std::io::Error> for ModelError {
+    fn from(e: std::io::Error) -> ModelError {
+        ModelError::Io(e.to_string())
+    }
+}
+
+// -------------------------------------------------------------- crc32 --
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// CRC-32 (IEEE 802.3, the zlib polynomial).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = (c >> 8) ^ CRC_TABLE[((c ^ b as u32) & 0xFF) as usize];
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------- container --
+
+/// An in-memory `.ntkm` container: an ordered list of tagged sections.
+#[derive(Debug, Clone)]
+pub struct Container {
+    pub version: u16,
+    sections: Vec<([u8; 4], Vec<u8>)>,
+}
+
+impl Default for Container {
+    fn default() -> Self {
+        Container::new()
+    }
+}
+
+impl Container {
+    pub fn new() -> Container {
+        Container { version: FORMAT_VERSION, sections: Vec::new() }
+    }
+
+    /// Append a section. Duplicate tags are not rewrites: `section()`
+    /// returns the first match, so writers must add each tag once.
+    pub fn add(&mut self, tag: [u8; 4], payload: Vec<u8>) {
+        self.sections.push((tag, payload));
+    }
+
+    /// Payload of the section with `tag`.
+    pub fn section(&self, tag: [u8; 4]) -> Result<&[u8], ModelError> {
+        self.sections
+            .iter()
+            .find(|(t, _)| *t == tag)
+            .map(|(_, p)| p.as_slice())
+            .ok_or_else(|| ModelError::MissingSection {
+                section: tag_name(tag),
+            })
+    }
+
+    /// Serialize: header, section table, payloads (CRCs computed here).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let count = self.sections.len();
+        let header_len = 16 + 24 * count;
+        let total: usize =
+            header_len + self.sections.iter().map(|(_, p)| p.len()).sum::<usize>();
+        let mut out = Vec::with_capacity(total);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&self.version.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes());
+        out.extend_from_slice(&(count as u32).to_le_bytes());
+        out.extend_from_slice(&0u32.to_le_bytes());
+        let mut offset = header_len as u64;
+        for (tag, payload) in &self.sections {
+            out.extend_from_slice(tag);
+            out.extend_from_slice(&crc32(payload).to_le_bytes());
+            out.extend_from_slice(&offset.to_le_bytes());
+            out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            offset += payload.len() as u64;
+        }
+        for (_, payload) in &self.sections {
+            out.extend_from_slice(payload);
+        }
+        out
+    }
+
+    /// Parse and fully validate (magic, version, bounds, every CRC).
+    pub fn from_bytes(bytes: &[u8]) -> Result<Container, ModelError> {
+        if bytes.len() < 16 {
+            return Err(ModelError::Truncated { what: "header".into() });
+        }
+        let found: [u8; 4] = bytes[0..4].try_into().unwrap();
+        if found != MAGIC {
+            return Err(ModelError::BadMagic { found });
+        }
+        let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
+        if version == 0 || version > FORMAT_VERSION {
+            return Err(ModelError::UnsupportedVersion {
+                found: version,
+                supported: FORMAT_VERSION,
+            });
+        }
+        let count = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let table_end = 16usize
+            .checked_add(count.checked_mul(24).ok_or_else(|| ModelError::Invalid(
+                "section count overflows".into(),
+            ))?)
+            .ok_or_else(|| ModelError::Invalid("section table overflows".into()))?;
+        if bytes.len() < table_end {
+            return Err(ModelError::Truncated { what: "section table".into() });
+        }
+        let mut sections = Vec::with_capacity(count);
+        for s in 0..count {
+            let e = 16 + 24 * s;
+            let tag: [u8; 4] = bytes[e..e + 4].try_into().unwrap();
+            let crc = u32::from_le_bytes(bytes[e + 4..e + 8].try_into().unwrap());
+            let off = u64::from_le_bytes(bytes[e + 8..e + 16].try_into().unwrap());
+            let len = u64::from_le_bytes(bytes[e + 16..e + 24].try_into().unwrap());
+            let end = off.checked_add(len).ok_or_else(|| {
+                ModelError::Invalid(format!("section `{}` range overflows", tag_name(tag)))
+            })?;
+            if end > bytes.len() as u64 || off < table_end as u64 {
+                return Err(ModelError::Truncated { what: format!("section `{}`", tag_name(tag)) });
+            }
+            let payload = &bytes[off as usize..end as usize];
+            if crc32(payload) != crc {
+                return Err(ModelError::CrcMismatch { section: tag_name(tag) });
+            }
+            sections.push((tag, payload.to_vec()));
+        }
+        Ok(Container { version, sections })
+    }
+
+    /// Write atomically: serialize to `<path>.tmp`, then rename over.
+    pub fn write(&self, path: &Path) -> Result<(), ModelError> {
+        write_atomic(path, &self.to_bytes())
+    }
+
+    pub fn read(path: &Path) -> Result<Container, ModelError> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| ModelError::Io(format!("{}: {e}", path.display())))?;
+        Container::from_bytes(&bytes)
+    }
+}
+
+/// The store's one crash-safe write path: create parent dirs, write and
+/// **fsync** `<path>.tmp`, rename over `path`, then best-effort fsync
+/// the parent directory. Everything that persists an artifact
+/// (versioned models, checkpoints, `LATEST` pointers) goes through here
+/// so the tmp+rename+sync sequence can never diverge. The file fsync
+/// before rename matters: journaling filesystems may commit the rename
+/// before the data blocks, and a post-crash artifact that exists but is
+/// truncated would read as corruption after the recovery checkpoint was
+/// already cleared.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<(), ModelError> {
+    use std::io::Write;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    // unique per process+call: concurrent writers to the same target
+    // (e.g. two saves advancing one LATEST pointer) must not truncate
+    // each other's in-flight tmp
+    static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+    let dir = path.parent().filter(|p| !p.as_os_str().is_empty());
+    if let Some(d) = dir {
+        std::fs::create_dir_all(d)?;
+    }
+    let tmp = path.with_extension(format!(
+        "tmp.{}.{}",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)?;
+    // make the rename itself durable; best-effort (directory handles
+    // cannot be fsynced on every platform)
+    if let Some(d) = dir {
+        if let Ok(dh) = std::fs::File::open(d) {
+            let _ = dh.sync_all();
+        }
+    }
+    Ok(())
+}
+
+fn tag_name(tag: [u8; 4]) -> String {
+    tag.iter().map(|&b| if b.is_ascii_graphic() { b as char } else { '?' }).collect()
+}
+
+// --------------------------------------------------------- primitives --
+
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// f32 matrix: u32 rows, u32 cols, then rows·cols f32 LE.
+pub fn put_mat_f32(buf: &mut Vec<u8>, m: &Mat) {
+    put_u32(buf, m.rows as u32);
+    put_u32(buf, m.cols as u32);
+    buf.reserve(m.data.len() * 4);
+    for &v in &m.data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// f64 slice: u64 len, then len f64 LE.
+pub fn put_f64s(buf: &mut Vec<u8>, v: &[f64]) {
+    put_u64(buf, v.len() as u64);
+    buf.reserve(v.len() * 8);
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Bounds-checked little-endian reader over a section payload.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    /// Section name for error messages.
+    ctx: &'static str,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8], ctx: &'static str) -> Dec<'a> {
+        Dec { buf, pos: 0, ctx }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ModelError> {
+        let end = self.pos.checked_add(n).ok_or_else(|| ModelError::Truncated {
+            what: self.ctx.to_string(),
+        })?;
+        if end > self.buf.len() {
+            return Err(ModelError::Truncated { what: self.ctx.to_string() });
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, ModelError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, ModelError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, ModelError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, ModelError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> Result<String, ModelError> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| ModelError::Invalid(format!("non-utf8 string in {}", self.ctx)))
+    }
+
+    pub fn mat_f32(&mut self) -> Result<Mat, ModelError> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let n = rows
+            .checked_mul(cols)
+            .and_then(|n| n.checked_mul(4).map(|_| n))
+            .ok_or_else(|| {
+                ModelError::Invalid(format!("tensor shape overflows in {}", self.ctx))
+            })?;
+        let bytes = self.take(n * 4)?;
+        let mut data = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            data.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+
+    pub fn f64s(&mut self) -> Result<Vec<f64>, ModelError> {
+        let n = self.u64()? as usize;
+        let bytes = self.take(n.checked_mul(8).ok_or_else(|| {
+            ModelError::Invalid(format!("f64 slice length overflows in {}", self.ctx))
+        })?)?;
+        let mut data = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(8) {
+            data.push(f64::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(data)
+    }
+}
+
+// ------------------------------------------------------------- record --
+
+/// A tagged scalar value inside a [`Record`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    U64(u64),
+    F64(f64),
+    Str(String),
+}
+
+/// An ordered key→scalar map — the encoding of specs and metadata.
+/// Unknown keys are preserved (forward compatibility within a format
+/// version); missing keys are readable errors.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Record(pub Vec<(String, Value)>);
+
+impl Record {
+    pub fn new() -> Record {
+        Record(Vec::new())
+    }
+
+    pub fn set_u64(&mut self, key: &str, v: u64) {
+        self.0.push((key.to_string(), Value::U64(v)));
+    }
+
+    pub fn set_f64(&mut self, key: &str, v: f64) {
+        self.0.push((key.to_string(), Value::F64(v)));
+    }
+
+    pub fn set_str(&mut self, key: &str, v: &str) {
+        self.0.push((key.to_string(), Value::Str(v.to_string())));
+    }
+
+    fn get(&self, key: &str) -> Result<&Value, ModelError> {
+        self.0
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v)
+            .ok_or_else(|| ModelError::Invalid(format!("missing field `{key}`")))
+    }
+
+    pub fn u64(&self, key: &str) -> Result<u64, ModelError> {
+        match self.get(key)? {
+            Value::U64(v) => Ok(*v),
+            _ => Err(ModelError::Invalid(format!("field `{key}` is not an integer"))),
+        }
+    }
+
+    pub fn usize(&self, key: &str) -> Result<usize, ModelError> {
+        Ok(self.u64(key)? as usize)
+    }
+
+    pub fn f64(&self, key: &str) -> Result<f64, ModelError> {
+        match self.get(key)? {
+            Value::F64(v) => Ok(*v),
+            _ => Err(ModelError::Invalid(format!("field `{key}` is not a float"))),
+        }
+    }
+
+    pub fn str(&self, key: &str) -> Result<&str, ModelError> {
+        match self.get(key)? {
+            Value::Str(v) => Ok(v),
+            _ => Err(ModelError::Invalid(format!("field `{key}` is not a string"))),
+        }
+    }
+
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        put_u32(buf, self.0.len() as u32);
+        for (k, v) in &self.0 {
+            put_str(buf, k);
+            match v {
+                Value::U64(x) => {
+                    buf.push(0);
+                    put_u64(buf, *x);
+                }
+                Value::F64(x) => {
+                    buf.push(1);
+                    put_f64(buf, *x);
+                }
+                Value::Str(x) => {
+                    buf.push(2);
+                    put_str(buf, x);
+                }
+            }
+        }
+    }
+
+    pub fn decode(dec: &mut Dec) -> Result<Record, ModelError> {
+        let n = dec.u32()? as usize;
+        let mut out = Vec::with_capacity(n.min(1024));
+        for _ in 0..n {
+            let k = dec.str()?;
+            let tag = dec.u8()?;
+            let v = match tag {
+                0 => Value::U64(dec.u64()?),
+                1 => Value::F64(dec.f64()?),
+                2 => Value::Str(dec.str()?),
+                t => {
+                    return Err(ModelError::Invalid(format!(
+                        "unknown record value tag {t} for field `{k}`"
+                    )))
+                }
+            };
+            out.push((k, v));
+        }
+        Ok(Record(out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // the canonical IEEE CRC-32 check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"NTKM"), crc32(b"NTKM"));
+        assert_ne!(crc32(b"NTKM"), crc32(b"NTKN"));
+    }
+
+    #[test]
+    fn container_round_trip() {
+        let mut c = Container::new();
+        c.add(*b"AAAA", vec![1, 2, 3]);
+        c.add(*b"BBBB", vec![]);
+        c.add(*b"CCCC", (0..=255).collect());
+        let bytes = c.to_bytes();
+        let back = Container::from_bytes(&bytes).unwrap();
+        assert_eq!(back.version, FORMAT_VERSION);
+        assert_eq!(back.section(*b"AAAA").unwrap(), &[1, 2, 3]);
+        assert_eq!(back.section(*b"BBBB").unwrap(), &[] as &[u8]);
+        assert_eq!(back.section(*b"CCCC").unwrap().len(), 256);
+        assert!(matches!(
+            back.section(*b"ZZZZ"),
+            Err(ModelError::MissingSection { .. })
+        ));
+    }
+
+    #[test]
+    fn container_rejects_corruption() {
+        let mut c = Container::new();
+        c.add(*b"DATA", (0..64).collect());
+        let bytes = c.to_bytes();
+        // bad magic
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(
+            Container::from_bytes(&bad),
+            Err(ModelError::BadMagic { .. })
+        ));
+        // future version
+        let mut bad = bytes.clone();
+        bad[4] = 0xFF;
+        assert!(matches!(
+            Container::from_bytes(&bad),
+            Err(ModelError::UnsupportedVersion { .. })
+        ));
+        // flipped payload byte → CRC
+        let mut bad = bytes.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x01;
+        assert!(matches!(
+            Container::from_bytes(&bad),
+            Err(ModelError::CrcMismatch { .. })
+        ));
+        // truncation at every prefix must error, never panic
+        for cut in [0, 3, 15, 16, 30, bytes.len() - 1] {
+            assert!(Container::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn primitives_and_record_round_trip() {
+        let mut buf = Vec::new();
+        put_str(&mut buf, "hello");
+        put_mat_f32(&mut buf, &Mat::from_vec(2, 3, vec![1.0, -2.5, 0.0, 3.25, 4.0, -0.125]));
+        put_f64s(&mut buf, &[1.0, -2.0, std::f64::consts::PI]);
+        let mut rec = Record::new();
+        rec.set_u64("n", 42);
+        rec.set_f64("lambda", 1e-3);
+        rec.set_str("family", "NTKRF");
+        rec.encode(&mut buf);
+
+        let mut dec = Dec::new(&buf, "test");
+        assert_eq!(dec.str().unwrap(), "hello");
+        let m = dec.mat_f32().unwrap();
+        assert_eq!((m.rows, m.cols), (2, 3));
+        assert_eq!(m.at(1, 2), -0.125);
+        assert_eq!(dec.f64s().unwrap()[2], std::f64::consts::PI);
+        let back = Record::decode(&mut dec).unwrap();
+        assert_eq!(back.u64("n").unwrap(), 42);
+        assert_eq!(back.f64("lambda").unwrap(), 1e-3);
+        assert_eq!(back.str("family").unwrap(), "NTKRF");
+        assert!(back.u64("missing").is_err());
+        assert!(back.str("n").is_err());
+    }
+
+    #[test]
+    fn dec_truncation_is_error_not_panic() {
+        let mut buf = Vec::new();
+        put_str(&mut buf, "hello");
+        for cut in 0..buf.len() {
+            let mut dec = Dec::new(&buf[..cut], "test");
+            assert!(dec.str().is_err(), "cut={cut}");
+        }
+    }
+}

@@ -1,0 +1,341 @@
+//! Persistent model store (DESIGN.md §8): trained pipelines as durable,
+//! versioned binary artifacts.
+//!
+//! The paper's economics — featurize once near input-sparsity time, then
+//! reuse a cheap linear model — only pay off operationally if the trained
+//! pipeline survives the process. This subsystem makes the whole
+//! featurizer+ridge pipeline a first-class artifact:
+//!
+//! - [`codec`]: the `.ntkm` container (magic, format version, CRC'd
+//!   sections) — corruption and version skew are readable refusals.
+//! - [`spec`]: featurizers saved as (constructor config, RNG seed) and
+//!   reconstructed deterministically — kilobytes of spec instead of
+//!   megabytes of random matrices, verified by golden rows on load.
+//! - [`checkpoint`]: the streaming ridge's normal equations serialized
+//!   mid-fit so an interrupted pass resumes bit-identically.
+//! - [`registry`]: a directory-backed store
+//!   (`models/<name>/v<k>/model.ntkm` + `LATEST`) with
+//!   save/load/list/gc.
+//!
+//! [`SavedModel`] is the on-disk unit; [`NativeModel`] is its runnable
+//! form (featurizer + ridge weights) and itself implements `Featurizer`
+//! (outputting predictions), so a loaded model plugs straight into the
+//! coordinator's `NativeBackend` and serves through the batched
+//! `transform_into` path.
+
+pub mod checkpoint;
+pub mod codec;
+pub mod registry;
+pub mod spec;
+
+pub use checkpoint::TrainCheckpoint;
+pub use codec::{ModelError, Record};
+pub use registry::Registry;
+pub use spec::FeaturizerSpec;
+
+use crate::features::Featurizer;
+use crate::tensor::gemm::{self, Op};
+use crate::tensor::Mat;
+use codec::{Container, Dec};
+
+const SEC_META: [u8; 4] = *b"META";
+const SEC_SPEC: [u8; 4] = *b"SPEC";
+const SEC_GOLDEN_X: [u8; 4] = *b"GLDX";
+const SEC_GOLDEN_F: [u8; 4] = *b"GLDF";
+const SEC_WEIGHTS: [u8; 4] = *b"WGTS";
+
+/// What kind of artifact a container holds (META `format` field).
+const FORMAT_MODEL: &str = "model";
+
+/// Descriptive metadata stored with every model and checkpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelMeta {
+    pub name: String,
+    /// Registry version; 0 until assigned by [`Registry::save`].
+    pub version: u32,
+    /// Featurizer family tag (e.g. "ntkrf").
+    pub family: String,
+    /// Dataset family the model was trained on (e.g. "protein-like").
+    pub dataset: String,
+    /// Seed of the training data stream (resume regenerates it).
+    pub data_seed: u64,
+    pub lambda: f64,
+    pub n_seen: u64,
+    pub input_dim: usize,
+    pub feature_dim: usize,
+    pub outputs: usize,
+}
+
+impl ModelMeta {
+    fn to_record(&self, format: &str) -> Record {
+        let mut r = Record::new();
+        r.set_str("format", format);
+        r.set_str("name", &self.name);
+        r.set_u64("version", self.version as u64);
+        r.set_str("family", &self.family);
+        r.set_str("dataset", &self.dataset);
+        r.set_u64("data_seed", self.data_seed);
+        r.set_f64("lambda", self.lambda);
+        r.set_u64("n_seen", self.n_seen);
+        r.set_u64("input_dim", self.input_dim as u64);
+        r.set_u64("feature_dim", self.feature_dim as u64);
+        r.set_u64("outputs", self.outputs as u64);
+        r
+    }
+
+    fn from_record(r: &Record, expect_format: &str) -> Result<ModelMeta, ModelError> {
+        let format = r.str("format")?;
+        if format != expect_format {
+            return Err(ModelError::Invalid(format!(
+                "artifact is a `{format}`, not a `{expect_format}`"
+            )));
+        }
+        Ok(ModelMeta {
+            name: r.str("name")?.to_string(),
+            version: r.u64("version")? as u32,
+            family: r.str("family")?.to_string(),
+            dataset: r.str("dataset")?.to_string(),
+            data_seed: r.u64("data_seed")?,
+            lambda: r.f64("lambda")?,
+            n_seen: r.u64("n_seen")?,
+            input_dim: r.usize("input_dim")?,
+            feature_dim: r.usize("feature_dim")?,
+            outputs: r.usize("outputs")?,
+        })
+    }
+
+    /// One-line human description printed by `predict`/`serve`.
+    pub fn banner(&self) -> String {
+        format!(
+            "model {} v{}: family={} dataset={} dims {}→{}→{} (trained on {} rows, lambda={:e})",
+            self.name,
+            self.version,
+            self.family,
+            self.dataset,
+            self.input_dim,
+            self.feature_dim,
+            self.outputs,
+            self.n_seen,
+            self.lambda,
+        )
+    }
+}
+
+/// The on-disk unit: spec + ridge weights + golden rows + metadata.
+/// Weights are the only tensor blob — the featurizer is kilobytes of
+/// spec (see [`spec`] for the size argument).
+#[derive(Debug, Clone)]
+pub struct SavedModel {
+    pub meta: ModelMeta,
+    pub spec: FeaturizerSpec,
+    /// Ridge weights W (feature_dim × outputs), f32.
+    pub weights: Mat,
+    /// Golden inputs (GOLDEN_ROWS × input_dim).
+    pub golden_x: Mat,
+    /// Their features under the featurizer this model was trained with.
+    pub golden_f: Mat,
+}
+
+impl SavedModel {
+    /// Package a trained pipeline. `featurizer` must be the exact map the
+    /// weights were fit against — it computes the golden rows stored for
+    /// the load-time determinism check.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: &str,
+        dataset: &str,
+        data_seed: u64,
+        lambda: f64,
+        n_seen: u64,
+        spec: FeaturizerSpec,
+        weights: Mat,
+        featurizer: &dyn Featurizer,
+    ) -> SavedModel {
+        let golden_x = spec.golden_inputs();
+        let golden_f = featurizer.transform(&golden_x);
+        let meta = ModelMeta {
+            name: name.to_string(),
+            version: 0,
+            family: spec.family().to_string(),
+            dataset: dataset.to_string(),
+            data_seed,
+            lambda,
+            n_seen,
+            input_dim: spec.input_dim(),
+            feature_dim: weights.rows,
+            outputs: weights.cols,
+        };
+        SavedModel { meta, spec, weights, golden_x, golden_f }
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        self.to_bytes_with(self.meta.version)
+    }
+
+    /// Serialize with `version` stamped into META — lets the registry
+    /// stamp its assigned version without cloning the tensor blobs.
+    pub fn to_bytes_with(&self, version: u32) -> Vec<u8> {
+        let mut stamped = self.meta.clone();
+        stamped.version = version;
+        let mut c = Container::new();
+        let mut meta = Vec::new();
+        stamped.to_record(FORMAT_MODEL).encode(&mut meta);
+        c.add(SEC_META, meta);
+        let mut spec = Vec::new();
+        self.spec.to_record().encode(&mut spec);
+        c.add(SEC_SPEC, spec);
+        let mut gx = Vec::new();
+        codec::put_mat_f32(&mut gx, &self.golden_x);
+        c.add(SEC_GOLDEN_X, gx);
+        let mut gf = Vec::new();
+        codec::put_mat_f32(&mut gf, &self.golden_f);
+        c.add(SEC_GOLDEN_F, gf);
+        let mut w = Vec::new();
+        codec::put_mat_f32(&mut w, &self.weights);
+        c.add(SEC_WEIGHTS, w);
+        c.to_bytes()
+    }
+
+    /// Parse + structural validation (shape consistency); the golden-row
+    /// determinism check runs in [`SavedModel::build`], which is the
+    /// point where the featurizer is reconstructed anyway.
+    pub fn from_bytes(bytes: &[u8]) -> Result<SavedModel, ModelError> {
+        let c = Container::from_bytes(bytes)?;
+        let meta = ModelMeta::from_record(
+            &Record::decode(&mut Dec::new(c.section(SEC_META)?, "META"))?,
+            FORMAT_MODEL,
+        )?;
+        let spec = FeaturizerSpec::from_record(&Record::decode(&mut Dec::new(
+            c.section(SEC_SPEC)?,
+            "SPEC",
+        ))?)?;
+        let golden_x = Dec::new(c.section(SEC_GOLDEN_X)?, "GLDX").mat_f32()?;
+        let golden_f = Dec::new(c.section(SEC_GOLDEN_F)?, "GLDF").mat_f32()?;
+        let weights = Dec::new(c.section(SEC_WEIGHTS)?, "WGTS").mat_f32()?;
+        let m = SavedModel { meta, spec, weights, golden_x, golden_f };
+        m.check_shapes()?;
+        Ok(m)
+    }
+
+    fn check_shapes(&self) -> Result<(), ModelError> {
+        let (d, fd) = (self.spec.input_dim(), self.spec.feature_dim());
+        if self.meta.input_dim != d || self.meta.feature_dim != fd {
+            return Err(ModelError::Invalid(format!(
+                "meta dims {}→{} disagree with spec dims {d}→{fd}",
+                self.meta.input_dim, self.meta.feature_dim
+            )));
+        }
+        if self.weights.rows != fd || self.weights.cols != self.meta.outputs {
+            return Err(ModelError::Invalid(format!(
+                "weight shape {}×{} disagrees with {}×{}",
+                self.weights.rows, self.weights.cols, fd, self.meta.outputs
+            )));
+        }
+        if self.golden_x.cols != d || self.golden_f.cols != fd
+            || self.golden_x.rows != self.golden_f.rows
+        {
+            return Err(ModelError::Invalid("golden-row shapes inconsistent".into()));
+        }
+        Ok(())
+    }
+
+    /// Reconstruct the featurizer from its spec and verify the golden
+    /// rows bit-for-bit before handing back a runnable model. A mismatch
+    /// means the (config, seed) → feature-map contract drifted; serving
+    /// such a model would silently mis-predict, so this refuses instead.
+    pub fn build(&self) -> Result<NativeModel, ModelError> {
+        let featurizer = self.spec.build();
+        let got = featurizer.transform(&self.golden_x);
+        if got.data.len() != self.golden_f.data.len() {
+            return Err(ModelError::Invalid(
+                "golden-row check: reconstructed feature dim differs".into(),
+            ));
+        }
+        for (i, (a, b)) in got.data.iter().zip(self.golden_f.data.iter()).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(ModelError::Invalid(format!(
+                    "golden-row mismatch at flat index {i} ({a:?} vs stored {b:?}): \
+                     featurizer reconstruction is not bit-identical \
+                     (determinism drift — refusing to load)"
+                )));
+            }
+        }
+        Ok(NativeModel {
+            meta: self.meta.clone(),
+            featurizer,
+            weights: self.weights.clone(),
+        })
+    }
+}
+
+/// A loaded, runnable model: reconstructed featurizer + ridge weights.
+///
+/// Implements [`Featurizer`] with `dim() == outputs`, producing
+/// *predictions*, so it slots into `coordinator::NativeBackend`
+/// unchanged — `run_into` routes through the batched `transform_into`
+/// (features into a scratch, then one GEMM straight into the worker's
+/// output buffer; no `run`-then-copy fallback).
+pub struct NativeModel {
+    pub meta: ModelMeta,
+    pub featurizer: Box<dyn Featurizer>,
+    /// W (feature_dim × outputs).
+    pub weights: Mat,
+}
+
+thread_local! {
+    /// Features scratch for [`NativeModel::transform_into`], reused
+    /// across calls on the same thread (serving workers run fixed batch
+    /// shapes, so this allocates once per worker, not per batch).
+    static FEATS_SCRATCH: std::cell::RefCell<Mat> = std::cell::RefCell::new(Mat::zeros(0, 0));
+}
+
+impl NativeModel {
+    /// Predictions for a batch of input rows (n×d → n×outputs).
+    pub fn predict(&self, x: &Mat) -> Mat {
+        let mut out = Mat::zeros(x.rows, self.weights.cols);
+        self.transform_into(x, &mut out);
+        out
+    }
+}
+
+impl Featurizer for NativeModel {
+    fn dim(&self) -> usize {
+        self.weights.cols
+    }
+
+    fn transform(&self, x: &Mat) -> Mat {
+        self.predict(x)
+    }
+
+    fn transform_into(&self, x: &Mat, out: &mut Mat) {
+        assert_eq!(x.cols, self.meta.input_dim, "NativeModel: input dim mismatch");
+        assert_eq!(out.rows, x.rows, "NativeModel: output rows mismatch");
+        assert_eq!(out.cols, self.weights.cols, "NativeModel: output dim mismatch");
+        // per-thread features scratch: serving workers call this on a
+        // fixed batch shape forever, so steady state allocates nothing
+        // (transform_into overwrites every entry — a dirty reused buffer
+        // is part of its contract)
+        FEATS_SCRATCH.with(|cell| {
+            let mut feats = cell.borrow_mut();
+            feats.rows = x.rows;
+            feats.cols = self.weights.rows;
+            feats.data.resize(x.rows * self.weights.rows, 0.0);
+            self.featurizer.transform_into(x, &mut feats);
+            gemm::gemm(
+                x.rows,
+                self.weights.cols,
+                self.weights.rows,
+                &feats.data,
+                Op::NoTrans,
+                &self.weights.data,
+                Op::NoTrans,
+                &mut out.data,
+                false,
+            );
+        });
+    }
+
+    fn name(&self) -> &'static str {
+        "model"
+    }
+}

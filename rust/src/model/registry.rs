@@ -1,0 +1,261 @@
+//! Directory-backed model registry.
+//!
+//! Layout (root defaults to `$NTK_MODEL_DIR` or `./models`):
+//!
+//! ```text
+//! <root>/<name>/v<k>/model.ntkm     immutable versioned artifacts
+//! <root>/<name>/LATEST              text pointer: "v<k>\n"
+//! <root>/<name>/checkpoint.ntkc     in-flight streaming-fit checkpoint
+//! ```
+//!
+//! Saves are append-only (next version = max existing + 1) and atomic
+//! (tmp + rename for both the artifact and the pointer), so a crashed
+//! save never corrupts the latest pointer. `gc` trims old versions but
+//! never the one `LATEST` points at.
+
+use super::checkpoint::TrainCheckpoint;
+use super::codec::{write_atomic, ModelError};
+use super::SavedModel;
+use std::path::{Path, PathBuf};
+
+/// Handle to a registry root directory.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    root: PathBuf,
+}
+
+/// One model's registry listing.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    /// Sorted ascending.
+    pub versions: Vec<u32>,
+    pub latest: Option<u32>,
+    /// Bytes of the latest version's artifact, if present.
+    pub latest_bytes: u64,
+}
+
+fn check_name(name: &str) -> Result<(), ModelError> {
+    let ok = !name.is_empty()
+        && name.len() <= 64
+        && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_' || c == '.')
+        && !name.starts_with('.');
+    if ok {
+        Ok(())
+    } else {
+        Err(ModelError::Invalid(format!(
+            "bad model name `{name}`: use 1-64 ascii [A-Za-z0-9._-], not starting with `.`"
+        )))
+    }
+}
+
+fn parse_version(s: &str) -> Option<u32> {
+    s.strip_prefix('v')?.parse().ok()
+}
+
+impl Registry {
+    pub fn open(root: impl Into<PathBuf>) -> Registry {
+        Registry { root: root.into() }
+    }
+
+    /// `$NTK_MODEL_DIR` if set, else `./models`.
+    pub fn default_root() -> PathBuf {
+        std::env::var_os("NTK_MODEL_DIR").map(PathBuf::from).unwrap_or_else(|| "models".into())
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn model_dir(&self, name: &str) -> PathBuf {
+        self.root.join(name)
+    }
+
+    fn version_file(&self, name: &str, v: u32) -> PathBuf {
+        self.model_dir(name).join(format!("v{v}")).join("model.ntkm")
+    }
+
+    /// On-disk path of a saved version's artifact (for size/metadata
+    /// inspection; load through [`Registry::load`]).
+    pub fn artifact_path(&self, name: &str, v: u32) -> PathBuf {
+        self.version_file(name, v)
+    }
+
+    /// Existing versions of `name`, sorted ascending (empty if none).
+    pub fn versions(&self, name: &str) -> Vec<u32> {
+        let mut out = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(self.model_dir(name)) {
+            for e in rd.flatten() {
+                if let Some(v) = e.file_name().to_str().and_then(parse_version) {
+                    if self.version_file(name, v).exists() {
+                        out.push(v);
+                    }
+                }
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    fn latest_pointer(&self, name: &str) -> Option<u32> {
+        let s = std::fs::read_to_string(self.model_dir(name).join("LATEST")).ok()?;
+        parse_version(s.trim())
+    }
+
+    /// Save as the next version of `model.meta.name`; updates `LATEST`.
+    /// Returns the assigned version. Version assignment is claimed by
+    /// `create_dir(v<k>)` — atomic at the filesystem — so concurrent
+    /// saves of the same name get distinct versions instead of silently
+    /// overwriting each other. The `LATEST` pointer itself is
+    /// last-writer-wins (it is only advanced, never regressed, and
+    /// [`Registry::load`] resolves "latest" as max(pointer, newest
+    /// on-disk), so a briefly trailing pointer cannot hide a newer
+    /// artifact).
+    pub fn save(&self, model: &SavedModel) -> Result<u32, ModelError> {
+        let name = model.meta.name.clone();
+        check_name(&name)?;
+        std::fs::create_dir_all(self.model_dir(&name))?;
+        let mut v = self.versions(&name).last().copied().unwrap_or(0) + 1;
+        loop {
+            match std::fs::create_dir(self.model_dir(&name).join(format!("v{v}"))) {
+                Ok(()) => break,
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => v += 1,
+                Err(e) => return Err(e.into()),
+            }
+        }
+        write_atomic(&self.version_file(&name, v), &model.to_bytes_with(v))?;
+        if self.latest_pointer(&name).is_none_or(|cur| v > cur) {
+            write_atomic(&self.model_dir(&name).join("LATEST"), format!("v{v}\n").as_bytes())?;
+        }
+        Ok(v)
+    }
+
+    /// Load `name` at `version`, or the newest of (`LATEST` pointer,
+    /// highest on-disk version) — so a pointer briefly trailing a
+    /// concurrent save never hides the newer artifact.
+    pub fn load(&self, name: &str, version: Option<u32>) -> Result<SavedModel, ModelError> {
+        check_name(name)?;
+        let v = match version {
+            Some(v) => v,
+            None => self
+                .latest_pointer(name)
+                .max(self.versions(name).last().copied())
+                .ok_or_else(|| {
+                    ModelError::Io(format!(
+                        "no model named `{name}` in registry {} (try `ntk-sketch models`)",
+                        self.root.display()
+                    ))
+                })?,
+        };
+        let path = self.version_file(name, v);
+        let bytes = std::fs::read(&path).map_err(|e| {
+            ModelError::Io(format!("model `{name}` v{v} not found ({}: {e})", path.display()))
+        })?;
+        let mut m = SavedModel::from_bytes(&bytes)?;
+        m.meta.version = v;
+        Ok(m)
+    }
+
+    /// All models in the registry, sorted by name.
+    pub fn list(&self) -> Vec<ModelEntry> {
+        let mut out = Vec::new();
+        let Ok(rd) = std::fs::read_dir(&self.root) else { return out };
+        for e in rd.flatten() {
+            let Some(name) = e.file_name().to_str().map(String::from) else { continue };
+            if check_name(&name).is_err() {
+                continue;
+            }
+            let versions = self.versions(&name);
+            if versions.is_empty() && !self.checkpoint_path(&name).exists() {
+                continue;
+            }
+            let latest = self.latest_pointer(&name).or_else(|| versions.last().copied());
+            let latest_bytes = latest
+                .and_then(|v| std::fs::metadata(self.version_file(&name, v)).ok())
+                .map(|m| m.len())
+                .unwrap_or(0);
+            out.push(ModelEntry { name, versions, latest, latest_bytes });
+        }
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+
+    /// Remove all but the newest `keep` versions (the `LATEST` target is
+    /// always kept). Returns the versions removed.
+    pub fn gc(&self, name: &str, keep: usize) -> Result<Vec<u32>, ModelError> {
+        check_name(name)?;
+        let versions = self.versions(name);
+        let latest = self.latest_pointer(name).or_else(|| versions.last().copied());
+        let cut = versions.len().saturating_sub(keep.max(1));
+        let mut removed = Vec::new();
+        for &v in &versions[..cut] {
+            if Some(v) == latest {
+                continue;
+            }
+            std::fs::remove_dir_all(self.model_dir(name).join(format!("v{v}")))?;
+            removed.push(v);
+        }
+        Ok(removed)
+    }
+
+    // ------------------------------------------------- checkpoints --
+
+    pub fn checkpoint_path(&self, name: &str) -> PathBuf {
+        self.model_dir(name).join("checkpoint.ntkc")
+    }
+
+    /// Persist an in-flight training checkpoint (atomic).
+    pub fn save_checkpoint(&self, ck: &TrainCheckpoint) -> Result<(), ModelError> {
+        check_name(&ck.meta.name)?;
+        write_atomic(&self.checkpoint_path(&ck.meta.name), &ck.to_bytes())
+    }
+
+    pub fn load_checkpoint(&self, name: &str) -> Result<TrainCheckpoint, ModelError> {
+        check_name(name)?;
+        let path = self.checkpoint_path(name);
+        let bytes = std::fs::read(&path).map_err(|e| {
+            ModelError::Io(format!("no checkpoint for `{name}` ({}: {e})", path.display()))
+        })?;
+        TrainCheckpoint::from_bytes(&bytes)
+    }
+
+    /// Delete the checkpoint after a successful save (no-op if absent).
+    pub fn clear_checkpoint(&self, name: &str) -> Result<(), ModelError> {
+        check_name(name)?;
+        match std::fs::remove_file(self.checkpoint_path(name)) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// Find a resumable checkpoint: by name if given, otherwise the
+    /// registry-wide unique one (ambiguity and absence are readable
+    /// errors telling the operator what to do).
+    pub fn find_checkpoint(
+        &self,
+        name: Option<&str>,
+    ) -> Result<(String, TrainCheckpoint), ModelError> {
+        if let Some(n) = name {
+            return Ok((n.to_string(), self.load_checkpoint(n)?));
+        }
+        let with_ck: Vec<String> = self
+            .list()
+            .into_iter()
+            .filter(|e| self.checkpoint_path(&e.name).exists())
+            .map(|e| e.name)
+            .collect();
+        match with_ck.as_slice() {
+            [] => Err(ModelError::Io(format!(
+                "no training checkpoint found under {}; start with \
+                 `train --save NAME --checkpoint-every K`",
+                self.root.display()
+            ))),
+            [one] => Ok((one.clone(), self.load_checkpoint(one)?)),
+            many => Err(ModelError::Invalid(format!(
+                "multiple checkpoints found ({}); pass --save NAME to pick one",
+                many.join(", ")
+            ))),
+        }
+    }
+}

@@ -1,0 +1,459 @@
+//! Featurizer specs: the spec-vs-blob decision of the model store.
+//!
+//! A saved model does **not** serialize its random matrices — it stores
+//! the constructor configuration of the featurizer family **plus the RNG
+//! seed** it was built from, and reconstructs the feature map
+//! deterministically on load (`Rng` is a fixed xoshiro256++ stream, so
+//! (config, seed) pins every random draw). This is what keeps an NTKRF
+//! model file in the kilobytes while its materialized weight matrices run
+//! to megabytes, and it mirrors how the paper treats the feature map as a
+//! data-independent object defined by its sketch seeds.
+//!
+//! The contract is checked, not assumed: every saved model carries a
+//! golden-row section (8 deterministic input rows + their features) that
+//! [`super::SavedModel::build`] re-featurizes on load and compares
+//! bit-for-bit, so any determinism drift (changed constructor draw
+//! order, changed transform arithmetic) is a refusal to serve, not a
+//! silently different model.
+
+use super::codec::{ModelError, Record};
+use crate::features::grad_rf::GradRfMlp;
+use crate::features::ntk_poly_sketch::NtkPolySketch;
+use crate::features::ntk_rf::{NtkRf, NtkRfConfig, Phi1Mode};
+use crate::features::ntk_sketch::{NtkSketch, NtkSketchConfig};
+use crate::features::rff::Rff;
+use crate::features::Featurizer;
+use crate::rng::Rng;
+use crate::tensor::Mat;
+use crate::transforms::LeafMode;
+
+/// Number of golden rows stored with every model.
+pub const GOLDEN_ROWS: usize = 8;
+/// Salt mixed into the spec seed for the golden-input stream, so golden
+/// inputs are independent of the featurizer's own draws.
+const GOLDEN_SALT: u64 = 0x4E54_4B4D_474F_4C44; // "NTKMGOLD"
+
+/// Upper bound on any decoded dimension/depth field (2²⁰). Large enough
+/// for any real feature budget, small enough that every product
+/// [`FeaturizerSpec::feature_dim`] computes (at most dim³) stays far
+/// below `usize::MAX` — decoding hostile bytes can refuse, never
+/// overflow.
+pub const MAX_DIM: u64 = 1 << 20;
+
+/// Constructor configuration + RNG seed for every vector `Featurizer`
+/// family. `build()` reconstructs the exact feature map.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FeaturizerSpec {
+    /// Random Fourier features; `sigma` is the *resolved* bandwidth (the
+    /// median heuristic runs at spec-creation time, not at build time).
+    Rff { d: usize, m: usize, sigma: f64, seed: u64 },
+    /// Algorithm 2. `leverage_sweeps` = 0 means `Phi1Mode::Plain`; k > 0
+    /// means `Phi1Mode::Leverage { gibbs_sweeps: k }`.
+    NtkRf {
+        d: usize,
+        depth: usize,
+        m0: usize,
+        m1: usize,
+        ms: usize,
+        leverage_sweeps: u64,
+        seed: u64,
+    },
+    /// Algorithm 1. `osnap` = 0 means SRHT leaves; s > 0 means
+    /// `LeafMode::Osnap(s)`.
+    NtkSketch {
+        d: usize,
+        depth: usize,
+        p1: usize,
+        p0: usize,
+        r: usize,
+        s: usize,
+        m_inner: usize,
+        s_out: usize,
+        osnap: u64,
+        seed: u64,
+    },
+    /// Remark-1 polynomial sketch of K_relu.
+    NtkPolySketch { d: usize, depth: usize, deg: usize, m_inner: usize, m_out: usize, seed: u64 },
+    /// Finite-width gradient features (MLP baseline).
+    GradRfMlp { d: usize, depth: usize, width: usize, seed: u64 },
+}
+
+impl FeaturizerSpec {
+    /// Family tag — stable across versions; also the record discriminant.
+    pub fn family(&self) -> &'static str {
+        match self {
+            FeaturizerSpec::Rff { .. } => "rff",
+            FeaturizerSpec::NtkRf { .. } => "ntkrf",
+            FeaturizerSpec::NtkSketch { .. } => "ntksketch",
+            FeaturizerSpec::NtkPolySketch { .. } => "ntkpoly",
+            FeaturizerSpec::GradRfMlp { .. } => "gradrf-mlp",
+        }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        match *self {
+            FeaturizerSpec::Rff { d, .. }
+            | FeaturizerSpec::NtkRf { d, .. }
+            | FeaturizerSpec::NtkSketch { d, .. }
+            | FeaturizerSpec::NtkPolySketch { d, .. }
+            | FeaturizerSpec::GradRfMlp { d, .. } => d,
+        }
+    }
+
+    pub fn seed(&self) -> u64 {
+        match *self {
+            FeaturizerSpec::Rff { seed, .. }
+            | FeaturizerSpec::NtkRf { seed, .. }
+            | FeaturizerSpec::NtkSketch { seed, .. }
+            | FeaturizerSpec::NtkPolySketch { seed, .. }
+            | FeaturizerSpec::GradRfMlp { seed, .. } => seed,
+        }
+    }
+
+    /// Output feature dimension, computable without building.
+    pub fn feature_dim(&self) -> usize {
+        match *self {
+            FeaturizerSpec::Rff { m, .. } => m,
+            FeaturizerSpec::NtkRf { m1, ms, .. } => m1 + ms,
+            FeaturizerSpec::NtkSketch { s_out, .. } => s_out,
+            FeaturizerSpec::NtkPolySketch { m_out, .. } => m_out,
+            FeaturizerSpec::GradRfMlp { d, depth, width, .. } => {
+                width * d + (depth - 1) * width * width + width
+            }
+        }
+    }
+
+    /// Lower bound on the bytes of dense random state the featurizer
+    /// materializes at build time (the matrices the store deliberately
+    /// does *not* serialize). Used to report/assert the spec-vs-blob
+    /// saving; sketch-based families are mostly implicit and tiny.
+    pub fn materialized_bytes(&self) -> u64 {
+        let f32s: u64 = match *self {
+            FeaturizerSpec::Rff { d, m, .. } => (m * d + m) as u64,
+            FeaturizerSpec::NtkRf { d, depth, m0, m1, .. } => {
+                // per layer: Φ₀ (m0×phi_dim) + Φ₁ (m1×phi_dim); phi_dim
+                // is d at layer 1 and m1 afterwards.
+                let mut total = 0u64;
+                let mut phi_dim = d as u64;
+                for _ in 0..depth {
+                    total += (m0 as u64 + m1 as u64) * phi_dim;
+                    phi_dim = m1 as u64;
+                }
+                total
+            }
+            FeaturizerSpec::NtkSketch { s, s_out, .. } => (s * s_out) as u64,
+            FeaturizerSpec::NtkPolySketch { m_inner, m_out, .. } => (m_inner + m_out) as u64,
+            FeaturizerSpec::GradRfMlp { .. } => self.feature_dim() as u64,
+        };
+        4 * f32s
+    }
+
+    /// Reconstruct the feature map from (config, seed) — a fresh RNG
+    /// seeded from the spec, so the result is bit-identical every time.
+    pub fn build(&self) -> Box<dyn Featurizer> {
+        let mut rng = Rng::new(self.seed());
+        match *self {
+            FeaturizerSpec::Rff { d, m, sigma, .. } => Box::new(Rff::new(d, m, sigma, &mut rng)),
+            FeaturizerSpec::NtkRf { d, depth, m0, m1, ms, leverage_sweeps, .. } => {
+                let phi1_mode = if leverage_sweeps == 0 {
+                    Phi1Mode::Plain
+                } else {
+                    Phi1Mode::Leverage { gibbs_sweeps: leverage_sweeps as usize }
+                };
+                let cfg = NtkRfConfig { depth, m0, m1, ms, phi1_mode };
+                Box::new(NtkRf::new(d, cfg, &mut rng))
+            }
+            FeaturizerSpec::NtkSketch {
+                d,
+                depth,
+                p1,
+                p0,
+                r,
+                s,
+                m_inner,
+                s_out,
+                osnap,
+                ..
+            } => {
+                let leaf =
+                    if osnap == 0 { LeafMode::Srht } else { LeafMode::Osnap(osnap as usize) };
+                let cfg = NtkSketchConfig { depth, p1, p0, r, s, m_inner, s_out, leaf };
+                Box::new(NtkSketch::new(d, cfg, &mut rng))
+            }
+            FeaturizerSpec::NtkPolySketch { d, depth, deg, m_inner, m_out, .. } => {
+                Box::new(NtkPolySketch::new(d, depth, deg, m_inner, m_out, &mut rng))
+            }
+            FeaturizerSpec::GradRfMlp { d, depth, width, .. } => {
+                Box::new(GradRfMlp::new(d, depth, width, &mut rng))
+            }
+        }
+    }
+
+    /// The deterministic golden input rows for this spec (independent of
+    /// the featurizer's own random draws).
+    pub fn golden_inputs(&self) -> Mat {
+        let d = self.input_dim();
+        let mut rng = Rng::new(self.seed() ^ GOLDEN_SALT);
+        Mat::from_vec(GOLDEN_ROWS, d, rng.gauss_vec(GOLDEN_ROWS * d))
+    }
+
+    pub fn to_record(&self) -> Record {
+        let mut r = Record::new();
+        r.set_str("family", self.family());
+        r.set_u64("seed", self.seed());
+        match *self {
+            FeaturizerSpec::Rff { d, m, sigma, .. } => {
+                r.set_u64("d", d as u64);
+                r.set_u64("m", m as u64);
+                r.set_f64("sigma", sigma);
+            }
+            FeaturizerSpec::NtkRf { d, depth, m0, m1, ms, leverage_sweeps, .. } => {
+                r.set_u64("d", d as u64);
+                r.set_u64("depth", depth as u64);
+                r.set_u64("m0", m0 as u64);
+                r.set_u64("m1", m1 as u64);
+                r.set_u64("ms", ms as u64);
+                r.set_u64("leverage_sweeps", leverage_sweeps);
+            }
+            FeaturizerSpec::NtkSketch {
+                d,
+                depth,
+                p1,
+                p0,
+                r: rr,
+                s,
+                m_inner,
+                s_out,
+                osnap,
+                ..
+            } => {
+                r.set_u64("d", d as u64);
+                r.set_u64("depth", depth as u64);
+                r.set_u64("p1", p1 as u64);
+                r.set_u64("p0", p0 as u64);
+                r.set_u64("r", rr as u64);
+                r.set_u64("s", s as u64);
+                r.set_u64("m_inner", m_inner as u64);
+                r.set_u64("s_out", s_out as u64);
+                r.set_u64("osnap", osnap);
+            }
+            FeaturizerSpec::NtkPolySketch { d, depth, deg, m_inner, m_out, .. } => {
+                r.set_u64("d", d as u64);
+                r.set_u64("depth", depth as u64);
+                r.set_u64("deg", deg as u64);
+                r.set_u64("m_inner", m_inner as u64);
+                r.set_u64("m_out", m_out as u64);
+            }
+            FeaturizerSpec::GradRfMlp { d, depth, width, .. } => {
+                r.set_u64("d", d as u64);
+                r.set_u64("depth", depth as u64);
+                r.set_u64("width", width as u64);
+            }
+        }
+        r
+    }
+
+    pub fn from_record(r: &Record) -> Result<FeaturizerSpec, ModelError> {
+        let family = r.str("family")?;
+        let seed = r.u64("seed")?;
+        // decoded dims are hostile input until proven otherwise: CRC is
+        // integrity, not validation, and feature_dim() arithmetic on an
+        // absurd or zero field must not be reachable (never-panic
+        // contract). MAX_DIM bounds every product feature_dim() forms.
+        let dims: &[&str] = match family {
+            "rff" => &["d", "m"],
+            "ntkrf" => &["d", "depth", "m0", "m1", "ms"],
+            "ntksketch" => &["d", "depth", "r", "s", "m_inner", "s_out"],
+            "ntkpoly" => &["d", "depth", "deg", "m_inner", "m_out"],
+            "gradrf-mlp" => &["d", "depth", "width"],
+            _ => &[],
+        };
+        for key in dims {
+            let v = r.u64(key)?;
+            if v == 0 || v > MAX_DIM {
+                return Err(ModelError::Invalid(format!(
+                    "spec field `{key}` = {v} out of range [1, {MAX_DIM}]"
+                )));
+            }
+        }
+        // knobs where 0 is meaningful (plain/SRHT modes) but absurd
+        // values would still blow up construction (Taylor degrees size
+        // sketch trees; sweeps bound a loop)
+        let knobs: &[&str] = match family {
+            "ntkrf" => &["leverage_sweeps"],
+            "ntksketch" => &["p1", "p0", "osnap"],
+            _ => &[],
+        };
+        for key in knobs {
+            let v = r.u64(key)?;
+            if v > MAX_DIM {
+                return Err(ModelError::Invalid(format!(
+                    "spec field `{key}` = {v} out of range [0, {MAX_DIM}]"
+                )));
+            }
+        }
+        if let Ok(sigma) = r.f64("sigma") {
+            if !(sigma.is_finite() && sigma > 0.0) {
+                return Err(ModelError::Invalid(format!(
+                    "spec field `sigma` = {sigma} must be finite and positive"
+                )));
+            }
+        }
+        match family {
+            "rff" => Ok(FeaturizerSpec::Rff {
+                d: r.usize("d")?,
+                m: r.usize("m")?,
+                sigma: r.f64("sigma")?,
+                seed,
+            }),
+            "ntkrf" => Ok(FeaturizerSpec::NtkRf {
+                d: r.usize("d")?,
+                depth: r.usize("depth")?,
+                m0: r.usize("m0")?,
+                m1: r.usize("m1")?,
+                ms: r.usize("ms")?,
+                leverage_sweeps: r.u64("leverage_sweeps")?,
+                seed,
+            }),
+            "ntksketch" => Ok(FeaturizerSpec::NtkSketch {
+                d: r.usize("d")?,
+                depth: r.usize("depth")?,
+                p1: r.usize("p1")?,
+                p0: r.usize("p0")?,
+                r: r.usize("r")?,
+                s: r.usize("s")?,
+                m_inner: r.usize("m_inner")?,
+                s_out: r.usize("s_out")?,
+                osnap: r.u64("osnap")?,
+                seed,
+            }),
+            "ntkpoly" => Ok(FeaturizerSpec::NtkPolySketch {
+                d: r.usize("d")?,
+                depth: r.usize("depth")?,
+                deg: r.usize("deg")?,
+                m_inner: r.usize("m_inner")?,
+                m_out: r.usize("m_out")?,
+                seed,
+            }),
+            "gradrf-mlp" => Ok(FeaturizerSpec::GradRfMlp {
+                d: r.usize("d")?,
+                depth: r.usize("depth")?,
+                width: r.usize("width")?,
+                seed,
+            }),
+            other => Err(ModelError::Invalid(format!(
+                "unknown featurizer family `{other}` (this build knows: rff, ntkrf, \
+                 ntksketch, ntkpoly, gradrf-mlp)"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::codec::Dec;
+
+    fn all_specs() -> Vec<FeaturizerSpec> {
+        vec![
+            FeaturizerSpec::Rff { d: 7, m: 32, sigma: 1.5, seed: 11 },
+            FeaturizerSpec::NtkRf {
+                d: 7,
+                depth: 2,
+                m0: 16,
+                m1: 48,
+                ms: 16,
+                leverage_sweeps: 0,
+                seed: 12,
+            },
+            FeaturizerSpec::NtkSketch {
+                d: 7,
+                depth: 1,
+                p1: 1,
+                p0: 2,
+                r: 32,
+                s: 32,
+                m_inner: 32,
+                s_out: 16,
+                osnap: 4,
+                seed: 13,
+            },
+            FeaturizerSpec::NtkPolySketch {
+                d: 7,
+                depth: 3,
+                deg: 4,
+                m_inner: 32,
+                m_out: 16,
+                seed: 14,
+            },
+            FeaturizerSpec::GradRfMlp { d: 7, depth: 2, width: 6, seed: 15 },
+        ]
+    }
+
+    #[test]
+    fn record_round_trip_every_family() {
+        for spec in all_specs() {
+            let mut buf = Vec::new();
+            spec.to_record().encode(&mut buf);
+            let back =
+                FeaturizerSpec::from_record(&Record::decode(&mut Dec::new(&buf, "spec")).unwrap())
+                    .unwrap();
+            assert_eq!(back, spec);
+        }
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        for spec in all_specs() {
+            let x = spec.golden_inputs();
+            let a = spec.build().transform(&x);
+            let b = spec.build().transform(&x);
+            assert_eq!(a.data.len(), b.data.len());
+            for (p, q) in a.data.iter().zip(b.data.iter()) {
+                assert_eq!(p.to_bits(), q.to_bits(), "{}", spec.family());
+            }
+            assert_eq!(a.cols, spec.feature_dim(), "{}", spec.family());
+        }
+    }
+
+    #[test]
+    fn unknown_family_is_readable_error() {
+        let mut r = Record::new();
+        r.set_str("family", "bogus");
+        r.set_u64("seed", 1);
+        let err = FeaturizerSpec::from_record(&r).unwrap_err();
+        assert!(err.to_string().contains("bogus"), "{err}");
+    }
+
+    #[test]
+    fn zero_or_absurd_dims_are_refused_not_panics() {
+        // CRC is integrity, not validation: a well-formed record with
+        // hostile numbers must be a readable refusal (a gradrf depth of
+        // 0 would otherwise underflow feature_dim()).
+        let mut r = Record::new();
+        r.set_str("family", "gradrf-mlp");
+        r.set_u64("seed", 1);
+        r.set_u64("d", 4);
+        r.set_u64("depth", 0);
+        r.set_u64("width", 8);
+        let err = FeaturizerSpec::from_record(&r).unwrap_err();
+        assert!(err.to_string().contains("depth"), "{err}");
+
+        let mut r = Record::new();
+        r.set_str("family", "rff");
+        r.set_u64("seed", 1);
+        r.set_u64("d", 4);
+        r.set_u64("m", u64::MAX);
+        r.set_f64("sigma", 1.0);
+        assert!(FeaturizerSpec::from_record(&r).is_err());
+
+        let mut r = Record::new();
+        r.set_str("family", "rff");
+        r.set_u64("seed", 1);
+        r.set_u64("d", 4);
+        r.set_u64("m", 16);
+        r.set_f64("sigma", f64::NAN);
+        let err = FeaturizerSpec::from_record(&r).unwrap_err();
+        assert!(err.to_string().contains("sigma"), "{err}");
+    }
+}

@@ -12,7 +12,10 @@ pub fn lambda_grid() -> Vec<f64> {
 }
 
 /// Pick λ maximizing validation accuracy (classification) from
-/// pre-featurized train/val blocks.
+/// pre-featurized train/val blocks. The normal equations are accumulated
+/// once and only `solve` runs per grid point (the scratch inside
+/// `RidgeRegressor` makes each step allocation-free) — a λ sweep no
+/// longer pays an m² Gram rebuild per candidate.
 pub fn select_lambda_classification(
     f_train: &Mat,
     y_train: &Mat,
@@ -20,9 +23,11 @@ pub fn select_lambda_classification(
     labels_val: &[f32],
     grid: &[f64],
 ) -> (f64, f64) {
+    let mut r = RidgeRegressor::new(f_train.cols, y_train.cols);
+    r.add_batch(f_train, y_train);
     let mut best = (grid[0], -1.0f64);
     for &lam in grid {
-        if let Ok(r) = RidgeRegressor::fit(f_train, y_train, lam) {
+        if r.solve(lam).is_ok() {
             let acc = accuracy(&r.predict(f_val), labels_val);
             if acc > best.1 {
                 best = (lam, acc);
@@ -32,7 +37,8 @@ pub fn select_lambda_classification(
     best
 }
 
-/// Pick λ minimizing validation MSE (regression).
+/// Pick λ minimizing validation MSE (regression). Same
+/// accumulate-once/solve-per-λ structure as the classification sweep.
 pub fn select_lambda_regression(
     f_train: &Mat,
     y_train: &Mat,
@@ -40,9 +46,11 @@ pub fn select_lambda_regression(
     y_val: &Mat,
     grid: &[f64],
 ) -> (f64, f64) {
+    let mut r = RidgeRegressor::new(f_train.cols, y_train.cols);
+    r.add_batch(f_train, y_train);
     let mut best = (grid[0], f64::MAX);
     for &lam in grid {
-        if let Ok(r) = RidgeRegressor::fit(f_train, y_train, lam) {
+        if r.solve(lam).is_ok() {
             let e = mse(&r.predict(f_val), y_val);
             if e < best.1 {
                 best = (lam, e);

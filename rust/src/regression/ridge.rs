@@ -6,7 +6,7 @@
 //! n, which is exactly how the paper's feature maps beat the O(n²) kernel
 //! matrix on the large UCI sets (Table 2's OOM column).
 
-use crate::linalg::{solve_spd_multi, DMat};
+use crate::linalg::{solve_spd_multi_scratch, DMat};
 use crate::tensor::gemm::{self, Op};
 use crate::tensor::Mat;
 
@@ -27,6 +27,10 @@ pub struct RidgeRegressor {
     pub n_seen: usize,
     /// learned weights (m×k) after solve().
     weights: Option<Mat>,
+    /// m×m scratch for the mirrored+regularized system, allocated on the
+    /// first `solve` and reused across solves — a λ sweep costs zero
+    /// allocations per step instead of an m² clone each.
+    scratch: Option<DMat>,
 }
 
 impl RidgeRegressor {
@@ -38,7 +42,71 @@ impl RidgeRegressor {
             xty: DMat::zeros(dim, outputs),
             n_seen: 0,
             weights: None,
+            scratch: None,
         }
+    }
+
+    /// Restore an accumulator from checkpointed state: the packed lower
+    /// triangle of ΨᵀΨ (row-major, i ≥ j — the only authoritative part
+    /// between solves), ΨᵀY flat (m×k row-major), and the row count.
+    /// Continuing to `add_batch` after this is bit-identical to never
+    /// having stopped (see `model::checkpoint`).
+    pub fn restore(
+        dim: usize,
+        outputs: usize,
+        gram_lower: &[f64],
+        xty: &[f64],
+        n_seen: usize,
+    ) -> Result<RidgeRegressor, String> {
+        if gram_lower.len() != dim * (dim + 1) / 2 {
+            return Err(format!(
+                "ridge restore: gram triangle has {} entries, dim {dim} needs {}",
+                gram_lower.len(),
+                dim * (dim + 1) / 2
+            ));
+        }
+        if xty.len() != dim * outputs {
+            return Err(format!(
+                "ridge restore: xty has {} entries, expected {}",
+                xty.len(),
+                dim * outputs
+            ));
+        }
+        let mut gram = DMat::zeros(dim, dim);
+        let mut it = gram_lower.iter();
+        for i in 0..dim {
+            for j in 0..=i {
+                *gram.at_mut(i, j) = *it.next().unwrap();
+            }
+        }
+        Ok(RidgeRegressor {
+            dim,
+            outputs,
+            gram,
+            xty: DMat::from_vec(dim, outputs, xty.to_vec()),
+            n_seen,
+            weights: None,
+            scratch: None,
+        })
+    }
+
+    /// Packed lower triangle of the accumulated ΨᵀΨ (row-major, i ≥ j).
+    pub fn gram_lower_packed(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.dim * (self.dim + 1) / 2);
+        for i in 0..self.dim {
+            out.extend_from_slice(&self.gram.row(i)[..=i]);
+        }
+        out
+    }
+
+    /// Accumulated ΨᵀY, flat row-major (m×k).
+    pub fn xty_flat(&self) -> &[f64] {
+        &self.xty.data
+    }
+
+    /// Learned weights (m×k) after `solve`.
+    pub fn weights(&self) -> Option<&Mat> {
+        self.weights.as_ref()
     }
 
     /// Accumulate a featurized batch (features n×m, targets n×k).
@@ -75,14 +143,19 @@ impl RidgeRegressor {
         self.weights = None;
     }
 
-    /// Solve (ΨᵀΨ + λ n I) W = Ψᵀ Y.
+    /// Solve (ΨᵀΨ + λ n I) W = Ψᵀ Y. The mirrored+regularized system is
+    /// built in a scratch reused across solves (λ sweeps allocate
+    /// nothing per step); `gram` itself is never mutated, so `solve` can
+    /// be called repeatedly and interleaved with `add_batch`.
     pub fn solve(&mut self, lambda: f64) -> Result<(), String> {
-        let mut a = self.gram.clone();
-        // `gram` accumulates lower-triangle-only; symmetrize the copy once
-        // here rather than after every batch.
-        gemm::mirror_lower_to_upper(&mut a.data, self.dim);
+        let dim = self.dim;
+        let a = self.scratch.get_or_insert_with(|| DMat::zeros(dim, dim));
+        a.data.copy_from_slice(&self.gram.data);
+        // `gram` accumulates lower-triangle-only; symmetrize the scratch
+        // once here rather than after every batch.
+        gemm::mirror_lower_to_upper(&mut a.data, dim);
         a.add_diag(lambda * self.n_seen.max(1) as f64);
-        let w = solve_spd_multi(&a, &self.xty)?;
+        let w = solve_spd_multi_scratch(a, &self.xty)?;
         self.weights = Some(w.to_mat());
         Ok(())
     }
@@ -181,6 +254,76 @@ mod tests {
         let hi = RidgeRegressor::fit(&x, &y, 100.0).unwrap();
         let norm = |r: &RidgeRegressor| r.weights.as_ref().unwrap().frob_norm();
         assert!(norm(&hi) < 0.5 * norm(&lo));
+    }
+
+    #[test]
+    fn repeated_solve_matches_fresh_fit_bitwise() {
+        // λ sweeps reuse one scratch; every solve must equal a
+        // from-scratch fit at that λ, bit for bit.
+        let mut rng = Rng::new(195);
+        let (n, m, k) = (90, 12, 2);
+        let x = Mat::from_vec(n, m, rng.gauss_vec(n * m));
+        let y = Mat::from_vec(n, k, rng.gauss_vec(n * k));
+        let mut sweep = RidgeRegressor::new(m, k);
+        sweep.add_batch(&x, &y);
+        for &lam in &[1e-4, 1e-2, 1.0, 1e-4] {
+            sweep.solve(lam).unwrap();
+            let fresh = RidgeRegressor::fit(&x, &y, lam).unwrap();
+            let (a, b) = (sweep.weights().unwrap(), fresh.weights().unwrap());
+            assert_eq!(a.data.len(), b.data.len());
+            for (p, q) in a.data.iter().zip(b.data.iter()) {
+                assert_eq!(p.to_bits(), q.to_bits(), "lambda={lam}");
+            }
+        }
+    }
+
+    #[test]
+    fn restore_resumes_bit_identically() {
+        let mut rng = Rng::new(196);
+        let (n, m, k) = (128, 10, 2);
+        let x = Mat::from_vec(n, m, rng.gauss_vec(n * m));
+        let y = Mat::from_vec(n, k, rng.gauss_vec(n * k));
+        let shard = 32;
+        // uninterrupted
+        let mut full = RidgeRegressor::new(m, k);
+        for lo in (0..n).step_by(shard) {
+            full.add_batch(&x.slice_rows(lo, lo + shard), &y.slice_rows(lo, lo + shard));
+        }
+        full.solve(0.01).unwrap();
+        // interrupted after 2 shards, state exported + restored
+        let mut first = RidgeRegressor::new(m, k);
+        for lo in (0..2 * shard).step_by(shard) {
+            first.add_batch(&x.slice_rows(lo, lo + shard), &y.slice_rows(lo, lo + shard));
+        }
+        let mut resumed = RidgeRegressor::restore(
+            m,
+            k,
+            &first.gram_lower_packed(),
+            first.xty_flat(),
+            first.n_seen,
+        )
+        .unwrap();
+        for lo in ((2 * shard)..n).step_by(shard) {
+            resumed.add_batch(&x.slice_rows(lo, lo + shard), &y.slice_rows(lo, lo + shard));
+        }
+        resumed.solve(0.01).unwrap();
+        assert_eq!(resumed.n_seen, full.n_seen);
+        for (p, q) in resumed
+            .weights()
+            .unwrap()
+            .data
+            .iter()
+            .zip(full.weights().unwrap().data.iter())
+        {
+            assert_eq!(p.to_bits(), q.to_bits());
+        }
+    }
+
+    #[test]
+    fn restore_rejects_bad_shapes() {
+        assert!(RidgeRegressor::restore(4, 1, &[0.0; 9], &[0.0; 4], 0).is_err());
+        assert!(RidgeRegressor::restore(4, 1, &[0.0; 10], &[0.0; 3], 0).is_err());
+        assert!(RidgeRegressor::restore(4, 1, &[0.0; 10], &[0.0; 4], 0).is_ok());
     }
 
     #[test]

@@ -1,0 +1,327 @@
+//! Model-store integration tests: the persistence contracts the
+//! subsystem promises (DESIGN.md §8).
+//!
+//! - save→load→predict is **bit-identical** to the in-process pipeline,
+//!   for every vector featurizer family;
+//! - checkpoint/resume equals an uninterrupted streaming fit, bit for
+//!   bit, through the on-disk encoding;
+//! - corrupted / truncated / version-bumped files are refused with
+//!   readable errors (never a panic, never a garbage model);
+//! - the golden-row check catches determinism drift (wrong seed ⇒
+//!   refusal);
+//! - saved models store specs+seeds, not matrices: an NTKRF artifact is
+//!   ≤1% of its materialized featurizer;
+//! - the registry versions, points, lists and gc's correctly.
+
+use ntk_sketch::coordinator::{BatchBackend, NativeBackend};
+use ntk_sketch::features::Featurizer;
+use ntk_sketch::model::{FeaturizerSpec, ModelMeta, Registry, SavedModel, TrainCheckpoint};
+use ntk_sketch::regression::RidgeRegressor;
+use ntk_sketch::rng::Rng;
+use ntk_sketch::tensor::Mat;
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (p, q)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(p.to_bits(), q.to_bits(), "{what}: index {i}: {p:?} vs {q:?}");
+    }
+}
+
+fn all_specs(d: usize) -> Vec<FeaturizerSpec> {
+    vec![
+        FeaturizerSpec::Rff { d, m: 48, sigma: 1.3, seed: 21 },
+        FeaturizerSpec::NtkRf { d, depth: 2, m0: 16, m1: 48, ms: 16, leverage_sweeps: 0, seed: 22 },
+        FeaturizerSpec::NtkRf { d, depth: 1, m0: 16, m1: 32, ms: 16, leverage_sweeps: 1, seed: 23 },
+        FeaturizerSpec::NtkSketch {
+            d,
+            depth: 2,
+            p1: 1,
+            p0: 2,
+            r: 32,
+            s: 32,
+            m_inner: 32,
+            s_out: 24,
+            osnap: 4,
+            seed: 24,
+        },
+        FeaturizerSpec::NtkSketch {
+            d,
+            depth: 1,
+            p1: 1,
+            p0: 1,
+            r: 16,
+            s: 16,
+            m_inner: 16,
+            s_out: 16,
+            osnap: 0,
+            seed: 25,
+        },
+        FeaturizerSpec::NtkPolySketch { d, depth: 3, deg: 4, m_inner: 32, m_out: 24, seed: 26 },
+        FeaturizerSpec::GradRfMlp { d, depth: 2, width: 8, seed: 27 },
+    ]
+}
+
+/// Fit a tiny ridge model over `spec`'s features on synthetic data.
+fn fit_tiny(spec: &FeaturizerSpec, outputs: usize, seed: u64) -> (SavedModel, Mat, Mat) {
+    let d = spec.input_dim();
+    let mut rng = Rng::new(seed);
+    let n = 40;
+    let x = Mat::from_vec(n, d, rng.gauss_vec(n * d));
+    let y = Mat::from_vec(n, outputs, rng.gauss_vec(n * outputs));
+    let f = spec.build();
+    let feats = f.transform(&x);
+    let mut reg = RidgeRegressor::new(f.dim(), outputs);
+    reg.add_batch(&feats, &y);
+    reg.solve(1e-2).unwrap();
+    let weights = reg.weights().unwrap().clone();
+    // in-process reference predictions
+    let reference = feats.matmul(&weights);
+    let saved = SavedModel::new(
+        "tiny",
+        "synthetic",
+        seed,
+        1e-2,
+        n as u64,
+        spec.clone(),
+        weights,
+        &f,
+    );
+    (saved, x, reference)
+}
+
+#[test]
+fn round_trip_bit_identical_every_family() {
+    for spec in all_specs(7) {
+        let (saved, x, reference) = fit_tiny(&spec, 2, 31);
+        let bytes = saved.to_bytes();
+        let loaded = SavedModel::from_bytes(&bytes)
+            .unwrap_or_else(|e| panic!("{}: {e}", spec.family()));
+        assert_eq!(loaded.meta.family, spec.family());
+        let model = loaded.build().unwrap_or_else(|e| panic!("{}: {e}", spec.family()));
+        let pred = model.predict(&x);
+        assert_bits_eq(&pred.data, &reference.data, spec.family());
+    }
+}
+
+#[test]
+fn loaded_model_serves_through_batched_run_into() {
+    // a reconstructed model behind `NativeBackend` must route through
+    // `transform_into` and produce bit-identical predictions to the
+    // in-process pipeline, including padded batch rows
+    let spec = all_specs(6).remove(1); // NTKRF
+    let (saved, x, reference) = fit_tiny(&spec, 1, 33);
+    let model = SavedModel::from_bytes(&saved.to_bytes()).unwrap().build().unwrap();
+    let batch = x.rows + 3; // force pad rows
+    let backend = NativeBackend {
+        featurizer: Box::new(model) as Box<dyn Featurizer>,
+        batch,
+        input_dim: spec.input_dim(),
+    };
+    let mut padded = Mat::zeros(batch, spec.input_dim());
+    for i in 0..x.rows {
+        padded.row_mut(i).copy_from_slice(x.row(i));
+    }
+    let mut out = Mat::from_vec(batch, 1, vec![f32::NAN; batch]);
+    backend.run_into(&padded, &mut out);
+    assert_bits_eq(
+        &out.data[..x.rows],
+        &reference.data,
+        "run_into vs in-process",
+    );
+}
+
+#[test]
+fn checkpoint_resume_equals_uninterrupted_fit() {
+    let spec = FeaturizerSpec::NtkRf {
+        d: 8,
+        depth: 2,
+        m0: 16,
+        m1: 48,
+        ms: 16,
+        leverage_sweeps: 0,
+        seed: 41,
+    };
+    let f = spec.build();
+    let mut rng = Rng::new(42);
+    let (n, batch_rows, outputs) = (160, 32, 1);
+    let x = Mat::from_vec(n, 8, rng.gauss_vec(n * 8));
+    let y = Mat::from_vec(n, outputs, rng.gauss_vec(n));
+    let meta = ModelMeta {
+        name: "ck".into(),
+        version: 0,
+        family: spec.family().into(),
+        dataset: "synthetic".into(),
+        data_seed: 42,
+        lambda: 1e-2,
+        n_seen: 0,
+        input_dim: 8,
+        feature_dim: spec.feature_dim(),
+        outputs,
+    };
+
+    // uninterrupted run
+    let mut full = RidgeRegressor::new(spec.feature_dim(), outputs);
+    for lo in (0..n).step_by(batch_rows) {
+        let feats = f.transform(&x.slice_rows(lo, lo + batch_rows));
+        full.add_batch(&feats, &y.slice_rows(lo, lo + batch_rows));
+    }
+    full.solve(1e-2).unwrap();
+
+    // interrupted after 2 batches; checkpoint goes through the *binary
+    // encoding*, not just memory
+    let mut first = RidgeRegressor::new(spec.feature_dim(), outputs);
+    for lo in (0..2 * batch_rows).step_by(batch_rows) {
+        let feats = f.transform(&x.slice_rows(lo, lo + batch_rows));
+        first.add_batch(&feats, &y.slice_rows(lo, lo + batch_rows));
+    }
+    let ck =
+        TrainCheckpoint::capture(meta, spec.clone(), n as u64, batch_rows as u64, 1, &first);
+    let ck = TrainCheckpoint::from_bytes(&ck.to_bytes()).unwrap();
+    assert_eq!(ck.meta.n_seen, 2 * batch_rows as u64);
+    assert_eq!(ck.ckpt_every, 1);
+    let mut resumed = ck.restore_regressor().unwrap();
+    for lo in ((2 * batch_rows)..n).step_by(batch_rows) {
+        let feats = f.transform(&x.slice_rows(lo, lo + batch_rows));
+        resumed.add_batch(&feats, &y.slice_rows(lo, lo + batch_rows));
+    }
+    resumed.solve(1e-2).unwrap();
+    assert_eq!(resumed.n_seen, full.n_seen);
+    assert_bits_eq(
+        &resumed.weights().unwrap().data,
+        &full.weights().unwrap().data,
+        "resumed vs uninterrupted weights",
+    );
+}
+
+#[test]
+fn corrupted_files_are_refused_with_readable_errors() {
+    let spec = all_specs(5).remove(0);
+    let (saved, _, _) = fit_tiny(&spec, 1, 51);
+    let bytes = saved.to_bytes();
+    assert!(SavedModel::from_bytes(&bytes).is_ok());
+
+    // truncation at many prefixes: always Err, never panic
+    for cut in [0, 1, 4, 15, 16, 40, bytes.len() / 2, bytes.len() - 1] {
+        let err = SavedModel::from_bytes(&bytes[..cut]).unwrap_err();
+        assert!(!err.to_string().is_empty(), "cut={cut}");
+    }
+
+    // flipped byte in a payload → CRC error naming the section
+    let mut bad = bytes.clone();
+    let last = bad.len() - 1;
+    bad[last] ^= 0x40;
+    let err = SavedModel::from_bytes(&bad).unwrap_err();
+    assert!(err.to_string().contains("CRC"), "{err}");
+
+    // bumped format version → clean refusal mentioning versions
+    let mut bad = bytes.clone();
+    bad[4] = 0x7F;
+    bad[5] = 0x00;
+    let err = SavedModel::from_bytes(&bad).unwrap_err();
+    assert!(err.to_string().contains("version"), "{err}");
+
+    // wrong magic → "not a model file"
+    let mut bad = bytes.clone();
+    bad[0] = b'X';
+    let err = SavedModel::from_bytes(&bad).unwrap_err();
+    assert!(err.to_string().contains("magic"), "{err}");
+}
+
+#[test]
+fn golden_rows_catch_determinism_drift() {
+    let spec = all_specs(6).remove(1);
+    let (saved, _, _) = fit_tiny(&spec, 1, 61);
+    let mut drifted = SavedModel::from_bytes(&saved.to_bytes()).unwrap();
+    // simulate a seed/config drift: the stored spec no longer matches
+    // the stored golden features
+    if let FeaturizerSpec::NtkRf { seed, .. } = &mut drifted.spec {
+        *seed ^= 1;
+    } else {
+        panic!("expected ntkrf spec");
+    }
+    // golden inputs are derived from the seed too; pin them to the
+    // originals so only the featurizer draw changes
+    drifted.golden_x = saved.golden_x.clone();
+    let err = drifted.build().unwrap_err();
+    assert!(err.to_string().contains("golden"), "{err}");
+    assert!(err.to_string().contains("determinism"), "{err}");
+}
+
+#[test]
+fn ntkrf_artifact_is_spec_sized_not_matrix_sized() {
+    // the acceptance bar: a saved NTKRF model file is ≤1% of its
+    // materialized random matrices (the weights blob is ridge W only)
+    let spec = FeaturizerSpec::NtkRf {
+        d: 32,
+        depth: 2,
+        m0: 512,
+        m1: 1536,
+        ms: 512,
+        leverage_sweeps: 0,
+        seed: 71,
+    };
+    let f = spec.build();
+    let m = f.dim();
+    let weights = Mat::zeros(m, 1);
+    let saved =
+        SavedModel::new("big", "synthetic", 71, 1e-3, 1000, spec.clone(), weights, &f);
+    let file = saved.to_bytes().len() as u64;
+    let materialized = spec.materialized_bytes();
+    assert!(
+        100 * file <= materialized,
+        "file {file} B vs materialized {materialized} B (ratio {:.4})",
+        file as f64 / materialized as f64
+    );
+}
+
+#[test]
+fn registry_versions_latest_and_gc() {
+    let root = std::env::temp_dir().join(format!("ntkm_reg_test_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let registry = Registry::open(&root);
+
+    let spec = all_specs(5).remove(0);
+    let (saved, x, _) = fit_tiny(&spec, 1, 81);
+    assert_eq!(registry.save(&saved).unwrap(), 1);
+    assert_eq!(registry.save(&saved).unwrap(), 2);
+    assert_eq!(registry.save(&saved).unwrap(), 3);
+
+    let latest = registry.load("tiny", None).unwrap();
+    assert_eq!(latest.meta.version, 3);
+    let v1 = registry.load("tiny", Some(1)).unwrap();
+    assert_eq!(v1.meta.version, 1);
+    // same artifact content regardless of version
+    assert_bits_eq(
+        &latest.build().unwrap().predict(&x).data,
+        &v1.build().unwrap().predict(&x).data,
+        "versions",
+    );
+
+    let entries = registry.list();
+    assert_eq!(entries.len(), 1);
+    assert_eq!(entries[0].name, "tiny");
+    assert_eq!(entries[0].versions, vec![1, 2, 3]);
+    assert_eq!(entries[0].latest, Some(3));
+
+    let removed = registry.gc("tiny", 1).unwrap();
+    assert_eq!(removed, vec![1, 2]);
+    assert!(registry.load("tiny", Some(1)).is_err());
+    assert_eq!(registry.load("tiny", None).unwrap().meta.version, 3);
+
+    // checkpoint lifecycle
+    let reg0 = RidgeRegressor::new(spec.feature_dim(), 1);
+    let meta = saved.meta.clone();
+    let ck = TrainCheckpoint::capture(meta, spec, 40, 8, 1, &reg0);
+    registry.save_checkpoint(&ck).unwrap();
+    let (name, found) = registry.find_checkpoint(None).unwrap();
+    assert_eq!(name, "tiny");
+    assert_eq!(found.batch_rows, 8);
+    registry.clear_checkpoint("tiny").unwrap();
+    assert!(registry.find_checkpoint(None).is_err());
+
+    // path-traversal names are rejected
+    assert!(registry.load("../evil", None).is_err());
+    assert!(registry.load("", None).is_err());
+
+    let _ = std::fs::remove_dir_all(&root);
+}
