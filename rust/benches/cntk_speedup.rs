@@ -1,0 +1,129 @@
+//! CNTK sketch-vs-exact speedup: the repo's first direct measurement of
+//! the paper's headline claim (Table 1: CNTKSketch features + linear
+//! ridge match exact-CNTK accuracy at a ~150× speedup on CIFAR-10).
+//!
+//! The exact DP ([`CntkExact`]) costs Θ((d₁d₂)²·q²·L) **per image pair**
+//! (four-index Γ/Π tensors), while the batched sketch
+//! ([`CntkSketch::transform_images`], GEMM-backed) costs Θ(d₁d₂·poly(s))
+//! **per image** — so the per-pair/per-image ratio must grow linearly in
+//! the pixel count, and the Gram-level ratio (n(n+1)/2 pairs vs n
+//! featurizations) grows with n on top. This bench times both across
+//! image sizes and emits `BENCH_cntk.json` (path override:
+//! `NTK_BENCH_JSON`) so the trajectory is tracked across PRs.
+
+use std::collections::BTreeMap;
+
+use ntk_sketch::bench::{bench, full_scale, smoke, Table};
+use ntk_sketch::cntk::exact::CntkExact;
+use ntk_sketch::data::cifar_like;
+use ntk_sketch::features::cntk_sketch::{CntkSketch, CntkSketchConfig};
+use ntk_sketch::features::ImageFeaturizer;
+use ntk_sketch::rng::Rng;
+use ntk_sketch::util::json::Json;
+use ntk_sketch::util::par;
+
+struct SizeResult {
+    side: usize,
+    pixels: usize,
+    sketch_us_per_image: f64,
+    exact_us_per_pair: f64,
+    pair_speedup: f64,
+    gram_speedup: f64,
+}
+
+fn main() {
+    // (image sides, batch per transform call, s_out, depth, q)
+    let (sides, batch, s_out, depth) = if smoke() {
+        (vec![4usize, 6], 8usize, 64usize, 2usize)
+    } else if full_scale() {
+        (vec![8, 16, 24, 32], 32, 256, 3)
+    } else {
+        (vec![6, 10, 14], 16, 128, 2)
+    };
+    let q = 3;
+    let budget = if smoke() { 0.05 } else { 0.5 };
+    // regression over n images needs n(n+1)/2 exact kernel entries but
+    // only n featurizations; both share the downstream ridge solve
+    let n_nominal = 1000.0f64;
+    let mut rng = Rng::new(231);
+    let mut results: Vec<SizeResult> = Vec::new();
+
+    println!("== CNTKSketch (batched, GEMM-backed) vs exact CNTK DP ==");
+    let table = Table::new(&[
+        "side",
+        "pixels",
+        "sketch us/img",
+        "exact us/pair",
+        "pair speedup",
+        "gram speedup",
+    ]);
+    for &side in &sides {
+        let ds = cifar_like::generate(batch.max(2), side, 77);
+        let cfg = CntkSketchConfig::for_budget(depth, q, s_out);
+        let sk = CntkSketch::new(side, side, 3, cfg, &mut rng);
+        let t_sketch = bench(budget, || {
+            std::hint::black_box(sk.transform_images(&ds.images));
+        });
+        let sketch_per_image = t_sketch.median_s / ds.n() as f64;
+        let exact = CntkExact::new(depth, q);
+        let t_exact = bench(budget, || {
+            std::hint::black_box(exact.theta(&ds.images[0], &ds.images[1]));
+        });
+        let exact_per_pair = t_exact.median_s;
+        let pair_speedup = exact_per_pair / sketch_per_image.max(1e-12);
+        let gram_speedup = (n_nominal * (n_nominal + 1.0) / 2.0 * exact_per_pair)
+            / (n_nominal * sketch_per_image).max(1e-12);
+        let r = SizeResult {
+            side,
+            pixels: side * side,
+            sketch_us_per_image: sketch_per_image * 1e6,
+            exact_us_per_pair: exact_per_pair * 1e6,
+            pair_speedup,
+            gram_speedup,
+        };
+        table.row(&[
+            format!("{}", r.side),
+            format!("{}", r.pixels),
+            format!("{:.1}", r.sketch_us_per_image),
+            format!("{:.1}", r.exact_us_per_pair),
+            format!("{:.2}x", r.pair_speedup),
+            format!("{:.0}x", r.gram_speedup),
+        ]);
+        results.push(r);
+    }
+
+    // machine-readable trajectory record
+    let path = std::env::var("NTK_BENCH_JSON").unwrap_or_else(|_| "BENCH_cntk.json".to_string());
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            let mut o = BTreeMap::new();
+            o.insert("side".into(), Json::Num(r.side as f64));
+            o.insert("pixels".into(), Json::Num(r.pixels as f64));
+            o.insert("sketch_us_per_image".into(), Json::Num(r.sketch_us_per_image));
+            o.insert("exact_us_per_pair".into(), Json::Num(r.exact_us_per_pair));
+            o.insert("pair_speedup".into(), Json::Num(r.pair_speedup));
+            o.insert("gram_speedup_n1000".into(), Json::Num(r.gram_speedup));
+            Json::Obj(o)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("cntk_speedup".into()));
+    root.insert("smoke".into(), Json::Bool(smoke()));
+    root.insert("full_scale".into(), Json::Bool(full_scale()));
+    root.insert("threads".into(), Json::Num(par::num_threads() as f64));
+    root.insert("depth".into(), Json::Num(depth as f64));
+    root.insert("q".into(), Json::Num(q as f64));
+    root.insert("s_out".into(), Json::Num(s_out as f64));
+    root.insert("gram_n".into(), Json::Num(n_nominal));
+    root.insert("sizes".into(), Json::Arr(rows));
+    match std::fs::write(&path, Json::Obj(root).to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+    println!(
+        "acceptance: pair and gram speedups grow with the pixel count \
+         (exact is quadratic in pixels per pair, the sketch linear per image; \
+         NTK_BENCH_SCALE=full runs sides 8..32 at depth 3)."
+    );
+}

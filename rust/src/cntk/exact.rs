@@ -36,14 +36,58 @@ impl CntkExact {
         CntkExact { depth, patch: Patch::new(q) }
     }
 
+    /// Validate an image pair before running the DP: non-degenerate
+    /// dimensions and exactly matching (H, W, C). A mismatch is a
+    /// readable `Err` here instead of an index panic mid-recursion.
+    pub fn validate_pair(&self, y: &Image, z: &Image) -> Result<(), String> {
+        for (tag, im) in [("left", y), ("right", z)] {
+            if im.h == 0 || im.w == 0 || im.c == 0 {
+                return Err(format!(
+                    "CNTK: {tag} image has degenerate geometry {}×{}×{} \
+                     (H, W, C must all be ≥ 1)",
+                    im.h, im.w, im.c
+                ));
+            }
+        }
+        if (y.h, y.w, y.c) != (z.h, z.w, z.c) {
+            return Err(format!(
+                "CNTK: image shapes must match, got {}×{}×{} vs {}×{}×{} \
+                 (the Γ/Π dynamic program is defined over one shared pixel grid)",
+                y.h, y.w, y.c, z.h, z.w, z.c
+            ));
+        }
+        Ok(())
+    }
+
+    /// Validate that every image in a set shares one geometry (the Gram
+    /// builders' precondition), naming the first offender.
+    pub fn validate_set(&self, imgs: &[Image]) -> Result<(), String> {
+        let Some(first) = imgs.first() else { return Ok(()) };
+        for (i, im) in imgs.iter().enumerate() {
+            self.validate_pair(first, im).map_err(|e| format!("image {i}: {e}"))?;
+        }
+        Ok(())
+    }
+
     /// Θ_cntk^{(L)}(y, z).
     pub fn theta(&self, y: &Image, z: &Image) -> f64 {
         self.run(y, z).theta
     }
 
-    /// Full DP with diagnostics.
+    /// Fallible [`CntkExact::theta`]: shape mismatches are readable errors.
+    pub fn try_theta(&self, y: &Image, z: &Image) -> Result<f64, String> {
+        Ok(self.try_run(y, z)?.theta)
+    }
+
+    /// Full DP with diagnostics; panics with the [`CntkExact::try_run`]
+    /// message on mismatched images.
     pub fn run(&self, y: &Image, z: &Image) -> CntkResult {
-        assert_eq!((y.h, y.w, y.c), (z.h, z.w, z.c), "CNTK: image shapes must match");
+        self.try_run(y, z).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Full DP with diagnostics, validating the pair up front.
+    pub fn try_run(&self, y: &Image, z: &Image) -> Result<CntkResult, String> {
+        self.validate_pair(y, z)?;
         let (h, w) = (y.h, y.w);
         let p = h * w;
         let q2 = (self.patch.q * self.patch.q) as f64;
@@ -119,7 +163,7 @@ impl CntkExact {
 
         // GAP (Eq. 108)
         let theta = pi.iter().sum::<f64>() / ((p * p) as f64);
-        CntkResult { theta, pi_diag, n_y, n_z }
+        Ok(CntkResult { theta, pi_diag, n_y, n_z })
     }
 
     /// N^{(h)} = (1/q²) Σ_{a,b} N^{(h-1)}_{i+a,j+b} (zero-padded).
@@ -177,7 +221,10 @@ impl CntkExact {
     }
 
     /// Exact CNTK Gram matrix over a set of images — the Table 1 baseline.
+    /// Mixed geometries are refused up front (one readable panic, not an
+    /// index error on some worker thread mid-DP).
     pub fn gram(&self, imgs: &[Image]) -> DMat {
+        self.validate_set(imgs).unwrap_or_else(|e| panic!("{e}"));
         let n = imgs.len();
         let mut out = DMat::zeros(n, n);
         // upper triangle in parallel over i
@@ -200,8 +247,14 @@ impl CntkExact {
         out
     }
 
-    /// Cross Gram K[i,j] = Θ(a_i, b_j).
+    /// Cross Gram K[i,j] = Θ(a_i, b_j). Both sets are validated against
+    /// one shared geometry up front.
     pub fn cross_gram(&self, a: &[Image], b: &[Image]) -> DMat {
+        self.validate_set(a).unwrap_or_else(|e| panic!("{e}"));
+        self.validate_set(b).unwrap_or_else(|e| panic!("{e}"));
+        if let (Some(ai), Some(bi)) = (a.first(), b.first()) {
+            self.validate_pair(ai, bi).unwrap_or_else(|e| panic!("{e}"));
+        }
         let (na, nb) = (a.len(), b.len());
         let mut out = DMat::zeros(na, nb);
         let vals = std::sync::Mutex::new(&mut out.data);
@@ -348,6 +401,30 @@ mod tests {
         let t1 = cntk.theta(&y, &z);
         let t2 = cntk.theta(&y2, &z);
         assert!((t2 - 2.5 * t1).abs() < 1e-8 * t1.abs().max(1.0), "{t1} {t2}");
+    }
+
+    #[test]
+    fn mismatched_pair_is_readable_refusal() {
+        let mut rng = Rng::new(117);
+        let y = rand_image(&mut rng, 3, 3, 2);
+        let z = rand_image(&mut rng, 3, 4, 2);
+        let cntk = CntkExact::new(2, 3);
+        let err = cntk.try_theta(&y, &z).unwrap_err();
+        assert!(err.contains("3×3×2") && err.contains("3×4×2"), "{err}");
+        // channel mismatch is caught the same way
+        let zc = rand_image(&mut rng, 3, 3, 1);
+        assert!(cntk.try_run(&y, &zc).is_err());
+        // set validation names the offending index
+        let err = cntk.validate_set(&[y.clone(), y.clone(), z]).unwrap_err();
+        assert!(err.contains("image 2"), "{err}");
+    }
+
+    #[test]
+    fn degenerate_image_is_refused() {
+        let y = Image::zeros(0, 3, 1);
+        let z = Image::zeros(0, 3, 1);
+        let err = CntkExact::new(2, 3).try_theta(&y, &z).unwrap_err();
+        assert!(err.contains("degenerate"), "{err}");
     }
 
     #[test]

@@ -2,6 +2,16 @@
 //! maps — dynamic batcher (size/deadline), worker pool over PJRT or
 //! native backends, streaming featurize→accumulate training pipeline,
 //! and serving metrics.
+//!
+//! The request path ([`FeatureServer`]): clients submit rows, a batcher
+//! thread forms fixed-shape batches under a [`BatchPolicy`]
+//! (size/deadline), and worker threads run a [`BatchBackend`] —
+//! featurizing (or predicting, when the backend wraps a store-loaded
+//! [`crate::model::NativeModel`]) whole batches into fixed buffers they
+//! reuse for the life of the thread ([`BatchBackend::run_into`]). Any
+//! [`crate::features::Featurizer`] serves through [`NativeBackend`]
+//! unchanged — including the CNTK image family, whose clients submit
+//! flattened channel-minor pixel rows.
 
 pub mod batcher;
 pub mod metrics;

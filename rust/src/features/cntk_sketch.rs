@@ -11,13 +11,40 @@
 //!   ψ^L_{ij}  = Q²(ψ^{L−1}_{ij} ⊗ φ̇^L_{ij})                  (Eq. 113)
 //! Output Ψ(x) = (1/d₁d₂)·G·Σ_{ij} ψ^L_{ij} (GAP + Gaussian JL, Eq. 114).
 //! All sketch instances are shared across pixels and inputs (oblivious).
+//!
+//! # Batched pipeline
+//!
+//! The propagation runs **batch-at-a-time**: all pixels of all images in
+//! a batch are stacked into one (n·h·w)×· row matrix and every step is a
+//! whole-matrix operation — the channel contraction φ⁰ = S·x and the
+//! sketch mixes T/W/R go through the batched transform layer
+//! ([`crate::transforms::BatchTransform`]: `util::par::par_row_blocks`
+//! row blocks, one scratch per worker thread), the layer combiner Q²
+//! through [`crate::transforms::TensorSrht::apply_batch`], and the final
+//! Gaussian JL through the packed GEMM engine
+//! ([`crate::transforms::GaussianJl::apply_gemm_batch`], one
+//! `tensor::gemm` call over the pooled batch). The per-image entry
+//! points (`features`, `features_into`) are the batch-size-1 case of the
+//! same pipeline, so batched and per-image features agree **bit for
+//! bit**: every step is row-independent within an image block, and the
+//! GEMM engine's per-element k-accumulation order does not depend on the
+//! batch size (`rust/tests/cntk_pipeline.rs` pins this at adversarial
+//! batch shapes).
+//!
+//! A flat input row in channel-minor layout (`data[(i·w + j)·c + l]`,
+//! the [`Image`] layout and what [`crate::data::ImageDataset::flatten`]
+//! produces) *is* its h·w × c pixel matrix, so `CntkSketch` also
+//! implements the vector [`Featurizer`] trait over rows of length
+//! h·w·c — which is what lets the model store persist it and the
+//! coordinator serve it like any other family.
 
-use super::ImageFeaturizer;
+use super::{Featurizer, ImageFeaturizer};
 use crate::cntk::{Image, Patch};
 use crate::ntk::arccos::{kappa0_coeffs, kappa1_coeffs};
 use crate::rng::Rng;
 use crate::tensor::Mat;
 use crate::transforms::{GaussianJl, LeafMode, PolySketch, Srht, TensorSrht};
+use crate::util::par;
 
 /// Dimension/truncation knobs of CNTKSketch (Definition 3's s, r, n₁, m).
 #[derive(Clone, Copy, Debug)]
@@ -40,11 +67,46 @@ pub struct CntkSketchConfig {
 }
 
 impl CntkSketchConfig {
+    /// Practical defaults for a feature budget `s_out`.
     pub fn for_budget(depth: usize, q: usize, s_out: usize) -> CntkSketchConfig {
         let s = s_out.clamp(64, 2048);
         CntkSketchConfig { depth, q, p1: 1, p0: 2, r: s, s, m_inner: s, s_out }
     }
+
+    /// The constructability contract, checked before any allocation:
+    /// depth ≥ 2 (Π^{(1)} ≡ 0 otherwise), odd filter, non-degenerate
+    /// sketch dimensions. Returns a readable error, never panics.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.depth < 2 {
+            return Err(format!(
+                "CNTKSketch: depth must be ≥ 2, got {} (the depth-1 CNTK with GAP is \
+                 identically zero: Π^{{(1)}} ≡ 0)",
+                self.depth
+            ));
+        }
+        if self.q == 0 || self.q % 2 == 0 {
+            return Err(format!(
+                "CNTKSketch: filter size q must be odd and ≥ 1, got {} (the paper's \
+                 patches are q×q with zero padding)",
+                self.q
+            ));
+        }
+        if self.r == 0 || self.s == 0 || self.m_inner == 0 || self.s_out == 0 {
+            return Err(format!(
+                "CNTKSketch: sketch dims must all be ≥ 1 (r={} s={} m_inner={} s_out={})",
+                self.r, self.s, self.m_inner, self.s_out
+            ));
+        }
+        Ok(())
+    }
 }
+
+/// Cap on the per-pixel intermediate floats a single pipeline chunk may
+/// materialize (2²⁶ f32 ≈ 256 MiB): batches are split into image chunks
+/// under this bound, so `transform_into` memory is O(min(batch, chunk))
+/// instead of O(batch). Chunking is invisible in the output (images are
+/// independent — pinned by the unit tests).
+const CHUNK_FLOATS: usize = 1 << 26;
 
 struct LayerSketch {
     q_phi: PolySketch,
@@ -70,8 +132,28 @@ pub struct CntkSketch {
 }
 
 impl CntkSketch {
+    /// Build the sketch, panicking with the [`CntkSketch::try_new`]
+    /// message on an invalid configuration.
     pub fn new(h: usize, w: usize, c: usize, cfg: CntkSketchConfig, rng: &mut Rng) -> CntkSketch {
-        assert!(cfg.depth >= 2, "CNTKSketch needs depth ≥ 2 (Π^{{(1)}} ≡ 0 otherwise)");
+        Self::try_new(h, w, c, cfg, rng).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible constructor: validates the config ([`CntkSketchConfig::validate`])
+    /// and the image geometry up front so a bad (depth, q, H, W, C) is a
+    /// readable refusal instead of a panic mid-construction.
+    pub fn try_new(
+        h: usize,
+        w: usize,
+        c: usize,
+        cfg: CntkSketchConfig,
+        rng: &mut Rng,
+    ) -> Result<CntkSketch, String> {
+        cfg.validate()?;
+        if h == 0 || w == 0 || c == 0 {
+            return Err(format!(
+                "CNTKSketch: degenerate image geometry {h}×{w}×{c} (H, W, C must all be ≥ 1)"
+            ));
+        }
         let patch = Patch::new(cfg.q);
         let q2 = cfg.q * cfg.q;
         let s_in = Srht::new(c, cfg.r, rng);
@@ -93,164 +175,362 @@ impl CntkSketch {
             });
         }
         let g = GaussianJl::new(cfg.s, cfg.s_out, rng);
-        CntkSketch { cfg, h, w, c, patch, s_in, layers, g }
+        Ok(CntkSketch { cfg, h, w, c, patch, s_in, layers, g })
     }
 
-    /// N^{(h)} arrays for h = 0..=L (Eq. 103; shared with Definition 2).
-    fn n_layers(&self, x: &Image) -> Vec<Vec<f64>> {
-        let (h, w) = (self.h, self.w);
-        let q2 = (self.cfg.q * self.cfg.q) as f64;
-        let mut n0 = vec![0.0f64; h * w];
-        for i in 0..h {
-            for j in 0..w {
-                n0[i * w + j] =
-                    q2 * x.pixel(i, j).iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
-            }
+    /// Output feature dimension s*.
+    ///
+    /// Inherent (not just via the traits) so call sites with both
+    /// [`Featurizer`] and [`ImageFeaturizer`] in scope stay unambiguous.
+    pub fn dim(&self) -> usize {
+        self.cfg.s_out
+    }
+
+    /// Flat input dimension h·w·c (the vector-`Featurizer` row length).
+    pub fn input_dim(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    /// Validate one image against the configured geometry.
+    pub fn check_image(&self, x: &Image) -> Result<(), String> {
+        if (x.h, x.w, x.c) != (self.h, self.w, self.c) {
+            return Err(format!(
+                "CNTKSketch: image is {}×{}×{} but this sketch was built for {}×{}×{} \
+                 (H×W×C must match exactly — the patch sums and N^{{(h)}} recursion are \
+                 geometry-specific)",
+                x.h, x.w, x.c, self.h, self.w, self.c
+            ));
         }
+        Ok(())
+    }
+
+    /// Validate a flat batch (rows of length h·w·c, channel-minor).
+    fn check_flat(&self, x: &Mat) -> Result<(), String> {
+        if x.cols != self.input_dim() {
+            return Err(format!(
+                "CNTKSketch: input rows have dim {} but the configured image geometry is \
+                 {}×{}×{} (flat dim {})",
+                x.cols,
+                self.h,
+                self.w,
+                self.c,
+                self.input_dim()
+            ));
+        }
+        Ok(())
+    }
+
+    /// N^{(h)} arrays for h = 0..=L (Eq. 103; shared with Definition 2),
+    /// for every image in the batch (`data` is the borrowed
+    /// (n·h·w)×c pixel stack, row-major): each level is a flat `n·p`
+    /// array in (image, pixel) order. Patch sums only ever read the same
+    /// image's block, so levels are computed per image block in parallel.
+    fn n_layers_batch(&self, data: &[f32], n_imgs: usize) -> Vec<Vec<f64>> {
+        let (h, w, c) = (self.h, self.w, self.c);
+        let p = h * w;
+        let q2 = (self.cfg.q * self.cfg.q) as f64;
+        let mut n0 = vec![0.0f64; n_imgs * p];
+        par::par_row_blocks_t(&mut n0, n_imgs, p, |img0, block| {
+            for (k, irow) in block.chunks_mut(p).enumerate() {
+                let base = (img0 + k) * p;
+                for (pp, slot) in irow.iter_mut().enumerate() {
+                    *slot = q2
+                        * data[(base + pp) * c..(base + pp + 1) * c]
+                            .iter()
+                            .map(|&v| (v as f64) * (v as f64))
+                            .sum::<f64>();
+                }
+            }
+        });
         let mut out = vec![n0];
         for _ in 1..=self.cfg.depth {
             let prev = out.last().unwrap();
-            let mut next = vec![0.0f64; h * w];
-            for i in 0..h {
-                for j in 0..w {
-                    let mut s = 0.0;
-                    for (ii, jj) in self.patch.offsets(i, j, h, w) {
-                        s += prev[ii * w + jj];
+            let mut next = vec![0.0f64; n_imgs * p];
+            par::par_row_blocks_t(&mut next, n_imgs, p, |img0, block| {
+                for (k, irow) in block.chunks_mut(p).enumerate() {
+                    let base = (img0 + k) * p;
+                    for i in 0..h {
+                        for j in 0..w {
+                            let mut acc = 0.0;
+                            for (ii, jj) in self.patch.offsets(i, j, h, w) {
+                                acc += prev[base + ii * w + jj];
+                            }
+                            irow[i * w + j] = acc / q2;
+                        }
                     }
-                    next[i * w + j] = s / q2;
                 }
-            }
+            });
             out.push(next);
         }
         out
     }
 
-    /// μ^{(h)}_{ij}: concatenated (zero-padded) neighbour features scaled
-    /// by 1/√N (Eq. 110). `phi` holds per-pixel vectors of length r.
-    fn mu(&self, phi: &[Vec<f32>], i: usize, j: usize, n_h: f64) -> Vec<f32> {
-        let r = self.patch.radius();
-        let q = self.cfg.q;
-        let blk = self.cfg.r;
-        let mut out = vec![0.0f32; q * q * blk];
-        if n_h <= 0.0 {
-            return out;
-        }
-        let inv = (1.0 / n_h.sqrt()) as f32;
+    /// Visit the q×q zero-padded patch around pixel-stack row `row`:
+    /// `f(slot, src)` for slot = 0..q² in (a, b) row-major order, with
+    /// `src` the in-bounds neighbour's pixel-stack row or `None` at
+    /// image borders. The single definition of the patch geometry both
+    /// gather stages share (neighbours never cross an image boundary).
+    fn for_patch_slots(&self, row: usize, mut f: impl FnMut(usize, Option<usize>)) {
+        let (h, w) = (self.h, self.w);
+        let p = h * w;
+        let rad = self.patch.radius();
+        let (img, pp) = (row / p, row % p);
+        let (i, j) = (pp / w, pp % w);
         let mut slot = 0usize;
-        for a in -r..=r {
-            for b in -r..=r {
+        for a in -rad..=rad {
+            for b in -rad..=rad {
                 let (ia, ja) = (i as isize + a, j as isize + b);
-                if ia >= 0 && ja >= 0 && (ia as usize) < self.h && (ja as usize) < self.w {
-                    let src = &phi[ia as usize * self.w + ja as usize];
-                    for (k, &v) in src.iter().enumerate() {
-                        out[slot * blk + k] = inv * v;
-                    }
-                }
+                let src = if ia >= 0 && ja >= 0 && (ia as usize) < h && (ja as usize) < w {
+                    Some(img * p + ia as usize * w + ja as usize)
+                } else {
+                    None
+                };
+                f(slot, src);
                 slot += 1;
             }
         }
-        out
+    }
+
+    /// μ^{(h)} rows (Eq. 110): per pixel, the q×q neighbourhood of φ
+    /// concatenated (zero-padded at image borders, all-zero when N ≤ 0)
+    /// and scaled by 1/√N. Pure data movement + scale, parallel over
+    /// output rows.
+    fn gather_mu(&self, phi: &Mat, n_h: &[f64], mu: &mut Mat) {
+        let blk = self.cfg.r;
+        let cols = self.cfg.q * self.cfg.q * blk;
+        par::par_rows(&mut mu.data, phi.rows, cols, |row, orow| {
+            if n_h[row] <= 0.0 {
+                orow.fill(0.0);
+                return;
+            }
+            let inv = (1.0 / n_h[row].sqrt()) as f32;
+            self.for_patch_slots(row, |slot, src| {
+                let dst = &mut orow[slot * blk..(slot + 1) * blk];
+                match src {
+                    Some(sr) => {
+                        for (o, &v) in dst.iter_mut().zip(phi.row(sr).iter()) {
+                            *o = inv * v;
+                        }
+                    }
+                    None => dst.fill(0.0),
+                }
+            });
+        });
+    }
+
+    /// ψ^{(h)} = R·⊕_{(a,b)} η_{i+a,j+b} with η = Q²(ψ⊗φ̇) ⊕ φ
+    /// (Eq. 112): the patch concat and the R sketch-mix fused — one
+    /// concat buffer and one SRHT scratch per worker thread
+    /// (`par_row_blocks`), never a per-pixel allocation.
+    fn gather_eta_mix(&self, layer: &LayerSketch, q2_out: &Mat, phi_new: &Mat, psi_new: &mut Mat) {
+        let s = self.cfg.s;
+        let blk = s + self.cfg.r;
+        let cat_len = self.cfg.q * self.cfg.q * blk;
+        par::par_row_blocks(&mut psi_new.data, q2_out.rows, s, |row0, block| {
+            let mut cat = vec![0.0f32; cat_len];
+            let mut scratch = vec![0.0f32; layer.r_mix.scratch_len()];
+            for (k, orow) in block.chunks_mut(s).enumerate() {
+                self.for_patch_slots(row0 + k, |slot, src| {
+                    let dst = &mut cat[slot * blk..(slot + 1) * blk];
+                    match src {
+                        Some(sr) => {
+                            dst[..s].copy_from_slice(q2_out.row(sr));
+                            dst[s..].copy_from_slice(phi_new.row(sr));
+                        }
+                        None => dst.fill(0.0),
+                    }
+                });
+                layer.r_mix.apply_into(&cat, &mut scratch, orow);
+            }
+        });
+    }
+
+    /// Entry point over the borrowed flat input: `data` holds n images
+    /// of h·w·c floats each, channel-minor — which *is* the (n·h·w)×c
+    /// pixel stack, row-major, so no copy of the input is ever taken.
+    /// `out` is the flat n×s_out output buffer, fully overwritten.
+    ///
+    /// Batches are processed in bounded image chunks so the per-pixel
+    /// intermediates (μ is q²·r floats per pixel row) never grow past
+    /// [`CHUNK_FLOATS`] regardless of the batch size — images are
+    /// independent, so chunk boundaries cannot change a single output
+    /// bit (same argument as the batch-size invariance, tested).
+    fn pipeline_into(&self, data: &[f32], n_imgs: usize, out: &mut [f32]) {
+        self.pipeline_into_budget(data, n_imgs, out, CHUNK_FLOATS);
+    }
+
+    /// [`CntkSketch::pipeline_into`] with an explicit intermediate-float
+    /// budget — split out so tests can force multi-chunk execution on
+    /// tiny inputs.
+    fn pipeline_into_budget(&self, data: &[f32], n_imgs: usize, out: &mut [f32], budget: usize) {
+        debug_assert_eq!(data.len(), n_imgs * self.input_dim());
+        debug_assert_eq!(out.len(), n_imgs * self.cfg.s_out);
+        if n_imgs == 0 {
+            return;
+        }
+        let p = self.h * self.w;
+        let q2 = self.cfg.q * self.cfg.q;
+        // intermediate floats per image: μ + (φ, φ_new) + (ψ, φ̇, Q²-out, ψ_new)
+        let per_img = p * (q2 * self.cfg.r + 2 * self.cfg.r + 4 * self.cfg.s);
+        let imgs_per_chunk = (budget / per_img.max(1)).max(1).min(n_imgs);
+        let (c, s_out) = (self.c, self.cfg.s_out);
+        let mut img0 = 0usize;
+        while img0 < n_imgs {
+            let nb = imgs_per_chunk.min(n_imgs - img0);
+            self.pipeline_chunk(
+                &data[img0 * p * c..(img0 + nb) * p * c],
+                nb,
+                &mut out[img0 * s_out..(img0 + nb) * s_out],
+            );
+            img0 += nb;
+        }
+    }
+
+    /// One bounded chunk of the batched core: every step operates on the
+    /// whole (n·h·w)-row pixel stack at once; see the module docs for
+    /// the bit-parity argument between batch sizes.
+    fn pipeline_chunk(&self, data: &[f32], n_imgs: usize, out: &mut [f32]) {
+        let (h, w, c) = (self.h, self.w, self.c);
+        let p = h * w;
+        let np = n_imgs * p;
+        let qf = self.cfg.q as f32;
+        let (r, s) = (self.cfg.r, self.cfg.s);
+
+        let n_arr = self.n_layers_batch(data, n_imgs);
+
+        // step 2: φ⁰ = S·x_{(i,j,:)} — every pixel of every image at
+        // once. Same per-row core as `Srht::apply_batch`, reading rows
+        // straight from the borrowed pixel stack (bit-identical).
+        let mut phi = Mat::zeros(np, r);
+        par::par_row_blocks(&mut phi.data, np, r, |row0, block| {
+            let mut scratch = vec![0.0f32; self.s_in.scratch_len()];
+            for (k, orow) in block.chunks_mut(r).enumerate() {
+                let row = row0 + k;
+                self.s_in.apply_into(&data[row * c..(row + 1) * c], &mut scratch, orow);
+            }
+        });
+        let mut psi = Mat::zeros(np, s); // ψ⁰ = 0
+        let mut mu = Mat::zeros(np, self.cfg.q * self.cfg.q * r);
+        let mut phi_new = Mat::zeros(np, r);
+        let mut phi_dot = Mat::zeros(np, s);
+        let mut q2_out = Mat::zeros(np, s);
+        let mut psi_new = Mat::zeros(np, s);
+
+        for (hh, layer) in self.layers.iter().enumerate() {
+            let lvl = hh + 1;
+            let n_h = &n_arr[lvl];
+            self.gather_mu(&phi, n_h, &mut mu);
+            // φ̇^h: κ₀ block (batched), scaled by 1/q — needed at every
+            // layer (it feeds Q² below)
+            super::poly_block_batch(&layer.q_dot, &layer.b_sqrt, &layer.w, &mu, &mut phi_dot);
+            par::par_rows(&mut phi_dot.data, np, s, |_row, orow| {
+                for v in orow.iter_mut() {
+                    *v /= qf;
+                }
+            });
+            // Q²(ψ^{h−1} ⊗ φ̇^h) for the whole pixel stack
+            layer.q2.apply_batch(&psi, &phi_dot, &mut q2_out);
+            if lvl < self.cfg.depth {
+                // φ^h: κ₁ block (batched PolySketch family + T mix), then
+                // the √N/q rescale of Definition 3 — only layers below
+                // the top consume φ (Eq. 113 reads φ̇ alone), so the
+                // final layer skips this entire sketch stage
+                super::poly_block_batch(&layer.q_phi, &layer.c_sqrt, &layer.t, &mu, &mut phi_new);
+                par::par_rows(&mut phi_new.data, np, r, |row, orow| {
+                    let scale = (n_h[row].sqrt() as f32) / qf;
+                    for v in orow.iter_mut() {
+                        *v *= scale;
+                    }
+                });
+                // η then patch-summed ψ (Eq. 112)
+                self.gather_eta_mix(layer, &q2_out, &phi_new, &mut psi_new);
+                std::mem::swap(&mut psi, &mut psi_new);
+                std::mem::swap(&mut phi, &mut phi_new);
+            } else {
+                // final layer (Eq. 113): ψ^L = Q²(ψ^{L−1} ⊗ φ̇^L)
+                std::mem::swap(&mut psi, &mut q2_out);
+            }
+        }
+
+        // step 6 (Eq. 114): GAP per image, then one Gaussian JL GEMM over
+        // the pooled batch.
+        let mut pooled = Mat::zeros(n_imgs, s);
+        let psi_ref = &psi;
+        par::par_rows(&mut pooled.data, n_imgs, s, |img, orow| {
+            for pp in 0..p {
+                for (o, &v) in orow.iter_mut().zip(psi_ref.row(img * p + pp).iter()) {
+                    *o += v;
+                }
+            }
+            let inv = 1.0 / p as f32;
+            for o in orow.iter_mut() {
+                *o *= inv;
+            }
+        });
+        self.g.apply_gemm_batch(&pooled, out);
     }
 
     /// Feature map for one image.
     pub fn features(&self, x: &Image) -> Vec<f32> {
+        self.try_features(x).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible per-image feature map: geometry mismatches are a
+    /// readable `Err`, not a panic mid-recursion.
+    pub fn try_features(&self, x: &Image) -> Result<Vec<f32>, String> {
+        self.check_image(x)?;
         let mut out = vec![0.0f32; self.cfg.s_out];
-        self.features_into(x, &mut out);
-        out
+        self.pipeline_into(&x.data, 1, &mut out);
+        Ok(out)
     }
 
     /// Feature map for one image, written into a caller-owned slice
-    /// (len = `s_out`) — the core the batched `transform_images` reuses.
+    /// (len = `s_out`) — the batch-size-1 case of the batched pipeline.
     pub fn features_into(&self, x: &Image, out: &mut [f32]) {
-        assert_eq!((x.h, x.w, x.c), (self.h, self.w, self.c), "CntkSketch: geometry mismatch");
-        assert_eq!(out.len(), self.cfg.s_out, "CntkSketch: output length mismatch");
-        let (h, w) = (self.h, self.w);
-        let p = h * w;
-        let q = self.cfg.q as f32;
-        let n = self.n_layers(x);
+        assert_eq!(out.len(), self.cfg.s_out, "CNTKSketch: output length mismatch");
+        self.check_image(x).unwrap_or_else(|e| panic!("{e}"));
+        self.pipeline_into(&x.data, 1, out);
+    }
 
-        // step 2: φ⁰_{ij} = S·x_{(i,j,:)}
-        let mut phi: Vec<Vec<f32>> = (0..p)
-            .map(|pp| self.s_in.apply(x.pixel(pp / w, pp % w)))
-            .collect();
-        let mut psi: Vec<Vec<f32>> = vec![vec![0.0f32; self.cfg.s]; p];
+    /// Fallible batched feature map over images: validates every image's
+    /// geometry up front (naming the offending index) before any work.
+    /// (Images are separate allocations, so this is the one path that
+    /// gathers the batch into a contiguous buffer first.)
+    pub fn try_transform_images(&self, imgs: &[Image]) -> Result<Mat, String> {
+        let d = self.input_dim();
+        let mut flat = vec![0.0f32; imgs.len() * d];
+        for (i, im) in imgs.iter().enumerate() {
+            self.check_image(im).map_err(|e| format!("image {i}: {e}"))?;
+            flat[i * d..(i + 1) * d].copy_from_slice(&im.data);
+        }
+        let mut out = Mat::zeros(imgs.len(), self.cfg.s_out);
+        self.pipeline_into(&flat, imgs.len(), &mut out.data);
+        Ok(out)
+    }
+}
 
-        for (hh, layer) in self.layers.iter().enumerate() {
-            let lvl = hh + 1;
-            let n_h = &n[lvl];
-            // per-pixel φ^h and φ̇^h
-            let mut phi_new: Vec<Vec<f32>> = Vec::with_capacity(p);
-            let mut phi_dot: Vec<Vec<f32>> = Vec::with_capacity(p);
-            for pp in 0..p {
-                let (i, j) = (pp / w, pp % w);
-                let mu = self.mu(&phi, i, j, n_h[pp]);
-                let mut f = super::poly_block(&layer.q_phi, &layer.c_sqrt, &layer.t, &mu);
-                let scale = (n_h[pp].sqrt() as f32) / q;
-                for v in &mut f {
-                    *v *= scale;
-                }
-                phi_new.push(f);
-                let mut fd = super::poly_block(&layer.q_dot, &layer.b_sqrt, &layer.w, &mu);
-                for v in &mut fd {
-                    *v /= q;
-                }
-                phi_dot.push(fd);
-            }
-            if lvl < self.cfg.depth {
-                // η then patch-summed ψ (Eq. 112)
-                let eta: Vec<Vec<f32>> = (0..p)
-                    .map(|pp| {
-                        let mut e = layer.q2.apply(&psi[pp], &phi_dot[pp]);
-                        e.extend_from_slice(&phi_new[pp]);
-                        e
-                    })
-                    .collect();
-                let blk = self.cfg.s + self.cfg.r;
-                let qq = self.cfg.q;
-                let rrad = self.patch.radius();
-                let mut psi_new: Vec<Vec<f32>> = Vec::with_capacity(p);
-                for pp in 0..p {
-                    let (i, j) = (pp / w, pp % w);
-                    let mut cat = vec![0.0f32; qq * qq * blk];
-                    let mut slot = 0usize;
-                    for a in -rrad..=rrad {
-                        for b in -rrad..=rrad {
-                            let (ia, ja) = (i as isize + a, j as isize + b);
-                            if ia >= 0
-                                && ja >= 0
-                                && (ia as usize) < self.h
-                                && (ja as usize) < self.w
-                            {
-                                let src = &eta[ia as usize * self.w + ja as usize];
-                                cat[slot * blk..slot * blk + blk].copy_from_slice(src);
-                            }
-                            slot += 1;
-                        }
-                    }
-                    psi_new.push(layer.r_mix.apply(&cat));
-                }
-                psi = psi_new;
-            } else {
-                // final layer (Eq. 113): ψ^L = Q²(ψ^{L−1} ⊗ φ̇^L)
-                for pp in 0..p {
-                    psi[pp] = layer.q2.apply(&psi[pp], &phi_dot[pp]);
-                }
-            }
-            phi = phi_new;
-        }
+impl Featurizer for CntkSketch {
+    fn dim(&self) -> usize {
+        self.cfg.s_out
+    }
 
-        // step 6 (Eq. 114): GAP + Gaussian JL
-        let mut pooled = vec![0.0f32; self.cfg.s];
-        for pp in 0..p {
-            for (k, &v) in psi[pp].iter().enumerate() {
-                pooled[k] += v;
-            }
-        }
-        let inv = 1.0 / p as f32;
-        for v in &mut pooled {
-            *v *= inv;
-        }
-        self.g.apply_into(&pooled, out);
+    fn transform(&self, x: &Mat) -> Mat {
+        let mut out = Mat::zeros(x.rows, self.cfg.s_out);
+        self.transform_into(x, &mut out);
+        out
+    }
+
+    fn transform_into(&self, x: &Mat, out: &mut Mat) {
+        assert_eq!(out.rows, x.rows, "CNTKSketch: output row count mismatch");
+        assert_eq!(out.cols, self.cfg.s_out, "CNTKSketch: output dim mismatch");
+        self.check_flat(x).unwrap_or_else(|e| panic!("{e}"));
+        // flat n×(h·w·c) rows *are* the (n·h·w)×c pixel stack — borrowed
+        // straight through, no copy on the serving hot path
+        self.pipeline_into(&x.data, x.rows, &mut out.data);
+    }
+
+    fn name(&self) -> &'static str {
+        "CNTKSketch"
     }
 }
 
@@ -260,11 +540,7 @@ impl ImageFeaturizer for CntkSketch {
     }
 
     fn transform_images(&self, imgs: &[Image]) -> Mat {
-        let mut out = Mat::zeros(imgs.len(), self.cfg.s_out);
-        crate::util::par::par_rows(&mut out.data, imgs.len(), self.cfg.s_out, |i, orow| {
-            self.features_into(&imgs[i], orow);
-        });
-        out
+        self.try_transform_images(imgs).unwrap_or_else(|e| panic!("{e}"))
     }
 
     fn name(&self) -> &'static str {
@@ -341,17 +617,88 @@ mod tests {
     }
 
     #[test]
-    fn batch_consistency() {
+    fn batch_matches_per_image_bitwise() {
         let mut rng = Rng::new(174);
         let cfg = CntkSketchConfig::for_budget(2, 3, 64);
         let sk = CntkSketch::new(3, 3, 2, cfg, &mut rng);
         let imgs: Vec<Image> = (0..3).map(|_| rand_image(&mut rng, 3, 3, 2)).collect();
         let out = sk.transform_images(&imgs);
         assert_eq!((out.rows, out.cols), (3, 64));
-        for i in 0..3 {
-            let f = sk.features(&imgs[i]);
-            crate::util::prop::assert_close(out.row(i), &f, 1e-6, 1e-6).unwrap();
+        for (i, im) in imgs.iter().enumerate() {
+            let f = sk.features(im);
+            for (a, b) in out.row(i).iter().zip(f.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "image {i}");
+            }
         }
+    }
+
+    #[test]
+    fn flat_transform_matches_image_path() {
+        // the vector-Featurizer surface (flattened rows) and the image
+        // surface are the same pipeline
+        let mut rng = Rng::new(176);
+        let cfg = CntkSketchConfig::for_budget(2, 3, 64);
+        let sk = CntkSketch::new(4, 3, 2, cfg, &mut rng);
+        let imgs: Vec<Image> = (0..2).map(|_| rand_image(&mut rng, 4, 3, 2)).collect();
+        let mut flat = Mat::zeros(2, sk.input_dim());
+        for (i, im) in imgs.iter().enumerate() {
+            flat.row_mut(i).copy_from_slice(&im.data);
+        }
+        let via_flat = Featurizer::transform(&sk, &flat);
+        let via_imgs = sk.transform_images(&imgs);
+        assert_eq!(via_flat.data.len(), via_imgs.data.len());
+        for (a, b) in via_flat.data.iter().zip(via_imgs.data.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn chunked_pipeline_is_bit_identical() {
+        // the memory-bounding image chunks must be invisible in the
+        // output: force 1- and 2-image chunks and compare bitwise
+        let mut rng = Rng::new(179);
+        let cfg = CntkSketchConfig::for_budget(2, 3, 32);
+        let sk = CntkSketch::new(3, 3, 2, cfg, &mut rng);
+        let imgs: Vec<Image> = (0..5).map(|_| rand_image(&mut rng, 3, 3, 2)).collect();
+        let mut flat = vec![0.0f32; 5 * 18];
+        for (i, im) in imgs.iter().enumerate() {
+            flat[i * 18..(i + 1) * 18].copy_from_slice(&im.data);
+        }
+        let whole = sk.transform_images(&imgs);
+        // a budget of 1 float clamps to one image per chunk
+        let mut one = vec![f32::NAN; 5 * sk.dim()];
+        sk.pipeline_into_budget(&flat, 5, &mut one, 1);
+        // a two-image budget exercises an uneven final chunk (2+2+1)
+        let per_img = 9 * (9 * sk.cfg.r + 2 * sk.cfg.r + 4 * sk.cfg.s);
+        let mut two = vec![f32::NAN; 5 * sk.dim()];
+        sk.pipeline_into_budget(&flat, 5, &mut two, 2 * per_img);
+        for (k, &want) in whole.data.iter().enumerate() {
+            assert_eq!(want.to_bits(), one[k].to_bits(), "1-img chunks, index {k}");
+            assert_eq!(want.to_bits(), two[k].to_bits(), "2-img chunks, index {k}");
+        }
+    }
+
+    #[test]
+    fn rejects_geometry_mismatch_readably() {
+        let mut rng = Rng::new(177);
+        let cfg = CntkSketchConfig::for_budget(2, 3, 32);
+        let sk = CntkSketch::new(3, 3, 1, cfg, &mut rng);
+        let wrong = rand_image(&mut rng, 4, 3, 1);
+        let err = sk.try_features(&wrong).unwrap_err();
+        assert!(err.contains("4×3×1") && err.contains("3×3×1"), "{err}");
+        let err = sk
+            .try_transform_images(&[rand_image(&mut rng, 3, 3, 1), wrong])
+            .unwrap_err();
+        assert!(err.contains("image 1"), "{err}");
+    }
+
+    #[test]
+    fn rejects_even_filter_readably() {
+        let mut rng = Rng::new(178);
+        let mut cfg = CntkSketchConfig::for_budget(2, 3, 32);
+        cfg.q = 4;
+        let err = CntkSketch::try_new(3, 3, 1, cfg, &mut rng).unwrap_err();
+        assert!(err.contains("odd"), "{err}");
     }
 
     #[test]

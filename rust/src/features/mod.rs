@@ -8,6 +8,28 @@
 //! into a caller-owned matrix (the coordinator's workers reuse one output
 //! buffer across batches), built on the batched transform layer
 //! (`transforms::BatchTransform`).
+//!
+//! [`cntk_sketch::CntkSketch`] implements **both** traits: flat rows in
+//! channel-minor layout are exactly the pixel grid, so the image family
+//! persists ([`crate::model::FeaturizerSpec`]) and serves
+//! ([`crate::coordinator::NativeBackend`]) like every vector family.
+//!
+//! # Example: batched featurization into a caller-owned buffer
+//!
+//! ```
+//! use ntk_sketch::features::cntk_sketch::{CntkSketch, CntkSketchConfig};
+//! use ntk_sketch::features::Featurizer;
+//! use ntk_sketch::rng::Rng;
+//! use ntk_sketch::tensor::Mat;
+//!
+//! let mut rng = Rng::new(7);
+//! // a CNTK sketch over 4×4 RGB images, 32 output features
+//! let sk = CntkSketch::new(4, 4, 3, CntkSketchConfig::for_budget(2, 3, 32), &mut rng);
+//! let batch = Mat::from_vec(2, 48, rng.gauss_vec(2 * 48)); // 2 flat images
+//! let mut out = Mat::zeros(2, sk.dim());
+//! sk.transform_into(&batch, &mut out); // overwrites every slot of `out`
+//! assert_eq!((out.rows, out.cols), (2, 32));
+//! ```
 
 pub mod arccos_rf;
 pub mod cntk_sketch;

@@ -11,7 +11,34 @@
 //! - **L2/L1 (python/compile)**: the NTKRF feature map in JAX calling
 //!   Pallas kernels, AOT-lowered to HLO text executed here via PJRT.
 //!
-//! See DESIGN.md for the module inventory and the per-experiment index.
+//! The production surfaces on top of the algorithms: a packed
+//! register-tiled GEMM engine under every dense hot path
+//! ([`tensor::gemm`]), batched caller-owned-buffer featurization
+//! ([`transforms::BatchTransform`], [`features::Featurizer`]), a serving
+//! coordinator with a dynamic batcher ([`coordinator`]), and a
+//! persistent versioned model store ([`model`]) behind the
+//! `train --save` / `predict --model` / `serve --model` CLI.
+//!
+//! See DESIGN.md for the module inventory and the per-experiment index,
+//! and README.md for the operational quickstart.
+//!
+//! # Quickstart: featurize + streaming ridge
+//!
+//! ```
+//! use ntk_sketch::features::{rff::Rff, Featurizer};
+//! use ntk_sketch::regression::RidgeRegressor;
+//! use ntk_sketch::rng::Rng;
+//! use ntk_sketch::tensor::Mat;
+//!
+//! let mut rng = Rng::new(7);
+//! let f = Rff::new(4, 32, 1.0, &mut rng);        // d=4 → 32 features
+//! let x = Mat::from_vec(64, 4, rng.gauss_vec(256));
+//! let y = Mat::from_vec(64, 1, rng.gauss_vec(64));
+//! let mut ridge = RidgeRegressor::new(f.dim(), 1);
+//! ridge.add_batch(&f.transform(&x), &y);         // stream batches
+//! ridge.solve(1e-3).unwrap();
+//! assert_eq!(ridge.predict(&f.transform(&x)).rows, 64);
+//! ```
 
 // Style lints that conflict with this codebase's deliberate idiom:
 // index-heavy numerical loops (often clearer and sometimes faster than

@@ -5,7 +5,10 @@
 //!   golden                       verify AOT golden parity through PJRT
 //!   kernel   --depth L           print K_relu^{(L)} on a grid (Fig. 1 data)
 //!   train    --family F ...      feature-map ridge regression on a
-//!                                UCI-like dataset (Table 2 single cell);
+//!                                UCI-like dataset (Table 2 single cell)
+//!                                or one-hot ridge classification on an
+//!                                image family (cifar / mnist / the
+//!                                `--family cntk` production alias);
 //!                                with --save NAME it streams the fit,
 //!                                checkpoints every --checkpoint-every K
 //!                                batches, and persists the model to the
@@ -17,22 +20,30 @@
 //!   models                       list the registry; --gc NAME trims old
 //!                                versions
 //!
+//! Dataset families: `millionsongs | workloads | ct | protein` (UCI-like
+//! regression), `cifar | mnist` (flattened side×side image
+//! classification, `--side` controls the resolution), and `cntk` — the
+//! production alias that trains the CNTKSketch feature family on
+//! CIFAR-like images (`--family cntk` ≡ `--family cifar --method cntk`).
+//!
 //! Model registry root: `--models-dir`, else `$NTK_MODEL_DIR`, else
 //! `./models` (DESIGN.md §8).
 
 use ntk_sketch::coordinator::{BatchBackend, BatchPolicy, FeatureServer, NativeBackend};
 use ntk_sketch::data::uci_like::{self, UciFamily};
-use ntk_sketch::data::Dataset;
+use ntk_sketch::data::{cifar_like, mnist_like, split, Dataset};
+use ntk_sketch::features::cntk_sketch::CntkSketchConfig;
 use ntk_sketch::features::grad_rf::GradRfMlp;
 use ntk_sketch::features::ntk_rf::NtkRfConfig;
 use ntk_sketch::features::ntk_sketch::NtkSketchConfig;
 use ntk_sketch::features::rff::Rff;
 use ntk_sketch::features::Featurizer;
 use ntk_sketch::model::codec::crc32;
+use ntk_sketch::model::spec::MAX_CNTK_DEPTH;
 use ntk_sketch::model::{FeaturizerSpec, ModelMeta, Registry, SavedModel, TrainCheckpoint};
 use ntk_sketch::ntk::k_relu;
 use ntk_sketch::regression::cv::kfold_mse;
-use ntk_sketch::regression::{mse, RidgeRegressor};
+use ntk_sketch::regression::{accuracy, mse, RidgeRegressor};
 use ntk_sketch::rng::Rng;
 use ntk_sketch::runtime::{artifacts_dir, pjrt_enabled, Engine};
 use ntk_sketch::tensor::Mat;
@@ -58,6 +69,7 @@ fn main() {
                  \tntk-sketch kernel --depth 3\n\
                  \tntk-sketch train --family protein --method ntkrf --m 1024 --n 1000\n\
                  \tntk-sketch train --family protein --method ntkrf --save m1 --checkpoint-every 1\n\
+                 \tntk-sketch train --family cntk --side 8 --n 200 --save c1\n\
                  \tntk-sketch train --resume\n\
                  \tntk-sketch predict --model m1\n\
                  \tntk-sketch serve --model m1 --requests 1000\n\
@@ -147,28 +159,138 @@ fn kernel(args: &Args) {
     }
 }
 
-/// Accepts both the CLI short form (`protein`) and the persisted
-/// `meta.dataset` form (`protein-like`). Unknown names are an error —
-/// never a silent fallback (a typo'd `--family`, or a model whose
-/// dataset this CLI cannot regenerate, must not evaluate against the
-/// wrong distribution).
-fn parse_family(name: &str) -> Result<UciFamily, String> {
+/// A dataset family the CLI can (re)generate: the four UCI-like
+/// regression families plus the two flattened image-classification
+/// families backing the CNTK production path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum DataFamily {
+    Uci(UciFamily),
+    Cifar,
+    Mnist,
+}
+
+impl DataFamily {
+    /// The persisted `meta.dataset` name.
+    fn name(&self) -> &'static str {
+        match self {
+            DataFamily::Uci(f) => f.name(),
+            DataFamily::Cifar => "cifar-like",
+            DataFamily::Mnist => "mnist-like",
+        }
+    }
+
+    fn is_image(&self) -> bool {
+        matches!(self, DataFamily::Cifar | DataFamily::Mnist)
+    }
+
+    /// Image channel count (0 for the flat regression families).
+    fn channels(&self) -> usize {
+        match self {
+            DataFamily::Cifar => 3,
+            DataFamily::Mnist => 1,
+            DataFamily::Uci(_) => 0,
+        }
+    }
+}
+
+/// Accepts both the CLI short form (`protein`, `cifar`) and the
+/// persisted `meta.dataset` form (`protein-like`, `cifar-like`). Unknown
+/// names are an error — never a silent fallback (a typo'd `--family`, or
+/// a model whose dataset this CLI cannot regenerate, must not evaluate
+/// against the wrong distribution).
+fn parse_family(name: &str) -> Result<DataFamily, String> {
     match name.trim_end_matches("-like") {
-        "millionsongs" => Ok(UciFamily::MillionSongs),
-        "workloads" => Ok(UciFamily::WorkLoads),
-        "ct" => Ok(UciFamily::CtSlices),
-        "protein" => Ok(UciFamily::Protein),
+        "millionsongs" => Ok(DataFamily::Uci(UciFamily::MillionSongs)),
+        "workloads" => Ok(DataFamily::Uci(UciFamily::WorkLoads)),
+        "ct" => Ok(DataFamily::Uci(UciFamily::CtSlices)),
+        "protein" => Ok(DataFamily::Uci(UciFamily::Protein)),
+        "cifar" => Ok(DataFamily::Cifar),
+        "mnist" => Ok(DataFamily::Mnist),
         other => Err(format!(
-            "unknown dataset family `{other}` (known: millionsongs, workloads, ct, protein)"
+            "unknown dataset family `{other}` (known: millionsongs, workloads, ct, protein, \
+             cifar, mnist — or the `cntk` train alias)"
         )),
     }
+}
+
+/// Resolve (`--family`, `--method`) honoring the `--family cntk`
+/// production alias: cntk is a *featurizer* family whose canonical
+/// dataset is the CIFAR-like generator, so `train --family cntk` ≡
+/// `train --family cifar --method cntk`.
+fn family_and_method(args: &Args) -> (DataFamily, String) {
+    let fam_arg = args.get_or("family", "protein");
+    if fam_arg == "cntk" {
+        if let Some(m) = args.get("method") {
+            if m != "cntk" {
+                eprintln!("warning: --family cntk pins --method cntk (ignoring --method {m})");
+            }
+        }
+        return (DataFamily::Cifar, "cntk".to_string());
+    }
+    let fam = parse_family(fam_arg).unwrap_or_else(|e| fail(e));
+    (fam, args.get_or("method", "ntkrf").to_string())
+}
+
+/// Generate the vector-shaped dataset for a family. Image families
+/// render side×side images and flatten them channel-minor, so every
+/// downstream consumer — including the cntk featurizer, which interprets
+/// flat rows as pixel grids — sees one row layout.
+fn gen_vec_dataset(fam: &DataFamily, n: usize, side: usize, seed: u64) -> Dataset {
+    match fam {
+        DataFamily::Uci(f) => uci_like::generate(*f, n, seed),
+        DataFamily::Cifar => cifar_like::generate(n, side, seed).flatten(),
+        DataFamily::Mnist => mnist_like::generate(n, side, seed).flatten(),
+    }
+}
+
+/// Recover the side of a square c-channel image from its flat row
+/// dimension — the one place this geometry inversion lives, shared by
+/// train-time spec construction and predict/serve-time regeneration.
+fn square_side(input_dim: usize, c: usize) -> Result<usize, String> {
+    let side = ((input_dim / c) as f64).sqrt().round() as usize;
+    if side == 0 || side * side * c != input_dim {
+        return Err(format!("dim {input_dim} is not a square {c}-channel image"));
+    }
+    Ok(side)
+}
+
+/// Image side length for (re)generating a model's data: the cntk spec
+/// pins (h, w) exactly; flat families on image data recover the side
+/// from the input dimension. Non-square or non-image dims are refusals.
+fn image_side(spec: &FeaturizerSpec, fam: &DataFamily, input_dim: usize) -> usize {
+    if let FeaturizerSpec::CntkSketch { h, w, .. } = spec {
+        if h != w {
+            fail(format!(
+                "model expects {h}×{w} images but the {} generator only renders square ones",
+                fam.name()
+            ));
+        }
+        return *h;
+    }
+    let c = fam.channels().max(1);
+    square_side(input_dim, c)
+        .unwrap_or_else(|e| fail(format!("model input {e} ({} family)", fam.name())))
+}
+
+/// Regenerate the eval dataset a saved model was trained against.
+fn eval_dataset(spec: &FeaturizerSpec, meta: &ModelMeta, n: usize, seed: u64) -> Dataset {
+    let fam = parse_family(&meta.dataset).unwrap_or_else(|e| fail(e));
+    let side = if fam.is_image() { image_side(spec, &fam, meta.input_dim) } else { 0 };
+    gen_vec_dataset(&fam, n, side, seed)
 }
 
 /// Resolve a CLI method name + args into a reconstructible spec. The
 /// spec — not an ad-hoc construction — is the single source of the
 /// featurizer for both the CV path and the persistent path, so what gets
 /// saved is exactly what was trained.
-fn build_spec(method: &str, ds: &Dataset, m: usize, depth: usize, args: &Args) -> FeaturizerSpec {
+fn build_spec(
+    method: &str,
+    fam: &DataFamily,
+    ds: &Dataset,
+    m: usize,
+    depth: usize,
+    args: &Args,
+) -> FeaturizerSpec {
     let d = ds.d();
     let seed = args.u64("seed", 7);
     match method {
@@ -223,12 +345,80 @@ fn build_spec(method: &str, ds: &Dataset, m: usize, depth: usize, args: &Args) -
                 seed: seed + 1,
             }
         }
+        "cntk" => {
+            // image-shaped input validation: the CNTK sketch is defined
+            // over pixel grids, so flat regression rows are a refusal
+            let c = fam.channels();
+            if c == 0 {
+                fail(format!(
+                    "--method cntk needs an image-shaped dataset; --family {} is a flat \
+                     regression family (use --family cifar, --family mnist, or the cntk alias)",
+                    fam.name()
+                ));
+            }
+            let side = square_side(d, c).unwrap_or_else(|e| fail(format!("dataset rows: {e}")));
+            let q = args.usize("q", 3);
+            if q == 0 || q % 2 == 0 {
+                fail(format!("--q {q}: the CNTK filter size must be odd"));
+            }
+            // the CLI-wide depth default (1) silently becomes the cntk
+            // minimum, but an *explicit* --depth outside the family's
+            // range is a refusal, not a silent adjustment (the upper
+            // bound matches the spec decoder, so anything trained here
+            // is guaranteed loadable)
+            if args.get("depth").is_some() && !(2..=MAX_CNTK_DEPTH as usize).contains(&depth) {
+                fail(format!(
+                    "--depth {depth}: the CNTK family needs depth in [2, {MAX_CNTK_DEPTH}] \
+                     (the depth-1 CNTK with GAP is identically zero)"
+                ));
+            }
+            let cfg = CntkSketchConfig::for_budget(depth.max(2), q, m);
+            FeaturizerSpec::CntkSketch {
+                h: side,
+                w: side,
+                c,
+                depth: cfg.depth,
+                q: cfg.q,
+                p1: cfg.p1,
+                p0: cfg.p0,
+                r: cfg.r,
+                s: cfg.s,
+                m_inner: cfg.m_inner,
+                s_out: cfg.s_out,
+                seed: seed + 1,
+            }
+        }
         // a typo'd --method must refuse, not silently train (and
         // persist) a different family than the operator asked for
         other => fail(format!(
-            "unknown --method `{other}` (known: rff, ntksketch, ntkpoly, gradrf, ntkrf)"
+            "unknown --method `{other}` (known: rff, ntksketch, ntkpoly, gradrf, ntkrf, cntk)"
         )),
     }
+}
+
+/// The training request shared by the quick-CV and persistent paths —
+/// resolved in one place so both always train under identical defaults
+/// (image families get n=200/m follows the method, flat families keep
+/// the Table-2 defaults).
+struct TrainSetup {
+    fam: DataFamily,
+    n: usize,
+    seed: u64,
+    lambda: f64,
+    ds: Dataset,
+    spec: FeaturizerSpec,
+}
+
+fn train_setup(args: &Args) -> TrainSetup {
+    let (fam, method) = family_and_method(args);
+    let n = args.usize("n", if fam.is_image() { 200 } else { 1000 });
+    let m = args.usize("m", if method == "cntk" { 256 } else { 1024 });
+    let depth = args.usize("depth", 1);
+    let seed = args.u64("seed", 7);
+    let lambda = args.f64("lambda", 1e-3);
+    let ds = gen_vec_dataset(&fam, n, args.usize("side", 8), seed);
+    let spec = build_spec(&method, &fam, &ds, m, depth, args);
+    TrainSetup { fam, n, seed, lambda, ds, spec }
 }
 
 fn train(args: &Args) {
@@ -238,31 +428,44 @@ fn train(args: &Args) {
         train_persistent(args);
         return;
     }
-    let fam = parse_family(args.get_or("family", "protein")).unwrap_or_else(|e| fail(e));
-    let n = args.usize("n", 1000);
-    let m = args.usize("m", 1024);
-    let lambda = args.f64("lambda", 1e-3);
-    let method = args.get_or("method", "ntkrf");
-    let depth = args.usize("depth", 1);
-    let ds = uci_like::generate(fam, n, args.u64("seed", 7));
-    let spec = build_spec(method, &ds, m, depth, args);
+    let TrainSetup { fam, n, seed, lambda, ds, spec } = train_setup(args);
     let f = spec.build();
     let t = std::time::Instant::now();
-    let e = kfold_mse(&ds, |x| f.transform(x), lambda, 4, 9);
-    println!(
-        "{} n={n} method={} m={} lambda={lambda}: 4-fold MSE = {e:.4} ({:.2}s)",
-        fam.name(),
-        f.name(),
-        f.dim(),
-        t.elapsed().as_secs_f64()
-    );
+    if ds.classes >= 2 {
+        // image families: one-hot ridge classification with a held-out
+        // quarter, reported as argmax accuracy (the paper's §5.1 setup)
+        let (tr, te) = split::train_test(&ds, 0.25, seed ^ 0xA5);
+        let mut reg = RidgeRegressor::new(f.dim(), ds.classes);
+        reg.add_batch(&f.transform(&tr.x), &tr.one_hot_centered());
+        reg.solve(lambda).unwrap_or_else(|e| fail(e));
+        let pred = reg.predict(&f.transform(&te.x));
+        let acc = accuracy(&pred, &te.y);
+        println!(
+            "{} n={n} method={} m={} lambda={lambda}: held-out accuracy = {:.1}% ({:.2}s)",
+            fam.name(),
+            f.name(),
+            f.dim(),
+            100.0 * acc,
+            t.elapsed().as_secs_f64()
+        );
+    } else {
+        let e = kfold_mse(&ds, |x| f.transform(x), lambda, 4, 9);
+        println!(
+            "{} n={n} method={} m={} lambda={lambda}: 4-fold MSE = {e:.4} ({:.2}s)",
+            fam.name(),
+            f.name(),
+            f.dim(),
+            t.elapsed().as_secs_f64()
+        );
+    }
 }
 
 /// The persistent path: stream the fit in fixed batches, checkpoint the
 /// normal equations every K batches, and save (spec + ridge weights +
 /// golden rows) to the registry. `--resume` restores the checkpointed
 /// accumulator and the deterministic data stream and continues exactly
-/// where the interrupted run stopped.
+/// where the interrupted run stopped. Image families stream one-hot
+/// targets (outputs = classes); regression families stream scalars.
 fn train_persistent(args: &Args) {
     let registry = registry_from(args);
     let stop_after = args.usize("stop-after-batches", 0);
@@ -283,7 +486,7 @@ fn train_persistent(args: &Args) {
             // (anything else would break bit-identity with the
             // uninterrupted run) — warn instead of silently dropping
             // operator overrides
-            for flag in ["family", "method", "n", "m", "depth", "batch", "seed"] {
+            for flag in ["family", "method", "n", "m", "depth", "batch", "seed", "side", "q"] {
                 if args.get(flag).is_some() {
                     eprintln!(
                         "warning: --{flag} is ignored on --resume \
@@ -306,20 +509,15 @@ fn train_persistent(args: &Args) {
             )
         } else {
             let name = args.get("save").unwrap().to_string();
-            let fam =
-                parse_family(args.get_or("family", "protein")).unwrap_or_else(|e| fail(e));
-            let n = args.usize("n", 1000);
-            let m = args.usize("m", 1024);
-            let depth = args.usize("depth", 1);
-            let method = args.get_or("method", "ntkrf");
-            let seed = args.u64("seed", 7);
-            let lambda = args.f64("lambda", 1e-3);
+            // resolve + validate the whole request FIRST: a refused
+            // command (typo'd family/method/depth) must not destroy a
+            // resumable run's checkpoint
+            let TrainSetup { fam, n, seed, lambda, ds, spec } = train_setup(args);
             // a fresh --save supersedes any interrupted run under the
             // same name; drop its checkpoint so a later --resume cannot
             // resurrect abandoned training state
             registry.clear_checkpoint(&name).unwrap_or_else(|e| fail(e));
-            let ds = uci_like::generate(fam, n, seed);
-            let spec = build_spec(method, &ds, m, depth, args);
+            let outputs = if ds.classes >= 2 { ds.classes } else { 1 };
             let meta = ModelMeta {
                 name: name.clone(),
                 version: 0,
@@ -330,9 +528,9 @@ fn train_persistent(args: &Args) {
                 n_seen: 0,
                 input_dim: spec.input_dim(),
                 feature_dim: spec.feature_dim(),
-                outputs: 1,
+                outputs,
             };
-            let reg = RidgeRegressor::new(spec.feature_dim(), 1);
+            let reg = RidgeRegressor::new(spec.feature_dim(), outputs);
             let batch_rows = args.usize("batch", 128);
             (name, spec, reg, meta, n, batch_rows, args.usize("checkpoint-every", 0), Some(ds))
         };
@@ -340,14 +538,17 @@ fn train_persistent(args: &Args) {
     // safe (the accumulated stream is untouched)
     meta.lambda = args.f64("lambda", meta.lambda);
 
-    // deterministic data stream: (family, n_total, data_seed) fully
-    // defines every batch, so resume sees byte-identical shards (the
-    // fresh path already generated it for spec resolution)
+    // deterministic data stream: (family, n_total, data_seed) — plus the
+    // image side pinned by the spec — fully defines every batch, so
+    // resume sees byte-identical shards (the fresh path already
+    // generated it for spec resolution)
     let ds = fresh_ds.unwrap_or_else(|| {
         let fam = parse_family(&meta.dataset).unwrap_or_else(|e| fail(e));
-        uci_like::generate(fam, n_total, meta.data_seed)
+        let side = if fam.is_image() { image_side(&spec, &fam, spec.input_dim()) } else { 0 };
+        gen_vec_dataset(&fam, n_total, side, meta.data_seed)
     });
-    let y = ds.y_mat();
+    let y = if ds.classes >= 2 { ds.one_hot_centered() } else { ds.y_mat() };
+    assert_eq!(y.cols, meta.outputs, "target width changed under a checkpoint");
     let f = spec.build();
     assert_eq!(ds.d(), spec.input_dim(), "dataset dim changed under a checkpoint");
 
@@ -419,14 +620,13 @@ fn predict(args: &Args) {
     let saved = registry.load(name, version).unwrap_or_else(|e| fail(e));
     let model = saved.build().unwrap_or_else(|e| fail(e));
     println!("{}", model.meta.banner());
-    let fam = parse_family(&model.meta.dataset).unwrap_or_else(|e| fail(e));
     let n = args.usize("n", 256);
     let seed = args.u64("seed", model.meta.data_seed + 1000);
-    let ds = uci_like::generate(fam, n, seed);
+    let ds = eval_dataset(&saved.spec, &model.meta, n, seed);
     if ds.d() != model.meta.input_dim {
         fail(format!(
             "dataset {} has d={}, model expects {}",
-            fam.name(),
+            ds.name,
             ds.d(),
             model.meta.input_dim
         ));
@@ -434,10 +634,19 @@ fn predict(args: &Args) {
     let t = std::time::Instant::now();
     let pred = model.predict(&ds.x);
     let secs = t.elapsed().as_secs_f64();
-    let e = mse(&pred, &ds.y_mat());
+    if model.meta.outputs > 1 && ds.classes >= 2 {
+        let acc = accuracy(&pred, &ds.y);
+        println!(
+            "eval: n={n} seed={seed} accuracy={:.1}% ({:.1} rows/ms)",
+            100.0 * acc,
+            n as f64 / (secs * 1e3)
+        );
+    } else {
+        let e = mse(&pred, &ds.y_mat());
+        println!("eval: n={n} seed={seed} mse={e:.6} ({:.1} rows/ms)", n as f64 / (secs * 1e3));
+    }
     let head: Vec<String> =
         pred.data.iter().take(4).map(|v| format!("{v:.6}")).collect();
-    println!("eval: n={n} seed={seed} mse={e:.6} ({:.1} rows/ms)", n as f64 / (secs * 1e3));
     println!("pred[0..4] = [{}]", head.join(", "));
     print_pred_crc(&pred.data);
 }
@@ -506,6 +715,8 @@ fn serve(args: &Args) {
 /// Serve a durable model from the registry: the reconstructed featurizer
 /// + ridge weights run behind the coordinator as a `NativeBackend`, so
 /// responses are predictions and every worker shares one verified model.
+/// Works uniformly for flat and image (cntk) families — clients submit
+/// flattened rows either way.
 fn serve_model(args: &Args, name: &str) {
     let registry = registry_from(args);
     let version = version_arg(args);
@@ -525,8 +736,7 @@ fn serve_model(args: &Args, name: &str) {
         32,
     );
     let n_req = args.usize("requests", 1000);
-    let fam = parse_family(&model.meta.dataset).unwrap_or_else(|e| fail(e));
-    let ds = uci_like::generate(fam, n_req.min(4096), model.meta.data_seed + 2000);
+    let ds = eval_dataset(&saved.spec, &model.meta, n_req.min(4096), model.meta.data_seed + 2000);
     let t = std::time::Instant::now();
     let rxs: Vec<_> =
         (0..n_req).map(|i| client.submit(ds.x.row(i % ds.n()).to_vec())).collect();

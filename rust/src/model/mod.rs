@@ -10,7 +10,9 @@
 //!   sections) — corruption and version skew are readable refusals.
 //! - [`spec`]: featurizers saved as (constructor config, RNG seed) and
 //!   reconstructed deterministically — kilobytes of spec instead of
-//!   megabytes of random matrices, verified by golden rows on load.
+//!   megabytes of random matrices, verified by golden rows on load. One
+//!   variant per family: rff / ntkrf / ntksketch / ntkpoly / gradrf-mlp,
+//!   plus `cntk` (the image family persists over flattened pixel rows).
 //! - [`checkpoint`]: the streaming ridge's normal equations serialized
 //!   mid-fit so an interrupted pass resumes bit-identically.
 //! - [`registry`]: a directory-backed store

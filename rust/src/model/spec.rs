@@ -15,8 +15,29 @@
 //! bit-for-bit, so any determinism drift (changed constructor draw
 //! order, changed transform arithmetic) is a refusal to serve, not a
 //! silently different model.
+//!
+//! ```
+//! use ntk_sketch::features::Featurizer;
+//! use ntk_sketch::model::codec::{Dec, Record};
+//! use ntk_sketch::model::FeaturizerSpec;
+//!
+//! let spec = FeaturizerSpec::Rff { d: 8, m: 16, sigma: 1.0, seed: 42 };
+//! // (config, seed) reconstructs the exact feature map every time
+//! let x = spec.golden_inputs();
+//! let a = spec.build().transform(&x);
+//! let b = spec.build().transform(&x);
+//! assert_eq!(a.data, b.data);
+//! // and the spec round-trips losslessly through the .ntkm record codec
+//! let mut buf = Vec::new();
+//! spec.to_record().encode(&mut buf);
+//! let back =
+//!     FeaturizerSpec::from_record(&Record::decode(&mut Dec::new(&buf, "spec")).unwrap())
+//!         .unwrap();
+//! assert_eq!(back, spec);
+//! ```
 
 use super::codec::{ModelError, Record};
+use crate::features::cntk_sketch::{CntkSketch, CntkSketchConfig};
 use crate::features::grad_rf::GradRfMlp;
 use crate::features::ntk_poly_sketch::NtkPolySketch;
 use crate::features::ntk_rf::{NtkRf, NtkRfConfig, Phi1Mode};
@@ -39,6 +60,19 @@ const GOLDEN_SALT: u64 = 0x4E54_4B4D_474F_4C44; // "NTKMGOLD"
 /// below `usize::MAX` — decoding hostile bytes can refuse, never
 /// overflow.
 pub const MAX_DIM: u64 = 1 << 20;
+
+/// Upper bound on the cntk layer count a decoded spec may request —
+/// far above any paper configuration (L ≤ ~20), low enough that
+/// `build()` can never be driven into constructing millions of
+/// per-layer sketch instances by a hostile record.
+pub const MAX_CNTK_DEPTH: u64 = 64;
+
+/// Upper bound on the per-image intermediate floats (h·w·q²·(s+r), the
+/// dominant μ/concat buffers) a decoded cntk spec may imply — 2²⁸ floats
+/// = 1 GiB of f32, an order of magnitude above real configurations
+/// (CIFAR-scale: 32·32·9·4096 ≈ 2²⁵), so `build()`'s golden-row check
+/// cannot be turned into a runaway allocation.
+pub const MAX_CNTK_PIPELINE_FLOATS: u64 = 1 << 28;
 
 /// Constructor configuration + RNG seed for every vector `Featurizer`
 /// family. `build()` reconstructs the exact feature map.
@@ -76,6 +110,25 @@ pub enum FeaturizerSpec {
     NtkPolySketch { d: usize, depth: usize, deg: usize, m_inner: usize, m_out: usize, seed: u64 },
     /// Finite-width gradient features (MLP baseline).
     GradRfMlp { d: usize, depth: usize, width: usize, seed: u64 },
+    /// Definition 3: the convolutional NTK sketch over h×w×c images.
+    /// Input rows are flat images in channel-minor layout (what
+    /// [`crate::data::ImageDataset::flatten`] produces), so the family
+    /// persists and serves like every vector family.
+    CntkSketch {
+        h: usize,
+        w: usize,
+        c: usize,
+        depth: usize,
+        /// filter size q (odd).
+        q: usize,
+        p1: usize,
+        p0: usize,
+        r: usize,
+        s: usize,
+        m_inner: usize,
+        s_out: usize,
+        seed: u64,
+    },
 }
 
 impl FeaturizerSpec {
@@ -87,6 +140,7 @@ impl FeaturizerSpec {
             FeaturizerSpec::NtkSketch { .. } => "ntksketch",
             FeaturizerSpec::NtkPolySketch { .. } => "ntkpoly",
             FeaturizerSpec::GradRfMlp { .. } => "gradrf-mlp",
+            FeaturizerSpec::CntkSketch { .. } => "cntk",
         }
     }
 
@@ -97,6 +151,7 @@ impl FeaturizerSpec {
             | FeaturizerSpec::NtkSketch { d, .. }
             | FeaturizerSpec::NtkPolySketch { d, .. }
             | FeaturizerSpec::GradRfMlp { d, .. } => d,
+            FeaturizerSpec::CntkSketch { h, w, c, .. } => h * w * c,
         }
     }
 
@@ -106,7 +161,8 @@ impl FeaturizerSpec {
             | FeaturizerSpec::NtkRf { seed, .. }
             | FeaturizerSpec::NtkSketch { seed, .. }
             | FeaturizerSpec::NtkPolySketch { seed, .. }
-            | FeaturizerSpec::GradRfMlp { seed, .. } => seed,
+            | FeaturizerSpec::GradRfMlp { seed, .. }
+            | FeaturizerSpec::CntkSketch { seed, .. } => seed,
         }
     }
 
@@ -120,6 +176,7 @@ impl FeaturizerSpec {
             FeaturizerSpec::GradRfMlp { d, depth, width, .. } => {
                 width * d + (depth - 1) * width * width + width
             }
+            FeaturizerSpec::CntkSketch { s_out, .. } => s_out,
         }
     }
 
@@ -144,6 +201,8 @@ impl FeaturizerSpec {
             FeaturizerSpec::NtkSketch { s, s_out, .. } => (s * s_out) as u64,
             FeaturizerSpec::NtkPolySketch { m_inner, m_out, .. } => (m_inner + m_out) as u64,
             FeaturizerSpec::GradRfMlp { .. } => self.feature_dim() as u64,
+            // the only dense random state is the final Gaussian JL G
+            FeaturizerSpec::CntkSketch { s, s_out, .. } => (s * s_out) as u64,
         };
         4 * f32s
     }
@@ -185,6 +244,23 @@ impl FeaturizerSpec {
             }
             FeaturizerSpec::GradRfMlp { d, depth, width, .. } => {
                 Box::new(GradRfMlp::new(d, depth, width, &mut rng))
+            }
+            FeaturizerSpec::CntkSketch {
+                h,
+                w,
+                c,
+                depth,
+                q,
+                p1,
+                p0,
+                r,
+                s,
+                m_inner,
+                s_out,
+                ..
+            } => {
+                let cfg = CntkSketchConfig { depth, q, p1, p0, r, s, m_inner, s_out };
+                Box::new(CntkSketch::new(h, w, c, cfg, &mut rng))
             }
         }
     }
@@ -249,6 +325,32 @@ impl FeaturizerSpec {
                 r.set_u64("depth", depth as u64);
                 r.set_u64("width", width as u64);
             }
+            FeaturizerSpec::CntkSketch {
+                h,
+                w,
+                c,
+                depth,
+                q,
+                p1,
+                p0,
+                r: rr,
+                s,
+                m_inner,
+                s_out,
+                ..
+            } => {
+                r.set_u64("h", h as u64);
+                r.set_u64("w", w as u64);
+                r.set_u64("c", c as u64);
+                r.set_u64("depth", depth as u64);
+                r.set_u64("q", q as u64);
+                r.set_u64("p1", p1 as u64);
+                r.set_u64("p0", p0 as u64);
+                r.set_u64("r", rr as u64);
+                r.set_u64("s", s as u64);
+                r.set_u64("m_inner", m_inner as u64);
+                r.set_u64("s_out", s_out as u64);
+            }
         }
         r
     }
@@ -266,6 +368,7 @@ impl FeaturizerSpec {
             "ntksketch" => &["d", "depth", "r", "s", "m_inner", "s_out"],
             "ntkpoly" => &["d", "depth", "deg", "m_inner", "m_out"],
             "gradrf-mlp" => &["d", "depth", "width"],
+            "cntk" => &["h", "w", "c", "depth", "q", "r", "s", "m_inner", "s_out"],
             _ => &[],
         };
         for key in dims {
@@ -282,6 +385,7 @@ impl FeaturizerSpec {
         let knobs: &[&str] = match family {
             "ntkrf" => &["leverage_sweeps"],
             "ntksketch" => &["p1", "p0", "osnap"],
+            "cntk" => &["p1", "p0"],
             _ => &[],
         };
         for key in knobs {
@@ -289,6 +393,55 @@ impl FeaturizerSpec {
             if v > MAX_DIM {
                 return Err(ModelError::Invalid(format!(
                     "spec field `{key}` = {v} out of range [0, {MAX_DIM}]"
+                )));
+            }
+        }
+        // the cntk family has constructability constraints beyond plain
+        // range bounds: CntkSketch::new refuses depth < 2 and even q, and
+        // the flat input dim h·w·c backs the golden-row allocation
+        if family == "cntk" {
+            let depth = r.u64("depth")?;
+            if !(2..=MAX_CNTK_DEPTH).contains(&depth) {
+                return Err(ModelError::Invalid(format!(
+                    "spec field `depth` = {depth} invalid for cntk \
+                     (must be in [2, {MAX_CNTK_DEPTH}])"
+                )));
+            }
+            let q = r.u64("q")?;
+            if q % 2 == 0 {
+                return Err(ModelError::Invalid(format!(
+                    "spec field `q` = {q} invalid for cntk (filter size must be odd)"
+                )));
+            }
+            let hwc = r.u64("h")?.saturating_mul(r.u64("w")?).saturating_mul(r.u64("c")?);
+            if hwc > MAX_DIM {
+                return Err(ModelError::Invalid(format!(
+                    "cntk flat input dim h·w·c = {hwc} out of range [1, {MAX_DIM}]"
+                )));
+            }
+            // individually-bounded fields can still multiply into absurd
+            // internal sketch dims (the R-mix SRHT spans q²·(s+r), the
+            // polynomial blocks (2p+3)·m_inner) — bound the products so
+            // build() can never attempt a runaway allocation
+            let qq = q.saturating_mul(q);
+            let mix = qq.saturating_mul(r.u64("s")?.saturating_add(r.u64("r")?));
+            let poly = (2 * r.u64("p1")?.max(r.u64("p0")?) + 3)
+                .saturating_mul(r.u64("m_inner")?);
+            if mix > MAX_DIM || poly > MAX_DIM {
+                return Err(ModelError::Invalid(format!(
+                    "cntk internal sketch dims out of range: q²·(s+r) = {mix}, \
+                     (2·max(p1,p0)+3)·m_inner = {poly} (limit {MAX_DIM})"
+                )));
+            }
+            // the pipeline materializes ≥ h·w·q²·r floats per image
+            // (the μ buffer; chunking cannot go below one image), so
+            // bound the per-image footprint too — a CRC-valid hostile
+            // artifact must refuse at decode, not OOM at golden-row time
+            let per_image = r.u64("h")?.saturating_mul(r.u64("w")?).saturating_mul(mix);
+            if per_image > MAX_CNTK_PIPELINE_FLOATS {
+                return Err(ModelError::Invalid(format!(
+                    "cntk per-image pipeline footprint h·w·q²·(s+r) = {per_image} floats \
+                     out of range (limit {MAX_CNTK_PIPELINE_FLOATS})"
                 )));
             }
         }
@@ -341,9 +494,23 @@ impl FeaturizerSpec {
                 width: r.usize("width")?,
                 seed,
             }),
+            "cntk" => Ok(FeaturizerSpec::CntkSketch {
+                h: r.usize("h")?,
+                w: r.usize("w")?,
+                c: r.usize("c")?,
+                depth: r.usize("depth")?,
+                q: r.usize("q")?,
+                p1: r.usize("p1")?,
+                p0: r.usize("p0")?,
+                r: r.usize("r")?,
+                s: r.usize("s")?,
+                m_inner: r.usize("m_inner")?,
+                s_out: r.usize("s_out")?,
+                seed,
+            }),
             other => Err(ModelError::Invalid(format!(
                 "unknown featurizer family `{other}` (this build knows: rff, ntkrf, \
-                 ntksketch, ntkpoly, gradrf-mlp)"
+                 ntksketch, ntkpoly, gradrf-mlp, cntk)"
             ))),
         }
     }
@@ -387,6 +554,20 @@ mod tests {
                 seed: 14,
             },
             FeaturizerSpec::GradRfMlp { d: 7, depth: 2, width: 6, seed: 15 },
+            FeaturizerSpec::CntkSketch {
+                h: 4,
+                w: 3,
+                c: 2,
+                depth: 2,
+                q: 3,
+                p1: 1,
+                p0: 1,
+                r: 16,
+                s: 16,
+                m_inner: 16,
+                s_out: 8,
+                seed: 16,
+            },
         ]
     }
 
@@ -455,5 +636,57 @@ mod tests {
         r.set_f64("sigma", f64::NAN);
         let err = FeaturizerSpec::from_record(&r).unwrap_err();
         assert!(err.to_string().contains("sigma"), "{err}");
+    }
+
+    #[test]
+    fn cntk_unconstructable_records_are_refused() {
+        // a well-formed record whose numbers CntkSketch::new would panic
+        // on must be a readable refusal at decode time (never-panic
+        // contract for hostile bytes)
+        // Record::get returns the first match, so overrides are applied
+        // while building, not pushed on top
+        let make = |over: &[(&str, u64)]| {
+            let mut r = Record::new();
+            r.set_str("family", "cntk");
+            r.set_u64("seed", 1);
+            for (k, v) in [
+                ("h", 4u64),
+                ("w", 4),
+                ("c", 3),
+                ("depth", 2),
+                ("q", 3),
+                ("p1", 1),
+                ("p0", 1),
+                ("r", 16),
+                ("s", 16),
+                ("m_inner", 16),
+                ("s_out", 8),
+            ] {
+                let v = over.iter().find(|(ok, _)| *ok == k).map(|&(_, ov)| ov).unwrap_or(v);
+                r.set_u64(k, v);
+            }
+            FeaturizerSpec::from_record(&r)
+        };
+        assert!(make(&[]).is_ok());
+        let err = make(&[("depth", 1)]).unwrap_err();
+        assert!(err.to_string().contains("depth"), "{err}");
+        let err = make(&[("q", 4)]).unwrap_err();
+        assert!(err.to_string().contains("odd"), "{err}");
+        let err = make(&[("h", 1 << 20), ("w", 1 << 20)]).unwrap_err();
+        assert!(err.to_string().contains("h·w·c"), "{err}");
+        assert!(make(&[("s_out", 0)]).is_err());
+        // fields individually in range whose products would make build()
+        // attempt runaway allocations (R-mix spans q²·(s+r))
+        let err = make(&[("q", 1025), ("r", 1 << 19), ("s", 1 << 19)]).unwrap_err();
+        assert!(err.to_string().contains("internal sketch dims"), "{err}");
+        let err = make(&[("p1", 1 << 19), ("m_inner", 1 << 19)]).unwrap_err();
+        assert!(err.to_string().contains("internal sketch dims"), "{err}");
+        // fields whose products stay in range but whose per-image
+        // pipeline footprint (μ ≈ h·w·q²·r floats) would be terabytes
+        let err = make(&[("h", 1024), ("w", 1024), ("c", 1), ("r", 100_000)]).unwrap_err();
+        assert!(err.to_string().contains("per-image"), "{err}");
+        // absurd layer counts are refused before build() constructs them
+        let err = make(&[("depth", 1000)]).unwrap_err();
+        assert!(err.to_string().contains("depth"), "{err}");
     }
 }

@@ -3,6 +3,7 @@
 
 use super::BatchTransform;
 use crate::rng::Rng;
+use crate::tensor::gemm::{self, Op};
 use crate::tensor::Mat;
 use crate::util::par;
 
@@ -41,6 +42,27 @@ impl GaussianJl {
     /// Row-wise application: (n×d) → (n×m), batched.
     pub fn apply_mat(&self, x: &Mat) -> Mat {
         self.apply_batch_alloc(x)
+    }
+
+    /// Batched JL through the packed GEMM engine: `out` (flat n×m) =
+    /// x (n×d) @ Gᵀ, one [`crate::tensor::gemm::gemm`] call.
+    ///
+    /// Unlike [`BatchTransform::apply_batch`] (which reuses the per-row
+    /// `apply_into` dot products and is pinned bit-for-bit against
+    /// `apply`), this path lets the engine's register tiling reorder the
+    /// k-accumulation — but that order is fixed per output element and
+    /// independent of the batch size, so row i of the output is
+    /// bit-identical for any n. `CntkSketch` routes both its per-image
+    /// and batched pipelines here for exactly that reason.
+    pub fn apply_gemm_batch(&self, x: &Mat, out: &mut [f32]) {
+        assert_eq!(x.cols, self.d, "GaussianJl::apply_gemm_batch: input dim mismatch");
+        assert_eq!(
+            out.len(),
+            x.rows * self.m,
+            "GaussianJl::apply_gemm_batch: output length mismatch"
+        );
+        let (n, m, d) = (x.rows, self.m, self.d);
+        gemm::gemm(n, m, d, &x.data, Op::NoTrans, &self.g.data, Op::Trans, out, false);
     }
 }
 
@@ -101,6 +123,25 @@ mod tests {
         for i in 0..4 {
             let single = g.apply(x.row(i));
             crate::util::prop::assert_close(out.row(i), &single, 1e-5, 1e-5).unwrap();
+        }
+    }
+
+    #[test]
+    fn gemm_batch_rows_are_batch_size_invariant() {
+        // the property CntkSketch's bit-parity rests on: a row of the
+        // GEMM-backed batch equals the same row run as a batch of one
+        let mut rng = Rng::new(84);
+        let g = GaussianJl::new(33, 17, &mut rng);
+        let x = Mat::from_vec(9, 33, rng.gauss_vec(9 * 33));
+        let mut big = vec![0.0f32; 9 * 17];
+        g.apply_gemm_batch(&x, &mut big);
+        for i in 0..9 {
+            let one = Mat::from_vec(1, 33, x.row(i).to_vec());
+            let mut out = vec![0.0f32; 17];
+            g.apply_gemm_batch(&one, &mut out);
+            for (a, b) in big[i * 17..(i + 1) * 17].iter().zip(out.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "row {i}");
+            }
         }
     }
 

@@ -9,6 +9,20 @@
 //!   output matrix, parallel over contiguous row blocks with one scratch
 //!   allocation per worker thread. The batched path is bit-for-bit
 //!   identical to the per-row path (enforced by `tests/batch_parity.rs`).
+//!
+//! ```
+//! use ntk_sketch::rng::Rng;
+//! use ntk_sketch::tensor::Mat;
+//! use ntk_sketch::transforms::{BatchTransform, Srht};
+//!
+//! let mut rng = Rng::new(1);
+//! let s = Srht::new(10, 8, &mut rng);
+//! let x = Mat::from_vec(4, 10, rng.gauss_vec(40));
+//! let mut out = Mat::zeros(4, 8);
+//! s.apply_batch(&x, &mut out);
+//! // row i of the batch equals the per-row path, bit for bit
+//! assert_eq!(out.row(2), &s.apply(x.row(2))[..]);
+//! ```
 
 pub mod countsketch;
 pub mod fwht;

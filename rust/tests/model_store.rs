@@ -58,6 +58,21 @@ fn all_specs(d: usize) -> Vec<FeaturizerSpec> {
         },
         FeaturizerSpec::NtkPolySketch { d, depth: 3, deg: 4, m_inner: 32, m_out: 24, seed: 26 },
         FeaturizerSpec::GradRfMlp { d, depth: 2, width: 8, seed: 27 },
+        // the cntk family pins its own input dim (h·w·c), independent of d
+        FeaturizerSpec::CntkSketch {
+            h: 3,
+            w: 3,
+            c: 2,
+            depth: 2,
+            q: 3,
+            p1: 1,
+            p0: 1,
+            r: 16,
+            s: 16,
+            m_inner: 16,
+            s_out: 12,
+            seed: 28,
+        },
     ]
 }
 
