@@ -145,7 +145,7 @@ fn store_demo(args: &Args) {
     );
     let t_serve = Timer::start();
     let rxs: Vec<_> = (n_train..n_train + n_test)
-        .map(|i| client.submit(ds.x.row(i).to_vec()))
+        .map(|i| client.submit_row(ds.x.row(i).to_vec()).expect("submit"))
         .collect();
     let mut pred = Mat::zeros(n_test, 1);
     for (k, rx) in rxs.into_iter().enumerate() {
@@ -156,7 +156,7 @@ fn store_demo(args: &Args) {
         "served {n_test} predictions from the durable model in {:.2}s (test MSE {test_mse:.4})",
         t_serve.secs()
     );
-    println!("metrics: {}", server.metrics.summary());
+    println!("metrics: {}", server.metrics.snapshot().summary());
     drop(client);
     server.join();
     if std::env::var_os("NTK_MODEL_DIR").is_none() {
@@ -218,7 +218,8 @@ fn main() {
         let mut lo = 0;
         while lo < n_train {
             let hi = (lo + wave).min(n_train);
-            let rxs: Vec<_> = (lo..hi).map(|i| client.submit(x_train.row(i).to_vec())).collect();
+            let rxs: Vec<_> =
+                (lo..hi).map(|i| client.submit_row(x_train.row(i).to_vec()).unwrap()).collect();
             let mut feats = Mat::zeros(hi - lo, fdim);
             for (k, rx) in rxs.into_iter().enumerate() {
                 feats.row_mut(k).copy_from_slice(&rx.recv().expect("feature row"));
@@ -227,7 +228,8 @@ fn main() {
             lo = hi;
         }
         // featurize the test set through the same path
-        let rxs: Vec<_> = (0..n_test).map(|i| client.submit(x_test.row(i).to_vec())).collect();
+        let rxs: Vec<_> =
+            (0..n_test).map(|i| client.submit_row(x_test.row(i).to_vec()).unwrap()).collect();
         for (k, rx) in rxs.into_iter().enumerate() {
             test_feats.row_mut(k).copy_from_slice(&rx.recv().expect("feature row"));
         }
@@ -254,7 +256,7 @@ fn main() {
                 let mut rng = ntk_sketch::rng::Rng::new(900 + c as u64);
                 for _ in 0..n_req / clients {
                     let i = rng.below(x.rows);
-                    let _ = cl.featurize(x.row(i).to_vec());
+                    let _ = cl.featurize(x.row(i).to_vec()).unwrap();
                 }
             });
         }
@@ -264,7 +266,7 @@ fn main() {
         "\nserving: {n_req} requests from {clients} closed-loop clients in {serve_secs:.2}s = {:.0} req/s",
         n_req as f64 / serve_secs
     );
-    println!("metrics: {}", server.metrics.summary());
+    println!("metrics: {}", server.metrics.snapshot().summary());
     println!(
         "batch fill: {:.1}% (pad rows / (batches × {batch}))",
         100.0

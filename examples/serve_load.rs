@@ -1,0 +1,133 @@
+//! Closed-loop load generator for the networked serving tier
+//! (DESIGN.md §10). Connects `--clients` concurrent [`TcpSession`]s to a
+//! running `serve --listen` daemon and hammers it for `--min-secs`,
+//! checking three properties the tier promises:
+//!
+//! 1. **No corruption**: each client cycles a fixed pool of request
+//!    batches and pins the first response it sees per batch; every later
+//!    response for the same batch must be bitwise identical. Because
+//!    retraining with identical parameters is deterministic, this also
+//!    holds *across a hot swap* — which is exactly how CI uses it
+//!    (swap `LATEST` mid-run, assert zero mismatches).
+//! 2. **No drops**: every admitted request gets exactly one response
+//!    (the session API enforces ordering; a missing response would hang
+//!    the closed loop and trip the wall-clock guard).
+//! 3. **Typed backpressure**: saturation surfaces as
+//!    `InferenceError::Rejected` with a retry hint, never a desync or a
+//!    protocol error; the generator honors the hint and retries.
+//!
+//! Exits nonzero on any mismatch or protocol failure, so shell drivers
+//! can gate on it directly.
+//!
+//! Run: `ntk-sketch serve --model m1 --listen 127.0.0.1:7071 &`
+//!      `cargo run --release --example serve_load -- --connect 127.0.0.1:7071`
+
+use ntk_sketch::rng::Rng;
+use ntk_sketch::serve::{InferenceError, InferenceSession, TcpSession};
+use ntk_sketch::tensor::Mat;
+use ntk_sketch::util::cli::Args;
+use std::time::{Duration, Instant};
+
+struct ClientStats {
+    ok: u64,
+    rejected: u64,
+    mismatches: u64,
+}
+
+fn main() {
+    let args = Args::from_env();
+    let addr = match args.get("connect") {
+        Some(a) => a.to_string(),
+        None => {
+            eprintln!("serve_load: needs --connect HOST:PORT (a running `serve --listen` daemon)");
+            std::process::exit(2);
+        }
+    };
+    let clients = args.usize("clients", 4).max(1);
+    let min_secs = args.f64("min-secs", 5.0);
+    let batch_rows = args.usize("rows", 8).max(1);
+    let pool = args.usize("pool", 32).max(1);
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            client_loop(&addr, c as u64, batch_rows, pool, min_secs)
+        }));
+    }
+    let mut total = ClientStats { ok: 0, rejected: 0, mismatches: 0 };
+    for h in handles {
+        match h.join() {
+            Ok(st) => {
+                total.ok += st.ok;
+                total.rejected += st.rejected;
+                total.mismatches += st.mismatches;
+            }
+            Err(_) => {
+                eprintln!("serve_load: client thread panicked");
+                std::process::exit(1);
+            }
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "serve_load: {} ok ({:.0} req/s), {} rejected (retried), {} mismatches over {secs:.1}s \
+         with {clients} clients",
+        total.ok,
+        total.ok as f64 / secs,
+        total.rejected,
+        total.mismatches
+    );
+    if total.mismatches > 0 {
+        eprintln!("serve_load: FAILED — responses changed bitwise under load");
+        std::process::exit(1);
+    }
+}
+
+fn client_loop(addr: &str, id: u64, batch_rows: usize, pool: usize, min_secs: f64) -> ClientStats {
+    let mut sess = TcpSession::connect(addr).unwrap_or_else(|e| {
+        eprintln!("serve_load client {id}: connect {addr}: {e}");
+        std::process::exit(1);
+    });
+    let d = sess.input_dim();
+    // a fixed, deterministic request pool per client: same batch in ⇒
+    // same prediction out, forever (even across deterministic-retrain
+    // hot swaps)
+    let mut rng = Rng::new(1000 + id);
+    let batches: Vec<Mat> =
+        (0..pool).map(|_| Mat::from_vec(batch_rows, d, rng.gauss_vec(batch_rows * d))).collect();
+    let mut first_seen: Vec<Option<Vec<f32>>> = vec![None; pool];
+    let mut st = ClientStats { ok: 0, rejected: 0, mismatches: 0 };
+    let t0 = Instant::now();
+    let mut k = 0usize;
+    while t0.elapsed().as_secs_f64() < min_secs {
+        let idx = k % pool;
+        k += 1;
+        match sess.infer(&batches[idx]) {
+            Ok(out) => {
+                match &first_seen[idx] {
+                    None => first_seen[idx] = Some(out.data.clone()),
+                    Some(want) => {
+                        if want != &out.data {
+                            st.mismatches += 1;
+                            eprintln!(
+                                "serve_load client {id}: batch {idx} response changed bitwise"
+                            );
+                        }
+                    }
+                }
+                st.ok += 1;
+            }
+            Err(InferenceError::Rejected { retry_after_ms }) => {
+                st.rejected += 1;
+                std::thread::sleep(Duration::from_millis(retry_after_ms.max(1)));
+            }
+            Err(e) => {
+                eprintln!("serve_load client {id}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    st
+}

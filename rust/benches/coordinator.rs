@@ -52,7 +52,7 @@ fn main() {
                     s.spawn(move || {
                         let mut rng = Rng::new(100 + c as u64);
                         for _ in 0..n_req / clients {
-                            let _ = cl.featurize(rng.gauss_vec(d));
+                            let _ = cl.featurize(rng.gauss_vec(d)).unwrap();
                         }
                     });
                 }
@@ -175,7 +175,7 @@ fn model_store_bench() {
         BatchPolicy { max_batch: 64, max_delay: Duration::from_millis(1) },
         16,
     );
-    let rxs: Vec<_> = (0..64).map(|i| client.submit(x.row(i).to_vec())).collect();
+    let rxs: Vec<_> = (0..64).map(|i| client.submit_row(x.row(i).to_vec()).unwrap()).collect();
     for rx in rxs {
         let _ = rx.recv().unwrap();
     }

@@ -1,0 +1,141 @@
+//! Networked serving-tier saturation bench (DESIGN.md §10): closed-loop
+//! QPS and request-latency quantiles vs shard count over real TCP
+//! sessions, with a deliberately shallow admission queue so saturation
+//! behavior — typed rejections plus client retry — is part of what gets
+//! measured instead of an unbounded backlog. Machine-readable record in
+//! `BENCH_serve.json` (override with `NTK_SERVE_BENCH_JSON`).
+
+use ntk_sketch::bench::{smoke, Table};
+use ntk_sketch::model::{FeaturizerSpec, ModelMeta, NativeModel};
+use ntk_sketch::rng::Rng;
+use ntk_sketch::serve::{InferenceError, InferenceSession, ServeOptions, TcpServer, TcpSession};
+use ntk_sketch::tensor::Mat;
+use ntk_sketch::util::json::Json;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// A small but real replica: an NTKRF featurizer with random ridge
+/// weights (the serving tier never looks at the weights' provenance).
+fn bench_model(d: usize) -> NativeModel {
+    let spec = FeaturizerSpec::NtkRf {
+        d,
+        depth: 2,
+        m0: 64,
+        m1: 256,
+        ms: 64,
+        leverage_sweeps: 0,
+        seed: 5,
+    };
+    let f = spec.build();
+    let mut rng = Rng::new(6);
+    let weights = Mat::from_vec(f.dim(), 1, rng.gauss_vec(f.dim()));
+    NativeModel {
+        meta: ModelMeta {
+            name: "bench".into(),
+            version: 1,
+            family: spec.family().to_string(),
+            dataset: "synthetic".into(),
+            data_seed: 6,
+            lambda: 1e-3,
+            n_seen: 0,
+            input_dim: d,
+            feature_dim: f.dim(),
+            outputs: 1,
+        },
+        featurizer: f,
+        weights,
+    }
+}
+
+/// One closed-loop client: fixed request batch, retry on rejection.
+fn client_loop(addr: &str, seed: u64, rows: usize, secs: f64) -> (u64, u64) {
+    let mut sess = TcpSession::connect(addr).expect("connect");
+    let d = sess.input_dim();
+    let mut rng = Rng::new(seed);
+    let batch = Mat::from_vec(rows, d, rng.gauss_vec(rows * d));
+    let (mut ok, mut rejected) = (0u64, 0u64);
+    let t0 = Instant::now();
+    while t0.elapsed().as_secs_f64() < secs {
+        match sess.infer(&batch) {
+            Ok(_) => ok += 1,
+            Err(InferenceError::Rejected { retry_after_ms }) => {
+                rejected += 1;
+                std::thread::sleep(Duration::from_millis(retry_after_ms.max(1)));
+            }
+            Err(e) => panic!("serve bench client: {e}"),
+        }
+    }
+    (ok, rejected)
+}
+
+fn main() {
+    let d = 32;
+    let rows = 4;
+    let clients = 6;
+    let secs = if smoke() { 0.6 } else { 3.0 };
+    let worker_counts = [1usize, 2, 4];
+
+    println!(
+        "== serve tier saturation: {clients} closed-loop TCP clients, {rows}-row requests, \
+         queue depth 4 =="
+    );
+    let t = Table::new(&["shards", "req/s", "p50", "p99", "ok", "rejected"]);
+    let mut configs = Vec::new();
+    for &workers in &worker_counts {
+        let server = TcpServer::start(
+            bench_model(d),
+            None,
+            "127.0.0.1:0",
+            ServeOptions { workers, queue_depth: 4, poll_ms: 0, max_conns: 64 },
+        )
+        .expect("start server");
+        let addr = server.local_addr().to_string();
+        let t0 = Instant::now();
+        let (mut ok, mut rejected) = (0u64, 0u64);
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for c in 0..clients {
+                let addr = addr.clone();
+                handles.push(s.spawn(move || client_loop(&addr, 40 + c as u64, rows, secs)));
+            }
+            for h in handles {
+                let (o, r) = h.join().expect("client");
+                ok += o;
+                rejected += r;
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = server.stats();
+        server.join();
+        let qps = ok as f64 / wall;
+        t.row(&[
+            format!("{workers}"),
+            format!("{qps:.0}"),
+            format!("{}us", stats.total.req_p50_us),
+            format!("{}us", stats.total.req_p99_us),
+            format!("{ok}"),
+            format!("{rejected}"),
+        ]);
+        let mut o = BTreeMap::new();
+        o.insert("workers".to_string(), Json::Num(workers as f64));
+        o.insert("qps".to_string(), Json::Num(qps));
+        o.insert("p50_us".to_string(), Json::Num(stats.total.req_p50_us as f64));
+        o.insert("p99_us".to_string(), Json::Num(stats.total.req_p99_us as f64));
+        o.insert("ok".to_string(), Json::Num(ok as f64));
+        o.insert("rejected".to_string(), Json::Num(rejected as f64));
+        configs.push(Json::Obj(o));
+    }
+
+    let mut top = BTreeMap::new();
+    top.insert("clients".to_string(), Json::Num(clients as f64));
+    top.insert("rows_per_request".to_string(), Json::Num(rows as f64));
+    top.insert("secs_per_config".to_string(), Json::Num(secs));
+    top.insert("configs".to_string(), Json::Arr(configs));
+    let path = std::env::var("NTK_SERVE_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    if let Err(e) = std::fs::write(&path, Json::Obj(top).to_string()) {
+        eprintln!("could not write {path}: {e}");
+    } else {
+        println!("wrote {path}");
+    }
+}

@@ -1,0 +1,543 @@
+//! Typed command-line surface for the `ntk-sketch` binary.
+//!
+//! One [`Command::parse`] turns raw [`Args`] into a verb enum with a
+//! typed per-verb config struct. The parser is strict where it matters
+//! operationally:
+//! - unknown flags for a verb are refusals (a typo'd `--quue-depth`
+//!   must not silently run with the default);
+//! - unparseable numerics are refusals, never silent defaults;
+//! - `--version` accepts both `3` and the `v3` form the registry prints;
+//! - mode combinations that cannot mean anything (`serve --stats`
+//!   without `--connect`, `--listen` without `--model`) are refused
+//!   with the fix in the message.
+//!
+//! The registry resolution used by train/predict/serve/models lives here
+//! too ([`open_registry`], [`load_model`]) so every verb resolves
+//! `--models-dir`/`--version` identically.
+
+use crate::model::{NativeModel, Registry, SavedModel};
+use crate::util::cli::Args;
+
+/// A parsed CLI invocation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Command {
+    Help,
+    Info,
+    Golden,
+    Kernel(KernelCfg),
+    Train(TrainCfg),
+    Predict(PredictCfg),
+    Serve(ServeCfg),
+    Models(ModelsCfg),
+}
+
+/// `kernel` — print K_relu^{(L)} on a grid (Fig. 1 data).
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelCfg {
+    pub depth: usize,
+    pub points: usize,
+}
+
+/// `train` — CV evaluation, or the persistent streaming fit with
+/// `--save`/`--resume`. Fields that change behavior only when given
+/// explicitly (the cntk depth check, λ on resume) stay `Option`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainCfg {
+    pub family: String,
+    pub method: Option<String>,
+    pub n: Option<usize>,
+    pub m: Option<usize>,
+    pub depth: Option<usize>,
+    pub side: usize,
+    pub seed: u64,
+    pub lambda: Option<f64>,
+    pub deg: usize,
+    pub q: usize,
+    pub leverage_sweeps: u64,
+    pub batch: usize,
+    pub checkpoint_every: Option<usize>,
+    pub stop_after_batches: usize,
+    pub save: Option<String>,
+    pub resume: bool,
+    pub resume_name: Option<String>,
+    pub models_dir: Option<String>,
+    /// Option names the operator gave explicitly (for resume warnings).
+    explicit: Vec<String>,
+}
+
+impl TrainCfg {
+    pub fn is_explicit(&self, key: &str) -> bool {
+        self.explicit.iter().any(|k| k == key)
+    }
+}
+
+/// `predict` — evaluate a saved model locally, or against a running
+/// serve daemon with `--connect ADDR` (same output, so the two can be
+/// diffed for bit-identity).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PredictCfg {
+    pub model: String,
+    pub version: Option<u32>,
+    pub n: usize,
+    pub seed: Option<u64>,
+    pub connect: Option<String>,
+    pub models_dir: Option<String>,
+}
+
+/// `serve` — four modes, validated at parse time:
+/// - in-process demo (default): `--model NAME [--requests N]`, or the
+///   PJRT feature-serving demo without `--model`;
+/// - daemon: `--model NAME --listen ADDR [--port-file F]`;
+/// - stats client: `--stats --connect ADDR` (prints JSON);
+/// - shutdown client: `--shutdown --connect ADDR`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeCfg {
+    pub model: Option<String>,
+    pub version: Option<u32>,
+    pub models_dir: Option<String>,
+    pub requests: usize,
+    pub workers: Option<usize>,
+    pub batch: usize,
+    pub queue_depth: usize,
+    pub poll_ms: u64,
+    pub max_conns: usize,
+    pub listen: Option<String>,
+    pub port_file: Option<String>,
+    pub connect: Option<String>,
+    pub stats: bool,
+    pub shutdown: bool,
+}
+
+/// `models` — list the registry, or `--gc NAME [--keep K]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelsCfg {
+    pub models_dir: Option<String>,
+    pub gc: Option<String>,
+    pub keep: usize,
+}
+
+impl Command {
+    /// Parse a full invocation. Errors are operator-facing one-liners.
+    pub fn parse(args: &Args) -> Result<Command, String> {
+        if args.positional.len() > 1 {
+            return Err(format!(
+                "unexpected positional argument `{}` after the command",
+                args.positional[1]
+            ));
+        }
+        let verb = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+        match verb {
+            "help" => Ok(Command::Help),
+            "info" => {
+                check_known(args, "info", &[], &[])?;
+                Ok(Command::Info)
+            }
+            "golden" => {
+                check_known(args, "golden", &[], &[])?;
+                Ok(Command::Golden)
+            }
+            "kernel" => kernel_cfg(args).map(Command::Kernel),
+            "train" => train_cfg(args).map(Command::Train),
+            "predict" => predict_cfg(args).map(Command::Predict),
+            "serve" => serve_cfg(args).map(Command::Serve),
+            "models" => models_cfg(args).map(Command::Models),
+            other => Err(format!(
+                "unknown command `{other}` \
+                 (known: info, golden, kernel, train, predict, serve, models)"
+            )),
+        }
+    }
+}
+
+/// The help/usage text (also printed on `help` and unknown commands).
+pub fn usage() -> &'static str {
+    "usage: ntk-sketch <info|golden|kernel|train|predict|serve|models> [--flags]\n\
+     examples:\n\
+     \tntk-sketch kernel --depth 3\n\
+     \tntk-sketch train --family protein --method ntkrf --m 1024 --n 1000\n\
+     \tntk-sketch train --family protein --method ntkrf --save m1 --checkpoint-every 1\n\
+     \tntk-sketch train --family cntk --side 8 --n 200 --save c1\n\
+     \tntk-sketch train --resume\n\
+     \tntk-sketch predict --model m1\n\
+     \tntk-sketch serve --model m1 --requests 1000\n\
+     \tntk-sketch serve --model m1 --listen 127.0.0.1:7071 --workers 4\n\
+     \tntk-sketch predict --model m1 --connect 127.0.0.1:7071\n\
+     \tntk-sketch serve --stats --connect 127.0.0.1:7071\n\
+     \tntk-sketch serve --shutdown --connect 127.0.0.1:7071\n\
+     \tntk-sketch models"
+}
+
+// ------------------------------------------------------- per-verb --
+
+fn kernel_cfg(args: &Args) -> Result<KernelCfg, String> {
+    check_known(args, "kernel", &["depth", "points"], &[])?;
+    let cfg = KernelCfg {
+        depth: parse_usize(args, "depth", 3)?,
+        points: parse_usize(args, "points", 21)?,
+    };
+    if cfg.points < 2 {
+        return Err(format!("--points {}: the kernel grid needs at least 2 points", cfg.points));
+    }
+    Ok(cfg)
+}
+
+fn train_cfg(args: &Args) -> Result<TrainCfg, String> {
+    check_known(
+        args,
+        "train",
+        &[
+            "family",
+            "method",
+            "n",
+            "m",
+            "depth",
+            "side",
+            "seed",
+            "lambda",
+            "deg",
+            "q",
+            "leverage-sweeps",
+            "batch",
+            "checkpoint-every",
+            "stop-after-batches",
+            "save",
+            "resume",
+            "models-dir",
+        ],
+        &["resume"],
+    )?;
+    let mut explicit: Vec<String> = args.option_names().iter().map(|s| s.to_string()).collect();
+    for f in args.flag_names() {
+        explicit.push(f.to_string());
+    }
+    Ok(TrainCfg {
+        family: args.get_or("family", "protein").to_string(),
+        method: args.get("method").map(str::to_string),
+        n: parse_opt_usize(args, "n")?,
+        m: parse_opt_usize(args, "m")?,
+        depth: parse_opt_usize(args, "depth")?,
+        side: parse_usize(args, "side", 8)?,
+        seed: parse_u64(args, "seed", 7)?,
+        lambda: parse_opt_f64(args, "lambda")?,
+        deg: parse_usize(args, "deg", 8)?,
+        q: parse_usize(args, "q", 3)?,
+        leverage_sweeps: parse_u64(args, "leverage-sweeps", 0)?,
+        batch: parse_usize(args, "batch", 128)?,
+        checkpoint_every: parse_opt_usize(args, "checkpoint-every")?,
+        stop_after_batches: parse_usize(args, "stop-after-batches", 0)?,
+        save: args.get("save").map(str::to_string),
+        resume: args.flag("resume") || args.get("resume").is_some(),
+        resume_name: args.get("resume").map(str::to_string),
+        models_dir: args.get("models-dir").map(str::to_string),
+        explicit,
+    })
+}
+
+fn predict_cfg(args: &Args) -> Result<PredictCfg, String> {
+    check_known(args, "predict", &["model", "version", "n", "seed", "connect", "models-dir"], &[])?;
+    let model = args
+        .get("model")
+        .ok_or_else(|| "predict needs --model NAME".to_string())?
+        .to_string();
+    Ok(PredictCfg {
+        model,
+        version: parse_version(args)?,
+        n: parse_usize(args, "n", 256)?,
+        seed: parse_opt_u64(args, "seed")?,
+        connect: args.get("connect").map(str::to_string),
+        models_dir: args.get("models-dir").map(str::to_string),
+    })
+}
+
+fn serve_cfg(args: &Args) -> Result<ServeCfg, String> {
+    check_known(
+        args,
+        "serve",
+        &[
+            "model",
+            "version",
+            "requests",
+            "workers",
+            "batch",
+            "queue-depth",
+            "poll-ms",
+            "max-conns",
+            "listen",
+            "port-file",
+            "connect",
+            "models-dir",
+        ],
+        &["stats", "shutdown"],
+    )?;
+    let cfg = ServeCfg {
+        model: args.get("model").map(str::to_string),
+        version: parse_version(args)?,
+        models_dir: args.get("models-dir").map(str::to_string),
+        requests: parse_usize(args, "requests", 1000)?,
+        workers: parse_opt_usize(args, "workers")?,
+        batch: parse_usize(args, "batch", 64)?,
+        queue_depth: parse_usize(args, "queue-depth", 32)?,
+        poll_ms: parse_u64(args, "poll-ms", 500)?,
+        max_conns: parse_usize(args, "max-conns", 256)?,
+        listen: args.get("listen").map(str::to_string),
+        port_file: args.get("port-file").map(str::to_string),
+        connect: args.get("connect").map(str::to_string),
+        stats: args.flag("stats"),
+        shutdown: args.flag("shutdown"),
+    };
+    if cfg.stats && cfg.shutdown {
+        return Err("--stats and --shutdown are separate operations; pick one".into());
+    }
+    if (cfg.stats || cfg.shutdown) && cfg.connect.is_none() {
+        let op = if cfg.stats { "--stats" } else { "--shutdown" };
+        return Err(format!("{op} talks to a running server: add --connect HOST:PORT"));
+    }
+    if cfg.connect.is_some() && !(cfg.stats || cfg.shutdown) {
+        return Err(
+            "serve --connect needs an operation: --stats or --shutdown \
+             (to run inference against a server, use `predict --connect`)"
+                .into(),
+        );
+    }
+    if cfg.connect.is_some() && cfg.listen.is_some() {
+        return Err("--connect (client) and --listen (daemon) are mutually exclusive".into());
+    }
+    if cfg.listen.is_some() && cfg.model.is_none() {
+        return Err("--listen serves a saved model over TCP: add --model NAME".into());
+    }
+    if cfg.port_file.is_some() && cfg.listen.is_none() {
+        return Err("--port-file only makes sense with --listen".into());
+    }
+    Ok(cfg)
+}
+
+fn models_cfg(args: &Args) -> Result<ModelsCfg, String> {
+    check_known(args, "models", &["gc", "keep", "models-dir"], &[])?;
+    Ok(ModelsCfg {
+        models_dir: args.get("models-dir").map(str::to_string),
+        gc: args.get("gc").map(str::to_string),
+        keep: parse_usize(args, "keep", 2)?,
+    })
+}
+
+// ------------------------------------------------------ validation --
+
+/// Refuse options/flags a verb does not know — a typo must not silently
+/// run with defaults.
+fn check_known(args: &Args, verb: &str, opts: &[&str], flags: &[&str]) -> Result<(), String> {
+    for name in args.option_names() {
+        if !opts.contains(&name) {
+            return Err(format!(
+                "unknown flag --{name} for `{verb}` (known: {})",
+                known_list(opts, flags)
+            ));
+        }
+    }
+    for name in args.flag_names() {
+        // a valueless option (`--resume` at end of line) parses as a flag
+        if !flags.contains(&name) && !opts.contains(&name) {
+            return Err(format!(
+                "unknown flag --{name} for `{verb}` (known: {})",
+                known_list(opts, flags)
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn known_list(opts: &[&str], flags: &[&str]) -> String {
+    let mut all: Vec<&str> = opts.iter().chain(flags.iter()).copied().collect();
+    all.sort_unstable();
+    all.dedup();
+    if all.is_empty() {
+        "none".to_string()
+    } else {
+        all.iter().map(|n| format!("--{n}")).collect::<Vec<_>>().join(", ")
+    }
+}
+
+fn parse_usize(args: &Args, key: &str, default: usize) -> Result<usize, String> {
+    parse_opt_usize(args, key).map(|v| v.unwrap_or(default))
+}
+
+fn parse_opt_usize(args: &Args, key: &str) -> Result<Option<usize>, String> {
+    match args.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .parse()
+            .map(Some)
+            .map_err(|_| format!("bad --{key} `{v}` (expected a non-negative integer)")),
+    }
+}
+
+fn parse_u64(args: &Args, key: &str, default: u64) -> Result<u64, String> {
+    parse_opt_u64(args, key).map(|v| v.unwrap_or(default))
+}
+
+fn parse_opt_u64(args: &Args, key: &str) -> Result<Option<u64>, String> {
+    match args.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .parse()
+            .map(Some)
+            .map_err(|_| format!("bad --{key} `{v}` (expected a non-negative integer)")),
+    }
+}
+
+fn parse_opt_f64(args: &Args, key: &str) -> Result<Option<f64>, String> {
+    match args.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            v.parse().map(Some).map_err(|_| format!("bad --{key} `{v}` (expected a number)"))
+        }
+    }
+}
+
+/// `--version` as an explicit registry version; accepts both `3` and the
+/// `v3` form the registry itself prints. Unparseable input is a refusal,
+/// never a silent fall-through to `LATEST`.
+fn parse_version(args: &Args) -> Result<Option<u32>, String> {
+    match args.get("version") {
+        None => Ok(None),
+        Some(s) => s
+            .strip_prefix('v')
+            .unwrap_or(s)
+            .parse::<u32>()
+            .map(Some)
+            .map_err(|_| format!("bad --version `{s}` (expected an integer like 3 or v3)")),
+    }
+}
+
+// -------------------------------------------------- model resolution --
+
+/// Open the registry honoring `--models-dir`, else `$NTK_MODEL_DIR`,
+/// else `./models` (DESIGN.md §8) — the one resolution path shared by
+/// train/predict/serve/models.
+pub fn open_registry(models_dir: Option<&str>) -> Registry {
+    match models_dir {
+        Some(p) => Registry::open(p),
+        None => Registry::open(Registry::default_root()),
+    }
+}
+
+/// Load and build a saved model — the shared predict/serve resolution,
+/// so both verbs fail identically on a missing name or corrupt artifact.
+pub fn load_model(
+    registry: &Registry,
+    name: &str,
+    version: Option<u32>,
+) -> Result<(SavedModel, NativeModel), String> {
+    let saved = registry.load(name, version).map_err(|e| e.to_string())?;
+    let model = saved.build().map_err(|e| e.to_string())?;
+    Ok((saved, model))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(parts: &[&str]) -> Result<Command, String> {
+        Command::parse(&Args::parse(parts.iter().map(|s| s.to_string())))
+    }
+
+    #[test]
+    fn bare_invocation_is_help() {
+        assert_eq!(parse(&[]).unwrap(), Command::Help);
+        assert!(parse(&["frobnicate"]).unwrap_err().contains("unknown command"));
+    }
+
+    #[test]
+    fn kernel_parses_and_validates() {
+        let Command::Kernel(k) = parse(&["kernel", "--depth", "5"]).unwrap() else {
+            panic!("expected kernel");
+        };
+        assert_eq!((k.depth, k.points), (5, 21));
+        assert!(parse(&["kernel", "--points", "1"]).unwrap_err().contains("at least 2"));
+        assert!(parse(&["kernel", "--depth", "x"]).unwrap_err().contains("bad --depth"));
+    }
+
+    #[test]
+    fn unknown_flags_are_refusals() {
+        let err = parse(&["serve", "--quue-depth", "4"]).unwrap_err();
+        assert!(err.contains("unknown flag --quue-depth"), "{err}");
+        assert!(err.contains("--queue-depth"), "lists the known flags: {err}");
+        assert!(parse(&["info", "--verbose"]).unwrap_err().contains("unknown flag"));
+    }
+
+    #[test]
+    fn train_tracks_explicit_flags() {
+        let Command::Train(t) =
+            parse(&["train", "--family", "cntk", "--depth", "3", "--save", "c1"]).unwrap()
+        else {
+            panic!("expected train");
+        };
+        assert_eq!(t.family, "cntk");
+        assert_eq!(t.depth, Some(3));
+        assert_eq!(t.save.as_deref(), Some("c1"));
+        assert!(t.is_explicit("depth") && !t.is_explicit("seed"));
+        assert!(!t.resume);
+    }
+
+    #[test]
+    fn train_resume_forms() {
+        let Command::Train(t) = parse(&["train", "--resume"]).unwrap() else { panic!() };
+        assert!(t.resume && t.resume_name.is_none());
+        let Command::Train(t) = parse(&["train", "--resume", "m1"]).unwrap() else { panic!() };
+        assert!(t.resume);
+        assert_eq!(t.resume_name.as_deref(), Some("m1"));
+    }
+
+    #[test]
+    fn predict_requires_model_and_parses_version() {
+        assert!(parse(&["predict"]).unwrap_err().contains("--model"));
+        let Command::Predict(p) =
+            parse(&["predict", "--model", "m1", "--version", "v3"]).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!((p.model.as_str(), p.version), ("m1", Some(3)));
+        assert!(parse(&["predict", "--model", "m1", "--version", "vx"])
+            .unwrap_err()
+            .contains("bad --version"));
+    }
+
+    #[test]
+    fn serve_mode_combinations_validate() {
+        // daemon
+        let Command::Serve(s) =
+            parse(&["serve", "--model", "m1", "--listen", "127.0.0.1:0", "--workers", "4"])
+                .unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(s.workers, Some(4));
+        assert_eq!(s.listen.as_deref(), Some("127.0.0.1:0"));
+        // stats / shutdown clients need --connect
+        assert!(parse(&["serve", "--stats"]).unwrap_err().contains("--connect"));
+        assert!(parse(&["serve", "--shutdown"]).unwrap_err().contains("--connect"));
+        let Command::Serve(s) = parse(&["serve", "--stats", "--connect", "h:1"]).unwrap() else {
+            panic!()
+        };
+        assert!(s.stats && !s.shutdown);
+        // nonsense combinations
+        assert!(parse(&["serve", "--connect", "h:1"]).unwrap_err().contains("predict --connect"));
+        assert!(parse(&["serve", "--listen", "h:1"]).unwrap_err().contains("--model"));
+        assert!(parse(&["serve", "--port-file", "f"]).unwrap_err().contains("--listen"));
+        assert!(parse(&["serve", "--model", "m1", "--listen", "a", "--connect", "b", "--stats"])
+            .unwrap_err()
+            .contains("mutually exclusive"));
+    }
+
+    #[test]
+    fn models_gc_parses() {
+        let Command::Models(m) = parse(&["models", "--gc", "m1", "--keep", "3"]).unwrap() else {
+            panic!()
+        };
+        assert_eq!((m.gc.as_deref(), m.keep), (Some("m1"), 3));
+    }
+
+    #[test]
+    fn extra_positionals_are_refused() {
+        assert!(parse(&["train", "extra"]).unwrap_err().contains("unexpected positional"));
+    }
+}

@@ -3,6 +3,12 @@
 //! trade-off (throughput needs full fixed-shape batches for the PJRT
 //! executable; latency wants early flushes). Pure state machine, driven
 //! by the server loop; unit-testable without threads.
+//!
+//! Deadlines are anchored at the request's *submit* time, not at the
+//! moment it reaches the batcher: a request that sat in the admission
+//! queue has already spent part of its latency budget, and one that is
+//! overdue on arrival flushes immediately at push instead of waiting out
+//! a fresh deadline.
 
 use std::time::{Duration, Instant};
 
@@ -42,13 +48,19 @@ impl<T> Batcher<T> {
         self.pending.is_empty()
     }
 
-    /// Add an item; returns a full batch if this push filled it.
-    pub fn push(&mut self, item: T, now: Instant) -> Option<Vec<T>> {
+    /// Add an item submitted at `submitted`, observed at `now`; returns a
+    /// batch if this push filled it or if the oldest pending item
+    /// (including this one) is already past its deadline.
+    pub fn push(&mut self, item: T, submitted: Instant, now: Instant) -> Option<Vec<T>> {
         if self.pending.is_empty() {
-            self.oldest = Some(now);
+            self.oldest = Some(submitted);
         }
         self.pending.push(item);
-        if self.pending.len() >= self.policy.max_batch {
+        let overdue = self
+            .oldest
+            .map(|t0| now.duration_since(t0) >= self.policy.max_delay)
+            .unwrap_or(false);
+        if self.pending.len() >= self.policy.max_batch || overdue {
             return Some(self.take());
         }
         None
@@ -56,16 +68,24 @@ impl<T> Batcher<T> {
 
     /// Flush if the oldest item's deadline has passed.
     pub fn poll(&mut self, now: Instant) -> Option<Vec<T>> {
+        if self.pending.is_empty() {
+            // structural guard: an empty batcher has no deadline, even if
+            // an anchor survived an unusual state transition
+            self.oldest = None;
+            return None;
+        }
         match self.oldest {
-            Some(t0) if !self.pending.is_empty() && now.duration_since(t0) >= self.policy.max_delay => {
-                Some(self.take())
-            }
+            Some(t0) if now.duration_since(t0) >= self.policy.max_delay => Some(self.take()),
             _ => None,
         }
     }
 
-    /// Time until the current deadline (for recv_timeout), if any.
+    /// Time until the current deadline (for recv_timeout), if any. An
+    /// empty batcher has no deadline by construction.
     pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        if self.pending.is_empty() {
+            return None;
+        }
         self.oldest.map(|t0| {
             let elapsed = now.duration_since(t0);
             self.policy.max_delay.saturating_sub(elapsed)
@@ -91,9 +111,9 @@ mod tests {
     fn flushes_on_full_batch() {
         let mut b = Batcher::new(policy(3, 1000));
         let t = Instant::now();
-        assert!(b.push(1, t).is_none());
-        assert!(b.push(2, t).is_none());
-        let out = b.push(3, t).expect("full batch");
+        assert!(b.push(1, t, t).is_none());
+        assert!(b.push(2, t, t).is_none());
+        let out = b.push(3, t, t).expect("full batch");
         assert_eq!(out, vec![1, 2, 3]);
         assert!(b.is_empty());
     }
@@ -102,8 +122,8 @@ mod tests {
     fn flushes_on_deadline() {
         let mut b = Batcher::new(policy(10, 5));
         let t0 = Instant::now();
-        b.push(1, t0);
-        b.push(2, t0);
+        b.push(1, t0, t0);
+        b.push(2, t0, t0);
         assert!(b.poll(t0).is_none());
         assert!(b.poll(t0 + Duration::from_millis(4)).is_none());
         let out = b.poll(t0 + Duration::from_millis(5)).expect("deadline flush");
@@ -114,8 +134,9 @@ mod tests {
     fn deadline_tracks_oldest_item() {
         let mut b = Batcher::new(policy(10, 10));
         let t0 = Instant::now();
-        b.push(1, t0);
-        b.push(2, t0 + Duration::from_millis(8));
+        b.push(1, t0, t0);
+        let t1 = t0 + Duration::from_millis(8);
+        assert!(b.push(2, t1, t1).is_none());
         // deadline measured from item 1
         assert!(b.poll(t0 + Duration::from_millis(10)).is_some());
     }
@@ -125,7 +146,7 @@ mod tests {
         let mut b: Batcher<u32> = Batcher::new(policy(10, 10));
         let t0 = Instant::now();
         assert!(b.time_to_deadline(t0).is_none());
-        b.push(1, t0);
+        b.push(1, t0, t0);
         let ttd = b.time_to_deadline(t0 + Duration::from_millis(3)).unwrap();
         assert!(ttd <= Duration::from_millis(7));
         let ttd2 = b.time_to_deadline(t0 + Duration::from_millis(30)).unwrap();
@@ -136,11 +157,41 @@ mod tests {
     fn empty_poll_none_and_take_resets() {
         let mut b: Batcher<u32> = Batcher::new(policy(2, 1));
         assert!(b.poll(Instant::now()).is_none());
-        b.push(7, Instant::now());
+        b.push(7, Instant::now(), Instant::now());
         let v = b.take();
         assert_eq!(v, vec![7]);
         assert!(b.is_empty());
         assert!(b.time_to_deadline(Instant::now()).is_none());
+    }
+
+    /// Regression (empty→push→poll boundary): a request whose deadline
+    /// elapsed while the batcher sat empty — it waited in the admission
+    /// queue longer than max_delay — must flush at push, and must not
+    /// leave a stale deadline for the server loop's next
+    /// `time_to_deadline`/`poll`.
+    #[test]
+    fn overdue_push_into_empty_batcher_flushes_immediately() {
+        let mut b = Batcher::new(policy(10, 5));
+        let submitted = Instant::now();
+        let now = submitted + Duration::from_millis(7); // queued past its deadline
+        let out = b.push(1, submitted, now).expect("overdue request flushes at push");
+        assert_eq!(out, vec![1]);
+        assert!(b.is_empty());
+        assert!(b.time_to_deadline(now).is_none(), "stale deadline survived the flush");
+        assert!(b.poll(now + Duration::from_millis(100)).is_none());
+    }
+
+    /// Regression: after a full-batch flush empties the batcher, neither
+    /// poll nor time_to_deadline may resurrect the old anchor.
+    #[test]
+    fn empty_batcher_has_no_deadline_after_flush() {
+        let mut b = Batcher::new(policy(2, 5));
+        let t0 = Instant::now();
+        b.push(1, t0, t0);
+        b.push(2, t0, t0).expect("full batch");
+        let later = t0 + Duration::from_millis(50);
+        assert!(b.time_to_deadline(later).is_none());
+        assert!(b.poll(later).is_none());
     }
 
     /// Property: no item is lost or duplicated across a random sequence
@@ -158,7 +209,7 @@ mod tests {
             let mut now = t0;
             for i in 0..n as u64 {
                 now += Duration::from_millis(rng.below(3) as u64);
-                if let Some(batch) = b.push(i, now) {
+                if let Some(batch) = b.push(i, now, now) {
                     if batch.len() > mb {
                         return Err(format!("oversized batch {}", batch.len()));
                     }

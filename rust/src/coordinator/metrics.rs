@@ -1,6 +1,13 @@
 //! Lightweight serving metrics: counters and a log-bucketed latency
 //! histogram with quantile extraction (p50/p95/p99 for the serve bench).
+//!
+//! [`Metrics`] is the live, shared-across-threads accumulator;
+//! [`MetricsSnapshot`] is its point-in-time, serializable projection —
+//! the one stats representation used by `serve --stats`, the saturation
+//! bench (`BENCH_serve.json`), and human-readable summaries.
 
+use crate::util::json::Json;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Log-bucketed histogram over microsecond latencies: bucket k covers
@@ -76,6 +83,8 @@ pub struct Metrics {
     pub rows: AtomicU64,
     /// rows of padding added to fill fixed-shape batches
     pub pad_rows: AtomicU64,
+    /// requests refused by admission control (queues full)
+    pub rejected: AtomicU64,
 }
 
 impl Metrics {
@@ -87,17 +96,133 @@ impl Metrics {
         counter.load(Ordering::Relaxed)
     }
 
+    /// Point-in-time structured copy (the serializable stats surface).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: Self::get(&self.requests),
+            batches: Self::get(&self.batches),
+            rows: Self::get(&self.rows),
+            pad_rows: Self::get(&self.pad_rows),
+            rejected: Self::get(&self.rejected),
+            req_p50_us: self.request_latency.quantile_us(0.5),
+            req_p99_us: self.request_latency.quantile_us(0.99),
+            req_mean_us: self.request_latency.mean_us(),
+            exec_mean_us: self.exec_latency.mean_us(),
+        }
+    }
+}
+
+/// A point-in-time copy of [`Metrics`], serializable via
+/// [`crate::util::json`]. Counters are exact; latency figures are the
+/// histogram's bucketed quantiles and exact means.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub rows: u64,
+    pub pad_rows: u64,
+    pub rejected: u64,
+    pub req_p50_us: u64,
+    pub req_p99_us: u64,
+    pub req_mean_us: f64,
+    pub exec_mean_us: f64,
+}
+
+fn field_u64(v: &Json, key: &str) -> Result<u64, String> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .map(|x| x as u64)
+        .ok_or_else(|| format!("metrics snapshot: missing numeric field `{key}`"))
+}
+
+fn field_f64(v: &Json, key: &str) -> Result<f64, String> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("metrics snapshot: missing numeric field `{key}`"))
+}
+
+impl MetricsSnapshot {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("requests".into(), Json::Num(self.requests as f64));
+        m.insert("batches".into(), Json::Num(self.batches as f64));
+        m.insert("rows".into(), Json::Num(self.rows as f64));
+        m.insert("pad_rows".into(), Json::Num(self.pad_rows as f64));
+        m.insert("rejected".into(), Json::Num(self.rejected as f64));
+        m.insert("req_p50_us".into(), Json::Num(self.req_p50_us as f64));
+        m.insert("req_p99_us".into(), Json::Num(self.req_p99_us as f64));
+        m.insert("req_mean_us".into(), Json::Num(self.req_mean_us));
+        m.insert("exec_mean_us".into(), Json::Num(self.exec_mean_us));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(v: &Json) -> Result<MetricsSnapshot, String> {
+        Ok(MetricsSnapshot {
+            requests: field_u64(v, "requests")?,
+            batches: field_u64(v, "batches")?,
+            rows: field_u64(v, "rows")?,
+            pad_rows: field_u64(v, "pad_rows")?,
+            rejected: field_u64(v, "rejected")?,
+            req_p50_us: field_u64(v, "req_p50_us")?,
+            req_p99_us: field_u64(v, "req_p99_us")?,
+            req_mean_us: field_f64(v, "req_mean_us")?,
+            exec_mean_us: field_f64(v, "exec_mean_us")?,
+        })
+    }
+
+    /// One-line human rendering (what the CLI prints after a serve run).
     pub fn summary(&self) -> String {
         format!(
-            "requests={} batches={} rows={} pad={} req_p50={}us req_p99={}us exec_mean={:.0}us",
-            Self::get(&self.requests),
-            Self::get(&self.batches),
-            Self::get(&self.rows),
-            Self::get(&self.pad_rows),
-            self.request_latency.quantile_us(0.5),
-            self.request_latency.quantile_us(0.99),
-            self.exec_latency.mean_us(),
+            "requests={} batches={} rows={} pad={} rejected={} \
+             req_p50={}us req_p99={}us exec_mean={:.0}us",
+            self.requests,
+            self.batches,
+            self.rows,
+            self.pad_rows,
+            self.rejected,
+            self.req_p50_us,
+            self.req_p99_us,
+            self.exec_mean_us,
         )
+    }
+
+    /// Aggregate per-shard snapshots into a fleet total: counters sum;
+    /// quantiles take the worst shard (a cross-shard quantile cannot be
+    /// reconstructed from bucketed summaries); means weight by requests.
+    pub fn merge(parts: &[MetricsSnapshot]) -> MetricsSnapshot {
+        let mut total = MetricsSnapshot {
+            requests: 0,
+            batches: 0,
+            rows: 0,
+            pad_rows: 0,
+            rejected: 0,
+            req_p50_us: 0,
+            req_p99_us: 0,
+            req_mean_us: 0.0,
+            exec_mean_us: 0.0,
+        };
+        let mut req_weight = 0.0;
+        let mut exec_weight = 0.0;
+        for p in parts {
+            total.requests += p.requests;
+            total.batches += p.batches;
+            total.rows += p.rows;
+            total.pad_rows += p.pad_rows;
+            total.rejected += p.rejected;
+            total.req_p50_us = total.req_p50_us.max(p.req_p50_us);
+            total.req_p99_us = total.req_p99_us.max(p.req_p99_us);
+            total.req_mean_us += p.req_mean_us * p.requests as f64;
+            req_weight += p.requests as f64;
+            total.exec_mean_us += p.exec_mean_us * p.batches as f64;
+            exec_weight += p.batches as f64;
+        }
+        if req_weight > 0.0 {
+            total.req_mean_us /= req_weight;
+        }
+        if exec_weight > 0.0 {
+            total.exec_mean_us /= exec_weight;
+        }
+        total
     }
 }
 
@@ -133,5 +258,56 @@ mod tests {
         let h = LatencyHistogram::new();
         assert_eq!(h.quantile_us(0.5), 0);
         assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_json_roundtrip() {
+        let m = Metrics::default();
+        Metrics::inc(&m.requests, 12);
+        Metrics::inc(&m.rejected, 3);
+        m.request_latency.record(Duration::from_micros(500));
+        m.exec_latency.record(Duration::from_micros(90));
+        let snap = m.snapshot();
+        assert_eq!(snap.requests, 12);
+        assert_eq!(snap.rejected, 3);
+        let back = MetricsSnapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(back, snap);
+        assert!(snap.summary().contains("rejected=3"));
+    }
+
+    #[test]
+    fn snapshot_rejects_missing_fields() {
+        let v = crate::util::json::parse(r#"{"requests": 1}"#).unwrap();
+        let err = MetricsSnapshot::from_json(&v).unwrap_err();
+        assert!(err.contains("missing"), "{err}");
+    }
+
+    #[test]
+    fn merge_sums_counters_and_takes_worst_quantiles() {
+        let a = MetricsSnapshot {
+            requests: 10,
+            batches: 2,
+            rows: 10,
+            pad_rows: 0,
+            rejected: 1,
+            req_p50_us: 100,
+            req_p99_us: 400,
+            req_mean_us: 100.0,
+            exec_mean_us: 50.0,
+        };
+        let b = MetricsSnapshot { requests: 30, req_p99_us: 800, req_mean_us: 300.0, ..a.clone() };
+        let t = MetricsSnapshot::merge(&[a, b]);
+        assert_eq!(t.requests, 40);
+        assert_eq!(t.rejected, 2);
+        assert_eq!(t.req_p99_us, 800);
+        // 10 reqs at 100us + 30 reqs at 300us → 250us mean
+        assert!((t.req_mean_us - 250.0).abs() < 1e-9, "{}", t.req_mean_us);
+    }
+
+    #[test]
+    fn merge_of_empty_is_zero() {
+        let t = MetricsSnapshot::merge(&[]);
+        assert_eq!(t.requests, 0);
+        assert_eq!(t.req_mean_us, 0.0);
     }
 }

@@ -19,6 +19,6 @@ pub mod pipeline;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use metrics::Metrics;
+pub use metrics::{Metrics, MetricsSnapshot};
 pub use pipeline::{train_streaming, PipelineConfig, PipelineStats};
-pub use server::{BatchBackend, FeatureClient, FeatureServer, NativeBackend};
+pub use server::{BatchBackend, ClientSession, FeatureClient, FeatureServer, NativeBackend};

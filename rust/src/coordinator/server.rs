@@ -1,19 +1,32 @@
-//! FeatureServer: the request path. Clients submit rows; a batcher thread
-//! forms fixed-shape batches (size/deadline policy); worker threads run
-//! the backend (PJRT executable or a Rust-native featurizer) and route
-//! feature rows back to the callers.
+//! FeatureServer: the in-process request path. Clients submit rows; a
+//! batcher thread forms fixed-shape batches (size/deadline policy);
+//! worker threads run the backend (PJRT executable or a Rust-native
+//! featurizer) and route feature rows back to the callers.
 //!
 //! Thread topology:
 //!   clients → mpsc → [batcher thread] → crossbeam-free spmc via a shared
 //!   Mutex<Receiver> → [worker × W] → per-request oneshot channels.
 //! Backends are created *per worker* through a factory (PJRT handles are
 //! not Send).
+//!
+//! Two client surfaces over the same server:
+//! - [`FeatureClient`]: the row-level primitive. `submit_row` blocks on a
+//!   full admission queue (in-process backpressure); `try_submit_row`
+//!   refuses with [`InferenceError::Rejected`] instead — the same
+//!   admission contract as the networked tier.
+//! - [`ClientSession`]: the batch-level [`InferenceSession`], so the
+//!   coordinator path is interchangeable with
+//!   [`crate::serve::DirectSession`] and [`crate::serve::TcpSession`].
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
+use crate::serve::api::{
+    check_batch, no_outstanding, InferenceError, InferenceResponse, InferenceSession,
+};
 use crate::tensor::Mat;
 
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -72,27 +85,113 @@ struct Request {
 #[derive(Clone)]
 pub struct FeatureClient {
     tx: SyncSender<Request>,
+    metrics: Arc<Metrics>,
     input_dim: usize,
     feature_dim: usize,
 }
 
 impl FeatureClient {
-    /// Submit one row; returns a receiver for its feature vector.
-    pub fn submit(&self, row: Vec<f32>) -> Receiver<Vec<f32>> {
-        assert_eq!(row.len(), self.input_dim, "submit: wrong input dim");
-        let (tx, rx) = channel();
-        let req = Request { row, t0: Instant::now(), resp: tx };
-        self.tx.send(req).expect("server gone");
-        rx
+    /// Submit one row; returns a receiver for its feature vector. Blocks
+    /// while the admission queue is full (in-process backpressure); use
+    /// [`FeatureClient::try_submit_row`] for the refusing variant.
+    pub fn submit_row(&self, row: Vec<f32>) -> Result<Receiver<Vec<f32>>, InferenceError> {
+        let req = self.make_request(row)?;
+        let rx = req.1;
+        self.tx.send(req.0).map_err(|_| InferenceError::Closed)?;
+        Ok(rx)
     }
 
-    /// Submit and wait.
-    pub fn featurize(&self, row: Vec<f32>) -> Vec<f32> {
-        self.submit(row).recv().expect("server dropped response")
+    /// Non-blocking submit: a full admission queue refuses with
+    /// [`InferenceError::Rejected`] and a retry hint instead of waiting —
+    /// the same contract the networked tier's shard router gives.
+    pub fn try_submit_row(&self, row: Vec<f32>) -> Result<Receiver<Vec<f32>>, InferenceError> {
+        let req = self.make_request(row)?;
+        let rx = req.1;
+        match self.tx.try_send(req.0) {
+            Ok(()) => Ok(rx),
+            Err(TrySendError::Full(_)) => {
+                Metrics::inc(&self.metrics.rejected, 1);
+                Err(InferenceError::Rejected { retry_after_ms: self.retry_after_ms() })
+            }
+            Err(TrySendError::Disconnected(_)) => Err(InferenceError::Closed),
+        }
+    }
+
+    /// Submit one row and wait for its feature vector.
+    pub fn featurize(&self, row: Vec<f32>) -> Result<Vec<f32>, InferenceError> {
+        self.submit_row(row)?.recv().map_err(|_| InferenceError::Closed)
+    }
+
+    /// Open a batch-level [`InferenceSession`] over this client.
+    pub fn session(&self) -> ClientSession {
+        ClientSession { client: self.clone(), next_id: 0, pending: VecDeque::new() }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.input_dim
     }
 
     pub fn feature_dim(&self) -> usize {
         self.feature_dim
+    }
+
+    fn make_request(&self, row: Vec<f32>) -> Result<(Request, Receiver<Vec<f32>>), InferenceError> {
+        if row.len() != self.input_dim {
+            return Err(InferenceError::BadRequest(format!(
+                "row has {} values, model expects {}",
+                row.len(),
+                self.input_dim
+            )));
+        }
+        let (tx, rx) = channel();
+        Ok((Request { row, t0: Instant::now(), resp: tx }, rx))
+    }
+
+    /// Retry hint: roughly one mean batch execution, clamped [1, 1000] ms.
+    fn retry_after_ms(&self) -> u64 {
+        let mean_us = self.metrics.snapshot().exec_mean_us;
+        ((mean_us / 1000.0).ceil() as u64).clamp(1, 1000)
+    }
+}
+
+/// [`InferenceSession`] over a running [`FeatureServer`]: batch rows fan
+/// out through the dynamic batcher and reassemble, in order, into one
+/// response whose rows are the feature vectors.
+pub struct ClientSession {
+    client: FeatureClient,
+    next_id: u64,
+    pending: VecDeque<(u64, Vec<Receiver<Vec<f32>>>)>,
+}
+
+impl InferenceSession for ClientSession {
+    fn input_dim(&self) -> usize {
+        self.client.input_dim
+    }
+
+    fn output_dim(&self) -> usize {
+        self.client.feature_dim
+    }
+
+    fn submit(&mut self, rows: &Mat) -> Result<u64, InferenceError> {
+        check_batch(rows, self.client.input_dim)?;
+        let mut rxs = Vec::with_capacity(rows.rows);
+        for i in 0..rows.rows {
+            rxs.push(self.client.submit_row(rows.row(i).to_vec())?);
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.pending.push_back((id, rxs));
+        Ok(id)
+    }
+
+    fn recv(&mut self) -> Result<InferenceResponse, InferenceError> {
+        let (id, rxs) = self.pending.pop_front().ok_or_else(no_outstanding)?;
+        let mut out = Mat::zeros(rxs.len(), self.client.feature_dim);
+        for (k, rx) in rxs.iter().enumerate() {
+            let row = rx.recv().map_err(|_| InferenceError::Closed)?;
+            out.row_mut(k).copy_from_slice(&row);
+        }
+        Ok(InferenceResponse { id, rows: out })
     }
 }
 
@@ -140,7 +239,11 @@ impl FeatureServer {
                 match req_rx.recv_timeout(timeout) {
                     Ok(req) => {
                         Metrics::inc(&m2.requests, 1);
-                        if let Some(batch) = batcher.push(req, Instant::now()) {
+                        // the deadline anchors at submit time: a request
+                        // that waited in the admission queue keeps the
+                        // latency budget it already spent
+                        let t0 = req.t0;
+                        if let Some(batch) = batcher.push(req, t0, Instant::now()) {
                             if batch_tx.send(batch).is_err() {
                                 return;
                             }
@@ -208,7 +311,8 @@ impl FeatureServer {
             }));
         }
 
-        let client = FeatureClient { tx: req_tx, input_dim, feature_dim };
+        let client =
+            FeatureClient { tx: req_tx, metrics: metrics.clone(), input_dim, feature_dim };
         (
             FeatureServer {
                 metrics,
@@ -275,7 +379,7 @@ mod tests {
         let (server, client) = start_toy(2, 4);
         let mut rxs = Vec::new();
         for i in 0..20 {
-            rxs.push((i, client.submit(vec![i as f32, 1.0, 2.0])));
+            rxs.push((i, client.submit_row(vec![i as f32, 1.0, 2.0]).unwrap()));
         }
         for (i, rx) in rxs {
             let f = rx.recv_timeout(Duration::from_secs(5)).expect("response");
@@ -289,9 +393,9 @@ mod tests {
     fn partial_batches_flush_on_deadline() {
         let (server, client) = start_toy(1, 64);
         // a single request must still come back (deadline flush)
-        let f = client.featurize(vec![1.0, 2.0, 3.0]);
+        let f = client.featurize(vec![1.0, 2.0, 3.0]).unwrap();
         assert_eq!(f, vec![6.0, 12.0]);
-        assert!(Metrics::get(&server.metrics.pad_rows) >= 63);
+        assert!(server.metrics.snapshot().pad_rows >= 63);
         drop(client);
         server.join();
     }
@@ -305,7 +409,7 @@ mod tests {
                 std::thread::spawn(move || {
                     for i in 0..50 {
                         let v = (t * 50 + i) as f32;
-                        let f = c.featurize(vec![v, 0.0, 0.0]);
+                        let f = c.featurize(vec![v, 0.0, 0.0]).unwrap();
                         assert_eq!(f[0], v);
                     }
                 })
@@ -320,9 +424,35 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "wrong input dim")]
-    fn rejects_bad_dim() {
-        let (_server, client) = start_toy(1, 4);
-        let _ = client.submit(vec![1.0]);
+    fn bad_dim_is_a_typed_refusal_not_a_panic() {
+        let (server, client) = start_toy(1, 4);
+        assert!(matches!(client.submit_row(vec![1.0]), Err(InferenceError::BadRequest(_))));
+        assert!(matches!(client.try_submit_row(vec![1.0]), Err(InferenceError::BadRequest(_))));
+        // nothing was admitted
+        assert_eq!(server.requests_served(), 0);
+        drop(client);
+        server.join();
+    }
+
+    #[test]
+    fn client_session_speaks_the_typed_api() {
+        let (server, client) = start_toy(2, 4);
+        let mut s = client.session();
+        assert_eq!((s.input_dim(), s.output_dim()), (3, 2));
+        let x = Mat::from_vec(3, 3, vec![1.0, 0.0, 0.0, 2.0, 0.0, 0.0, 0.0, 3.0, 1.0]);
+        // session output ≡ the featurizer applied directly
+        assert_eq!(s.infer(&x).unwrap(), Toy.transform(&x));
+        // pipelined batches come back in submission order
+        let a = s.submit(&Mat::from_vec(1, 3, vec![1.0, 1.0, 1.0])).unwrap();
+        let b = s.submit(&Mat::from_vec(1, 3, vec![2.0, 2.0, 2.0])).unwrap();
+        let ra = s.recv().unwrap();
+        let rb = s.recv().unwrap();
+        assert_eq!((ra.id, rb.id), (a, b));
+        assert_eq!(ra.rows.data, vec![3.0, 6.0]);
+        assert_eq!(rb.rows.data, vec![6.0, 12.0]);
+        assert!(matches!(s.recv(), Err(InferenceError::BadRequest(_))));
+        drop(s);
+        drop(client);
+        server.join();
     }
 }

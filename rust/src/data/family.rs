@@ -1,0 +1,160 @@
+//! Dataset-family resolution shared by the CLI verbs and tools: the one
+//! mapping from family names (CLI short forms and persisted
+//! `meta.dataset` names) to generators, plus the image-geometry
+//! inversions needed to regenerate a saved model's data. Everything here
+//! returns typed errors — the CLI layer decides how to report them.
+
+use crate::data::uci_like::{self, UciFamily};
+use crate::data::{cifar_like, mnist_like, Dataset};
+use crate::model::{FeaturizerSpec, ModelMeta};
+
+/// A dataset family the CLI can (re)generate: the four UCI-like
+/// regression families plus the two flattened image-classification
+/// families backing the CNTK production path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataFamily {
+    Uci(UciFamily),
+    Cifar,
+    Mnist,
+}
+
+impl DataFamily {
+    /// The persisted `meta.dataset` name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DataFamily::Uci(f) => f.name(),
+            DataFamily::Cifar => "cifar-like",
+            DataFamily::Mnist => "mnist-like",
+        }
+    }
+
+    pub fn is_image(&self) -> bool {
+        matches!(self, DataFamily::Cifar | DataFamily::Mnist)
+    }
+
+    /// Image channel count (0 for the flat regression families).
+    pub fn channels(&self) -> usize {
+        match self {
+            DataFamily::Cifar => 3,
+            DataFamily::Mnist => 1,
+            DataFamily::Uci(_) => 0,
+        }
+    }
+}
+
+/// Accepts both the CLI short form (`protein`, `cifar`) and the
+/// persisted `meta.dataset` form (`protein-like`, `cifar-like`). Unknown
+/// names are an error — never a silent fallback (a typo'd `--family`, or
+/// a model whose dataset this CLI cannot regenerate, must not evaluate
+/// against the wrong distribution).
+pub fn parse_family(name: &str) -> Result<DataFamily, String> {
+    match name.trim_end_matches("-like") {
+        "millionsongs" => Ok(DataFamily::Uci(UciFamily::MillionSongs)),
+        "workloads" => Ok(DataFamily::Uci(UciFamily::WorkLoads)),
+        "ct" => Ok(DataFamily::Uci(UciFamily::CtSlices)),
+        "protein" => Ok(DataFamily::Uci(UciFamily::Protein)),
+        "cifar" => Ok(DataFamily::Cifar),
+        "mnist" => Ok(DataFamily::Mnist),
+        other => Err(format!(
+            "unknown dataset family `{other}` (known: millionsongs, workloads, ct, protein, \
+             cifar, mnist — or the `cntk` train alias)"
+        )),
+    }
+}
+
+/// Generate the vector-shaped dataset for a family. Image families
+/// render side×side images and flatten them channel-minor, so every
+/// downstream consumer — including the cntk featurizer, which interprets
+/// flat rows as pixel grids — sees one row layout.
+pub fn gen_vec_dataset(fam: &DataFamily, n: usize, side: usize, seed: u64) -> Dataset {
+    match fam {
+        DataFamily::Uci(f) => uci_like::generate(*f, n, seed),
+        DataFamily::Cifar => cifar_like::generate(n, side, seed).flatten(),
+        DataFamily::Mnist => mnist_like::generate(n, side, seed).flatten(),
+    }
+}
+
+/// Recover the side of a square c-channel image from its flat row
+/// dimension — the one place this geometry inversion lives, shared by
+/// train-time spec construction and predict/serve-time regeneration.
+pub fn square_side(input_dim: usize, c: usize) -> Result<usize, String> {
+    let side = ((input_dim / c) as f64).sqrt().round() as usize;
+    if side == 0 || side * side * c != input_dim {
+        return Err(format!("dim {input_dim} is not a square {c}-channel image"));
+    }
+    Ok(side)
+}
+
+/// Image side length for (re)generating a model's data: the cntk spec
+/// pins (h, w) exactly; flat families on image data recover the side
+/// from the input dimension. Non-square or non-image dims are refusals.
+pub fn image_side(
+    spec: &FeaturizerSpec,
+    fam: &DataFamily,
+    input_dim: usize,
+) -> Result<usize, String> {
+    if let FeaturizerSpec::CntkSketch { h, w, .. } = spec {
+        if h != w {
+            return Err(format!(
+                "model expects {h}×{w} images but the {} generator only renders square ones",
+                fam.name()
+            ));
+        }
+        return Ok(*h);
+    }
+    let c = fam.channels().max(1);
+    square_side(input_dim, c)
+        .map_err(|e| format!("model input {e} ({} family)", fam.name()))
+}
+
+/// Regenerate the eval dataset a saved model was trained against.
+pub fn eval_dataset(
+    spec: &FeaturizerSpec,
+    meta: &ModelMeta,
+    n: usize,
+    seed: u64,
+) -> Result<Dataset, String> {
+    let fam = parse_family(&meta.dataset)?;
+    let side = if fam.is_image() { image_side(spec, &fam, meta.input_dim)? } else { 0 };
+    Ok(gen_vec_dataset(&fam, n, side, seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_names_roundtrip_through_parse() {
+        for name in ["millionsongs", "workloads", "ct", "protein", "cifar", "mnist"] {
+            let fam = parse_family(name).unwrap();
+            // the persisted form parses back to the same family
+            assert_eq!(parse_family(fam.name()).unwrap(), fam);
+        }
+    }
+
+    #[test]
+    fn unknown_family_is_a_refusal() {
+        let err = parse_family("protien").unwrap_err();
+        assert!(err.contains("unknown dataset family"), "{err}");
+    }
+
+    #[test]
+    fn square_side_inverts_flat_dims() {
+        assert_eq!(square_side(8 * 8 * 3, 3).unwrap(), 8);
+        assert_eq!(square_side(28 * 28, 1).unwrap(), 28);
+        assert!(square_side(100, 3).is_err());
+        assert!(square_side(0, 1).is_err());
+    }
+
+    #[test]
+    fn image_families_flatten_channel_minor() {
+        let fam = parse_family("cifar").unwrap();
+        let ds = gen_vec_dataset(&fam, 4, 8, 1);
+        assert_eq!((ds.n(), ds.d()), (4, 8 * 8 * 3));
+        assert!(ds.classes >= 2);
+        let flat = parse_family("protein").unwrap();
+        let ds = gen_vec_dataset(&flat, 10, 0, 1);
+        assert_eq!(ds.n(), 10);
+        assert_eq!(ds.classes, 0);
+    }
+}

@@ -5,10 +5,13 @@
 //! argument). All generators are deterministic from a seed.
 
 pub mod cifar_like;
+pub mod family;
 pub mod mnist_like;
 pub mod split;
 pub mod synth;
 pub mod uci_like;
+
+pub use family::{eval_dataset, gen_vec_dataset, image_side, parse_family, square_side, DataFamily};
 
 use crate::cntk::Image;
 use crate::tensor::Mat;

@@ -65,4 +65,6 @@ pub mod cntk;
 pub mod runtime;
 pub mod coordinator;
 pub mod model;
+pub mod serve;
+pub mod cli;
 pub mod bench;

@@ -1,6 +1,7 @@
 //! ntk-sketch CLI — the coordinator entrypoint.
 //!
-//! Subcommands:
+//! Subcommands (parsed by [`ntk_sketch::cli::Command`], which refuses
+//! unknown flags and bad numerics per verb):
 //!   info                         show artifact + build info
 //!   golden                       verify AOT golden parity through PJRT
 //!   kernel   --depth L           print K_relu^{(L)} on a grid (Fig. 1 data)
@@ -14,9 +15,17 @@
 //!                                batches, and persists the model to the
 //!                                registry; --resume continues an
 //!                                interrupted fit bit-identically
-//!   predict  --model NAME        load a saved model and evaluate it
-//!   serve    --model NAME        serve predictions from a saved model
-//!                                (without --model: PJRT feature serving)
+//!   predict  --model NAME        load a saved model and evaluate it;
+//!                                with --connect HOST:PORT the same
+//!                                predictions run through a serve daemon
+//!                                (the crc lines must match bit-exactly)
+//!   serve    --model NAME        in-process serving demo over a saved
+//!                                model (without --model: PJRT feature
+//!                                serving); with --listen ADDR it becomes
+//!                                the networked daemon (DESIGN.md §10),
+//!                                hot-swapping when the registry advances;
+//!                                --stats/--shutdown --connect ADDR talk
+//!                                to a running daemon
 //!   models                       list the registry; --gc NAME trims old
 //!                                versions
 //!
@@ -29,9 +38,12 @@
 //! Model registry root: `--models-dir`, else `$NTK_MODEL_DIR`, else
 //! `./models` (DESIGN.md §8).
 
+use ntk_sketch::cli::{self, Command, KernelCfg, ModelsCfg, PredictCfg, ServeCfg, TrainCfg};
 use ntk_sketch::coordinator::{BatchBackend, BatchPolicy, FeatureServer, NativeBackend};
-use ntk_sketch::data::uci_like::{self, UciFamily};
-use ntk_sketch::data::{cifar_like, mnist_like, split, Dataset};
+use ntk_sketch::data::{
+    eval_dataset, gen_vec_dataset, image_side, parse_family, split, square_side, DataFamily,
+    Dataset,
+};
 use ntk_sketch::features::cntk_sketch::CntkSketchConfig;
 use ntk_sketch::features::grad_rf::GradRfMlp;
 use ntk_sketch::features::ntk_rf::NtkRfConfig;
@@ -40,12 +52,15 @@ use ntk_sketch::features::rff::Rff;
 use ntk_sketch::features::Featurizer;
 use ntk_sketch::model::codec::crc32;
 use ntk_sketch::model::spec::MAX_CNTK_DEPTH;
-use ntk_sketch::model::{FeaturizerSpec, ModelMeta, Registry, SavedModel, TrainCheckpoint};
+use ntk_sketch::model::{FeaturizerSpec, ModelMeta, SavedModel, TrainCheckpoint};
 use ntk_sketch::ntk::k_relu;
 use ntk_sketch::regression::cv::kfold_mse;
 use ntk_sketch::regression::{accuracy, mse, RidgeRegressor};
 use ntk_sketch::rng::Rng;
 use ntk_sketch::runtime::{artifacts_dir, pjrt_enabled, Engine};
+use ntk_sketch::serve::{
+    DirectSession, InferenceSession, ServeOptions, TcpServer, TcpSession, MAX_ROWS_PER_REQUEST,
+};
 use ntk_sketch::tensor::Mat;
 use ntk_sketch::transforms::LeafMode;
 use ntk_sketch::util::cli::Args;
@@ -53,53 +68,26 @@ use std::sync::Arc;
 
 fn main() {
     let args = Args::from_env();
-    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let cmd = Command::parse(&args).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        eprintln!("{}", cli::usage());
+        std::process::exit(2);
+    });
     match cmd {
-        "info" => info(),
-        "golden" => golden(),
-        "kernel" => kernel(&args),
-        "train" => train(&args),
-        "predict" => predict(&args),
-        "serve" => serve(&args),
-        "models" => models_cmd(&args),
-        _ => {
-            eprintln!(
-                "usage: ntk-sketch <info|golden|kernel|train|predict|serve|models> [--flags]\n\
-                 examples:\n\
-                 \tntk-sketch kernel --depth 3\n\
-                 \tntk-sketch train --family protein --method ntkrf --m 1024 --n 1000\n\
-                 \tntk-sketch train --family protein --method ntkrf --save m1 --checkpoint-every 1\n\
-                 \tntk-sketch train --family cntk --side 8 --n 200 --save c1\n\
-                 \tntk-sketch train --resume\n\
-                 \tntk-sketch predict --model m1\n\
-                 \tntk-sketch serve --model m1 --requests 1000\n\
-                 \tntk-sketch models"
-            );
-        }
+        Command::Help => eprintln!("{}", cli::usage()),
+        Command::Info => info(),
+        Command::Golden => golden(),
+        Command::Kernel(c) => kernel(&c),
+        Command::Train(c) => train(&c),
+        Command::Predict(c) => predict(&c),
+        Command::Serve(c) => serve(&c),
+        Command::Models(c) => models_cmd(&c),
     }
 }
 
 fn fail(e: impl std::fmt::Display) -> ! {
     eprintln!("error: {e}");
     std::process::exit(1);
-}
-
-fn registry_from(args: &Args) -> Registry {
-    match args.get("models-dir") {
-        Some(p) => Registry::open(p),
-        None => Registry::open(Registry::default_root()),
-    }
-}
-
-/// `--version` as an explicit registry version; accepts both `3` and the
-/// `v3` form the registry itself prints. Unparseable input is a refusal,
-/// never a silent fall-through to `LATEST`.
-fn version_arg(args: &Args) -> Option<u32> {
-    args.get("version").map(|s| {
-        s.strip_prefix('v').unwrap_or(s).parse::<u32>().unwrap_or_else(|_| {
-            fail(format!("bad --version `{s}` (expected an integer like 3 or v3)"))
-        })
-    })
 }
 
 fn info() {
@@ -115,7 +103,7 @@ fn info() {
         ),
         Err(err) => println!("no artifact loaded ({err}); run `make artifacts`"),
     }
-    let registry = Registry::open(Registry::default_root());
+    let registry = cli::open_registry(None);
     let entries = registry.list();
     println!("model registry: {} ({} models)", registry.root().display(), entries.len());
 }
@@ -149,67 +137,12 @@ fn golden() {
     println!("golden parity OK (max relative error {rel:.2e})");
 }
 
-fn kernel(args: &Args) {
-    let depth = args.usize("depth", 3);
-    let points = args.usize("points", 21);
+fn kernel(cfg: &KernelCfg) {
+    let depth = cfg.depth;
     println!("alpha,K_relu^{depth}");
-    for k in 0..points {
-        let a = -1.0 + 2.0 * k as f64 / (points - 1) as f64;
+    for k in 0..cfg.points {
+        let a = -1.0 + 2.0 * k as f64 / (cfg.points - 1) as f64;
         println!("{a:.3},{:.6}", k_relu(depth, a));
-    }
-}
-
-/// A dataset family the CLI can (re)generate: the four UCI-like
-/// regression families plus the two flattened image-classification
-/// families backing the CNTK production path.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum DataFamily {
-    Uci(UciFamily),
-    Cifar,
-    Mnist,
-}
-
-impl DataFamily {
-    /// The persisted `meta.dataset` name.
-    fn name(&self) -> &'static str {
-        match self {
-            DataFamily::Uci(f) => f.name(),
-            DataFamily::Cifar => "cifar-like",
-            DataFamily::Mnist => "mnist-like",
-        }
-    }
-
-    fn is_image(&self) -> bool {
-        matches!(self, DataFamily::Cifar | DataFamily::Mnist)
-    }
-
-    /// Image channel count (0 for the flat regression families).
-    fn channels(&self) -> usize {
-        match self {
-            DataFamily::Cifar => 3,
-            DataFamily::Mnist => 1,
-            DataFamily::Uci(_) => 0,
-        }
-    }
-}
-
-/// Accepts both the CLI short form (`protein`, `cifar`) and the
-/// persisted `meta.dataset` form (`protein-like`, `cifar-like`). Unknown
-/// names are an error — never a silent fallback (a typo'd `--family`, or
-/// a model whose dataset this CLI cannot regenerate, must not evaluate
-/// against the wrong distribution).
-fn parse_family(name: &str) -> Result<DataFamily, String> {
-    match name.trim_end_matches("-like") {
-        "millionsongs" => Ok(DataFamily::Uci(UciFamily::MillionSongs)),
-        "workloads" => Ok(DataFamily::Uci(UciFamily::WorkLoads)),
-        "ct" => Ok(DataFamily::Uci(UciFamily::CtSlices)),
-        "protein" => Ok(DataFamily::Uci(UciFamily::Protein)),
-        "cifar" => Ok(DataFamily::Cifar),
-        "mnist" => Ok(DataFamily::Mnist),
-        other => Err(format!(
-            "unknown dataset family `{other}` (known: millionsongs, workloads, ct, protein, \
-             cifar, mnist — or the `cntk` train alias)"
-        )),
     }
 }
 
@@ -217,66 +150,17 @@ fn parse_family(name: &str) -> Result<DataFamily, String> {
 /// production alias: cntk is a *featurizer* family whose canonical
 /// dataset is the CIFAR-like generator, so `train --family cntk` ≡
 /// `train --family cifar --method cntk`.
-fn family_and_method(args: &Args) -> (DataFamily, String) {
-    let fam_arg = args.get_or("family", "protein");
-    if fam_arg == "cntk" {
-        if let Some(m) = args.get("method") {
+fn family_and_method(cfg: &TrainCfg) -> (DataFamily, String) {
+    if cfg.family == "cntk" {
+        if let Some(m) = &cfg.method {
             if m != "cntk" {
                 eprintln!("warning: --family cntk pins --method cntk (ignoring --method {m})");
             }
         }
         return (DataFamily::Cifar, "cntk".to_string());
     }
-    let fam = parse_family(fam_arg).unwrap_or_else(|e| fail(e));
-    (fam, args.get_or("method", "ntkrf").to_string())
-}
-
-/// Generate the vector-shaped dataset for a family. Image families
-/// render side×side images and flatten them channel-minor, so every
-/// downstream consumer — including the cntk featurizer, which interprets
-/// flat rows as pixel grids — sees one row layout.
-fn gen_vec_dataset(fam: &DataFamily, n: usize, side: usize, seed: u64) -> Dataset {
-    match fam {
-        DataFamily::Uci(f) => uci_like::generate(*f, n, seed),
-        DataFamily::Cifar => cifar_like::generate(n, side, seed).flatten(),
-        DataFamily::Mnist => mnist_like::generate(n, side, seed).flatten(),
-    }
-}
-
-/// Recover the side of a square c-channel image from its flat row
-/// dimension — the one place this geometry inversion lives, shared by
-/// train-time spec construction and predict/serve-time regeneration.
-fn square_side(input_dim: usize, c: usize) -> Result<usize, String> {
-    let side = ((input_dim / c) as f64).sqrt().round() as usize;
-    if side == 0 || side * side * c != input_dim {
-        return Err(format!("dim {input_dim} is not a square {c}-channel image"));
-    }
-    Ok(side)
-}
-
-/// Image side length for (re)generating a model's data: the cntk spec
-/// pins (h, w) exactly; flat families on image data recover the side
-/// from the input dimension. Non-square or non-image dims are refusals.
-fn image_side(spec: &FeaturizerSpec, fam: &DataFamily, input_dim: usize) -> usize {
-    if let FeaturizerSpec::CntkSketch { h, w, .. } = spec {
-        if h != w {
-            fail(format!(
-                "model expects {h}×{w} images but the {} generator only renders square ones",
-                fam.name()
-            ));
-        }
-        return *h;
-    }
-    let c = fam.channels().max(1);
-    square_side(input_dim, c)
-        .unwrap_or_else(|e| fail(format!("model input {e} ({} family)", fam.name())))
-}
-
-/// Regenerate the eval dataset a saved model was trained against.
-fn eval_dataset(spec: &FeaturizerSpec, meta: &ModelMeta, n: usize, seed: u64) -> Dataset {
-    let fam = parse_family(&meta.dataset).unwrap_or_else(|e| fail(e));
-    let side = if fam.is_image() { image_side(spec, &fam, meta.input_dim) } else { 0 };
-    gen_vec_dataset(&fam, n, side, seed)
+    let fam = parse_family(&cfg.family).unwrap_or_else(|e| fail(e));
+    (fam, cfg.method.clone().unwrap_or_else(|| "ntkrf".to_string()))
 }
 
 /// Resolve a CLI method name + args into a reconstructible spec. The
@@ -289,10 +173,10 @@ fn build_spec(
     ds: &Dataset,
     m: usize,
     depth: usize,
-    args: &Args,
+    cfg: &TrainCfg,
 ) -> FeaturizerSpec {
     let d = ds.d();
-    let seed = args.u64("seed", 7);
+    let seed = cfg.seed;
     match method {
         "rff" => {
             // the median heuristic is resolved here, once; the spec
@@ -322,7 +206,7 @@ fn build_spec(
         "ntkpoly" => FeaturizerSpec::NtkPolySketch {
             d,
             depth,
-            deg: args.usize("deg", 8),
+            deg: cfg.deg,
             m_inner: m,
             m_out: m,
             seed: seed + 1,
@@ -341,7 +225,7 @@ fn build_spec(
                 m0: c.m0,
                 m1: c.m1,
                 ms: c.ms,
-                leverage_sweeps: args.u64("leverage-sweeps", 0),
+                leverage_sweeps: cfg.leverage_sweeps,
                 seed: seed + 1,
             }
         }
@@ -357,7 +241,7 @@ fn build_spec(
                 ));
             }
             let side = square_side(d, c).unwrap_or_else(|e| fail(format!("dataset rows: {e}")));
-            let q = args.usize("q", 3);
+            let q = cfg.q;
             if q == 0 || q % 2 == 0 {
                 fail(format!("--q {q}: the CNTK filter size must be odd"));
             }
@@ -366,25 +250,25 @@ fn build_spec(
             // range is a refusal, not a silent adjustment (the upper
             // bound matches the spec decoder, so anything trained here
             // is guaranteed loadable)
-            if args.get("depth").is_some() && !(2..=MAX_CNTK_DEPTH as usize).contains(&depth) {
+            if cfg.depth.is_some() && !(2..=MAX_CNTK_DEPTH as usize).contains(&depth) {
                 fail(format!(
                     "--depth {depth}: the CNTK family needs depth in [2, {MAX_CNTK_DEPTH}] \
                      (the depth-1 CNTK with GAP is identically zero)"
                 ));
             }
-            let cfg = CntkSketchConfig::for_budget(depth.max(2), q, m);
+            let cfg2 = CntkSketchConfig::for_budget(depth.max(2), q, m);
             FeaturizerSpec::CntkSketch {
                 h: side,
                 w: side,
                 c,
-                depth: cfg.depth,
-                q: cfg.q,
-                p1: cfg.p1,
-                p0: cfg.p0,
-                r: cfg.r,
-                s: cfg.s,
-                m_inner: cfg.m_inner,
-                s_out: cfg.s_out,
+                depth: cfg2.depth,
+                q: cfg2.q,
+                p1: cfg2.p1,
+                p0: cfg2.p0,
+                r: cfg2.r,
+                s: cfg2.s,
+                m_inner: cfg2.m_inner,
+                s_out: cfg2.s_out,
                 seed: seed + 1,
             }
         }
@@ -409,26 +293,24 @@ struct TrainSetup {
     spec: FeaturizerSpec,
 }
 
-fn train_setup(args: &Args) -> TrainSetup {
-    let (fam, method) = family_and_method(args);
-    let n = args.usize("n", if fam.is_image() { 200 } else { 1000 });
-    let m = args.usize("m", if method == "cntk" { 256 } else { 1024 });
-    let depth = args.usize("depth", 1);
-    let seed = args.u64("seed", 7);
-    let lambda = args.f64("lambda", 1e-3);
-    let ds = gen_vec_dataset(&fam, n, args.usize("side", 8), seed);
-    let spec = build_spec(&method, &fam, &ds, m, depth, args);
+fn train_setup(cfg: &TrainCfg) -> TrainSetup {
+    let (fam, method) = family_and_method(cfg);
+    let n = cfg.n.unwrap_or(if fam.is_image() { 200 } else { 1000 });
+    let m = cfg.m.unwrap_or(if method == "cntk" { 256 } else { 1024 });
+    let depth = cfg.depth.unwrap_or(1);
+    let seed = cfg.seed;
+    let lambda = cfg.lambda.unwrap_or(1e-3);
+    let ds = gen_vec_dataset(&fam, n, cfg.side, seed);
+    let spec = build_spec(&method, &fam, &ds, m, depth, cfg);
     TrainSetup { fam, n, seed, lambda, ds, spec }
 }
 
-fn train(args: &Args) {
-    // `--resume NAME` parses as an option with a value — accept it as
-    // naturally as the documented bare `--resume [--save NAME]` form
-    if args.flag("resume") || args.get("resume").is_some() || args.get("save").is_some() {
-        train_persistent(args);
+fn train(cfg: &TrainCfg) {
+    if cfg.resume || cfg.save.is_some() {
+        train_persistent(cfg);
         return;
     }
-    let TrainSetup { fam, n, seed, lambda, ds, spec } = train_setup(args);
+    let TrainSetup { fam, n, seed, lambda, ds, spec } = train_setup(cfg);
     let f = spec.build();
     let t = std::time::Instant::now();
     if ds.classes >= 2 {
@@ -466,77 +348,76 @@ fn train(args: &Args) {
 /// accumulator and the deterministic data stream and continues exactly
 /// where the interrupted run stopped. Image families stream one-hot
 /// targets (outputs = classes); regression families stream scalars.
-fn train_persistent(args: &Args) {
-    let registry = registry_from(args);
-    let stop_after = args.usize("stop-after-batches", 0);
+fn train_persistent(cfg: &TrainCfg) {
+    let registry = cli::open_registry(cfg.models_dir.as_deref());
+    let stop_after = cfg.stop_after_batches;
     let t0 = std::time::Instant::now();
 
-    let (name, spec, mut reg, mut meta, n_total, batch_rows, ckpt_every, fresh_ds) =
-        if args.flag("resume") || args.get("resume").is_some() {
-            // `--resume NAME` names the checkpoint directly; bare
-            // `--resume` takes --save NAME or the registry-wide unique one
-            let want = args.get("resume").or_else(|| args.get("save"));
-            let (name, ck) = registry.find_checkpoint(want).unwrap_or_else(|e| fail(e));
-            let reg = ck.restore_regressor().unwrap_or_else(|e| fail(e));
-            println!(
-                "resuming `{name}` from checkpoint: {}/{} rows accumulated",
-                reg.n_seen, ck.n_total
-            );
-            // the data stream and featurizer are pinned by the checkpoint
-            // (anything else would break bit-identity with the
-            // uninterrupted run) — warn instead of silently dropping
-            // operator overrides
-            for flag in ["family", "method", "n", "m", "depth", "batch", "seed", "side", "q"] {
-                if args.get(flag).is_some() {
-                    eprintln!(
-                        "warning: --{flag} is ignored on --resume \
-                         (pinned by the checkpoint)"
-                    );
-                }
+    let resume = cfg.resume;
+    let (name, spec, mut reg, mut meta, n_total, batch_rows, ckpt_every, fresh_ds) = if resume {
+        // `--resume NAME` names the checkpoint directly; bare
+        // `--resume` takes --save NAME or the registry-wide unique one
+        let want = cfg.resume_name.as_deref().or(cfg.save.as_deref());
+        let (name, ck) = registry.find_checkpoint(want).unwrap_or_else(|e| fail(e));
+        let reg = ck.restore_regressor().unwrap_or_else(|e| fail(e));
+        println!(
+            "resuming `{name}` from checkpoint: {}/{} rows accumulated",
+            reg.n_seen, ck.n_total
+        );
+        // the data stream and featurizer are pinned by the checkpoint
+        // (anything else would break bit-identity with the
+        // uninterrupted run) — warn instead of silently dropping
+        // operator overrides
+        for flag in ["family", "method", "n", "m", "depth", "batch", "seed", "side", "q"] {
+            if cfg.is_explicit(flag) {
+                eprintln!(
+                    "warning: --{flag} is ignored on --resume \
+                     (pinned by the checkpoint)"
+                );
             }
-            // keep the interrupted run's checkpoint cadence unless the
-            // operator explicitly overrides it
-            let ckpt_every = args.usize("checkpoint-every", ck.ckpt_every as usize);
-            (
-                name,
-                ck.spec,
-                reg,
-                ck.meta.clone(),
-                ck.n_total as usize,
-                ck.batch_rows as usize,
-                ckpt_every,
-                None,
-            )
-        } else {
-            let name = args.get("save").unwrap().to_string();
-            // resolve + validate the whole request FIRST: a refused
-            // command (typo'd family/method/depth) must not destroy a
-            // resumable run's checkpoint
-            let TrainSetup { fam, n, seed, lambda, ds, spec } = train_setup(args);
-            // a fresh --save supersedes any interrupted run under the
-            // same name; drop its checkpoint so a later --resume cannot
-            // resurrect abandoned training state
-            registry.clear_checkpoint(&name).unwrap_or_else(|e| fail(e));
-            let outputs = if ds.classes >= 2 { ds.classes } else { 1 };
-            let meta = ModelMeta {
-                name: name.clone(),
-                version: 0,
-                family: spec.family().to_string(),
-                dataset: fam.name().to_string(),
-                data_seed: seed,
-                lambda,
-                n_seen: 0,
-                input_dim: spec.input_dim(),
-                feature_dim: spec.feature_dim(),
-                outputs,
-            };
-            let reg = RidgeRegressor::new(spec.feature_dim(), outputs);
-            let batch_rows = args.usize("batch", 128);
-            (name, spec, reg, meta, n, batch_rows, args.usize("checkpoint-every", 0), Some(ds))
+        }
+        // keep the interrupted run's checkpoint cadence unless the
+        // operator explicitly overrides it
+        let ckpt_every = cfg.checkpoint_every.unwrap_or(ck.ckpt_every as usize);
+        (
+            name,
+            ck.spec,
+            reg,
+            ck.meta.clone(),
+            ck.n_total as usize,
+            ck.batch_rows as usize,
+            ckpt_every,
+            None,
+        )
+    } else {
+        let name = cfg.save.clone().expect("train() routes here only with --save or --resume");
+        // resolve + validate the whole request FIRST: a refused
+        // command (typo'd family/method/depth) must not destroy a
+        // resumable run's checkpoint
+        let TrainSetup { fam, n, seed, lambda, ds, spec } = train_setup(cfg);
+        // a fresh --save supersedes any interrupted run under the
+        // same name; drop its checkpoint so a later --resume cannot
+        // resurrect abandoned training state
+        registry.clear_checkpoint(&name).unwrap_or_else(|e| fail(e));
+        let outputs = if ds.classes >= 2 { ds.classes } else { 1 };
+        let meta = ModelMeta {
+            name: name.clone(),
+            version: 0,
+            family: spec.family().to_string(),
+            dataset: fam.name().to_string(),
+            data_seed: seed,
+            lambda,
+            n_seen: 0,
+            input_dim: spec.input_dim(),
+            feature_dim: spec.feature_dim(),
+            outputs,
         };
+        let reg = RidgeRegressor::new(spec.feature_dim(), outputs);
+        (name, spec, reg, meta, n, cfg.batch, cfg.checkpoint_every.unwrap_or(0), Some(ds))
+    };
     // λ only enters at the final solve, so overriding it on resume is
     // safe (the accumulated stream is untouched)
-    meta.lambda = args.f64("lambda", meta.lambda);
+    meta.lambda = cfg.lambda.unwrap_or(meta.lambda);
 
     // deterministic data stream: (family, n_total, data_seed) — plus the
     // image side pinned by the spec — fully defines every batch, so
@@ -544,7 +425,11 @@ fn train_persistent(args: &Args) {
     // generated it for spec resolution)
     let ds = fresh_ds.unwrap_or_else(|| {
         let fam = parse_family(&meta.dataset).unwrap_or_else(|e| fail(e));
-        let side = if fam.is_image() { image_side(&spec, &fam, spec.input_dim()) } else { 0 };
+        let side = if fam.is_image() {
+            image_side(&spec, &fam, spec.input_dim()).unwrap_or_else(|e| fail(e))
+        } else {
+            0
+        };
         gen_vec_dataset(&fam, n_total, side, meta.data_seed)
     });
     let y = if ds.classes >= 2 { ds.one_hot_centered() } else { ds.y_mat() };
@@ -613,16 +498,14 @@ fn train_persistent(args: &Args) {
     );
 }
 
-fn predict(args: &Args) {
-    let registry = registry_from(args);
-    let name = args.get("model").unwrap_or_else(|| fail("predict needs --model NAME"));
-    let version = version_arg(args);
-    let saved = registry.load(name, version).unwrap_or_else(|e| fail(e));
-    let model = saved.build().unwrap_or_else(|e| fail(e));
+fn predict(cfg: &PredictCfg) {
+    let registry = cli::open_registry(cfg.models_dir.as_deref());
+    let (saved, model) =
+        cli::load_model(&registry, &cfg.model, cfg.version).unwrap_or_else(|e| fail(e));
     println!("{}", model.meta.banner());
-    let n = args.usize("n", 256);
-    let seed = args.u64("seed", model.meta.data_seed + 1000);
-    let ds = eval_dataset(&saved.spec, &model.meta, n, seed);
+    let n = cfg.n;
+    let seed = cfg.seed.unwrap_or(model.meta.data_seed + 1000);
+    let ds = eval_dataset(&saved.spec, &model.meta, n, seed).unwrap_or_else(|e| fail(e));
     if ds.d() != model.meta.input_dim {
         fail(format!(
             "dataset {} has d={}, model expects {}",
@@ -631,10 +514,41 @@ fn predict(args: &Args) {
             model.meta.input_dim
         ));
     }
+    let meta = model.meta.clone();
+    // the same typed session drives local and networked evaluation, so
+    // the crc line below is a bit-identity check across the two paths
+    let mut session: Box<dyn InferenceSession> = match &cfg.connect {
+        Some(addr) => {
+            let s = TcpSession::connect(addr).unwrap_or_else(|e| fail(e));
+            if s.input_dim() != meta.input_dim || s.output_dim() != meta.outputs {
+                fail(format!(
+                    "server at {addr} serves {}→{}, model `{}` expects {}→{}",
+                    s.input_dim(),
+                    s.output_dim(),
+                    meta.name,
+                    meta.input_dim,
+                    meta.outputs
+                ));
+            }
+            println!("via {addr}: {}", s.banner());
+            Box::new(s)
+        }
+        None => Box::new(DirectSession::new(Arc::new(model))),
+    };
     let t = std::time::Instant::now();
-    let pred = model.predict(&ds.x);
+    // chunk under the wire-protocol row cap so any --n works
+    let mut pred = Mat::zeros(ds.n(), meta.outputs);
+    let mut done = 0;
+    while done < ds.n() {
+        let hi = (done + MAX_ROWS_PER_REQUEST).min(ds.n());
+        let out = session.infer(&ds.x.slice_rows(done, hi)).unwrap_or_else(|e| fail(e));
+        for i in 0..out.rows {
+            pred.row_mut(done + i).copy_from_slice(out.row(i));
+        }
+        done = hi;
+    }
     let secs = t.elapsed().as_secs_f64();
-    if model.meta.outputs > 1 && ds.classes >= 2 {
+    if meta.outputs > 1 && ds.classes >= 2 {
         let acc = accuracy(&pred, &ds.y);
         println!(
             "eval: n={n} seed={seed} accuracy={:.1}% ({:.1} rows/ms)",
@@ -645,8 +559,7 @@ fn predict(args: &Args) {
         let e = mse(&pred, &ds.y_mat());
         println!("eval: n={n} seed={seed} mse={e:.6} ({:.1} rows/ms)", n as f64 / (secs * 1e3));
     }
-    let head: Vec<String> =
-        pred.data.iter().take(4).map(|v| format!("{v:.6}")).collect();
+    let head: Vec<String> = pred.data.iter().take(4).map(|v| format!("{v:.6}")).collect();
     println!("pred[0..4] = [{}]", head.join(", "));
     print_pred_crc(&pred.data);
 }
@@ -681,65 +594,98 @@ impl BatchBackend for PjrtBackend {
     }
 }
 
-fn serve(args: &Args) {
-    if let Some(name) = args.get("model") {
-        serve_model(args, name);
+fn serve(cfg: &ServeCfg) {
+    // client operations against a running daemon
+    if cfg.stats || cfg.shutdown {
+        let addr = cfg.connect.as_deref().expect("validated at parse");
+        let mut s = TcpSession::connect(addr).unwrap_or_else(|e| fail(e));
+        if cfg.shutdown {
+            s.shutdown_server().unwrap_or_else(|e| fail(e));
+            println!("server at {addr} shutting down");
+        } else {
+            let stats = s.stats().unwrap_or_else(|e| fail(e));
+            let json = stats.to_json().to_string();
+            println!("{json}");
+        }
         return;
     }
-    if !pjrt_ready("serve") {
+    if let Some(bind) = &cfg.listen {
+        serve_daemon(cfg, bind);
         return;
     }
-    let dir = artifacts_dir();
-    let n_req = args.usize("requests", 1000);
-    let (server, client) = FeatureServer::start(
-        move || PjrtBackend { engine: Engine::load(&dir, "ntk_rf").expect("engine") },
-        args.usize("workers", 1),
-        BatchPolicy::default(),
-        32,
-    );
-    let mut rng = Rng::new(3);
-    let d = 64;
-    let t = std::time::Instant::now();
-    let rows: Vec<Vec<f32>> = (0..n_req).map(|_| rng.gauss_vec(d)).collect();
-    let rxs: Vec<_> = rows.into_iter().map(|r| client.submit(r)).collect();
-    for rx in rxs {
-        let _ = rx.recv().expect("response");
+    if let Some(name) = &cfg.model {
+        serve_model(cfg, name);
+        return;
     }
-    let secs = t.elapsed().as_secs_f64();
-    println!("{n_req} requests in {secs:.2}s = {:.0} req/s", n_req as f64 / secs);
-    println!("{}", server.metrics.summary());
-    drop(client);
-    server.join();
+    serve_pjrt_demo(cfg);
 }
 
-/// Serve a durable model from the registry: the reconstructed featurizer
-/// + ridge weights run behind the coordinator as a `NativeBackend`, so
-/// responses are predictions and every worker shares one verified model.
-/// Works uniformly for flat and image (cntk) families — clients submit
-/// flattened rows either way.
-fn serve_model(args: &Args, name: &str) {
-    let registry = registry_from(args);
-    let version = version_arg(args);
-    let saved = registry.load(name, version).unwrap_or_else(|e| fail(e));
-    let model = Arc::new(saved.build().unwrap_or_else(|e| fail(e)));
+/// The networked daemon (DESIGN.md §10): sharded workers behind bounded
+/// admission queues, hot-swapping the replica when the registry's LATEST
+/// advances. Runs until a SHUTDOWN frame arrives.
+fn serve_daemon(cfg: &ServeCfg, bind: &str) {
+    let name = cfg.model.as_deref().expect("validated at parse");
+    let registry = cli::open_registry(cfg.models_dir.as_deref());
+    let (_, model) = cli::load_model(&registry, name, cfg.version).unwrap_or_else(|e| fail(e));
+    println!("serving {}", model.meta.banner());
+    // a pinned --version must keep serving exactly that version, so the
+    // watcher only runs when the daemon tracks LATEST
+    let watch = if cfg.version.is_none() {
+        Some((cli::open_registry(cfg.models_dir.as_deref()), name.to_string()))
+    } else {
+        None
+    };
+    let opts = ServeOptions {
+        workers: cfg.workers.unwrap_or(2),
+        queue_depth: cfg.queue_depth,
+        poll_ms: cfg.poll_ms,
+        max_conns: cfg.max_conns,
+    };
+    let server = TcpServer::start(model, watch, bind, opts).unwrap_or_else(|e| fail(e));
+    let addr = server.local_addr();
+    println!(
+        "listening on {addr} ({} shard(s), queue depth {}, poll {}ms)",
+        opts.workers, opts.queue_depth, opts.poll_ms
+    );
+    if let Some(pf) = &cfg.port_file {
+        std::fs::write(pf, format!("{addr}\n"))
+            .unwrap_or_else(|e| fail(format!("write {pf}: {e}")));
+    }
+    server.run_until_shutdown();
+    println!("shutdown complete");
+}
+
+/// Serve a durable model from the registry in-process: the reconstructed
+/// featurizer + ridge weights run behind the coordinator as a
+/// `NativeBackend`, so responses are predictions and every worker shares
+/// one verified model. Works uniformly for flat and image (cntk)
+/// families — clients submit flattened rows either way.
+fn serve_model(cfg: &ServeCfg, name: &str) {
+    let registry = cli::open_registry(cfg.models_dir.as_deref());
+    let (saved, model) = cli::load_model(&registry, name, cfg.version).unwrap_or_else(|e| fail(e));
+    let model = Arc::new(model);
     println!("serving {}", model.meta.banner());
     let d = model.meta.input_dim;
-    let batch = args.usize("batch", 64);
+    let batch = cfg.batch;
     let m2 = model.clone();
     let (server, client) = FeatureServer::start(
         move || NativeBackend { featurizer: m2.clone(), batch, input_dim: d },
-        args.usize("workers", 2),
+        cfg.workers.unwrap_or(2),
         // match the flush threshold to the backend batch (the server
         // clamps to min(backend.batch, max_batch) anyway; aligning them
         // avoids padding every flush when --batch > the default 64)
         BatchPolicy { max_batch: batch, ..BatchPolicy::default() },
-        32,
+        cfg.queue_depth,
     );
-    let n_req = args.usize("requests", 1000);
-    let ds = eval_dataset(&saved.spec, &model.meta, n_req.min(4096), model.meta.data_seed + 2000);
+    let n_req = cfg.requests;
+    let ds = eval_dataset(&saved.spec, &model.meta, n_req.min(4096), model.meta.data_seed + 2000)
+        .unwrap_or_else(|e| fail(e));
     let t = std::time::Instant::now();
-    let rxs: Vec<_> =
-        (0..n_req).map(|i| client.submit(ds.x.row(i % ds.n()).to_vec())).collect();
+    let mut rxs = Vec::with_capacity(n_req);
+    for i in 0..n_req {
+        let row = ds.x.row(i % ds.n()).to_vec();
+        rxs.push(client.submit_row(row).unwrap_or_else(|e| fail(e)));
+    }
     let mut pred = Vec::with_capacity(n_req);
     for rx in rxs {
         pred.extend(rx.recv().expect("response"));
@@ -747,20 +693,50 @@ fn serve_model(args: &Args, name: &str) {
     let secs = t.elapsed().as_secs_f64();
     println!("{n_req} predictions in {secs:.2}s = {:.0} req/s", n_req as f64 / secs);
     print_pred_crc(&pred);
-    println!("{}", server.metrics.summary());
+    println!("{}", server.metrics.snapshot().summary());
     drop(client);
     server.join();
 }
 
-fn models_cmd(args: &Args) {
-    let registry = registry_from(args);
-    if let Some(name) = args.get("gc") {
-        let keep = args.usize("keep", 2);
-        let removed = registry.gc(name, keep).unwrap_or_else(|e| fail(e));
+fn serve_pjrt_demo(cfg: &ServeCfg) {
+    if !pjrt_ready("serve") {
+        return;
+    }
+    let dir = artifacts_dir();
+    let n_req = cfg.requests;
+    let (server, client) = FeatureServer::start(
+        move || PjrtBackend { engine: Engine::load(&dir, "ntk_rf").expect("engine") },
+        cfg.workers.unwrap_or(1),
+        BatchPolicy::default(),
+        cfg.queue_depth,
+    );
+    let mut rng = Rng::new(3);
+    let d = 64;
+    let t = std::time::Instant::now();
+    let rows: Vec<Vec<f32>> = (0..n_req).map(|_| rng.gauss_vec(d)).collect();
+    let mut rxs = Vec::with_capacity(n_req);
+    for r in rows {
+        rxs.push(client.submit_row(r).unwrap_or_else(|e| fail(e)));
+    }
+    for rx in rxs {
+        let _ = rx.recv().expect("response");
+    }
+    let secs = t.elapsed().as_secs_f64();
+    println!("{n_req} requests in {secs:.2}s = {:.0} req/s", n_req as f64 / secs);
+    println!("{}", server.metrics.snapshot().summary());
+    drop(client);
+    server.join();
+}
+
+fn models_cmd(cfg: &ModelsCfg) {
+    let registry = cli::open_registry(cfg.models_dir.as_deref());
+    if let Some(name) = &cfg.gc {
+        let removed = registry.gc(name, cfg.keep).unwrap_or_else(|e| fail(e));
         println!(
-            "gc {name}: removed {} version(s) {:?}, kept newest {keep}",
+            "gc {name}: removed {} version(s) {:?}, kept newest {}",
             removed.len(),
-            removed
+            removed,
+            cfg.keep
         );
         return;
     }

@@ -1,0 +1,256 @@
+//! The typed inference API: one request/response contract spoken by every
+//! serving surface — the in-process coordinator path, the networked TCP
+//! tier, and the zero-queue direct path used as a correctness reference.
+//!
+//! A session is single-owner, batch-first state: `submit` enqueues a
+//! batch of rows and returns its request id; `recv` yields responses **in
+//! submission order**, one per submit. Admission refusals surface as
+//! [`InferenceError::Rejected`] with a retry hint — callers resubmit,
+//! queues never grow without bound.
+
+use crate::model::NativeModel;
+use crate::tensor::Mat;
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// A batch of input rows (n×input_dim) under a session-assigned id.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferenceRequest {
+    pub id: u64,
+    pub rows: Mat,
+}
+
+/// The matching predictions (n×output_dim), echoing the request id.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferenceResponse {
+    pub id: u64,
+    pub rows: Mat,
+}
+
+/// Typed failures of the serving surface. `Rejected` is the backpressure
+/// signal (retry, don't queue); the rest are terminal for the request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum InferenceError {
+    /// Admission control refused the request (all shard queues full);
+    /// resubmit after the hint.
+    Rejected { retry_after_ms: u64 },
+    /// The request itself is malformed (wrong width, empty or oversized
+    /// batch, recv with nothing outstanding).
+    BadRequest(String),
+    /// The peer violated the wire protocol (bad magic/version/kind,
+    /// oversized length prefix, truncated frame, out-of-order id).
+    Protocol(String),
+    /// Transport or server-internal failure.
+    Io(String),
+    /// The session or server has shut down.
+    Closed,
+}
+
+impl std::fmt::Display for InferenceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InferenceError::Rejected { retry_after_ms } => {
+                write!(f, "rejected: queues full (retry after {retry_after_ms}ms)")
+            }
+            InferenceError::BadRequest(m) => write!(f, "bad request: {m}"),
+            InferenceError::Protocol(m) => write!(f, "protocol error: {m}"),
+            InferenceError::Io(m) => write!(f, "io error: {m}"),
+            InferenceError::Closed => write!(f, "closed"),
+        }
+    }
+}
+
+impl std::error::Error for InferenceError {}
+
+/// The one serving contract. Implementations: [`DirectSession`] (sync,
+/// in-process), [`crate::coordinator::ClientSession`] (batching
+/// coordinator), [`crate::serve::TcpSession`] (networked tier).
+///
+/// Contract: `recv` returns responses in `submit` order, one per
+/// successful submit; a submit that returns `Err` produced no pending
+/// response. `infer` is the submit+recv convenience for closed loops.
+pub trait InferenceSession {
+    fn input_dim(&self) -> usize;
+    fn output_dim(&self) -> usize;
+
+    /// Enqueue a batch of rows; returns its request id.
+    fn submit(&mut self, rows: &Mat) -> Result<u64, InferenceError>;
+
+    /// Next response, in submission order.
+    fn recv(&mut self) -> Result<InferenceResponse, InferenceError>;
+
+    /// Submit one batch and wait for its predictions.
+    fn infer(&mut self, rows: &Mat) -> Result<Mat, InferenceError> {
+        let id = self.submit(rows)?;
+        let resp = self.recv()?;
+        if resp.id != id {
+            return Err(InferenceError::Protocol(format!(
+                "response id {} does not match request id {id}",
+                resp.id
+            )));
+        }
+        Ok(resp.rows)
+    }
+}
+
+/// Shared request validation: non-empty, row-capped, right width.
+pub(crate) fn check_batch(rows: &Mat, input_dim: usize) -> Result<(), InferenceError> {
+    if rows.rows == 0 {
+        return Err(InferenceError::BadRequest("empty batch".into()));
+    }
+    if rows.rows > super::wire::MAX_ROWS_PER_REQUEST {
+        return Err(InferenceError::BadRequest(format!(
+            "batch of {} rows exceeds the {}-row request cap",
+            rows.rows,
+            super::wire::MAX_ROWS_PER_REQUEST
+        )));
+    }
+    if rows.cols != input_dim {
+        return Err(InferenceError::BadRequest(format!(
+            "rows have {} columns, model expects {input_dim}",
+            rows.cols
+        )));
+    }
+    Ok(())
+}
+
+pub(crate) fn no_outstanding() -> InferenceError {
+    InferenceError::BadRequest("recv with no outstanding request".into())
+}
+
+/// Zero-queue reference implementation: predictions are computed
+/// synchronously at `submit` on a shared model replica. The networked
+/// tier is tested for bit-identity against this session.
+pub struct DirectSession {
+    model: Arc<NativeModel>,
+    next_id: u64,
+    ready: VecDeque<InferenceResponse>,
+}
+
+impl DirectSession {
+    pub fn new(model: Arc<NativeModel>) -> DirectSession {
+        DirectSession { model, next_id: 0, ready: VecDeque::new() }
+    }
+}
+
+impl InferenceSession for DirectSession {
+    fn input_dim(&self) -> usize {
+        self.model.meta.input_dim
+    }
+
+    fn output_dim(&self) -> usize {
+        self.model.meta.outputs
+    }
+
+    fn submit(&mut self, rows: &Mat) -> Result<u64, InferenceError> {
+        check_batch(rows, self.model.meta.input_dim)?;
+        let id = self.next_id;
+        self.next_id += 1;
+        self.ready.push_back(InferenceResponse { id, rows: self.model.predict(rows) });
+        Ok(id)
+    }
+
+    fn recv(&mut self) -> Result<InferenceResponse, InferenceError> {
+        self.ready.pop_front().ok_or_else(no_outstanding)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_model {
+    use crate::features::Featurizer;
+    use crate::model::{ModelMeta, NativeModel};
+    use crate::tensor::Mat;
+
+    /// Deterministic toy featurizer: f(x) = [sum(x), -sum(x)].
+    pub struct SumFeat;
+
+    impl Featurizer for SumFeat {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn transform(&self, x: &Mat) -> Mat {
+            let mut out = Mat::zeros(x.rows, 2);
+            for i in 0..x.rows {
+                let s: f32 = x.row(i).iter().sum();
+                *out.at_mut(i, 0) = s;
+                *out.at_mut(i, 1) = -s;
+            }
+            out
+        }
+        fn name(&self) -> &'static str {
+            "sumfeat"
+        }
+    }
+
+    /// A hand-built model over [`SumFeat`]: prediction = sum − 2·sum = −sum.
+    pub fn toy_model(input_dim: usize) -> NativeModel {
+        NativeModel {
+            meta: ModelMeta {
+                name: "toy".into(),
+                version: 1,
+                family: "sumfeat".into(),
+                dataset: "synthetic".into(),
+                data_seed: 0,
+                lambda: 0.0,
+                n_seen: 0,
+                input_dim,
+                feature_dim: 2,
+                outputs: 1,
+            },
+            featurizer: Box::new(SumFeat),
+            weights: Mat::from_vec(2, 1, vec![1.0, 2.0]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_model::toy_model;
+    use super::*;
+
+    #[test]
+    fn direct_session_predicts_in_order() {
+        let mut s = DirectSession::new(Arc::new(toy_model(3)));
+        assert_eq!((s.input_dim(), s.output_dim()), (3, 1));
+        let a = Mat::from_vec(2, 3, vec![1.0, 1.0, 1.0, 2.0, 0.0, 0.0]);
+        let b = Mat::from_vec(1, 3, vec![5.0, 0.0, 0.0]);
+        let ia = s.submit(&a).unwrap();
+        let ib = s.submit(&b).unwrap();
+        assert_ne!(ia, ib);
+        let ra = s.recv().unwrap();
+        let rb = s.recv().unwrap();
+        assert_eq!((ra.id, rb.id), (ia, ib));
+        // prediction = sum·1 + (−sum)·2 = −sum
+        assert_eq!(ra.rows.data, vec![-3.0, -2.0]);
+        assert_eq!(rb.rows.data, vec![-5.0]);
+    }
+
+    #[test]
+    fn direct_session_infer_matches_predict() {
+        let model = Arc::new(toy_model(4));
+        let mut s = DirectSession::new(model.clone());
+        let x = Mat::from_vec(3, 4, (0..12).map(|v| v as f32).collect());
+        let got = s.infer(&x).unwrap();
+        assert_eq!(got, model.predict(&x));
+    }
+
+    #[test]
+    fn bad_batches_are_typed_refusals() {
+        let mut s = DirectSession::new(Arc::new(toy_model(3)));
+        let wrong_width = Mat::zeros(1, 2);
+        assert!(matches!(s.submit(&wrong_width), Err(InferenceError::BadRequest(_))));
+        let empty = Mat::zeros(0, 3);
+        assert!(matches!(s.submit(&empty), Err(InferenceError::BadRequest(_))));
+        let huge = Mat::zeros(crate::serve::wire::MAX_ROWS_PER_REQUEST + 1, 3);
+        assert!(matches!(s.submit(&huge), Err(InferenceError::BadRequest(_))));
+        // none of the refusals queued a response
+        assert!(matches!(s.recv(), Err(InferenceError::BadRequest(_))));
+    }
+
+    #[test]
+    fn error_display_is_informative() {
+        let e = InferenceError::Rejected { retry_after_ms: 12 };
+        assert!(e.to_string().contains("12ms"));
+        assert!(InferenceError::Closed.to_string().contains("closed"));
+    }
+}

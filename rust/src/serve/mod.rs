@@ -1,0 +1,42 @@
+//! The networked sharded serving tier (DESIGN.md §10).
+//!
+//! Everything a trained model needs to serve predictions over a socket,
+//! with zero dependencies beyond `std::net`:
+//!
+//! - [`api`] — the typed inference contract: [`InferenceRequest`] /
+//!   [`InferenceResponse`] / [`InferenceError`] and the
+//!   [`InferenceSession`] trait spoken identically by the in-process
+//!   direct path ([`DirectSession`]), the batching coordinator
+//!   (`coordinator::ClientSession`), and the TCP client
+//!   ([`TcpSession`]).
+//! - [`wire`] — the length-prefixed binary frame codec (versioned
+//!   header, typed error frames, hostile-input hardened: length
+//!   prefixes validated before allocation, shapes matched exactly,
+//!   truncation and version skew are typed refusals, never panics).
+//! - [`replica`] — the atomically swappable model slot and the registry
+//!   watcher that hot-swaps it when `models/<name>/LATEST` advances,
+//!   without dropping in-flight requests.
+//! - [`router`] — N shard workers behind **bounded** admission queues;
+//!   saturation refuses with a retry hint instead of queueing without
+//!   bound, and per-shard [`crate::coordinator::MetricsSnapshot`]s feed
+//!   `serve --stats` and the saturation bench.
+//! - [`tcp`] — the accept loop, per-connection reader/writer pair
+//!   (responses strictly in request order), connection cap, and the
+//!   [`TcpSession`] client.
+
+pub mod api;
+pub mod replica;
+pub mod router;
+pub mod tcp;
+pub mod wire;
+
+pub use api::{
+    DirectSession, InferenceError, InferenceRequest, InferenceResponse, InferenceSession,
+};
+pub use replica::{RegistryWatcher, ReplicaSlot};
+pub use router::{JobOutput, JobResult, RouterConfig, ShardRouter};
+pub use tcp::{ServeOptions, ServeStats, TcpServer, TcpSession};
+pub use wire::{
+    read_frame, write_frame, ErrorCode, Frame, WireError, MAX_PAYLOAD, MAX_ROWS_PER_REQUEST,
+    WIRE_VERSION,
+};

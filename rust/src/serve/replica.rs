@@ -1,0 +1,152 @@
+//! Replica management: an atomically swappable model slot plus a
+//! registry watcher that hot-swaps the replica when `models/<name>/`
+//! grows a newer version (the `LATEST` pointer advancing).
+//!
+//! Swap protocol: workers clone the replica `Arc` per job, so a swap
+//! retires the old model only when its last in-flight request drops it —
+//! mid-traffic swaps never fail or corrupt in-flight work. A replacement
+//! with different wire dims is refused: connected sessions hold the dims
+//! advertised at HELLO.
+
+use crate::model::{NativeModel, Registry};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// One atomically swappable model replica shared by all shards.
+pub struct ReplicaSlot {
+    model: RwLock<Arc<NativeModel>>,
+    swaps: AtomicU64,
+}
+
+impl ReplicaSlot {
+    pub fn new(model: NativeModel) -> ReplicaSlot {
+        ReplicaSlot { model: RwLock::new(Arc::new(model)), swaps: AtomicU64::new(0) }
+    }
+
+    /// The current replica. Callers clone the `Arc` per unit of work, so
+    /// an in-flight request keeps its replica alive across a swap.
+    pub fn current(&self) -> Arc<NativeModel> {
+        self.model.read().expect("replica lock").clone()
+    }
+
+    /// Registry version of the serving replica.
+    pub fn version(&self) -> u32 {
+        self.current().meta.version
+    }
+
+    /// How many hot swaps this slot has performed.
+    pub fn swaps(&self) -> u64 {
+        self.swaps.load(Ordering::Relaxed)
+    }
+
+    /// Atomically replace the replica; returns (old, new) versions.
+    /// Refuses a replacement whose wire dims differ — sessions advertise
+    /// dims at HELLO and a swap must not invalidate them mid-connection.
+    pub fn swap(&self, next: NativeModel) -> Result<(u32, u32), String> {
+        let cur = self.current();
+        if next.meta.input_dim != cur.meta.input_dim || next.meta.outputs != cur.meta.outputs {
+            return Err(format!(
+                "replacement dims {}→{} differ from serving dims {}→{}",
+                next.meta.input_dim, next.meta.outputs, cur.meta.input_dim, cur.meta.outputs
+            ));
+        }
+        let from = cur.meta.version;
+        let to = next.meta.version;
+        *self.model.write().expect("replica lock") = Arc::new(next);
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+        Ok((from, to))
+    }
+}
+
+/// Background thread that polls the registry and hot-swaps the slot when
+/// a newer version of the model appears. Load failures (a save mid-write,
+/// a corrupt artifact, a failed golden-row check) are logged and retried
+/// on the next tick — the serving replica is never torn down for a
+/// replacement that cannot load.
+pub struct RegistryWatcher {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl RegistryWatcher {
+    pub fn start(
+        registry: Registry,
+        name: String,
+        slot: Arc<ReplicaSlot>,
+        poll: Duration,
+    ) -> RegistryWatcher {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                let newest = registry.versions(&name).last().copied();
+                if newest.is_some_and(|v| v > slot.version()) {
+                    let built = registry
+                        .load(&name, None)
+                        .map_err(|e| e.to_string())
+                        .and_then(|saved| saved.build().map_err(|e| e.to_string()));
+                    match built {
+                        Ok(m) => match slot.swap(m) {
+                            Ok((from, to)) => eprintln!("hot-swap {name}: v{from} → v{to}"),
+                            Err(e) => eprintln!("hot-swap {name} refused: {e}"),
+                        },
+                        Err(e) => eprintln!("hot-swap {name}: load failed ({e}); will retry"),
+                    }
+                }
+                // sleep in short slices so stop() returns promptly
+                let mut left = poll;
+                while !stop2.load(Ordering::Relaxed) && left > Duration::ZERO {
+                    let step = left.min(Duration::from_millis(25));
+                    std::thread::sleep(step);
+                    left = left.saturating_sub(step);
+                }
+            }
+        });
+        RegistryWatcher { stop, handle: Some(handle) }
+    }
+
+    /// Signal the watcher to exit and join it (also happens on drop).
+    pub fn stop(self) {}
+}
+
+impl Drop for RegistryWatcher {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::api::test_model::toy_model;
+    use crate::tensor::Mat;
+
+    #[test]
+    fn swap_replaces_and_in_flight_replicas_survive() {
+        let slot = ReplicaSlot::new(toy_model(3));
+        assert_eq!((slot.version(), slot.swaps()), (1, 0));
+        let held = slot.current(); // an in-flight request's replica
+        let mut next = toy_model(3);
+        next.meta.version = 2;
+        assert_eq!(slot.swap(next).unwrap(), (1, 2));
+        assert_eq!((slot.version(), slot.swaps()), (2, 1));
+        // the in-flight replica is still the old version, still usable
+        assert_eq!(held.meta.version, 1);
+        let x = Mat::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        assert_eq!(held.predict(&x).data, vec![-6.0]);
+    }
+
+    #[test]
+    fn swap_refuses_dim_change() {
+        let slot = ReplicaSlot::new(toy_model(3));
+        let err = slot.swap(toy_model(4)).unwrap_err();
+        assert!(err.contains("differ"), "{err}");
+        assert_eq!(slot.swaps(), 0);
+        assert_eq!(slot.current().meta.input_dim, 3);
+    }
+}

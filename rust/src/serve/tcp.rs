@@ -1,0 +1,621 @@
+//! The networked serving tier: a `TcpListener` accept loop feeding the
+//! shard router, plus the matching [`TcpSession`] client.
+//!
+//! Per connection the server runs two threads: a **reader** that decodes
+//! frames and submits them to the router under a connection-local
+//! sequence number, and a **writer** that reorders shard completions on
+//! that sequence so response frames leave strictly in request order.
+//! Stats replies ride the same completion channel, so they interleave
+//! correctly with predictions.
+//!
+//! Lifecycle guarantees:
+//! - admission control refuses (ERROR/Rejected with a retry hint) rather
+//!   than queueing without bound — see [`super::router`];
+//! - a connection cap refuses the (N+1)-th client with the same typed
+//!   rejection, and the slot is released when the connection fully
+//!   drains (a `ConnGuard` dropped at reader exit, after the writer has
+//!   flushed every in-flight response);
+//! - shutdown (a SHUTDOWN frame or [`TcpServer::initiate_shutdown`])
+//!   stops admitting, drains every admitted job, then joins the shards.
+
+use super::api::{
+    check_batch, no_outstanding, InferenceError, InferenceRequest, InferenceResponse,
+    InferenceSession,
+};
+use super::replica::{RegistryWatcher, ReplicaSlot};
+use super::router::{JobOutput, JobResult, RouterConfig, ShardRouter};
+use super::wire::{self, ErrorCode, Frame, WireError};
+use crate::coordinator::metrics::MetricsSnapshot;
+use crate::model::{NativeModel, Registry};
+use crate::tensor::Mat;
+use crate::util::json::Json;
+use std::collections::{BTreeMap, VecDeque};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Server sizing knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Shard worker threads.
+    pub workers: usize,
+    /// Bounded admission-queue depth per shard.
+    pub queue_depth: usize,
+    /// Registry poll cadence for hot swaps, in ms (0 disables watching).
+    pub poll_ms: u64,
+    /// Maximum concurrent client connections.
+    pub max_conns: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { workers: 2, queue_depth: 32, poll_ms: 500, max_conns: 256 }
+    }
+}
+
+/// Server-side stats: replica identity plus per-shard and fleet-total
+/// metric snapshots. This is the payload of a STATS frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeStats {
+    /// The serving replica's banner line.
+    pub model: String,
+    pub version: u32,
+    pub swaps: u64,
+    pub shards: Vec<MetricsSnapshot>,
+    pub total: MetricsSnapshot,
+}
+
+impl ServeStats {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("model".into(), Json::Str(self.model.clone()));
+        m.insert("version".into(), Json::Num(self.version as f64));
+        m.insert("swaps".into(), Json::Num(self.swaps as f64));
+        m.insert("total".into(), self.total.to_json());
+        m.insert(
+            "shards".into(),
+            Json::Arr(self.shards.iter().map(MetricsSnapshot::to_json).collect()),
+        );
+        Json::Obj(m)
+    }
+
+    pub fn from_json(v: &Json) -> Result<ServeStats, String> {
+        let model = v
+            .get("model")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "serve stats: missing `model`".to_string())?
+            .to_string();
+        let version = v
+            .get("version")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| "serve stats: missing `version`".to_string())? as u32;
+        let swaps = v
+            .get("swaps")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| "serve stats: missing `swaps`".to_string())? as u64;
+        let total =
+            MetricsSnapshot::from_json(v.get("total").ok_or("serve stats: missing `total`")?)?;
+        let shards = match v.get("shards") {
+            Some(Json::Arr(items)) => {
+                items.iter().map(MetricsSnapshot::from_json).collect::<Result<Vec<_>, _>>()?
+            }
+            _ => return Err("serve stats: missing `shards`".to_string()),
+        };
+        Ok(ServeStats { model, version, swaps, total, shards })
+    }
+
+    /// One-line human rendering.
+    pub fn summary(&self) -> String {
+        format!(
+            "v{} swaps={} shards={} {}",
+            self.version,
+            self.swaps,
+            self.shards.len(),
+            self.total.summary()
+        )
+    }
+}
+
+/// Decrements the live-connection count when a connection fully drains.
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// The networked serving tier over one model (optionally registry-watched
+/// for hot swaps).
+pub struct TcpServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    active_conns: Arc<AtomicUsize>,
+    accept_handle: Option<JoinHandle<()>>,
+    router: Arc<ShardRouter>,
+    watcher: Option<RegistryWatcher>,
+}
+
+impl TcpServer {
+    /// Bind `bind` (e.g. `"127.0.0.1:0"` for an ephemeral port) and start
+    /// serving `model`. With `watch = Some((registry, name))` a watcher
+    /// thread hot-swaps the replica when a newer version of `name`
+    /// appears in the registry.
+    pub fn start(
+        model: NativeModel,
+        watch: Option<(Registry, String)>,
+        bind: &str,
+        opts: ServeOptions,
+    ) -> Result<TcpServer, String> {
+        let slot = Arc::new(ReplicaSlot::new(model));
+        let router = Arc::new(ShardRouter::start(
+            slot.clone(),
+            RouterConfig { shards: opts.workers.max(1), queue_depth: opts.queue_depth.max(1) },
+        ));
+        let listener = TcpListener::bind(bind).map_err(|e| format!("bind {bind}: {e}"))?;
+        listener.set_nonblocking(true).map_err(|e| format!("set nonblocking: {e}"))?;
+        let addr = listener.local_addr().map_err(|e| format!("local addr: {e}"))?;
+
+        let watcher = if opts.poll_ms > 0 {
+            watch.map(|(registry, name)| {
+                RegistryWatcher::start(registry, name, slot, Duration::from_millis(opts.poll_ms))
+            })
+        } else {
+            None
+        };
+
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let active_conns = Arc::new(AtomicUsize::new(0));
+        let accept_router = router.clone();
+        let accept_shutdown = shutdown.clone();
+        let accept_active = active_conns.clone();
+        let max_conns = opts.max_conns.max(1);
+        let accept_handle = std::thread::spawn(move || loop {
+            if accept_shutdown.load(Ordering::Relaxed) {
+                return;
+            }
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    if accept_active.load(Ordering::Relaxed) >= max_conns {
+                        refuse_conn(stream);
+                        continue;
+                    }
+                    accept_active.fetch_add(1, Ordering::Relaxed);
+                    let guard = ConnGuard(accept_active.clone());
+                    let router = accept_router.clone();
+                    let shutdown = accept_shutdown.clone();
+                    std::thread::spawn(move || handle_conn(stream, router, shutdown, guard));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) => {
+                    eprintln!("serve: accept error: {e}");
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            }
+        });
+
+        Ok(TcpServer {
+            addr,
+            shutdown,
+            active_conns,
+            accept_handle: Some(accept_handle),
+            router,
+            watcher,
+        })
+    }
+
+    /// The bound address (resolves the port when bound to `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Current stats, as served to STATS_REQ.
+    pub fn stats(&self) -> ServeStats {
+        server_stats(&self.router)
+    }
+
+    /// Flip the shutdown flag; connections and the accept loop observe it
+    /// within one poll tick. Use [`TcpServer::join`] to wait for drain.
+    pub fn initiate_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+    }
+
+    /// Block until something (a SHUTDOWN frame, another thread) initiates
+    /// shutdown, then drain and join everything.
+    pub fn run_until_shutdown(self) {
+        while !self.shutdown.load(Ordering::Relaxed) {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        self.join();
+    }
+
+    /// Shut down, wait for connections to drain (bounded), then join the
+    /// shard workers. Admitted jobs complete before workers exit.
+    pub fn join(mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(w) = self.watcher.take() {
+            w.stop();
+        }
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while self.active_conns.load(Ordering::Relaxed) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // reclaim the router from the (now exited) connection threads so
+        // the shard queues close and workers drain + join
+        let mut router = self.router;
+        loop {
+            match Arc::try_unwrap(router) {
+                Ok(r) => {
+                    r.join();
+                    return;
+                }
+                Err(shared) => {
+                    if Instant::now() >= deadline {
+                        eprintln!("serve: a connection is still draining; detaching workers");
+                        return;
+                    }
+                    router = shared;
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        }
+    }
+}
+
+fn server_stats(router: &ShardRouter) -> ServeStats {
+    let shards = router.snapshots();
+    ServeStats {
+        model: router.slot().current().meta.banner(),
+        version: router.slot().version(),
+        swaps: router.slot().swaps(),
+        total: MetricsSnapshot::merge(&shards),
+        shards,
+    }
+}
+
+/// Refuse a connection over the cap: best-effort typed rejection, then
+/// hang up. Clients see `InferenceError::Rejected` from `connect`.
+fn refuse_conn(mut stream: TcpStream) {
+    let frame = wire::error_frame(0, &InferenceError::Rejected { retry_after_ms: 50 });
+    let _ = wire::write_frame(&mut stream, &frame);
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    router: Arc<ShardRouter>,
+    shutdown: Arc<AtomicBool>,
+    guard: ConnGuard,
+) {
+    // held until reader AND writer are done: the conn slot frees only
+    // after every in-flight response for this connection has been written
+    let _guard = guard;
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let Ok(write_half) = stream.try_clone() else { return };
+    let mut reader = std::io::BufReader::new(stream);
+    let mut writer = std::io::BufWriter::new(write_half);
+
+    // HELLO advertises dims + banner; dims are pinned across hot swaps
+    let meta = router.slot().current().meta.clone();
+    let hello = Frame::Hello {
+        input_dim: meta.input_dim as u32,
+        output_dim: meta.outputs as u32,
+        banner: meta.banner(),
+    };
+    if wire::write_frame(&mut writer, &hello).is_err() {
+        return;
+    }
+
+    let (tx, rx) = channel::<JobResult>();
+    let writer_handle = std::thread::spawn(move || conn_writer(writer, rx));
+
+    let mut seq: u64 = 0;
+    loop {
+        if shutdown.load(Ordering::Relaxed) {
+            let _ = tx.send(JobResult { tag: seq, id: 0, result: Err(InferenceError::Closed) });
+            break;
+        }
+        match wire::read_frame(&mut reader) {
+            Ok(Frame::Infer(req)) => {
+                if let Err(e) = router.submit(req.rows, seq, req.id, &tx) {
+                    let _ = tx.send(JobResult { tag: seq, id: req.id, result: Err(e) });
+                }
+                seq += 1;
+            }
+            Ok(Frame::StatsReq) => {
+                let json = server_stats(&router).to_json().to_string();
+                let _ =
+                    tx.send(JobResult { tag: seq, id: 0, result: Ok(JobOutput::Stats(json)) });
+                seq += 1;
+            }
+            Ok(Frame::Shutdown) => {
+                shutdown.store(true, Ordering::Relaxed);
+                let _ = tx.send(JobResult { tag: seq, id: 0, result: Err(InferenceError::Closed) });
+                break;
+            }
+            Ok(_) => {
+                // HELLO/RESPONSE/STATS/ERROR are client-bound only
+                let _ = tx.send(JobResult {
+                    tag: seq,
+                    id: 0,
+                    result: Err(InferenceError::Protocol(
+                        "unexpected server-bound frame kind".into(),
+                    )),
+                });
+                break;
+            }
+            // idle tick: loop to re-check the shutdown flag
+            Err(WireError::TimedOut) => continue,
+            Err(WireError::Closed) => break,
+            Err(WireError::Io(e)) => {
+                eprintln!("serve: connection io error: {e}");
+                break;
+            }
+            Err(e) => {
+                // framing is broken: report the typed error, then hang up
+                // (resynchronizing a byte stream mid-garbage is hopeless)
+                let _ = tx.send(JobResult { tag: seq, id: 0, result: Err(e.to_inference()) });
+                break;
+            }
+        }
+    }
+    // dropping our sender lets the writer exit once in-flight jobs (which
+    // hold clones) complete — no admitted response is ever dropped
+    drop(tx);
+    let _ = writer_handle.join();
+}
+
+/// Writer half of a connection: reorders completions on the connection
+/// sequence `tag` so frames leave strictly in request order.
+fn conn_writer(mut w: std::io::BufWriter<TcpStream>, rx: Receiver<JobResult>) {
+    let mut next: u64 = 0;
+    let mut hold: BTreeMap<u64, JobResult> = BTreeMap::new();
+    while let Ok(msg) = rx.recv() {
+        hold.insert(msg.tag, msg);
+        while let Some(m) = hold.remove(&next) {
+            let frame = match m.result {
+                Ok(JobOutput::Rows(rows)) => Frame::Response(InferenceResponse { id: m.id, rows }),
+                Ok(JobOutput::Stats(json)) => Frame::Stats { json },
+                Err(e) => wire::error_frame(m.id, &e),
+            };
+            if wire::write_frame(&mut w, &frame).is_err() {
+                return; // peer gone; remaining completions drain via drop
+            }
+            next += 1;
+        }
+    }
+}
+
+/// Client session over the wire protocol — the networked implementation
+/// of [`InferenceSession`]. Single-owner; supports pipelining (multiple
+/// submits before the first recv), responses arrive in submit order.
+pub struct TcpSession {
+    reader: std::io::BufReader<TcpStream>,
+    writer: TcpStream,
+    input_dim: usize,
+    output_dim: usize,
+    banner: String,
+    next_id: u64,
+    outstanding: VecDeque<u64>,
+}
+
+impl TcpSession {
+    /// Connect to a serving tier and perform the HELLO handshake.
+    pub fn connect(addr: &str) -> Result<TcpSession, InferenceError> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| InferenceError::Io(format!("connect {addr}: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        let write_half = stream
+            .try_clone()
+            .map_err(|e| InferenceError::Io(format!("clone stream: {e}")))?;
+        let mut reader = std::io::BufReader::new(stream);
+        match wire::read_frame(&mut reader) {
+            Ok(Frame::Hello { input_dim, output_dim, banner }) => Ok(TcpSession {
+                reader,
+                writer: write_half,
+                input_dim: input_dim as usize,
+                output_dim: output_dim as usize,
+                banner,
+                next_id: 0,
+                outstanding: VecDeque::new(),
+            }),
+            Ok(Frame::Error { code, retry_after_ms, msg, .. }) => {
+                Err(wire::error_from_frame(code, retry_after_ms, &msg))
+            }
+            Ok(_) => Err(InferenceError::Protocol("expected HELLO".into())),
+            Err(e) => Err(e.to_inference()),
+        }
+    }
+
+    /// The server's model banner from HELLO.
+    pub fn banner(&self) -> &str {
+        &self.banner
+    }
+
+    /// Fetch server-side stats. Call with no outstanding requests (stats
+    /// share the ordered response stream).
+    pub fn stats(&mut self) -> Result<ServeStats, InferenceError> {
+        if !self.outstanding.is_empty() {
+            return Err(InferenceError::BadRequest(
+                "stats with outstanding requests; recv them first".into(),
+            ));
+        }
+        wire::write_frame(&mut self.writer, &Frame::StatsReq).map_err(|e| e.to_inference())?;
+        match wire::read_frame(&mut self.reader) {
+            Ok(Frame::Stats { json }) => {
+                let v = crate::util::json::parse(&json)
+                    .map_err(|e| InferenceError::Protocol(format!("stats json: {e}")))?;
+                ServeStats::from_json(&v).map_err(InferenceError::Protocol)
+            }
+            Ok(Frame::Error { code, retry_after_ms, msg, .. }) => {
+                Err(wire::error_from_frame(code, retry_after_ms, &msg))
+            }
+            Ok(_) => Err(InferenceError::Protocol("expected STATS".into())),
+            Err(e) => Err(e.to_inference()),
+        }
+    }
+
+    /// Ask the server to shut down. It drains in-flight work, then exits;
+    /// acknowledged by a ShuttingDown error frame or a clean close.
+    pub fn shutdown_server(&mut self) -> Result<(), InferenceError> {
+        wire::write_frame(&mut self.writer, &Frame::Shutdown).map_err(|e| e.to_inference())?;
+        match wire::read_frame(&mut self.reader) {
+            Ok(Frame::Error { code: ErrorCode::ShuttingDown, .. }) | Err(WireError::Closed) => {
+                Ok(())
+            }
+            Ok(_) => Ok(()),
+            Err(e) => Err(e.to_inference()),
+        }
+    }
+}
+
+impl InferenceSession for TcpSession {
+    fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+
+    fn output_dim(&self) -> usize {
+        self.output_dim
+    }
+
+    fn submit(&mut self, rows: &Mat) -> Result<u64, InferenceError> {
+        check_batch(rows, self.input_dim)?;
+        let id = self.next_id;
+        let frame = Frame::Infer(InferenceRequest { id, rows: rows.clone() });
+        match wire::write_frame(&mut self.writer, &frame) {
+            Ok(()) => {}
+            Err(WireError::Oversized { .. }) => {
+                return Err(InferenceError::BadRequest(
+                    "request exceeds the wire payload cap; split the batch".into(),
+                ))
+            }
+            Err(e) => return Err(e.to_inference()),
+        }
+        self.next_id += 1;
+        self.outstanding.push_back(id);
+        Ok(id)
+    }
+
+    fn recv(&mut self) -> Result<InferenceResponse, InferenceError> {
+        let expect = self.outstanding.pop_front().ok_or_else(no_outstanding)?;
+        loop {
+            match wire::read_frame(&mut self.reader) {
+                Ok(Frame::Response(resp)) => {
+                    if resp.id != expect {
+                        return Err(InferenceError::Protocol(format!(
+                            "response id {} out of order (expected {expect})",
+                            resp.id
+                        )));
+                    }
+                    if resp.rows.cols != self.output_dim {
+                        return Err(InferenceError::Protocol(format!(
+                            "response rows have {} columns, HELLO advertised {}",
+                            resp.rows.cols, self.output_dim
+                        )));
+                    }
+                    return Ok(resp);
+                }
+                // errors arrive in request order too, so this one is ours
+                Ok(Frame::Error { code, retry_after_ms, msg, .. }) => {
+                    return Err(wire::error_from_frame(code, retry_after_ms, &msg))
+                }
+                Ok(_) => {
+                    return Err(InferenceError::Protocol(
+                        "unexpected client-bound frame kind".into(),
+                    ))
+                }
+                Err(WireError::TimedOut) => continue,
+                Err(e) => return Err(e.to_inference()),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::api::test_model::toy_model;
+
+    fn start_toy(opts: ServeOptions) -> TcpServer {
+        TcpServer::start(toy_model(3), None, "127.0.0.1:0", opts).unwrap()
+    }
+
+    #[test]
+    fn tcp_session_round_trips_and_reports_stats() {
+        let server = start_toy(ServeOptions::default());
+        let addr = server.local_addr().to_string();
+        let mut s = TcpSession::connect(&addr).unwrap();
+        assert_eq!((s.input_dim(), s.output_dim()), (3, 1));
+        assert!(s.banner().contains("toy"), "banner: {}", s.banner());
+
+        let x = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        assert_eq!(s.infer(&x).unwrap().data, vec![-6.0, 0.0]);
+
+        // pipelined submits come back in order
+        let a = s.submit(&Mat::from_vec(1, 3, vec![1.0, 0.0, 0.0])).unwrap();
+        let b = s.submit(&Mat::from_vec(1, 3, vec![2.0, 0.0, 0.0])).unwrap();
+        let ra = s.recv().unwrap();
+        let rb = s.recv().unwrap();
+        assert_eq!((ra.id, rb.id), (a, b));
+        assert_eq!((ra.rows.data[0], rb.rows.data[0]), (-1.0, -2.0));
+
+        let stats = s.stats().unwrap();
+        assert_eq!(stats.total.requests, 3);
+        assert_eq!(stats.total.rows, 4);
+        assert_eq!((stats.version, stats.swaps), (1, 0));
+        assert_eq!(stats.shards.len(), 2);
+
+        s.shutdown_server().unwrap();
+        server.join();
+    }
+
+    #[test]
+    fn bad_batch_is_typed_and_session_survives() {
+        let server = start_toy(ServeOptions::default());
+        let addr = server.local_addr().to_string();
+        let mut s = TcpSession::connect(&addr).unwrap();
+        // client-side validation refuses before touching the wire
+        assert!(matches!(s.submit(&Mat::zeros(1, 2)), Err(InferenceError::BadRequest(_))));
+        // the session still works afterwards
+        assert_eq!(s.infer(&Mat::from_vec(1, 3, vec![3.0, 0.0, 0.0])).unwrap().data, vec![-3.0]);
+        server.join();
+    }
+
+    #[test]
+    fn connection_cap_refuses_then_recovers() {
+        let server = start_toy(ServeOptions { max_conns: 1, ..Default::default() });
+        let addr = server.local_addr().to_string();
+        let s1 = TcpSession::connect(&addr).unwrap();
+        match TcpSession::connect(&addr) {
+            Err(InferenceError::Rejected { retry_after_ms }) => assert!(retry_after_ms >= 1),
+            other => panic!("over-cap connect must be rejected, got {other:?}"),
+        }
+        drop(s1);
+        // the slot frees once the first connection drains; retry until then
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            match TcpSession::connect(&addr) {
+                Ok(mut s) => {
+                    assert_eq!(
+                        s.infer(&Mat::from_vec(1, 3, vec![1.0, 1.0, 1.0])).unwrap().data,
+                        vec![-3.0]
+                    );
+                    break;
+                }
+                Err(InferenceError::Rejected { .. }) if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) => panic!("connect after drain failed: {e}"),
+            }
+        }
+        server.join();
+    }
+}

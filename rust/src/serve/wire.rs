@@ -1,0 +1,595 @@
+//! Length-prefixed binary wire protocol for the networked serving tier.
+//!
+//! Zero-dependency framing over any `Read`/`Write` pair (in practice a
+//! `TcpStream`). Every frame is a fixed 16-byte header followed by a
+//! length-prefixed payload, little-endian throughout:
+//!
+//! ```text
+//! [0..2)   magic  "NW"
+//! [2]      protocol version (currently 1)
+//! [3]      frame kind (see below)
+//! [4..12)  request id, u64
+//! [12..16) payload length, u32 — capped at MAX_PAYLOAD
+//! [16..)   payload
+//! ```
+//!
+//! | kind | frame     | payload                                          |
+//! |------|-----------|--------------------------------------------------|
+//! | 1    | HELLO     | u32 input_dim, u32 output_dim, u16 n, banner utf8 |
+//! | 2    | INFER     | u32 n_rows, u32 cols, f32×(n_rows·cols)          |
+//! | 3    | RESPONSE  | u32 n_rows, u32 cols, f32×(n_rows·cols)          |
+//! | 4    | ERROR     | u16 code, u32 retry_after_ms, u16 n, msg utf8    |
+//! | 5    | STATS_REQ | (empty)                                          |
+//! | 6    | STATS     | u32 n, json utf8                                 |
+//! | 7    | SHUTDOWN  | (empty)                                          |
+//!
+//! Hostile-input discipline: the length prefix is validated *before* any
+//! allocation, matrix payloads must match their declared shape exactly,
+//! trailing bytes are refused, and a clean EOF at a frame boundary
+//! ([`WireError::Closed`]) is distinguished from a mid-frame disconnect
+//! ([`WireError::Truncated`]). Nothing in this module panics on peer
+//! bytes.
+
+use super::api::{InferenceError, InferenceRequest, InferenceResponse};
+use crate::tensor::Mat;
+use std::io::{Read, Write};
+
+pub const WIRE_MAGIC: [u8; 2] = *b"NW";
+pub const WIRE_VERSION: u8 = 1;
+pub const HEADER_LEN: usize = 16;
+/// Hard cap on a frame payload (16 MiB): the read path never allocates
+/// more than this on behalf of a peer.
+pub const MAX_PAYLOAD: usize = 1 << 24;
+/// Hard cap on rows per INFER/RESPONSE frame.
+pub const MAX_ROWS_PER_REQUEST: usize = 4096;
+
+const KIND_HELLO: u8 = 1;
+const KIND_INFER: u8 = 2;
+const KIND_RESPONSE: u8 = 3;
+const KIND_ERROR: u8 = 4;
+const KIND_STATS_REQ: u8 = 5;
+const KIND_STATS: u8 = 6;
+const KIND_SHUTDOWN: u8 = 7;
+
+/// Typed error codes carried by ERROR frames.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    Rejected = 1,
+    BadRequest = 2,
+    Protocol = 3,
+    Internal = 4,
+    ShuttingDown = 5,
+}
+
+impl ErrorCode {
+    pub fn to_u16(self) -> u16 {
+        self as u16
+    }
+
+    pub fn from_u16(v: u16) -> Option<ErrorCode> {
+        match v {
+            1 => Some(ErrorCode::Rejected),
+            2 => Some(ErrorCode::BadRequest),
+            3 => Some(ErrorCode::Protocol),
+            4 => Some(ErrorCode::Internal),
+            5 => Some(ErrorCode::ShuttingDown),
+            _ => None,
+        }
+    }
+}
+
+/// One decoded protocol frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    Hello { input_dim: u32, output_dim: u32, banner: String },
+    Infer(InferenceRequest),
+    Response(InferenceResponse),
+    Error { id: u64, code: ErrorCode, retry_after_ms: u32, msg: String },
+    StatsReq,
+    Stats { json: String },
+    Shutdown,
+}
+
+/// Wire-level failures. `Closed` is a clean peer hangup at a frame
+/// boundary; `TimedOut` is an idle read-timeout tick (no bytes yet) for
+/// pollers; everything else is a protocol or transport error.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireError {
+    Closed,
+    TimedOut,
+    BadMagic([u8; 2]),
+    BadVersion(u8),
+    BadKind(u8),
+    Oversized { len: u32, cap: u32 },
+    Truncated(&'static str),
+    Malformed(String),
+    Io(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Closed => write!(f, "connection closed"),
+            WireError::TimedOut => write!(f, "read timed out"),
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:?} (expected \"NW\")"),
+            WireError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (this side speaks {WIRE_VERSION})")
+            }
+            WireError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            WireError::Oversized { len, cap } => {
+                write!(f, "length prefix {len} exceeds the {cap}-byte payload cap")
+            }
+            WireError::Truncated(what) => write!(f, "peer disconnected mid-{what}"),
+            WireError::Malformed(m) => write!(f, "malformed payload: {m}"),
+            WireError::Io(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl WireError {
+    /// Project onto the typed inference API (for session implementations).
+    pub fn to_inference(&self) -> InferenceError {
+        match self {
+            WireError::Closed => InferenceError::Closed,
+            WireError::TimedOut | WireError::Io(_) => InferenceError::Io(self.to_string()),
+            _ => InferenceError::Protocol(self.to_string()),
+        }
+    }
+}
+
+/// Render an [`InferenceError`] as an ERROR frame for `id`.
+pub fn error_frame(id: u64, err: &InferenceError) -> Frame {
+    let (code, retry_after_ms, msg) = match err {
+        InferenceError::Rejected { retry_after_ms } => {
+            (ErrorCode::Rejected, *retry_after_ms as u32, String::new())
+        }
+        InferenceError::BadRequest(m) => (ErrorCode::BadRequest, 0, m.clone()),
+        InferenceError::Protocol(m) => (ErrorCode::Protocol, 0, m.clone()),
+        InferenceError::Io(m) => (ErrorCode::Internal, 0, m.clone()),
+        InferenceError::Closed => (ErrorCode::ShuttingDown, 0, String::new()),
+    };
+    Frame::Error { id, code, retry_after_ms, msg }
+}
+
+/// Decode an ERROR frame back into the typed API (client side).
+pub fn error_from_frame(code: ErrorCode, retry_after_ms: u32, msg: &str) -> InferenceError {
+    match code {
+        ErrorCode::Rejected => InferenceError::Rejected { retry_after_ms: retry_after_ms as u64 },
+        ErrorCode::BadRequest => InferenceError::BadRequest(msg.to_string()),
+        ErrorCode::Protocol => InferenceError::Protocol(msg.to_string()),
+        ErrorCode::Internal => InferenceError::Io(msg.to_string()),
+        ErrorCode::ShuttingDown => InferenceError::Closed,
+    }
+}
+
+// ------------------------------------------------------------ write --
+
+/// Clip a message to `max` bytes at a char boundary (error strings must
+/// fit a u16 length prefix; nobody needs a 64 KiB error message).
+fn clip(s: &str, max: usize) -> &str {
+    if s.len() <= max {
+        return s;
+    }
+    let mut end = max;
+    while !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    &s[..end]
+}
+
+fn put_mat(out: &mut Vec<u8>, m: &Mat) -> Result<(), WireError> {
+    if m.rows > MAX_ROWS_PER_REQUEST {
+        return Err(WireError::Malformed(format!(
+            "refusing to send {} rows (cap {MAX_ROWS_PER_REQUEST})",
+            m.rows
+        )));
+    }
+    out.extend_from_slice(&(m.rows as u32).to_le_bytes());
+    out.extend_from_slice(&(m.cols as u32).to_le_bytes());
+    for v in &m.data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    Ok(())
+}
+
+fn encode(frame: &Frame) -> Result<(u8, u64, Vec<u8>), WireError> {
+    let mut p = Vec::new();
+    let (kind, id) = match frame {
+        Frame::Hello { input_dim, output_dim, banner } => {
+            p.extend_from_slice(&input_dim.to_le_bytes());
+            p.extend_from_slice(&output_dim.to_le_bytes());
+            let b = clip(banner, u16::MAX as usize);
+            p.extend_from_slice(&(b.len() as u16).to_le_bytes());
+            p.extend_from_slice(b.as_bytes());
+            (KIND_HELLO, 0)
+        }
+        Frame::Infer(req) => {
+            put_mat(&mut p, &req.rows)?;
+            (KIND_INFER, req.id)
+        }
+        Frame::Response(resp) => {
+            put_mat(&mut p, &resp.rows)?;
+            (KIND_RESPONSE, resp.id)
+        }
+        Frame::Error { id, code, retry_after_ms, msg } => {
+            p.extend_from_slice(&code.to_u16().to_le_bytes());
+            p.extend_from_slice(&retry_after_ms.to_le_bytes());
+            let m = clip(msg, 512);
+            p.extend_from_slice(&(m.len() as u16).to_le_bytes());
+            p.extend_from_slice(m.as_bytes());
+            (KIND_ERROR, *id)
+        }
+        Frame::StatsReq => (KIND_STATS_REQ, 0),
+        Frame::Stats { json } => {
+            let j = clip(json, MAX_PAYLOAD - 4);
+            p.extend_from_slice(&(j.len() as u32).to_le_bytes());
+            p.extend_from_slice(j.as_bytes());
+            (KIND_STATS, 0)
+        }
+        Frame::Shutdown => (KIND_SHUTDOWN, 0),
+    };
+    if p.len() > MAX_PAYLOAD {
+        return Err(WireError::Oversized { len: p.len() as u32, cap: MAX_PAYLOAD as u32 });
+    }
+    Ok((kind, id, p))
+}
+
+/// Serialize and write one frame (header + payload), then flush.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<(), WireError> {
+    let (kind, id, payload) = encode(frame)?;
+    let mut hdr = [0u8; HEADER_LEN];
+    hdr[0..2].copy_from_slice(&WIRE_MAGIC);
+    hdr[2] = WIRE_VERSION;
+    hdr[3] = kind;
+    hdr[4..12].copy_from_slice(&id.to_le_bytes());
+    hdr[12..16].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    let io = |e: std::io::Error| WireError::Io(e.to_string());
+    w.write_all(&hdr).map_err(io)?;
+    w.write_all(&payload).map_err(io)?;
+    w.flush().map_err(io)?;
+    Ok(())
+}
+
+// ------------------------------------------------------------- read --
+
+enum Fill {
+    Full,
+    Eof(usize),
+    Idle,
+}
+
+/// Fill `buf`, retrying interrupts. A read timeout with zero bytes read
+/// reports `Idle` when `idle_ok` (so pollers can tick a shutdown flag);
+/// a timeout *mid-frame* keeps waiting — the peer is mid-write and
+/// abandoning the stream there would desynchronize framing.
+fn read_fill<R: Read>(r: &mut R, buf: &mut [u8], idle_ok: bool) -> Result<Fill, WireError> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => return Ok(Fill::Eof(got)),
+            Ok(n) => got += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if idle_ok && got == 0 {
+                    return Ok(Fill::Idle);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(WireError::Io(e.to_string())),
+        }
+    }
+    Ok(Fill::Full)
+}
+
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.b.len() - self.i < n {
+            return Err(WireError::Malformed("payload shorter than its fields".into()));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn utf8(&mut self, n: usize) -> Result<String, WireError> {
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|_| WireError::Malformed("string field is not UTF-8".into()))
+    }
+
+    fn done(&self) -> Result<(), WireError> {
+        if self.i != self.b.len() {
+            return Err(WireError::Malformed(format!(
+                "{} trailing bytes after the last field",
+                self.b.len() - self.i
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn get_mat(c: &mut Cur) -> Result<Mat, WireError> {
+    let rows = c.u32()? as usize;
+    let cols = c.u32()? as usize;
+    if rows > MAX_ROWS_PER_REQUEST {
+        return Err(WireError::Malformed(format!(
+            "{rows} rows exceeds the {MAX_ROWS_PER_REQUEST}-row cap"
+        )));
+    }
+    let want = rows
+        .checked_mul(cols)
+        .and_then(|n| n.checked_mul(4))
+        .ok_or_else(|| WireError::Malformed("row×col overflow".into()))?;
+    let bytes = c.take(want)?;
+    let mut data = Vec::with_capacity(rows * cols);
+    for q in bytes.chunks_exact(4) {
+        data.push(f32::from_le_bytes(q.try_into().unwrap()));
+    }
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+fn decode(kind: u8, id: u64, payload: &[u8]) -> Result<Frame, WireError> {
+    let mut c = Cur { b: payload, i: 0 };
+    let frame = match kind {
+        KIND_HELLO => {
+            let input_dim = c.u32()?;
+            let output_dim = c.u32()?;
+            let n = c.u16()? as usize;
+            let banner = c.utf8(n)?;
+            Frame::Hello { input_dim, output_dim, banner }
+        }
+        KIND_INFER => Frame::Infer(InferenceRequest { id, rows: get_mat(&mut c)? }),
+        KIND_RESPONSE => Frame::Response(InferenceResponse { id, rows: get_mat(&mut c)? }),
+        KIND_ERROR => {
+            let raw = c.u16()?;
+            let code = ErrorCode::from_u16(raw)
+                .ok_or_else(|| WireError::Malformed(format!("unknown error code {raw}")))?;
+            let retry_after_ms = c.u32()?;
+            let n = c.u16()? as usize;
+            let msg = c.utf8(n)?;
+            Frame::Error { id, code, retry_after_ms, msg }
+        }
+        KIND_STATS_REQ => Frame::StatsReq,
+        KIND_STATS => {
+            let n = c.u32()? as usize;
+            let json = c.utf8(n)?;
+            Frame::Stats { json }
+        }
+        KIND_SHUTDOWN => Frame::Shutdown,
+        other => return Err(WireError::BadKind(other)),
+    };
+    c.done()?;
+    Ok(frame)
+}
+
+/// Read and decode one frame. Returns [`WireError::Closed`] on a clean
+/// EOF at a frame boundary, [`WireError::TimedOut`] if the reader is
+/// nonblocking/timed and no bytes have arrived, and a typed error for
+/// every malformed input — never a panic, never an unbounded allocation.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
+    let mut hdr = [0u8; HEADER_LEN];
+    match read_fill(r, &mut hdr, true)? {
+        Fill::Full => {}
+        Fill::Eof(0) => return Err(WireError::Closed),
+        Fill::Eof(_) => return Err(WireError::Truncated("frame header")),
+        Fill::Idle => return Err(WireError::TimedOut),
+    }
+    if hdr[0..2] != WIRE_MAGIC {
+        return Err(WireError::BadMagic([hdr[0], hdr[1]]));
+    }
+    if hdr[2] != WIRE_VERSION {
+        return Err(WireError::BadVersion(hdr[2]));
+    }
+    let kind = hdr[3];
+    if !(KIND_HELLO..=KIND_SHUTDOWN).contains(&kind) {
+        return Err(WireError::BadKind(kind));
+    }
+    let id = u64::from_le_bytes(hdr[4..12].try_into().unwrap());
+    let len = u32::from_le_bytes(hdr[12..16].try_into().unwrap());
+    // validate the length prefix BEFORE allocating for it
+    if len as usize > MAX_PAYLOAD {
+        return Err(WireError::Oversized { len, cap: MAX_PAYLOAD as u32 });
+    }
+    let mut payload = vec![0u8; len as usize];
+    match read_fill(r, &mut payload, false)? {
+        Fill::Full => {}
+        Fill::Eof(_) => return Err(WireError::Truncated("frame payload")),
+        Fill::Idle => return Err(WireError::TimedOut),
+    }
+    decode(kind, id, &payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, f).unwrap();
+        let mut r: &[u8] = &buf;
+        let back = read_frame(&mut r).unwrap();
+        assert!(r.is_empty(), "reader consumed the exact frame");
+        back
+    }
+
+    fn raw_header(kind: u8, id: u64, len: u32) -> Vec<u8> {
+        let mut h = vec![0u8; HEADER_LEN];
+        h[0..2].copy_from_slice(&WIRE_MAGIC);
+        h[2] = WIRE_VERSION;
+        h[3] = kind;
+        h[4..12].copy_from_slice(&id.to_le_bytes());
+        h[12..16].copy_from_slice(&len.to_le_bytes());
+        h
+    }
+
+    #[test]
+    fn all_frame_kinds_roundtrip() {
+        let frames = vec![
+            Frame::Hello { input_dim: 9, output_dim: 1, banner: "model m1 v3 — ünicode".into() },
+            Frame::Infer(InferenceRequest {
+                id: 42,
+                rows: Mat::from_vec(2, 3, vec![1.0, -2.5, 0.0, f32::MIN, f32::MAX, 3.25]),
+            }),
+            Frame::Response(InferenceResponse { id: 42, rows: Mat::from_vec(1, 1, vec![0.5]) }),
+            Frame::Error {
+                id: 7,
+                code: ErrorCode::Rejected,
+                retry_after_ms: 15,
+                msg: String::new(),
+            },
+            Frame::Error {
+                id: 8,
+                code: ErrorCode::BadRequest,
+                retry_after_ms: 0,
+                msg: "rows have 2 columns, model expects 9".into(),
+            },
+            Frame::StatsReq,
+            Frame::Stats { json: r#"{"requests":5}"#.into() },
+            Frame::Shutdown,
+        ];
+        for f in &frames {
+            assert_eq!(&roundtrip(f), f);
+        }
+    }
+
+    #[test]
+    fn clean_eof_is_closed_not_error() {
+        let mut r: &[u8] = &[];
+        assert_eq!(read_frame(&mut r), Err(WireError::Closed));
+    }
+
+    #[test]
+    fn truncated_header_is_typed() {
+        let mut r: &[u8] = &raw_header(KIND_SHUTDOWN, 0, 0)[..7];
+        assert_eq!(read_frame(&mut r), Err(WireError::Truncated("frame header")));
+    }
+
+    #[test]
+    fn truncated_payload_is_typed() {
+        let mut bytes = raw_header(KIND_STATS, 0, 100);
+        bytes.extend_from_slice(&[0u8; 10]); // promises 100, delivers 10
+        let mut r: &[u8] = &bytes;
+        assert_eq!(read_frame(&mut r), Err(WireError::Truncated("frame payload")));
+    }
+
+    #[test]
+    fn bad_magic_is_typed() {
+        let mut bytes = raw_header(KIND_SHUTDOWN, 0, 0);
+        bytes[0] = b'X';
+        let mut r: &[u8] = &bytes;
+        assert_eq!(read_frame(&mut r), Err(WireError::BadMagic([b'X', b'W'])));
+    }
+
+    #[test]
+    fn wrong_version_is_typed() {
+        let mut bytes = raw_header(KIND_SHUTDOWN, 0, 0);
+        bytes[2] = 99;
+        let mut r: &[u8] = &bytes;
+        assert_eq!(read_frame(&mut r), Err(WireError::BadVersion(99)));
+    }
+
+    #[test]
+    fn unknown_kind_is_typed() {
+        let mut r: &[u8] = &raw_header(200, 0, 0);
+        assert_eq!(read_frame(&mut r), Err(WireError::BadKind(200)));
+    }
+
+    #[test]
+    fn oversized_length_prefix_refused_before_allocation() {
+        let mut r: &[u8] = &raw_header(KIND_INFER, 1, u32::MAX);
+        assert_eq!(
+            read_frame(&mut r),
+            Err(WireError::Oversized { len: u32::MAX, cap: MAX_PAYLOAD as u32 })
+        );
+    }
+
+    #[test]
+    fn matrix_shape_must_match_payload() {
+        // INFER claiming 3×3 rows but carrying only 2 floats
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&3u32.to_le_bytes());
+        payload.extend_from_slice(&3u32.to_le_bytes());
+        payload.extend_from_slice(&[0u8; 8]);
+        let mut bytes = raw_header(KIND_INFER, 1, payload.len() as u32);
+        bytes.extend_from_slice(&payload);
+        let mut r: &[u8] = &bytes;
+        assert!(matches!(read_frame(&mut r), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn row_cap_enforced_at_decode() {
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&((MAX_ROWS_PER_REQUEST + 1) as u32).to_le_bytes());
+        payload.extend_from_slice(&0u32.to_le_bytes());
+        let mut bytes = raw_header(KIND_INFER, 1, payload.len() as u32);
+        bytes.extend_from_slice(&payload);
+        let mut r: &[u8] = &bytes;
+        assert!(matches!(read_frame(&mut r), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn trailing_bytes_refused() {
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1u32.to_le_bytes());
+        payload.extend_from_slice(&1u32.to_le_bytes());
+        payload.extend_from_slice(&1.0f32.to_le_bytes());
+        payload.extend_from_slice(&[0xAB; 3]); // junk after the matrix
+        let mut bytes = raw_header(KIND_INFER, 1, payload.len() as u32);
+        bytes.extend_from_slice(&payload);
+        let mut r: &[u8] = &bytes;
+        assert!(matches!(read_frame(&mut r), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn error_frames_map_to_typed_api_errors() {
+        let cases = [
+            InferenceError::Rejected { retry_after_ms: 9 },
+            InferenceError::BadRequest("w".into()),
+            InferenceError::Protocol("p".into()),
+            InferenceError::Io("io".into()),
+            InferenceError::Closed,
+        ];
+        for e in &cases {
+            let Frame::Error { code, retry_after_ms, msg, .. } = error_frame(3, e) else {
+                panic!("error_frame must produce Frame::Error");
+            };
+            assert_eq!(&error_from_frame(code, retry_after_ms, &msg), e);
+        }
+    }
+
+    #[test]
+    fn oversized_send_refused() {
+        // 4096 rows × 1100 cols × 4 B ≈ 18 MiB > MAX_PAYLOAD
+        let m = Mat::zeros(4096, 1100);
+        let mut buf = Vec::new();
+        let err = write_frame(&mut buf, &Frame::Infer(InferenceRequest { id: 1, rows: m }))
+            .unwrap_err();
+        assert!(matches!(err, WireError::Oversized { .. }));
+        assert!(buf.is_empty(), "nothing written for a refused frame");
+    }
+
+    #[test]
+    fn clip_respects_char_boundaries() {
+        let s = "aé"; // 'é' is 2 bytes starting at index 1
+        assert_eq!(clip(s, 2), "a");
+        assert_eq!(clip(s, 3), "aé");
+    }
+}

@@ -64,6 +64,17 @@ impl Args {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Every `--key value` option name present, in sorted order — lets a
+    /// verb-aware layer refuse flags it does not know.
+    pub fn option_names(&self) -> Vec<&str> {
+        self.opts.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Every bare `--flag` present, in argv order.
+    pub fn flag_names(&self) -> Vec<&str> {
+        self.flags.iter().map(|s| s.as_str()).collect()
+    }
+
     /// Comma-separated list of usizes, e.g. `--dims 256,512,1024`.
     pub fn usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
         match self.get(name) {
@@ -103,6 +114,13 @@ mod tests {
         let a = parse(&["--dims", "1,2,3"]);
         assert_eq!(a.usize_list("dims", &[9]), vec![1, 2, 3]);
         assert_eq!(a.usize_list("other", &[9]), vec![9]);
+    }
+
+    #[test]
+    fn names_enumerate_options_and_flags() {
+        let a = parse(&["--n", "10", "--eps=0.5", "run", "--verbose"]);
+        assert_eq!(a.option_names(), vec!["eps", "n"]);
+        assert_eq!(a.flag_names(), vec!["verbose"]);
     }
 
     #[test]

@@ -122,12 +122,12 @@ fn feature_server_over_pjrt_engine() {
     let d = client_dim(&client);
     // submit a wave of async requests
     let rows: Vec<Vec<f32>> = (0..100).map(|_| rng.gauss_vec(d)).collect();
-    let rxs: Vec<_> = rows.iter().map(|r| client.submit(r.clone())).collect();
+    let rxs: Vec<_> = rows.iter().map(|r| client.submit_row(r.clone()).unwrap()).collect();
     for rx in rxs {
         let f = rx.recv_timeout(std::time::Duration::from_secs(30)).expect("feature row");
         assert_eq!(f.len(), client.feature_dim());
     }
-    eprintln!("serving metrics: {}", server.metrics.summary());
+    eprintln!("serving metrics: {}", server.metrics.snapshot().summary());
     assert_eq!(server.requests_served(), 100);
     drop(client);
     server.join();

@@ -1,0 +1,238 @@
+//! Integration: the networked serving tier end to end (DESIGN.md §10).
+//! Real registry-built models behind real TCP sockets:
+//!  1. the networked session is bit-identical to the in-process
+//!     [`DirectSession`] reference;
+//!  2. hot swap under live traffic — every response is a complete,
+//!     uncorrupted prediction from exactly one replica version;
+//!  3. hostile wire bytes (bad magic, wrong version, oversized length,
+//!     mid-frame disconnect) get typed errors and never kill the server
+//!     or leak a connection slot;
+//!  4. the SHUTDOWN frame stops a running daemon cleanly.
+
+use ntk_sketch::model::{FeaturizerSpec, Registry, SavedModel};
+use ntk_sketch::rng::Rng;
+use ntk_sketch::serve::{
+    read_frame, DirectSession, ErrorCode, Frame, InferenceSession, ServeOptions, TcpServer,
+    TcpSession,
+};
+use ntk_sketch::tensor::Mat;
+use std::io::Write;
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const D: usize = 8;
+
+/// A real spec-built model; the featurizer is pinned by a fixed spec
+/// seed so two models differ only in their ridge weights.
+fn saved_model(name: &str, weight_seed: u64) -> SavedModel {
+    let spec = FeaturizerSpec::NtkRf {
+        d: D,
+        depth: 2,
+        m0: 16,
+        m1: 32,
+        ms: 16,
+        leverage_sweeps: 0,
+        seed: 100,
+    };
+    let f = spec.build();
+    let mut rng = Rng::new(weight_seed);
+    let weights = Mat::from_vec(f.dim(), 1, rng.gauss_vec(f.dim()));
+    SavedModel::new(name, "synthetic", weight_seed, 1e-3, 64, spec, weights, &f)
+}
+
+fn temp_root(tag: &str) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("ntk_serve_tier_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    root
+}
+
+fn batch(seed: u64, rows: usize) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_vec(rows, D, rng.gauss_vec(rows * D))
+}
+
+#[test]
+fn tcp_session_is_bit_identical_to_direct() {
+    let saved = saved_model("parity", 1);
+    let reference = Arc::new(saved.build().unwrap());
+    let server = TcpServer::start(
+        saved.build().unwrap(),
+        None,
+        "127.0.0.1:0",
+        ServeOptions { workers: 2, ..ServeOptions::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    let mut tcp = TcpSession::connect(&addr).unwrap();
+    let mut direct = DirectSession::new(reference);
+    assert_eq!(tcp.input_dim(), D);
+    assert_eq!(tcp.output_dim(), 1);
+    for seed in 0..4 {
+        let x = batch(10 + seed, 16);
+        let via_tcp = tcp.infer(&x).unwrap();
+        let via_direct = direct.infer(&x).unwrap();
+        // bitwise, not approximate: the tier ships f32s losslessly
+        assert_eq!(via_tcp.data, via_direct.data, "seed {seed}");
+    }
+    let stats = tcp.stats().unwrap();
+    assert_eq!(stats.version, 1);
+    assert!(stats.total.requests >= 4, "served requests show up in stats");
+    drop(tcp);
+    server.join();
+}
+
+#[test]
+fn hot_swap_under_traffic_never_corrupts_a_response() {
+    let root = temp_root("swap");
+    let registry = Registry::open(&root);
+    let v1 = saved_model("hs", 1);
+    let v2 = saved_model("hs", 2);
+    registry.save(&v1).unwrap();
+
+    let serving = registry.load("hs", None).unwrap().build().unwrap();
+    let server = TcpServer::start(
+        serving,
+        Some((Registry::open(&root), "hs".to_string())),
+        "127.0.0.1:0",
+        ServeOptions { workers: 2, poll_ms: 25, ..ServeOptions::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    let x = batch(77, 8);
+    let pred1 = v1.build().unwrap().predict(&x).data;
+    let pred2 = v2.build().unwrap().predict(&x).data;
+    assert_ne!(pred1, pred2, "the two versions must be distinguishable");
+
+    let mut sess = TcpSession::connect(&addr).unwrap();
+    for _ in 0..10 {
+        assert_eq!(sess.infer(&x).unwrap().data, pred1);
+    }
+
+    // advance LATEST while traffic keeps flowing; every response must be
+    // exactly one version's prediction — a torn or partial swap would
+    // produce something that matches neither
+    registry.save(&v2).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let out = sess.infer(&x).unwrap().data;
+        if out == pred2 {
+            break;
+        }
+        assert_eq!(out, pred1, "response matches neither replica version");
+        assert!(Instant::now() < deadline, "hot swap never observed");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let stats = sess.stats().unwrap();
+    assert!(stats.swaps >= 1, "swap counter advanced");
+    assert_eq!(stats.version, 2);
+    drop(sess);
+    server.join();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Handcraft a 16-byte frame header (magic, version, kind, id, len).
+fn header(magic: &[u8; 2], version: u8, kind: u8, id: u64, len: u32) -> [u8; 16] {
+    let mut h = [0u8; 16];
+    h[0..2].copy_from_slice(magic);
+    h[2] = version;
+    h[3] = kind;
+    h[4..12].copy_from_slice(&id.to_le_bytes());
+    h[12..16].copy_from_slice(&len.to_le_bytes());
+    h
+}
+
+/// Open a raw connection, consume the HELLO, send `bytes`, and return
+/// the server's next client-bound frame (None on close).
+fn poke(addr: &str, bytes: &[u8]) -> Option<Frame> {
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    let hello = read_frame(&mut reader).unwrap();
+    assert!(matches!(hello, Frame::Hello { .. }), "expected HELLO, got {hello:?}");
+    let mut writer = stream;
+    writer.write_all(bytes).unwrap();
+    read_frame(&mut reader).ok()
+}
+
+#[test]
+fn hostile_bytes_get_typed_errors_and_leak_nothing() {
+    let saved = saved_model("hostile", 1);
+    // max_conns = 2: if any hostile connection leaked its slot, the
+    // final healthy session below could not be admitted
+    let server = TcpServer::start(
+        saved.build().unwrap(),
+        None,
+        "127.0.0.1:0",
+        ServeOptions { workers: 1, max_conns: 2, ..ServeOptions::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    // bad magic → typed protocol error, then close
+    match poke(&addr, b"XXXXXXXXXXXXXXXX") {
+        Some(Frame::Error { code, .. }) => assert_eq!(code, ErrorCode::Protocol),
+        other => panic!("bad magic: expected a Protocol error frame, got {other:?}"),
+    }
+
+    // wrong protocol version → typed protocol error
+    match poke(&addr, &header(b"NW", 9, 2, 0, 0)) {
+        Some(Frame::Error { code, .. }) => assert_eq!(code, ErrorCode::Protocol),
+        other => panic!("wrong version: expected a Protocol error frame, got {other:?}"),
+    }
+
+    // oversized length prefix → refused before any allocation
+    match poke(&addr, &header(b"NW", 1, 2, 0, (1 << 24) + 1)) {
+        Some(Frame::Error { code, .. }) => assert_eq!(code, ErrorCode::Protocol),
+        other => panic!("oversized len: expected a Protocol error frame, got {other:?}"),
+    }
+
+    // shape-lying payload: header promises more rows than bytes sent,
+    // then the peer disconnects mid-frame — the server must just drop
+    // the connection, not wait forever or panic
+    {
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+        let hello = read_frame(&mut reader).unwrap();
+        assert!(matches!(hello, Frame::Hello { .. }));
+        let mut writer = stream;
+        writer.write_all(&header(b"NW", 1, 2, 0, 1000)).unwrap();
+        writer.write_all(&[0u8; 10]).unwrap();
+        // drop both halves: mid-frame disconnect
+    }
+
+    // after all of the above the server still serves, and both hostile
+    // slots have been released (max_conns = 2 admits us)
+    let ok = (0..50).find_map(|_| {
+        std::thread::sleep(Duration::from_millis(20));
+        TcpSession::connect(&addr).ok()
+    });
+    let mut sess = ok.expect("server admits a healthy session after hostile peers");
+    let out = sess.infer(&batch(5, 4)).unwrap();
+    assert_eq!((out.rows, out.cols), (4, 1));
+    drop(sess);
+    server.join();
+}
+
+#[test]
+fn shutdown_frame_stops_a_running_daemon() {
+    let saved = saved_model("shutdown", 1);
+    let server = TcpServer::start(
+        saved.build().unwrap(),
+        None,
+        "127.0.0.1:0",
+        ServeOptions { workers: 1, ..ServeOptions::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let daemon = std::thread::spawn(move || server.run_until_shutdown());
+
+    let mut sess = TcpSession::connect(&addr).unwrap();
+    let out = sess.infer(&batch(3, 2)).unwrap();
+    assert_eq!(out.rows, 2);
+    sess.shutdown_server().unwrap();
+    drop(sess);
+    daemon.join().expect("daemon exits after the shutdown frame");
+}
