@@ -1,6 +1,6 @@
 //! Coordinator benches: dynamic-batcher policy sweep (deadline vs batch
 //! size — the DESIGN.md ablation), streaming-pipeline throughput vs
-//! worker count, over a Rust-native backend (PJRT path measured in
+//! shard size, over a Rust-native backend (PJRT path measured in
 //! examples/serve_features.rs), and the model-store lifecycle
 //! (save/load/first-predict — emitted to `BENCH_model_store.json`).
 
@@ -76,14 +76,18 @@ fn main() {
         }
     }
 
+    // the pipeline's shard loop is serial since the raw-speed pass (all
+    // parallelism lives in the pool inside featurize/add_batch), so the
+    // interesting knob is shard size: bigger shards amortize per-batch
+    // overhead and feed the GEMM engine wider batches.
     let n = if smoke() { 512 } else { 4096 };
-    println!("\n== streaming pipeline: rows/s vs workers (n={n}, m=512) ==");
-    let t = Table::new(&["workers", "wall", "rows/s"]);
+    println!("\n== streaming pipeline: rows/s vs shard size (n={n}, m=512) ==");
+    let t = Table::new(&["shard_rows", "wall", "featurize", "rows/s"]);
     let mut rng = Rng::new(8);
     let x = Mat::from_vec(n, d, rng.gauss_vec(n * d));
     let y = Mat::from_vec(n, 1, rng.gauss_vec(n));
-    let worker_counts: Vec<usize> = if smoke() { vec![1, 2] } else { vec![1, 2, 4, 8] };
-    for &workers in &worker_counts {
+    let shard_sizes: Vec<usize> = if smoke() { vec![64, 256] } else { vec![32, 128, 256, 1024] };
+    for &shard_rows in &shard_sizes {
         let mut rng2 = Rng::new(9);
         let rf = NtkRf::new(d, cfg, &mut rng2);
         let t0 = std::time::Instant::now();
@@ -92,12 +96,13 @@ fn main() {
             &y,
             rf.cfg.m1 + rf.cfg.ms,
             || |xs: &Mat| ntk_sketch::features::Featurizer::transform(&rf, xs),
-            PipelineConfig { shard_rows: 256, workers, queue_depth: 4 },
+            PipelineConfig { shard_rows, ..PipelineConfig::default() },
         );
         let secs = t0.elapsed().as_secs_f64();
         t.row(&[
-            format!("{workers}"),
+            format!("{shard_rows}"),
             format!("{:.2}s", secs),
+            format!("{:.2}s", stats.featurize_secs),
             format!("{:.0}", stats.rows as f64 / secs),
         ]);
     }

@@ -6,8 +6,12 @@
 //!
 //! Acceptance (ISSUE 3): ≥ 3× GFLOP/s over the seed loops at paper-scale
 //! shapes (`NTK_BENCH_SCALE=full`: 8192×8192×256 featurize, 4096-square).
-//! Emits machine-readable `BENCH_gemm.json` (override the path with
-//! `NTK_BENCH_JSON`) so the perf trajectory is tracked across PRs.
+//! The microkernel sweep (ISSUE 7) additionally times every
+//! runtime-available SIMD kernel against the portable fallback on the
+//! wide featurize shape, plus the bf16-storage packing path. Emits
+//! machine-readable `BENCH_gemm.json` (override the path with
+//! `NTK_BENCH_JSON`); `scripts/check_bench_gemm.py` gates regressions
+//! against the committed `BENCH_gemm_baseline.json`.
 
 use std::collections::BTreeMap;
 
@@ -326,6 +330,60 @@ fn main() {
         );
     }
 
+    // ---- per-kernel microkernel comparison on the wide featurize shape:
+    // every runtime-available SIMD kernel vs the portable fallback, plus
+    // the bf16-storage packing path under the active kernel. This is the
+    // ISSUE-7 acceptance surface (SIMD ≥ 2× portable on wide shapes).
+    let mut kernel_rows: Vec<(String, f64)> = Vec::new();
+    let mut bf16_gflops = 0.0f64;
+    {
+        use ntk_sketch::tensor::gemm::{self, Op};
+        let (m, n, k) = feat;
+        let x = Mat::from_vec(m, k, rng.gauss_vec(m * k));
+        let w = Mat::from_vec(n, k, rng.gauss_vec(n * k));
+        let flops = 2.0 * (m * n * k) as f64;
+        let mut out = vec![0.0f32; m * n];
+        println!(
+            "\n== microkernel sweep on featurize shape {m}x{n}x{k} (active: {}) ==",
+            gemm::active_kernel_name()
+        );
+        let kt = Table::new(&["kernel", "mr x nr", "GFLOP/s", "vs portable"]);
+        let mut portable_gflops = 0.0f64;
+        for kern in gemm::available_kernels() {
+            let t = bench(budget, || {
+                gemm::gemm_with(
+                    kern, m, n, k, &x.data, Op::NoTrans, &w.data, Op::Trans, &mut out, false,
+                );
+                std::hint::black_box(&out);
+            });
+            let g = gflops(flops, t.median_s);
+            if kern.name == "portable" {
+                portable_gflops = g;
+            }
+            kt.row(&[
+                kern.name.into(),
+                format!("{}x{}", kern.mr, kern.nr),
+                format!("{g:.2}"),
+                format!("{:.1}x", g / portable_gflops.max(1e-12)),
+            ]);
+            kernel_rows.push((kern.name.to_string(), g));
+        }
+        // bf16-storage packing: mixing matrix stored as bf16, widened at
+        // pack time, f32 accumulation — the opt-in transform path.
+        let wq = ntk_sketch::tensor::bf16::quantize(&w.data);
+        let t = bench(budget, || {
+            gemm::gemm(m, n, k, &x.data, Op::NoTrans, &wq, Op::Trans, &mut out, false);
+            std::hint::black_box(&out);
+        });
+        bf16_gflops = gflops(flops, t.median_s);
+        kt.row(&[
+            format!("{} +bf16 B", gemm::active_kernel_name()),
+            "-".into(),
+            format!("{bf16_gflops:.2}"),
+            format!("{:.1}x", bf16_gflops / portable_gflops.max(1e-12)),
+        ]);
+    }
+
     // machine-readable trajectory record
     let path = std::env::var("NTK_BENCH_JSON").unwrap_or_else(|_| "BENCH_gemm.json".to_string());
     let shapes: Vec<Json> = results
@@ -351,6 +409,41 @@ fn main() {
     root.insert("full_scale".into(), Json::Bool(full_scale()));
     root.insert("threads".into(), Json::Num(par::num_threads() as f64));
     root.insert("shapes".into(), Json::Arr(shapes));
+    root.insert(
+        "active_kernel".into(),
+        Json::Str(ntk_sketch::tensor::gemm::active_kernel_name().into()),
+    );
+    let portable_g = kernel_rows
+        .iter()
+        .find(|(n, _)| n == "portable")
+        .map(|&(_, g)| g)
+        .unwrap_or(0.0);
+    let best_simd_g = kernel_rows
+        .iter()
+        .filter(|(n, _)| n != "portable")
+        .map(|&(_, g)| g)
+        .fold(0.0f64, f64::max);
+    root.insert(
+        "kernels".into(),
+        Json::Arr(
+            kernel_rows
+                .iter()
+                .map(|(n, g)| {
+                    let mut o = BTreeMap::new();
+                    o.insert("name".into(), Json::Str(n.clone()));
+                    o.insert("gflops".into(), Json::Num(*g));
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    if best_simd_g > 0.0 {
+        root.insert(
+            "simd_vs_portable".into(),
+            Json::Num(best_simd_g / portable_g.max(1e-12)),
+        );
+    }
+    root.insert("bf16_gflops".into(), Json::Num(bf16_gflops));
     match std::fs::write(&path, Json::Obj(root).to_string()) {
         Ok(()) => println!("\nwrote {path}"),
         Err(e) => println!("\ncould not write {path}: {e}"),

@@ -1,0 +1,38 @@
+//! Build probe for the AVX-512 microkernel: the `_mm512_*` f32 intrinsics
+//! stabilized in Rust 1.89, and the crate pins `channel = "stable"` rather
+//! than a minimum version. Probing `rustc --version` here lets
+//! `tensor::kernels` gate its AVX-512 variant behind a `ntk_avx512` cfg so
+//! the crate still builds on older stables (the dispatch table simply
+//! never offers that kernel).
+
+use std::process::Command;
+
+fn main() {
+    println!("cargo:rerun-if-changed=build.rs");
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let version = Command::new(rustc)
+        .arg("--version")
+        .output()
+        .ok()
+        .map(|o| String::from_utf8_lossy(&o.stdout).into_owned())
+        .unwrap_or_default();
+    // "rustc 1.89.0 (hash date)" → (1, 89)
+    let (major, minor) = version
+        .split_whitespace()
+        .nth(1)
+        .map(|v| {
+            let mut it = v.split(['.', '-']);
+            let maj = it.next().and_then(|s| s.parse::<u32>().ok()).unwrap_or(0);
+            let min = it.next().and_then(|s| s.parse::<u32>().ok()).unwrap_or(0);
+            (maj, min)
+        })
+        .unwrap_or((0, 0));
+    // check-cfg itself needs cargo >= 1.80; below that the directive
+    // would be rejected as an unknown build-script key.
+    if major > 1 || (major == 1 && minor >= 80) {
+        println!("cargo:rustc-check-cfg=cfg(ntk_avx512)");
+    }
+    if major > 1 || (major == 1 && minor >= 89) {
+        println!("cargo:rustc-cfg=ntk_avx512");
+    }
+}

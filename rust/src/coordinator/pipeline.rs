@@ -1,20 +1,33 @@
-//! Streaming training pipeline: shard the dataset, featurize shards on a
-//! worker pool, and fold each featurized shard into the streaming ridge
-//! accumulator — bounded channels provide backpressure so memory stays
+//! Streaming training pipeline: shard the dataset, featurize each shard
+//! and fold it into the streaming ridge accumulator — memory stays
 //! O(batch · m + m²) however large n grows (the property that lets the
 //! feature-map methods survive where the exact kernels OOM in Table 2).
+//!
+//! Since the raw-speed pass the shard loop is **serial and deterministic**
+//! on the submitting thread: all parallelism comes from the persistent
+//! worker pool *inside* each step (the batched featurizers and the
+//! GEMM/SYRK normal-equation updates are pool-parallel), so there is no
+//! per-call thread spawning, no cross-shard lock contention, and —
+//! because shards now accumulate in a fixed order — the trained
+//! accumulator is bit-identical run to run for a fixed kernel. That
+//! determinism is what makes resume-equivalence and hot-swap-invisibility
+//! bitwise-testable (DESIGN.md §8, §10), and it is the precondition for
+//! mergeable shard checkpoints (ROADMAP item 2).
 
 use crate::regression::RidgeRegressor;
 use crate::tensor::Mat;
-use std::sync::mpsc::sync_channel;
-use std::sync::{Arc, Mutex};
 
 /// Pipeline configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct PipelineConfig {
     pub shard_rows: usize,
+    /// Historical stage-level worker count. The pipeline now runs the
+    /// shard loop serially and parallelizes inside each shard on the
+    /// persistent pool, so this field no longer changes execution; it is
+    /// kept so existing call sites and configs continue to compile.
     pub workers: usize,
-    /// bounded queue depth between stages (backpressure)
+    /// Historical bounded-queue depth; same compatibility status as
+    /// `workers` (the serial loop needs no inter-stage queue).
     pub queue_depth: usize,
 }
 
@@ -33,9 +46,11 @@ pub struct PipelineStats {
     pub wall_secs: f64,
 }
 
-/// Stream (x, y) through `featurize` (built per worker by the factory)
-/// and accumulate into a ridge regressor. Returns (regressor, stats);
-/// call `.solve(lambda)` on the regressor afterwards.
+/// Stream (x, y) through `featurize` (built once by the factory) and
+/// accumulate into a ridge regressor. Returns (regressor, stats); call
+/// `.solve(lambda)` on the regressor afterwards. Shards fold in a fixed
+/// order, so the result is independent of thread count and bit-identical
+/// across runs (for a fixed GEMM kernel).
 pub fn train_streaming<F, FB>(
     x: &Mat,
     y: &Mat,
@@ -52,53 +67,23 @@ where
     let n = x.rows;
     let shard = cfg.shard_rows.max(1);
     let n_shards = n.div_ceil(shard);
-    let reg = Arc::new(Mutex::new(RidgeRegressor::new(feature_dim, y.cols)));
-    let feat_time = Arc::new(Mutex::new(0.0f64));
-
-    std::thread::scope(|s| {
-        let (tx, rx) = sync_channel::<(Mat, Mat)>(cfg.queue_depth);
-        let rx = Arc::new(Mutex::new(rx));
-        // producer: slice shards (cheap copies) with backpressure
-        s.spawn(move || {
-            for k in 0..n_shards {
-                let lo = k * shard;
-                let hi = ((k + 1) * shard).min(n);
-                let xs = x.slice_rows(lo, hi);
-                let ys = y.slice_rows(lo, hi);
-                if tx.send((xs, ys)).is_err() {
-                    return;
-                }
-            }
-        });
-        // featurize + accumulate workers
-        for _ in 0..cfg.workers.max(1) {
-            let rx = rx.clone();
-            let reg = reg.clone();
-            let feat_time = feat_time.clone();
-            let factory = &factory;
-            s.spawn(move || {
-                let featurize = factory();
-                loop {
-                    let item = {
-                        let guard = rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    let Ok((xs, ys)) = item else { return };
-                    let tf = std::time::Instant::now();
-                    let feats = featurize(&xs);
-                    let dt = tf.elapsed().as_secs_f64();
-                    *feat_time.lock().unwrap() += dt;
-                    reg.lock().unwrap().add_batch(&feats, &ys);
-                }
-            });
-        }
-    });
-
-    let reg = Arc::try_unwrap(reg).ok().expect("pipeline threads done").into_inner().unwrap();
+    let mut reg = RidgeRegressor::new(feature_dim, y.cols);
+    let mut featurize_secs = 0.0f64;
+    let featurize = factory();
+    for k in 0..n_shards {
+        let lo = k * shard;
+        let hi = ((k + 1) * shard).min(n);
+        let xs = x.slice_rows(lo, hi);
+        let ys = y.slice_rows(lo, hi);
+        let tf = std::time::Instant::now();
+        let feats = featurize(&xs);
+        featurize_secs += tf.elapsed().as_secs_f64();
+        reg.add_batch(&feats, &ys);
+    }
     let stats = PipelineStats {
         rows: n,
         shards: n_shards,
-        featurize_secs: *feat_time.lock().unwrap(),
+        featurize_secs,
         wall_secs: t0.elapsed().as_secs_f64(),
     };
     (reg, stats)
@@ -154,5 +139,37 @@ mod tests {
             assert_eq!(reg.n_seen, 101, "shard={shard}");
             assert_eq!(stats.rows, 101);
         }
+    }
+
+    #[test]
+    fn pipeline_is_deterministic_across_runs() {
+        // shards accumulate in a fixed order now, so two identical runs
+        // produce bit-identical normal equations.
+        let mut rng = Rng::new(233);
+        let (n, d) = (150, 5);
+        let x = Mat::from_vec(n, d, rng.gauss_vec(n * d));
+        let y = Mat::from_vec(n, 2, rng.gauss_vec(n * 2));
+        let run = || {
+            train_streaming(
+                &x,
+                &y,
+                d,
+                || |xs: &Mat| xs.clone(),
+                PipelineConfig { shard_rows: 16, workers: 4, queue_depth: 2 },
+            )
+            .0
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.n_seen, b.n_seen);
+        let same = a
+            .gram_lower_packed()
+            .iter()
+            .zip(b.gram_lower_packed().iter())
+            .all(|(p, q)| p.to_bits() == q.to_bits())
+            && a.xty_flat()
+                .iter()
+                .zip(b.xty_flat().iter())
+                .all(|(p, q)| p.to_bits() == q.to_bits());
+        assert!(same, "streaming accumulation must be bit-deterministic");
     }
 }

@@ -3,7 +3,26 @@
 //! (Algorithm 3) used for the spectral guarantee of Theorem 3.
 
 use crate::rng::Rng;
+use crate::tensor::bf16::{self, Bf16};
+use crate::tensor::gemm::{self, Op};
 use crate::tensor::Mat;
+
+/// Batched `x @ Wᵀ` against either the full-precision weights or their
+/// opt-in bf16 mirror (engine widens at pack time, f32 accumulation).
+fn mix_nt(x: &Mat, w: &Mat, w_bf16: &Option<Vec<Bf16>>) -> Mat {
+    match w_bf16 {
+        Some(wq) => {
+            assert_eq!(x.cols, w.cols, "mix_nt: input dim mismatch");
+            let mut out = Mat::zeros(x.rows, w.rows);
+            gemm::gemm(
+                x.rows, w.rows, x.cols, &x.data, Op::NoTrans, wq, Op::Trans, &mut out.data,
+                false,
+            );
+            out
+        }
+        None => x.matmul_nt(w),
+    }
+}
 
 /// Φ₀(x) = √(2/m)·Step(Wᵀx): 0th-order arc-cosine features.
 /// E⟨Φ₀(y),Φ₀(z)⟩ = κ₀(cos∠(y,z)).
@@ -12,11 +31,20 @@ pub struct Phi0 {
     pub d: usize,
     pub m: usize,
     w: Mat, // m×d
+    w_bf16: Option<Vec<Bf16>>,
 }
 
 impl Phi0 {
     pub fn new(d: usize, m: usize, rng: &mut Rng) -> Phi0 {
-        Phi0 { d, m, w: Mat::from_vec(m, d, rng.gauss_vec(m * d)) }
+        Phi0 { d, m, w: Mat::from_vec(m, d, rng.gauss_vec(m * d)), w_bf16: None }
+    }
+
+    /// Opt in to bf16-storage mixing in [`Phi0::apply_mat`] (quantizes
+    /// the weight matrix once; per-row `apply` stays full-precision).
+    pub fn enable_bf16(&mut self) {
+        if self.w_bf16.is_none() {
+            self.w_bf16 = Some(bf16::quantize(&self.w.data));
+        }
     }
 
     pub fn apply(&self, x: &[f32]) -> Vec<f32> {
@@ -27,7 +55,7 @@ impl Phi0 {
     }
 
     pub fn apply_mat(&self, x: &Mat) -> Mat {
-        let mut out = x.matmul_nt(&self.w);
+        let mut out = mix_nt(x, &self.w, &self.w_bf16);
         let s = (2.0 / self.m as f32).sqrt();
         for v in &mut out.data {
             *v = if *v > 0.0 { s } else { 0.0 };
@@ -43,11 +71,19 @@ pub struct Phi1 {
     pub d: usize,
     pub m: usize,
     w: Mat, // m×d
+    w_bf16: Option<Vec<Bf16>>,
 }
 
 impl Phi1 {
     pub fn new(d: usize, m: usize, rng: &mut Rng) -> Phi1 {
-        Phi1 { d, m, w: Mat::from_vec(m, d, rng.gauss_vec(m * d)) }
+        Phi1 { d, m, w: Mat::from_vec(m, d, rng.gauss_vec(m * d)), w_bf16: None }
+    }
+
+    /// Opt in to bf16-storage mixing in [`Phi1::apply_mat`].
+    pub fn enable_bf16(&mut self) {
+        if self.w_bf16.is_none() {
+            self.w_bf16 = Some(bf16::quantize(&self.w.data));
+        }
     }
 
     pub fn apply(&self, x: &[f32]) -> Vec<f32> {
@@ -58,7 +94,7 @@ impl Phi1 {
     }
 
     pub fn apply_mat(&self, x: &Mat) -> Mat {
-        let mut out = x.matmul_nt(&self.w);
+        let mut out = mix_nt(x, &self.w, &self.w_bf16);
         let s = (2.0 / self.m as f32).sqrt();
         for v in &mut out.data {
             *v = s * v.max(0.0);
@@ -139,13 +175,21 @@ pub struct LeveragePhi1 {
     pub m: usize,
     /// Unit-normalized sample directions (m×d).
     w_unit: Mat,
+    w_bf16: Option<Vec<Bf16>>,
 }
 
 impl LeveragePhi1 {
     pub fn new(d: usize, m: usize, sweeps: usize, rng: &mut Rng) -> LeveragePhi1 {
         let mut w = gibbs_sample_leverage(d, m, sweeps, rng);
         w.normalize_rows();
-        LeveragePhi1 { d, m, w_unit: w }
+        LeveragePhi1 { d, m, w_unit: w, w_bf16: None }
+    }
+
+    /// Opt in to bf16-storage mixing in [`LeveragePhi1::apply_mat`].
+    pub fn enable_bf16(&mut self) {
+        if self.w_bf16.is_none() {
+            self.w_bf16 = Some(bf16::quantize(&self.w_unit.data));
+        }
     }
 
     pub fn apply(&self, x: &[f32]) -> Vec<f32> {
@@ -156,7 +200,7 @@ impl LeveragePhi1 {
     }
 
     pub fn apply_mat(&self, x: &Mat) -> Mat {
-        let mut out = x.matmul_nt(&self.w_unit);
+        let mut out = mix_nt(x, &self.w_unit, &self.w_bf16);
         let s = (2.0 * self.d as f32 / self.m as f32).sqrt();
         for v in &mut out.data {
             *v = s * v.max(0.0);
@@ -264,8 +308,34 @@ mod tests {
         let b0 = phi0.apply_mat(&x);
         let b1 = phi1.apply_mat(&x);
         for i in 0..4 {
+            // Φ₀ thresholds, so dot-vs-GEMM ulp differences can't show
+            // (a flip would need a pre-activation within one ulp of 0).
             assert_eq!(b0.row(i), &phi0.apply(x.row(i))[..]);
-            assert_eq!(b1.row(i), &phi1.apply(x.row(i))[..]);
+            // Φ₁ is linear-then-ReLU: the batched path runs the active
+            // GEMM kernel (FMA fuses the rounding), the per-row path a
+            // 4-way-split dot — equal to tolerance, not bitwise.
+            crate::util::prop::assert_close(b1.row(i), &phi1.apply(x.row(i)), 1e-5, 1e-5)
+                .unwrap();
         }
+    }
+
+    #[test]
+    fn bf16_mix_close_to_full_precision() {
+        let mut rng = Rng::new(136);
+        let (d, m, n) = (24, 200, 6);
+        let mut phi1 = Phi1::new(d, m, &mut rng);
+        let x = Mat::from_vec(n, d, rng.gauss_vec(n * d));
+        let full = phi1.apply_mat(&x);
+        phi1.enable_bf16();
+        let lowp = phi1.apply_mat(&x);
+        // ReLU is 1-Lipschitz, so the post-activation Frobenius error is
+        // bounded by the pre-activation one (the documented 2⁻⁷ budget).
+        let (mut err2, mut ref2) = (0.0f64, 0.0f64);
+        for (a, b) in lowp.data.iter().zip(&full.data) {
+            err2 += ((a - b) as f64).powi(2);
+            ref2 += (*b as f64).powi(2);
+        }
+        let rel = (err2 / ref2.max(f64::MIN_POSITIVE)).sqrt();
+        assert!(rel <= 1.0 / 128.0, "Φ₁ bf16 budget exceeded: rel={rel}");
     }
 }

@@ -36,6 +36,13 @@ impl AnyPhi1 {
             AnyPhi1::Leverage(p) => p.apply(x),
         }
     }
+
+    fn enable_bf16(&mut self) {
+        match self {
+            AnyPhi1::Plain(p) => p.enable_bf16(),
+            AnyPhi1::Leverage(p) => p.enable_bf16(),
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -94,6 +101,19 @@ impl NtkRf {
             psi_dim = cfg.m1 + cfg.ms;
         }
         NtkRf { cfg, d, layers }
+    }
+
+    /// Opt in to bf16-storage mixing for every dense weight matrix in the
+    /// stack (each layer's Φ₀/Φ₁). Affects only the batched
+    /// `transform`/`transform_into` path; the per-row `features` path
+    /// stays full-precision. The Q² combiner is FWHT-based (signs and
+    /// index sampling, no dense matrix), so there is nothing to quantize
+    /// there. Never persisted: artifacts always store f32 weights.
+    pub fn enable_bf16_mix(&mut self) {
+        for layer in &mut self.layers {
+            layer.phi0.enable_bf16();
+            layer.phi1.enable_bf16();
+        }
     }
 
     /// Feature map for one vector.
@@ -299,8 +319,39 @@ mod tests {
         assert_eq!((out.rows, out.cols), (3, rf.dim()));
         for i in 0..3 {
             let f = rf.features(x.row(i));
-            crate::util::prop::assert_close(out.row(i), &f, 1e-6, 1e-6).unwrap();
+            // batched path runs the active GEMM kernel (FMA rounding),
+            // per-row path uses split-accumulator dots: tolerance, not
+            // bitwise (a fixed kernel is still batch-size invariant —
+            // see `transform_into_bitwise_matches_transform`).
+            crate::util::prop::assert_close(out.row(i), &f, 1e-5, 1e-5).unwrap();
         }
+    }
+
+    #[test]
+    fn bf16_mix_stays_close_and_is_deterministic() {
+        let mut rng = Rng::new(148);
+        let cfg =
+            NtkRfConfig { depth: 2, m0: 256, m1: 512, ms: 128, phi1_mode: Phi1Mode::Plain };
+        let mut rf = NtkRf::new(8, cfg, &mut rng);
+        let x = Mat::from_vec(5, 8, rng.gauss_vec(40));
+        let full = rf.transform(&x);
+        rf.enable_bf16_mix();
+        let lowp = rf.transform(&x);
+        // End-to-end budget is looser than the per-mix 2⁻⁷ bound: Φ₀
+        // thresholds can flip on pre-activations within one rounding of
+        // zero (a stochastic ±√(2/m₀) term on top of the linear error).
+        // The spectral-level impact is what
+        // examples/spectral_approximation.rs measures.
+        let (mut err2, mut ref2) = (0.0f64, 0.0f64);
+        for (a, b) in lowp.data.iter().zip(&full.data) {
+            err2 += ((a - b) as f64).powi(2);
+            ref2 += (*b as f64).powi(2);
+        }
+        let rel = (err2 / ref2.max(f64::MIN_POSITIVE)).sqrt();
+        assert!(rel <= 0.15, "NTKRF bf16 stack error too large: rel={rel}");
+        // bf16 path stays run-to-run deterministic
+        let again = rf.transform(&x);
+        assert!(lowp.data.iter().zip(&again.data).all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 
     #[test]

@@ -1,0 +1,100 @@
+//! bfloat16 storage type for the low-precision GEMM packing path
+//! (DESIGN.md §7).
+//!
+//! bf16 keeps f32's 8-bit exponent and truncates the mantissa to 7 bits —
+//! conversion is a shift plus round, and the dynamic range is unchanged,
+//! which is what makes it safe for the sketch mixing matrices (Gaussian /
+//! arc-cosine weights are O(1)-scaled; the hazard of f16's narrow
+//! exponent never arises). The engine stores *operands* in bf16 and
+//! accumulates in f32: packing widens each element once
+//! (`Widen<Bf16> for f32`), so the microkernels — including the SIMD
+//! ones — run unchanged in f32 and the only numerics change is the input
+//! quantization, bounded by `|q(x) - x| ≤ 2⁻⁸·|x|` per element
+//! (round-to-nearest-even on a 7-bit mantissa).
+//!
+//! This path is **opt-in per call site** and deliberately not part of any
+//! persisted featurizer spec: artifacts keep full-precision weights and
+//! golden-row verification; bf16 is a runtime serving/throughput knob.
+
+use super::gemm::Widen;
+
+/// A bfloat16 value: the top 16 bits of an f32.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    /// Round-to-nearest-even conversion from f32 (NaN payloads are
+    /// quieted so a NaN stays a NaN after truncation).
+    #[inline(always)]
+    pub fn from_f32(x: f32) -> Bf16 {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        let round = ((bits >> 16) & 1) + 0x7FFF;
+        Bf16(((bits.wrapping_add(round)) >> 16) as u16)
+    }
+
+    /// Exact widening back to f32 (bf16 ⊂ f32).
+    #[inline(always)]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+}
+
+impl Widen<Bf16> for f32 {
+    #[inline(always)]
+    fn widen(s: Bf16) -> f32 {
+        s.to_f32()
+    }
+}
+
+/// Quantize a full f32 buffer (the shape used to mirror a mixing matrix
+/// into its bf16 serving copy).
+pub fn quantize(src: &[f32]) -> Vec<Bf16> {
+    src.iter().map(|&x| Bf16::from_f32(x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn roundtrip_is_exact_for_bf16_values() {
+        // every bf16 bit pattern that is a finite number round-trips
+        for hi in 0..=u16::MAX {
+            let v = Bf16(hi).to_f32();
+            if v.is_finite() {
+                assert_eq!(Bf16::from_f32(v).0, hi, "pattern {hi:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn relative_error_is_bounded() {
+        let mut rng = Rng::new(41);
+        for &x in rng.gauss_vec(4096).iter() {
+            let q = Bf16::from_f32(x).to_f32();
+            assert!(
+                (q - x).abs() <= x.abs() * (1.0 / 256.0) + f32::MIN_POSITIVE,
+                "x={x} q={q}"
+            );
+        }
+    }
+
+    #[test]
+    fn rounds_to_nearest_even() {
+        // exactly-halfway mantissa: 1 + 2⁻⁸ is equidistant between
+        // bf16(1.0) and bf16(1 + 2⁻⁷); ties-to-even keeps 1.0
+        let x = f32::from_bits(0x3F80_8000);
+        assert_eq!(Bf16::from_f32(x).0, 0x3F80);
+        // one ulp above halfway rounds up
+        let y = f32::from_bits(0x3F80_8001);
+        assert_eq!(Bf16::from_f32(y).0, 0x3F81);
+        // specials survive
+        assert!(Bf16::from_f32(f32::NAN).to_f32().is_nan());
+        assert_eq!(Bf16::from_f32(f32::INFINITY).to_f32(), f32::INFINITY);
+        assert_eq!(Bf16::from_f32(-0.0).to_f32().to_bits(), (-0.0f32).to_bits());
+    }
+}

@@ -5,34 +5,47 @@
 //! (ΨᵀΨ, ΨᵀY) and the f64 solver side funnel through the routines here.
 //! The structure is the classic three-level blocking (Goto/BLIS):
 //!
-//! - an MR×NR **microkernel** with an explicit accumulator tile held in a
-//!   local `[[T; NR]; MR]` array, written so LLVM keeps it in registers and
-//!   autovectorizes the NR-wide inner updates — no intrinsics, no unsafe;
-//! - **panel packing**: A is repacked into KC-deep strips of MR rows
-//!   (k-major, `apack[p*MR + r]`), B into KC-deep strips of NR columns
-//!   (`bpack[p*NR + j]`), so the microkernel streams both operands from
+//! - an mr×nr **microkernel** with the accumulator tile held in
+//!   registers. Since the raw-speed pass the kernel is *runtime
+//!   dispatched* ([`super::kernels`]): explicit AVX2/AVX-512/NEON FMA
+//!   variants are selected once per process by CPU probe (override with
+//!   `NTK_GEMM_KERNEL`), with the original autovectorized portable kernel
+//!   as both fallback and property-test oracle;
+//! - **panel packing**: A is repacked into KC-deep strips of mr rows
+//!   (k-major, `apack[p*mr + r]`), B into KC-deep strips of nr columns
+//!   (`bpack[p*nr + j]`), so the microkernel streams both operands from
 //!   contiguous memory regardless of the caller's layout (`Op::NoTrans` /
 //!   `Op::Trans`) — transposed inputs cost nothing extra;
 //! - **cache blocking** over MC/KC/NC so the packed A block lives in L2 and
 //!   the packed B panel is reused across the whole row slab.
 //!
-//! Parallelism: output rows are split into per-thread slabs on
-//! `util::par` scoped threads; each thread packs its own panels, so there
-//! is no sharing and no synchronization past the scope join. Mixed
-//! precision (f32 features → f64 normal equations) is handled entirely in
-//! the pack step via [`Widen`]: the microkernel always runs in the
-//! accumulator type.
+//! Parallelism: output rows are split into per-slab spans executed on the
+//! persistent worker pool (`util::par::par_row_spans_t` →
+//! [`crate::util::pool`]); each slab packs its own panels, so there is no
+//! sharing and no synchronization past the pool join — and no per-call
+//! thread spawning. Mixed precision is handled entirely in the pack step
+//! via [`Widen`]: the microkernel always runs in the accumulator type.
+//! The A and B operands may have *different* storage types (f32 features
+//! against a bf16-quantized mixing matrix, [`super::bf16`]) — both are
+//! widened while packing, so the f32 SIMD kernels serve the low-precision
+//! path unchanged.
 //!
 //! Numerics contract: within one KC-deep slice the accumulation order is
-//! identical to the naive `for p in 0..k` triple loop; across KC slices
-//! partial sums are associated block-wise, so results match the naive
-//! oracle to the property-test tolerances (bit-identical when k ≤ KC).
+//! identical to the naive `for p in 0..k` triple loop *for the portable
+//! kernel*; the SIMD kernels fuse multiply-add and agree to relative
+//! tolerance instead. For any fixed kernel, results are bit-identical
+//! across runs, thread counts and batch splits; across KC slices partial
+//! sums are associated block-wise, so results match the naive oracle to
+//! the property-test tolerances.
 
+use super::kernels;
+pub use super::kernels::KernelDesc;
 use crate::util::par;
 
-/// Microkernel tile height (rows of C per register tile).
+/// Portable-kernel tile height (rows of C per register tile). The active
+/// SIMD kernel may use a wider tile — see [`KernelDesc::mr`].
 pub const MR: usize = 8;
-/// Microkernel tile width (columns of C per register tile).
+/// Portable-kernel tile width (columns of C per register tile).
 pub const NR: usize = 8;
 /// Depth of a packed panel slice (shared by A strips and B strips).
 pub const KC: usize = 256;
@@ -41,7 +54,7 @@ pub const MC: usize = 128;
 /// Columns of B packed per panel (KC×NC panel amortizes A streaming).
 pub const NC: usize = 2048;
 
-/// Below this many multiply-adds the scoped-thread spawn is not worth it.
+/// Below this many multiply-adds the pool dispatch is not worth it.
 const PAR_FLOP_THRESHOLD: usize = 1 << 17;
 
 /// Accumulator element: f32 or f64.
@@ -49,24 +62,38 @@ pub trait Scalar:
     Copy
     + Send
     + Sync
+    + 'static
     + std::ops::Add<Output = Self>
     + std::ops::Mul<Output = Self>
     + std::ops::AddAssign
 {
     const ZERO: Self;
+
+    /// The process-wide microkernel for this accumulator type (resolved
+    /// once; f32 honors `NTK_GEMM_KERNEL`, f64 is always portable).
+    fn active_kernel() -> &'static KernelDesc<Self>;
 }
 
 impl Scalar for f32 {
     const ZERO: f32 = 0.0;
+
+    fn active_kernel() -> &'static KernelDesc<f32> {
+        kernels::dispatch_f32()
+    }
 }
 
 impl Scalar for f64 {
     const ZERO: f64 = 0.0;
+
+    fn active_kernel() -> &'static KernelDesc<f64> {
+        kernels::dispatch_f64()
+    }
 }
 
 /// Widening conversion applied during packing: the source operand type
 /// `S` is lifted into the accumulator type once per element, so mixed
-/// f32-storage/f64-accumulate GEMMs pay no per-FLOP conversion cost.
+/// storage/accumulator GEMMs (f32→f64 ridge updates, bf16→f32 sketch
+/// mixes) pay no per-FLOP conversion cost.
 pub trait Widen<S>: Scalar {
     fn widen(s: S) -> Self;
 }
@@ -104,25 +131,69 @@ pub enum Op {
     Trans,
 }
 
+/// Every f32 microkernel available on this CPU, worst-to-best (portable
+/// is always first; the default dispatch picks the last).
+pub fn available_kernels() -> Vec<&'static KernelDesc<f32>> {
+    kernels::available_f32()
+}
+
+/// Look up an available f32 kernel by `NTK_GEMM_KERNEL`-style name.
+pub fn kernel_by_name(name: &str) -> Option<&'static KernelDesc<f32>> {
+    kernels::by_name(name)
+}
+
+/// Name of the process-wide active f32 kernel (`portable`, `avx2`, …).
+pub fn active_kernel_name() -> &'static str {
+    kernels::dispatch_f32().name
+}
+
 /// C (m×n, row-major) = op_a(A) · op_b(B), or += when `accumulate`.
 ///
 /// `a` holds the A operand in the orientation given by `op_a` (see [`Op`]
 /// for the expected slice shapes), likewise `b`; `c` must be m×n. With
 /// `accumulate == false` C is fully overwritten; with `true` the product
 /// is added onto the existing contents (the streaming-ridge update shape).
-pub fn gemm<S, T>(
+/// A and B may use different storage types (e.g. f32 rows against a bf16
+/// mixing matrix); both are widened to the accumulator type during
+/// packing. Runs the process-wide active kernel — use [`gemm_with`] to
+/// force one.
+pub fn gemm<SA, SB, T>(
     m: usize,
     n: usize,
     k: usize,
-    a: &[S],
+    a: &[SA],
     op_a: Op,
-    b: &[S],
+    b: &[SB],
     op_b: Op,
     c: &mut [T],
     accumulate: bool,
 ) where
-    S: Copy + Send + Sync,
-    T: Widen<S>,
+    SA: Copy + Send + Sync,
+    SB: Copy + Send + Sync,
+    T: Widen<SA> + Widen<SB>,
+{
+    gemm_with(T::active_kernel(), m, n, k, a, op_a, b, op_b, c, accumulate)
+}
+
+/// [`gemm`] with an explicit microkernel — the per-kernel property tests
+/// and the kernel-comparison bench need to run a *specific* kernel
+/// regardless of the process-wide dispatch.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_with<SA, SB, T>(
+    kernel: &'static KernelDesc<T>,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[SA],
+    op_a: Op,
+    b: &[SB],
+    op_b: Op,
+    c: &mut [T],
+    accumulate: bool,
+) where
+    SA: Copy + Send + Sync,
+    SB: Copy + Send + Sync,
+    T: Widen<SA> + Widen<SB>,
 {
     assert_eq!(a.len(), m * k, "gemm: A shape mismatch");
     assert_eq!(b.len(), k * n, "gemm: B shape mismatch");
@@ -138,7 +209,7 @@ pub fn gemm<S, T>(
         }
         return;
     }
-    let args = SlabArgs { m, n, k, op_a, op_b, accumulate, lower_only: false };
+    let args = SlabArgs { m, n, k, op_a, op_b, accumulate, lower_only: false, kernel };
     run_slabs(a, b, c, &args, |_row| n);
 }
 
@@ -154,6 +225,22 @@ pub fn gemm<S, T>(
 /// (the f64 normal-equation accumulation `DMat::gram_of`).
 pub fn syrk_lower<S, T>(n: usize, k: usize, a: &[S], op: Op, c: &mut [T], accumulate: bool)
 where
+    S: Copy + Send + Sync,
+    T: Widen<S>,
+{
+    syrk_lower_with(T::active_kernel(), n, k, a, op, c, accumulate)
+}
+
+/// [`syrk_lower`] with an explicit microkernel (see [`gemm_with`]).
+pub fn syrk_lower_with<S, T>(
+    kernel: &'static KernelDesc<T>,
+    n: usize,
+    k: usize,
+    a: &[S],
+    op: Op,
+    c: &mut [T],
+    accumulate: bool,
+) where
     S: Copy + Send + Sync,
     T: Widen<S>,
 {
@@ -176,13 +263,14 @@ where
         Op::NoTrans => Op::Trans,
         Op::Trans => Op::NoTrans,
     };
-    let args = SlabArgs { m: n, n, k, op_a: op, op_b, accumulate, lower_only: true };
+    let args = SlabArgs { m: n, n, k, op_a: op, op_b, accumulate, lower_only: true, kernel };
     // Row i of the lower triangle holds i+1 entries; balance slabs by area.
     run_slabs(a, a, c, &args, |row| row + 1);
 }
 
-/// Shape + flag bundle threaded to every per-thread slab.
-struct SlabArgs {
+/// Shape + flag bundle threaded to every per-slab worker, including the
+/// microkernel the whole product must run under.
+struct SlabArgs<T: 'static> {
     m: usize,
     n: usize,
     k: usize,
@@ -190,76 +278,72 @@ struct SlabArgs {
     op_b: Op,
     accumulate: bool,
     lower_only: bool,
+    kernel: &'static KernelDesc<T>,
 }
 
-/// Split the output rows into per-thread slabs (weighted by `cost` =
-/// output entries per row, MR-aligned boundaries) and run the blocked
-/// slab routine on scoped threads. Each thread owns a contiguous span of
-/// whole C rows, so the splits are plain `split_at_mut` — no locking.
-fn run_slabs<S, T, W>(a: &[S], b: &[S], c: &mut [T], args: &SlabArgs, cost: W)
+/// Split the output rows into per-worker slabs (weighted by `cost` =
+/// output entries per row, mr-aligned boundaries) and run the blocked
+/// slab routine on the persistent pool. Each worker owns a contiguous
+/// span of whole C rows (disjoint by construction), so there is no
+/// locking inside the product.
+fn run_slabs<SA, SB, T, W>(a: &[SA], b: &[SB], c: &mut [T], args: &SlabArgs<T>, cost: W)
 where
-    S: Copy + Send + Sync,
-    T: Widen<S>,
+    SA: Copy + Send + Sync,
+    SB: Copy + Send + Sync,
+    T: Widen<SA> + Widen<SB>,
     W: Fn(usize) -> usize,
 {
     let (m, n, k) = (args.m, args.n, args.k);
+    let mr = args.kernel.mr;
     let total: usize = (0..m).map(&cost).sum();
     let work = total.saturating_mul(k);
-    let nt = if work < PAR_FLOP_THRESHOLD { 1 } else { par::num_threads().min(m.div_ceil(MR)) };
+    let nt = if work < PAR_FLOP_THRESHOLD { 1 } else { par::num_threads().min(m.div_ceil(mr)) };
     if nt <= 1 {
         gemm_slab(0, m, a, b, c, args);
         return;
     }
-    // MR-aligned boundaries with ~equal summed row cost per slab.
+    // mr-aligned boundaries with ~equal summed row cost per slab.
     let per = total.div_ceil(nt);
     let mut bounds = vec![0usize];
     let mut acc = 0usize;
     for i in 0..m {
         acc += cost(i);
         let edge = i + 1;
-        if acc >= per && edge % MR == 0 && edge < m {
+        if acc >= per && edge % mr == 0 && edge < m {
             bounds.push(edge);
             acc = 0;
         }
     }
     bounds.push(m);
-    std::thread::scope(|s| {
-        let mut rest = c;
-        let mut prev = 0usize;
-        for w in bounds.windows(2) {
-            let (lo, hi) = (w[0], w[1]);
-            if lo >= hi {
-                continue;
-            }
-            let (head, tail) = rest.split_at_mut((hi - prev) * n);
-            rest = tail;
-            prev = hi;
-            s.spawn(move || gemm_slab(lo, hi - lo, a, b, head, args));
-        }
+    par::par_row_spans_t(c, n, &bounds, |row0, slab| {
+        gemm_slab(row0, slab.len() / n, a, b, slab, args);
     });
 }
 
-/// Blocked single-threaded GEMM over one row slab of C: global rows
+/// Blocked single-worker GEMM over one row slab of C: global rows
 /// [row0, row0+mb), `c` holding exactly those rows. Packs its own A
-/// blocks and B panels (thread-private buffers).
-fn gemm_slab<S, T>(row0: usize, mb: usize, a: &[S], b: &[S], c: &mut [T], args: &SlabArgs)
+/// blocks and B panels (worker-private buffers).
+fn gemm_slab<SA, SB, T>(row0: usize, mb: usize, a: &[SA], b: &[SB], c: &mut [T], args: &SlabArgs<T>)
 where
-    S: Copy + Send + Sync,
-    T: Widen<S>,
+    SA: Copy + Send + Sync,
+    SB: Copy + Send + Sync,
+    T: Widen<SA> + Widen<SB>,
 {
     let (m, n, k) = (args.m, args.n, args.k);
+    let (mr, nr) = (args.kernel.mr, args.kernel.nr);
     // For lower-only output, columns past the slab's last row are dead.
     let n_used = if args.lower_only { n.min(row0 + mb) } else { n };
     let kc_max = KC.min(k);
-    let mut apack = vec![T::ZERO; MC.min(mb).div_ceil(MR) * MR * kc_max];
-    let mut bpack = vec![T::ZERO; NC.min(n_used).div_ceil(NR) * NR * kc_max];
+    let mut apack = vec![T::ZERO; MC.min(mb).div_ceil(mr) * mr * kc_max];
+    let mut bpack = vec![T::ZERO; NC.min(n_used).div_ceil(nr) * nr * kc_max];
+    let mut acc = vec![T::ZERO; mr * nr];
     let mut jc = 0usize;
     while jc < n_used {
         let nc = NC.min(n_used - jc);
         let mut pc = 0usize;
         while pc < k {
             let kc = KC.min(k - pc);
-            pack_b(&mut bpack, b, args.op_b, n, k, jc, nc, pc, kc);
+            pack_b(&mut bpack, b, args.op_b, n, k, jc, nc, pc, kc, nr);
             // first KC slice of a non-accumulating product overwrites C;
             // every later slice adds its block partial sum.
             let add = args.accumulate || pc > 0;
@@ -271,8 +355,8 @@ where
                     ic += mc;
                     continue;
                 }
-                pack_a(&mut apack, a, args.op_a, m, k, row0 + ic, mc, pc, kc);
-                micro_tiles(&apack, &bpack, c, args, row0, ic, mc, jc, nc, kc, add);
+                pack_a(&mut apack, a, args.op_a, m, k, row0 + ic, mc, pc, kc, mr);
+                micro_tiles(&apack, &bpack, c, args, row0, ic, mc, jc, nc, kc, add, &mut acc);
                 ic += mc;
             }
             pc += kc;
@@ -281,7 +365,7 @@ where
     }
 }
 
-/// Run the microkernel over every MR×NR tile of one (MC block × NC panel)
+/// Run the microkernel over every mr×nr tile of one (MC block × NC panel)
 /// intersection, clipping edge tiles and skipping tiles strictly above the
 /// diagonal in lower-only (SYRK) mode.
 #[allow(clippy::too_many_arguments)]
@@ -289,7 +373,7 @@ fn micro_tiles<T: Scalar>(
     apack: &[T],
     bpack: &[T],
     c: &mut [T],
-    args: &SlabArgs,
+    args: &SlabArgs<T>,
     row0: usize,
     ic: usize,
     mc: usize,
@@ -297,52 +381,34 @@ fn micro_tiles<T: Scalar>(
     nc: usize,
     kc: usize,
     add: bool,
+    acc: &mut [T],
 ) {
     let n = args.n;
-    let mut acc = [[T::ZERO; NR]; MR];
-    for s in 0..mc.div_ceil(MR) {
-        let i0 = ic + s * MR; // slab-local row of the tile
-        let mr_eff = MR.min(mc - s * MR);
-        let ap = &apack[s * MR * kc..(s + 1) * MR * kc];
-        for t in 0..nc.div_ceil(NR) {
-            let j0 = jc + t * NR;
+    let (mr, nr) = (args.kernel.mr, args.kernel.nr);
+    for s in 0..mc.div_ceil(mr) {
+        let i0 = ic + s * mr; // slab-local row of the tile
+        let mr_eff = mr.min(mc - s * mr);
+        let ap = &apack[s * mr * kc..(s + 1) * mr * kc];
+        for t in 0..nc.div_ceil(nr) {
+            let j0 = jc + t * nr;
             // tile strictly above the diagonal: every column > every row.
-            if args.lower_only && j0 > row0 + i0 + MR - 1 {
+            if args.lower_only && j0 > row0 + i0 + mr - 1 {
                 break;
             }
-            let nr_eff = NR.min(nc - t * NR);
-            let bp = &bpack[t * NR * kc..(t + 1) * NR * kc];
-            microkernel(kc, ap, bp, &mut acc);
-            store_tile(&acc, c, n, i0, j0, mr_eff, nr_eff, add);
-        }
-    }
-}
-
-/// The register tile: acc[i][j] += Σ_p ap[p·MR+i] · bp[p·NR+j].
-///
-/// `ap`/`bp` are zero-padded to full MR/NR strips by the packers, so the
-/// kernel has no edge branches; the fixed-size array views let LLVM hoist
-/// the bounds checks and vectorize the NR-wide update row.
-#[inline(always)]
-fn microkernel<T: Scalar>(kc: usize, ap: &[T], bp: &[T], acc: &mut [[T; NR]; MR]) {
-    *acc = [[T::ZERO; NR]; MR];
-    for p in 0..kc {
-        let av: &[T; MR] = ap[p * MR..p * MR + MR].try_into().unwrap();
-        let bv: &[T; NR] = bp[p * NR..p * NR + NR].try_into().unwrap();
-        for i in 0..MR {
-            let ai = av[i];
-            for j in 0..NR {
-                acc[i][j] += ai * bv[j];
-            }
+            let nr_eff = nr.min(nc - t * nr);
+            let bp = &bpack[t * nr * kc..(t + 1) * nr * kc];
+            args.kernel.call(kc, ap, bp, acc);
+            store_tile(acc, nr, c, n, i0, j0, mr_eff, nr_eff, add);
         }
     }
 }
 
 /// Write (or add) the live mr_eff×nr_eff corner of the accumulator tile
-/// into C at slab-local row i0, global column j0.
+/// (row-major, stride `nr`) into C at slab-local row i0, global column j0.
 #[allow(clippy::too_many_arguments)]
 fn store_tile<T: Scalar>(
-    acc: &[[T; NR]; MR],
+    acc: &[T],
+    nr: usize,
     c: &mut [T],
     ldc: usize,
     i0: usize,
@@ -351,7 +417,7 @@ fn store_tile<T: Scalar>(
     nr_eff: usize,
     add: bool,
 ) {
-    for (i, arow) in acc.iter().enumerate().take(mr_eff) {
+    for (i, arow) in acc.chunks_exact(nr).enumerate().take(mr_eff) {
         let crow = &mut c[(i0 + i) * ldc + j0..(i0 + i) * ldc + j0 + nr_eff];
         if add {
             for (o, v) in crow.iter_mut().zip(arow.iter()) {
@@ -366,7 +432,8 @@ fn store_tile<T: Scalar>(
 }
 
 /// Pack an mc×kc block of the A operand (global rows i0.., depth pc..)
-/// into MR-row k-major strips, widening and zero-padding ragged strips.
+/// into mr-row k-major strips, widening and zero-padding ragged strips.
+#[allow(clippy::too_many_arguments)]
 fn pack_a<S, T>(
     apack: &mut [T],
     a: &[S],
@@ -377,25 +444,26 @@ fn pack_a<S, T>(
     mc: usize,
     pc: usize,
     kc: usize,
+    mr: usize,
 ) where
     S: Copy,
     T: Widen<S>,
 {
-    for s in 0..mc.div_ceil(MR) {
-        let strip = &mut apack[s * MR * kc..(s + 1) * MR * kc];
-        let rows = MR.min(mc - s * MR);
+    for s in 0..mc.div_ceil(mr) {
+        let strip = &mut apack[s * mr * kc..(s + 1) * mr * kc];
+        let rows = mr.min(mc - s * mr);
         match op {
             Op::NoTrans => {
                 // a is m×k row-major: read each source row contiguously.
-                for r in 0..MR {
+                for r in 0..mr {
                     if r < rows {
-                        let src = &a[(i0 + s * MR + r) * k + pc..][..kc];
+                        let src = &a[(i0 + s * mr + r) * k + pc..][..kc];
                         for (p, &v) in src.iter().enumerate() {
-                            strip[p * MR + r] = T::widen(v);
+                            strip[p * mr + r] = T::widen(v);
                         }
                     } else {
                         for p in 0..kc {
-                            strip[p * MR + r] = T::ZERO;
+                            strip[p * mr + r] = T::ZERO;
                         }
                     }
                 }
@@ -403,8 +471,8 @@ fn pack_a<S, T>(
             Op::Trans => {
                 // a is k×m row-major (Aᵀ): each depth p is contiguous in r.
                 for p in 0..kc {
-                    let src = &a[(pc + p) * m + i0 + s * MR..][..rows];
-                    let dst = &mut strip[p * MR..p * MR + MR];
+                    let src = &a[(pc + p) * m + i0 + s * mr..][..rows];
+                    let dst = &mut strip[p * mr..p * mr + mr];
                     for (d, &v) in dst.iter_mut().zip(src.iter()) {
                         *d = T::widen(v);
                     }
@@ -418,7 +486,8 @@ fn pack_a<S, T>(
 }
 
 /// Pack a kc×nc panel of the B operand (global cols j0.., depth pc..)
-/// into NR-column strips, widening and zero-padding ragged strips.
+/// into nr-column strips, widening and zero-padding ragged strips.
+#[allow(clippy::too_many_arguments)]
 fn pack_b<S, T>(
     bpack: &mut [T],
     b: &[S],
@@ -429,19 +498,20 @@ fn pack_b<S, T>(
     nc: usize,
     pc: usize,
     kc: usize,
+    nr: usize,
 ) where
     S: Copy,
     T: Widen<S>,
 {
-    for t in 0..nc.div_ceil(NR) {
-        let strip = &mut bpack[t * NR * kc..(t + 1) * NR * kc];
-        let cols = NR.min(nc - t * NR);
+    for t in 0..nc.div_ceil(nr) {
+        let strip = &mut bpack[t * nr * kc..(t + 1) * nr * kc];
+        let cols = nr.min(nc - t * nr);
         match op {
             Op::NoTrans => {
                 // b is k×n row-major: each depth p is contiguous in j.
                 for p in 0..kc {
-                    let src = &b[(pc + p) * n + j0 + t * NR..][..cols];
-                    let dst = &mut strip[p * NR..p * NR + NR];
+                    let src = &b[(pc + p) * n + j0 + t * nr..][..cols];
+                    let dst = &mut strip[p * nr..p * nr + nr];
                     for (d, &v) in dst.iter_mut().zip(src.iter()) {
                         *d = T::widen(v);
                     }
@@ -452,15 +522,15 @@ fn pack_b<S, T>(
             }
             Op::Trans => {
                 // b is n×k row-major (Bᵀ): read each source row contiguously.
-                for j in 0..NR {
+                for j in 0..nr {
                     if j < cols {
-                        let src = &b[(j0 + t * NR + j) * k + pc..][..kc];
+                        let src = &b[(j0 + t * nr + j) * k + pc..][..kc];
                         for (p, &v) in src.iter().enumerate() {
-                            strip[p * NR + j] = T::widen(v);
+                            strip[p * nr + j] = T::widen(v);
                         }
                     } else {
                         for p in 0..kc {
-                            strip[p * NR + j] = T::ZERO;
+                            strip[p * nr + j] = T::ZERO;
                         }
                     }
                 }
@@ -476,14 +546,14 @@ fn pack_b<S, T>(
 /// off-diagonal strip (columns ≥ hi) is the transpose of rows [hi, n)'s
 /// columns [lo, hi), which live past the `split_at_mut(hi·n)` point — so
 /// the writes (mutable head rows) and reads (shared tail rows) borrow
-/// disjointly and the copy runs as a tiled transpose on scoped threads.
+/// disjointly and the copy runs as a tiled transpose on the pool.
 /// This replaces the serial strided scalar-store mirror loop that
 /// dominated `Mat::gram` at large n.
 pub fn mirror_lower_to_upper<T: Scalar>(c: &mut [T], n: usize) {
     assert_eq!(c.len(), n * n, "mirror: shape mismatch");
     const TB: usize = 32; // transpose tile edge
-    // Band height grows with n so the serial band loop opens a bounded
-    // number of thread scopes (~8·nt) instead of n/128; the in-band
+    // Band height grows with n so the serial band loop dispatches a
+    // bounded number of pool jobs (~8·nt) instead of n/128; the in-band
     // serial mirror stays O(n·pw/2) total, a sliver of the n²/2 copies.
     let pw = 128usize.max(n.div_ceil(8 * par::num_threads().max(1)));
     let mut lo = 0usize;
@@ -523,6 +593,7 @@ pub fn mirror_lower_to_upper<T: Scalar>(c: &mut [T], n: usize) {
 mod tests {
     use super::*;
     use crate::rng::Rng;
+    use crate::tensor::bf16::{self, Bf16};
 
     /// Naive triple-loop oracle in the accumulator type, honoring ops.
     fn oracle<S: Copy, T: Widen<S>>(
@@ -602,6 +673,115 @@ mod tests {
     }
 
     #[test]
+    fn every_kernel_matches_oracle_adversarial() {
+        // The per-kernel sweep: each available microkernel (portable,
+        // avx2, avx512, neon — whatever this CPU offers) against the
+        // naive oracle at its own tile-edge adversarial shapes, all four
+        // Op combinations, and depths straddling KC (plus k=0).
+        let mut rng = Rng::new(78);
+        for kernel in available_kernels() {
+            let mr = kernel.mr;
+            let dims = [1, mr - 1, mr, mr + 1, 2 * mr + 3];
+            let depths = [0usize, 1, mr + 1, KC - 1, KC, KC + 1];
+            for &m in &dims {
+                for &n in &dims {
+                    for &k in &depths {
+                        for op_a in [Op::NoTrans, Op::Trans] {
+                            for op_b in [Op::NoTrans, Op::Trans] {
+                                let a = rng.gauss_vec(m * k);
+                                let b = rng.gauss_vec(k * n);
+                                let mut c = vec![1.0f32; m * n];
+                                gemm_with(
+                                    kernel, m, n, k, &a, op_a, &b, op_b, &mut c, false,
+                                );
+                                let o: Vec<f32> = oracle(m, n, k, &a, op_a, &b, op_b);
+                                assert!(
+                                    close_f32(&c, &o, 1e-4),
+                                    "kernel={} m={m} n={n} k={k} {op_a:?} {op_b:?}",
+                                    kernel.name
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_kernel_syrk_matches_its_gemm() {
+        let mut rng = Rng::new(80);
+        for kernel in available_kernels() {
+            let mr = kernel.mr;
+            for (n, k) in [(1usize, 1usize), (mr, 5), (mr + 3, KC + 2), (MC + 10, 19)] {
+                let a = rng.gauss_vec(n * k);
+                let mut c = vec![0.0f32; n * n];
+                syrk_lower_with(kernel, n, k, &a, Op::NoTrans, &mut c, false);
+                mirror_lower_to_upper(&mut c, n);
+                let mut full = vec![0.0f32; n * n];
+                gemm_with(kernel, n, n, k, &a, Op::NoTrans, &a, Op::Trans, &mut full, false);
+                assert!(close_f32(&c, &full, 1e-3), "kernel={} n={n} k={k}", kernel.name);
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_kernel_is_deterministic() {
+        // per-kernel bit-identity across repeated runs (the batch-
+        // invariance contract the transforms rely on).
+        let mut rng = Rng::new(81);
+        let (m, n, k) = (MC + 5, 70, KC + 9);
+        let a = rng.gauss_vec(m * k);
+        let b = rng.gauss_vec(k * n);
+        for kernel in available_kernels() {
+            let mut c1 = vec![0.0f32; m * n];
+            let mut c2 = vec![0.0f32; m * n];
+            gemm_with(kernel, m, n, k, &a, Op::NoTrans, &b, Op::Trans, &mut c1, false);
+            gemm_with(kernel, m, n, k, &a, Op::NoTrans, &b, Op::Trans, &mut c2, false);
+            let same = c1.iter().zip(&c2).all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(same, "kernel={} must be run-to-run bit-identical", kernel.name);
+        }
+    }
+
+    #[test]
+    fn bf16_storage_matches_widened_oracle_and_budget() {
+        let mut rng = Rng::new(79);
+        let (m, n, k) = (33, 29, KC + 7);
+        let a = rng.gauss_vec(m * k);
+        let b = rng.gauss_vec(k * n);
+        let aq: Vec<Bf16> = bf16::quantize(&a);
+        let bq: Vec<Bf16> = bf16::quantize(&b);
+        // engine on bf16 storage ≡ engine on the widened values exactly
+        // (quantization happens at pack time, nothing else changes) …
+        let mut c = vec![0.0f32; m * n];
+        gemm(m, n, k, &aq, Op::NoTrans, &bq, Op::NoTrans, &mut c, false);
+        let wa: Vec<f32> = aq.iter().map(|q| q.to_f32()).collect();
+        let wb: Vec<f32> = bq.iter().map(|q| q.to_f32()).collect();
+        let mut cw = vec![0.0f32; m * n];
+        gemm(m, n, k, &wa, Op::NoTrans, &wb, Op::NoTrans, &mut cw, false);
+        let same = c.iter().zip(&cw).all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(same, "bf16 packing must equal widened-f32 packing bitwise");
+        // … and within the documented budget vs full precision: the only
+        // error is input rounding (≤ 2⁻⁸ relative per element), which
+        // accumulates as a random walk over k terms — bounded in the
+        // Frobenius norm by 2⁻⁷ relative (measured ≈ 2.5× inside it).
+        let full: Vec<f32> = oracle(m, n, k, &a, Op::NoTrans, &b, Op::NoTrans);
+        let (mut err2, mut ref2) = (0.0f64, 0.0f64);
+        for (x, y) in c.iter().zip(&full) {
+            err2 += ((x - y) as f64).powi(2);
+            ref2 += (*y as f64).powi(2);
+        }
+        let rel = (err2 / ref2.max(f64::MIN_POSITIVE)).sqrt();
+        assert!(rel <= 1.0 / 128.0, "bf16 error budget exceeded: rel={rel}");
+        // mixed storage: f32 rows against the bf16 matrix (the sketch-mix
+        // call shape, x @ Wqᵀ) agrees with its own widened oracle.
+        let mut cm = vec![0.0f32; m * n];
+        gemm(m, n, k, &a, Op::NoTrans, &bq, Op::Trans, &mut cm, false);
+        let om: Vec<f32> = oracle(m, n, k, &a, Op::NoTrans, &wb, Op::Trans);
+        assert!(close_f32(&cm, &om, 1e-4), "mixed f32×bf16 storage");
+    }
+
+    #[test]
     fn gemm_matches_oracle_f64_and_blocked_k() {
         let mut rng = Rng::new(72);
         // depths that straddle the KC boundary exercise the block-partial-
@@ -634,12 +814,12 @@ mod tests {
     #[test]
     fn gemm_k_zero_and_empty() {
         let mut c = vec![7.0f32; 6];
-        gemm::<f32, f32>(2, 3, 0, &[], Op::NoTrans, &[], Op::NoTrans, &mut c, false);
+        gemm::<f32, f32, f32>(2, 3, 0, &[], Op::NoTrans, &[], Op::NoTrans, &mut c, false);
         assert!(c.iter().all(|&x| x == 0.0), "k=0 overwrite zeroes C");
         let mut c = vec![7.0f32; 6];
-        gemm::<f32, f32>(2, 3, 0, &[], Op::NoTrans, &[], Op::NoTrans, &mut c, true);
+        gemm::<f32, f32, f32>(2, 3, 0, &[], Op::NoTrans, &[], Op::NoTrans, &mut c, true);
         assert!(c.iter().all(|&x| x == 7.0), "k=0 accumulate leaves C");
-        gemm::<f32, f32>(0, 0, 5, &[], Op::NoTrans, &[], Op::NoTrans, &mut [], false);
+        gemm::<f32, f32, f32>(0, 0, 5, &[], Op::NoTrans, &[], Op::NoTrans, &mut [], false);
     }
 
     #[test]

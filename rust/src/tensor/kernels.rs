@@ -1,0 +1,312 @@
+//! Runtime-dispatched GEMM microkernels (DESIGN.md §7).
+//!
+//! The packed engine in [`super::gemm`] runs its inner loop through a
+//! [`KernelDesc`] — a named MR×NR register-tile kernel plus its tile
+//! shape. This module owns every variant:
+//!
+//! - **portable** — the original autovectorized 8×8 kernel, generic over
+//!   [`Scalar`]. Always available, bit-identical to the pre-dispatch
+//!   engine, and the oracle the SIMD kernels are property-tested against.
+//! - **avx2** — explicit 8×8 f32 kernel on 256-bit FMA intrinsics
+//!   (8 ymm row accumulators, broadcast-A × vector-B).
+//! - **avx512** — widened 16×16 f32 kernel on 512-bit FMA intrinsics
+//!   (16 zmm row accumulators); needs rustc ≥ 1.89 (`ntk_avx512` cfg from
+//!   build.rs) and AVX-512F at runtime.
+//! - **neon** — 8×8 f32 kernel on 128-bit `vfmaq_f32` (16 q-register
+//!   accumulators, two per row) for aarch64.
+//!
+//! Selection happens once per process: [`dispatch_f32`] probes the CPU
+//! (`is_x86_feature_detected!` / aarch64 detection) and caches the best
+//! available kernel, or honors an explicit `NTK_GEMM_KERNEL` override
+//! (`portable`/`avx2`/`avx512`/`neon`; an unavailable name panics loudly
+//! rather than silently falling back — tests and benches rely on getting
+//! exactly the kernel they asked for). f64 always uses the portable
+//! kernel: the f64 side is the solver's accumulation path, where the
+//! portable kernel's non-FMA rounding is part of the bit-reproducibility
+//! contract.
+//!
+//! Numerics: the SIMD kernels use fused multiply-add, so their f32
+//! results differ from the portable kernel in the last ulps (FMA skips
+//! the intermediate rounding). Per-kernel determinism still holds — for a
+//! fixed kernel, results are bit-identical across runs, thread counts and
+//! batch splits. Cross-kernel agreement is to tolerance only, which is
+//! why the property tests pit every kernel against the portable oracle
+//! with a relative bound instead of `==`.
+
+use super::gemm::Scalar;
+use std::sync::OnceLock;
+
+/// One microkernel: computes a full `mr × nr` register tile
+/// `acc[i*nr + j] = Σ_p ap[p*mr + i] · bp[p*nr + j]` over a `kc`-deep
+/// packed strip pair. `ap`/`bp` are zero-padded to whole strips by the
+/// packers, so kernels have no edge branches; `acc` (row-major, stride
+/// `nr`, length `mr*nr`) is fully overwritten.
+pub struct KernelDesc<T: 'static> {
+    /// Stable name, matched against `NTK_GEMM_KERNEL`.
+    pub name: &'static str,
+    /// Tile height (rows of C per call).
+    pub mr: usize,
+    /// Tile width (columns of C per call).
+    pub nr: usize,
+    pub(crate) ukr: fn(usize, &[T], &[T], &mut [T]),
+}
+
+impl<T: 'static> KernelDesc<T> {
+    /// Run the microkernel (bounds are asserted by each implementation).
+    #[inline(always)]
+    pub(crate) fn call(&self, kc: usize, ap: &[T], bp: &[T], acc: &mut [T]) {
+        (self.ukr)(kc, ap, bp, acc)
+    }
+}
+
+/// Portable 8×8 register tile, generic over the accumulator type — the
+/// exact accumulation order of the pre-dispatch engine (mul then add, no
+/// FMA contraction), which makes it the bitwise oracle for f32/f64.
+fn ukr_portable<T: Scalar>(kc: usize, ap: &[T], bp: &[T], acc: &mut [T]) {
+    assert!(ap.len() >= kc * 8 && bp.len() >= kc * 8 && acc.len() >= 64);
+    let mut tile = [[T::ZERO; 8]; 8];
+    for p in 0..kc {
+        let av: &[T; 8] = ap[p * 8..p * 8 + 8].try_into().unwrap();
+        let bv: &[T; 8] = bp[p * 8..p * 8 + 8].try_into().unwrap();
+        for (trow, &ai) in tile.iter_mut().zip(av.iter()) {
+            for (t, &bj) in trow.iter_mut().zip(bv.iter()) {
+                *t += ai * bj;
+            }
+        }
+    }
+    for (i, trow) in tile.iter().enumerate() {
+        acc[i * 8..i * 8 + 8].copy_from_slice(trow);
+    }
+}
+
+static PORTABLE_F32: KernelDesc<f32> =
+    KernelDesc { name: "portable", mr: 8, nr: 8, ukr: ukr_portable::<f32> };
+static PORTABLE_F64: KernelDesc<f64> =
+    KernelDesc { name: "portable", mr: 8, nr: 8, ukr: ukr_portable::<f64> };
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+mod x86 {
+    #[cfg(target_arch = "x86")]
+    use std::arch::x86::*;
+    #[cfg(target_arch = "x86_64")]
+    use std::arch::x86_64::*;
+
+    /// 8×8 f32 tile: one ymm accumulator per output row, inner loop is a
+    /// broadcast of A's column against B's packed row vector.
+    ///
+    /// # Safety
+    /// Requires AVX2 + FMA (guaranteed by the dispatch probe) and
+    /// `ap.len() >= kc*8`, `bp.len() >= kc*8`, `acc.len() >= 64`
+    /// (asserted by the safe wrapper).
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn ukr_avx2_impl(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [f32]) {
+        let mut r = [_mm256_setzero_ps(); 8];
+        for p in 0..kc {
+            let b = _mm256_loadu_ps(bp.as_ptr().add(p * 8));
+            let a = ap.as_ptr().add(p * 8);
+            for (i, ri) in r.iter_mut().enumerate() {
+                *ri = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(i)), b, *ri);
+            }
+        }
+        for (i, &ri) in r.iter().enumerate() {
+            _mm256_storeu_ps(acc.as_mut_ptr().add(i * 8), ri);
+        }
+    }
+
+    pub(super) fn ukr_avx2(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [f32]) {
+        assert!(ap.len() >= kc * 8 && bp.len() >= kc * 8 && acc.len() >= 64);
+        // Safety: this kernel is only reachable through the dispatch
+        // table, which requires the avx2+fma runtime probe to pass.
+        unsafe { ukr_avx2_impl(kc, ap, bp, acc) }
+    }
+
+    /// 16×16 f32 tile: one zmm accumulator per output row.
+    ///
+    /// # Safety
+    /// Requires AVX-512F and the same packed-strip bounds as AVX2,
+    /// widened to 16 (asserted by the safe wrapper).
+    #[cfg(all(target_arch = "x86_64", ntk_avx512))]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn ukr_avx512_impl(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [f32]) {
+        let mut r = [_mm512_setzero_ps(); 16];
+        for p in 0..kc {
+            let b = _mm512_loadu_ps(bp.as_ptr().add(p * 16));
+            let a = ap.as_ptr().add(p * 16);
+            for (i, ri) in r.iter_mut().enumerate() {
+                *ri = _mm512_fmadd_ps(_mm512_set1_ps(*a.add(i)), b, *ri);
+            }
+        }
+        for (i, &ri) in r.iter().enumerate() {
+            _mm512_storeu_ps(acc.as_mut_ptr().add(i * 16), ri);
+        }
+    }
+
+    #[cfg(all(target_arch = "x86_64", ntk_avx512))]
+    pub(super) fn ukr_avx512(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [f32]) {
+        assert!(ap.len() >= kc * 16 && bp.len() >= kc * 16 && acc.len() >= 256);
+        // Safety: dispatch requires the avx512f runtime probe to pass.
+        unsafe { ukr_avx512_impl(kc, ap, bp, acc) }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use std::arch::aarch64::*;
+
+    /// 8×8 f32 tile on 128-bit NEON: two q-register accumulators per
+    /// output row (columns 0..4 and 4..8), fused multiply-add.
+    ///
+    /// # Safety
+    /// Requires `ap.len() >= kc*8`, `bp.len() >= kc*8`, `acc.len() >= 64`
+    /// (asserted by the safe wrapper). NEON itself is baseline on
+    /// aarch64.
+    unsafe fn ukr_neon_impl(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [f32]) {
+        let mut r = [vdupq_n_f32(0.0); 16];
+        for p in 0..kc {
+            let b0 = vld1q_f32(bp.as_ptr().add(p * 8));
+            let b1 = vld1q_f32(bp.as_ptr().add(p * 8 + 4));
+            let a = ap.as_ptr().add(p * 8);
+            for i in 0..8 {
+                let ai = vdupq_n_f32(*a.add(i));
+                r[2 * i] = vfmaq_f32(r[2 * i], ai, b0);
+                r[2 * i + 1] = vfmaq_f32(r[2 * i + 1], ai, b1);
+            }
+        }
+        for i in 0..8 {
+            vst1q_f32(acc.as_mut_ptr().add(i * 8), r[2 * i]);
+            vst1q_f32(acc.as_mut_ptr().add(i * 8 + 4), r[2 * i + 1]);
+        }
+    }
+
+    pub(super) fn ukr_neon(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [f32]) {
+        assert!(ap.len() >= kc * 8 && bp.len() >= kc * 8 && acc.len() >= 64);
+        // Safety: bounds asserted above; NEON is mandatory on aarch64.
+        unsafe { ukr_neon_impl(kc, ap, bp, acc) }
+    }
+}
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+static AVX2_F32: KernelDesc<f32> =
+    KernelDesc { name: "avx2", mr: 8, nr: 8, ukr: x86::ukr_avx2 };
+#[cfg(all(target_arch = "x86_64", ntk_avx512))]
+static AVX512_F32: KernelDesc<f32> =
+    KernelDesc { name: "avx512", mr: 16, nr: 16, ukr: x86::ukr_avx512 };
+#[cfg(target_arch = "aarch64")]
+static NEON_F32: KernelDesc<f32> =
+    KernelDesc { name: "neon", mr: 8, nr: 8, ukr: arm::ukr_neon };
+
+/// Every f32 kernel this CPU can run, worst-to-best (last is the default
+/// pick). The portable kernel is always index 0.
+pub fn available_f32() -> Vec<&'static KernelDesc<f32>> {
+    let mut v: Vec<&'static KernelDesc<f32>> = vec![&PORTABLE_F32];
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma") {
+        v.push(&AVX2_F32);
+    }
+    #[cfg(all(target_arch = "x86_64", ntk_avx512))]
+    if std::arch::is_x86_feature_detected!("avx512f") {
+        v.push(&AVX512_F32);
+    }
+    #[cfg(target_arch = "aarch64")]
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        v.push(&NEON_F32);
+    }
+    v
+}
+
+/// Look up an available f32 kernel by `NTK_GEMM_KERNEL`-style name.
+pub fn by_name(name: &str) -> Option<&'static KernelDesc<f32>> {
+    available_f32().into_iter().find(|k| k.name == name)
+}
+
+/// The process-wide f32 kernel: resolved once, honoring `NTK_GEMM_KERNEL`
+/// if set (panics on an unknown/unsupported name — a forced kernel that
+/// silently fell back would invalidate what tests and benches measure),
+/// otherwise the best the CPU offers.
+pub fn dispatch_f32() -> &'static KernelDesc<f32> {
+    static ACTIVE: OnceLock<&'static KernelDesc<f32>> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        let avail = available_f32();
+        if let Ok(name) = std::env::var("NTK_GEMM_KERNEL") {
+            return avail.iter().copied().find(|k| k.name == name).unwrap_or_else(|| {
+                let names: Vec<&str> = avail.iter().map(|k| k.name).collect();
+                panic!(
+                    "NTK_GEMM_KERNEL={name}: not available on this CPU/build; \
+                     available kernels: {names:?}"
+                )
+            });
+        }
+        *avail.last().expect("portable kernel is always available")
+    })
+}
+
+/// The f64 kernel: always portable (see module docs).
+pub fn dispatch_f64() -> &'static KernelDesc<f64> {
+    &PORTABLE_F64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn portable_always_first_and_present() {
+        let avail = available_f32();
+        assert_eq!(avail[0].name, "portable");
+        assert!(by_name("portable").is_some());
+        assert!(by_name("no-such-kernel").is_none());
+    }
+
+    #[test]
+    fn dispatch_is_stable_and_available() {
+        let k = dispatch_f32();
+        assert_eq!(k.name, dispatch_f32().name, "dispatch must cache");
+        assert!(
+            available_f32().iter().any(|a| a.name == k.name),
+            "active kernel must come from the availability probe"
+        );
+        assert_eq!(dispatch_f64().name, "portable");
+    }
+
+    #[test]
+    fn every_kernel_matches_portable_on_one_tile() {
+        // Smoke-level agreement on a single zero-padded strip pair; the
+        // full adversarial sweep lives in the gemm property tests.
+        let portable = by_name("portable").unwrap();
+        for k in available_f32() {
+            let (mr, nr, kc) = (k.mr, k.nr, 5usize);
+            let ap: Vec<f32> = (0..kc * mr).map(|i| (i as f32 * 0.37).sin()).collect();
+            let bp: Vec<f32> = (0..kc * nr).map(|i| (i as f32 * 0.53).cos()).collect();
+            let mut acc = vec![f32::NAN; mr * nr];
+            k.call(kc, &ap, &bp, &mut acc);
+            // oracle at the same tile shape via scalar dot products
+            for i in 0..mr {
+                for j in 0..nr {
+                    let want: f32 = (0..kc).map(|p| ap[p * mr + i] * bp[p * nr + j]).sum();
+                    let got = acc[i * nr + j];
+                    let tol = 1e-5 * want.abs().max(1.0);
+                    assert!(
+                        (got - want).abs() <= tol,
+                        "kernel {} tile ({i},{j}): got {got}, want {want}",
+                        k.name
+                    );
+                }
+            }
+        }
+        // and the portable kernel is *bitwise* the scalar order
+        let (mr, nr, kc) = (portable.mr, portable.nr, 7usize);
+        let ap: Vec<f32> = (0..kc * mr).map(|i| (i as f32 * 0.11).sin()).collect();
+        let bp: Vec<f32> = (0..kc * nr).map(|i| (i as f32 * 0.29).cos()).collect();
+        let mut acc = vec![0.0f32; mr * nr];
+        portable.call(kc, &ap, &bp, &mut acc);
+        for i in 0..mr {
+            for j in 0..nr {
+                let mut want = 0.0f32;
+                for p in 0..kc {
+                    want += ap[p * mr + i] * bp[p * nr + j];
+                }
+                assert_eq!(acc[i * nr + j].to_bits(), want.to_bits(), "({i},{j})");
+            }
+        }
+    }
+}

@@ -6,7 +6,9 @@
 //! [`gemm`] (DESIGN.md §7). Feature matrices are f32 (they are large);
 //! the solver side accumulates in f64 (see `linalg::DMat`).
 
+pub mod bf16;
 pub mod gemm;
+pub mod kernels;
 
 use crate::util::par;
 use gemm::Op;

@@ -3,6 +3,7 @@
 
 use super::BatchTransform;
 use crate::rng::Rng;
+use crate::tensor::bf16::{self, Bf16};
 use crate::tensor::gemm::{self, Op};
 use crate::tensor::Mat;
 use crate::util::par;
@@ -14,6 +15,9 @@ pub struct GaussianJl {
     pub m: usize,
     /// m×d, row-major.
     g: Mat,
+    /// Opt-in bf16 mirror of `g` for the low-precision batched mix
+    /// (see [`GaussianJl::enable_bf16`]); never persisted.
+    g_bf16: Option<Vec<Bf16>>,
 }
 
 impl GaussianJl {
@@ -21,7 +25,26 @@ impl GaussianJl {
         let scale = 1.0 / (m as f32).sqrt();
         let mut g = Mat::from_vec(m, d, rng.gauss_vec(m * d));
         g.scale(scale);
-        GaussianJl { d, m, g }
+        GaussianJl { d, m, g, g_bf16: None }
+    }
+
+    /// Opt in to bf16-storage mixing: quantize the mixing matrix once
+    /// (round-to-nearest-even) and route [`apply_gemm_batch`] through the
+    /// engine's bf16 packing path (f32 accumulation). The per-row dot
+    /// paths (`apply`/`apply_into`/`BatchTransform`) stay full-precision;
+    /// the error budget is documented in DESIGN.md §7 and measured by
+    /// `examples/spectral_approximation.rs`.
+    ///
+    /// [`apply_gemm_batch`]: GaussianJl::apply_gemm_batch
+    pub fn enable_bf16(&mut self) {
+        if self.g_bf16.is_none() {
+            self.g_bf16 = Some(bf16::quantize(&self.g.data));
+        }
+    }
+
+    /// Whether the bf16 mixing path is active.
+    pub fn bf16_enabled(&self) -> bool {
+        self.g_bf16.is_some()
     }
 
     /// Apply into a caller-owned output row.
@@ -62,7 +85,12 @@ impl GaussianJl {
             "GaussianJl::apply_gemm_batch: output length mismatch"
         );
         let (n, m, d) = (x.rows, self.m, self.d);
-        gemm::gemm(n, m, d, &x.data, Op::NoTrans, &self.g.data, Op::Trans, out, false);
+        match &self.g_bf16 {
+            Some(gq) => gemm::gemm(n, m, d, &x.data, Op::NoTrans, gq, Op::Trans, out, false),
+            None => {
+                gemm::gemm(n, m, d, &x.data, Op::NoTrans, &self.g.data, Op::Trans, out, false)
+            }
+        }
     }
 }
 
@@ -143,6 +171,36 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "row {i}");
             }
         }
+    }
+
+    #[test]
+    fn bf16_mix_stays_within_budget_and_is_deterministic() {
+        let mut rng = Rng::new(85);
+        let (d, m, n) = (64, 48, 12);
+        let mut g = GaussianJl::new(d, m, &mut rng);
+        let x = Mat::from_vec(n, d, rng.gauss_vec(n * d));
+        let mut full = vec![0.0f32; n * m];
+        g.apply_gemm_batch(&x, &mut full);
+        assert!(!g.bf16_enabled());
+        g.enable_bf16();
+        assert!(g.bf16_enabled());
+        let mut lowp = vec![0.0f32; n * m];
+        g.apply_gemm_batch(&x, &mut lowp);
+        // quantizing only the mixing matrix: Frobenius relative error
+        // within the documented 2⁻⁷ budget (one rounded operand, so the
+        // expected error is half the two-operand GEMM bound).
+        let (mut err2, mut ref2) = (0.0f64, 0.0f64);
+        for (a, b) in lowp.iter().zip(&full) {
+            err2 += ((a - b) as f64).powi(2);
+            ref2 += (*b as f64).powi(2);
+        }
+        let rel = (err2 / ref2.max(f64::MIN_POSITIVE)).sqrt();
+        assert!(rel <= 1.0 / 128.0, "bf16 mix budget exceeded: rel={rel}");
+        assert!(rel > 0.0, "bf16 path must actually quantize");
+        // and the low-precision path is run-to-run deterministic
+        let mut again = vec![0.0f32; n * m];
+        g.apply_gemm_batch(&x, &mut again);
+        assert!(lowp.iter().zip(&again).all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 
     #[test]

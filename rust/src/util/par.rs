@@ -1,20 +1,34 @@
-//! Minimal data-parallel helpers over `std::thread::scope`.
+//! Minimal data-parallel helpers over the persistent worker pool
+//! ([`crate::util::pool`]).
 //!
 //! The offline registry has no rayon; this gives the library a
-//! `parallel_for`-style primitive: split an index range into chunks and run
-//! a closure per chunk on scoped threads. Used by the blocked matmul, the
-//! batch featurizers and the exact-kernel Gram loops.
+//! `parallel_for`-style primitive: split an index range (or the rows of a
+//! flat buffer) into contiguous chunks and run a closure per chunk. Used
+//! by the blocked matmul, the batch featurizers and the exact-kernel Gram
+//! loops. All helpers keep their historical signatures; since the
+//! raw-speed pass they dispatch onto one lazily-built process-wide pool
+//! instead of spawning scoped threads per call.
+
+use super::pool;
+use std::sync::{Mutex, OnceLock};
 
 /// Number of worker threads to use (respects `NTK_THREADS`).
+///
+/// Resolved once per process and cached: the env var is read on the first
+/// call only, so the value is stable for the process lifetime (it also
+/// sizes the persistent pool, which cannot resize).
 pub fn num_threads() -> usize {
-    if let Ok(v) = std::env::var("NTK_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            if n > 0 {
-                return n;
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("NTK_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                if n > 0 {
+                    return n;
+                }
             }
         }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    })
 }
 
 /// Run `f(chunk_start, chunk_end)` over `0..n` split into roughly equal
@@ -29,25 +43,19 @@ where
         return;
     }
     let chunk = n.div_ceil(nt);
-    std::thread::scope(|s| {
-        for t in 0..nt {
-            let lo = t * chunk;
-            let hi = ((t + 1) * chunk).min(n);
-            if lo >= hi {
-                break;
-            }
-            let fr = &f;
-            s.spawn(move || fr(lo, hi));
-        }
+    let n_chunks = n.div_ceil(chunk);
+    pool::run(n_chunks, |t| {
+        let lo = t * chunk;
+        let hi = ((t + 1) * chunk).min(n);
+        f(lo, hi);
     });
 }
 
 /// Map `f(i)` over `0..n` in parallel, collecting results in order.
 ///
-/// Each worker maps one contiguous chunk into its own Vec and the chunks
-/// are concatenated in order at join time — disjoint writes, no
-/// per-element locking (the old implementation took a `Mutex` per index,
-/// which serialized the hot path it was supposed to parallelize).
+/// Each chunk maps into its own slot (one uncontended lock per chunk,
+/// not per element) and the slots are concatenated in order at the end —
+/// disjoint writes, no per-element locking.
 pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -58,23 +66,17 @@ where
         return (0..n).map(f).collect();
     }
     let chunk = n.div_ceil(nt);
-    let fr = &f;
-    let mut out = Vec::with_capacity(n);
-    std::thread::scope(|s| {
-        let handles: Vec<_> = (0..nt)
-            .filter_map(|t| {
-                let lo = t * chunk;
-                let hi = ((t + 1) * chunk).min(n);
-                if lo >= hi {
-                    return None;
-                }
-                Some(s.spawn(move || (lo..hi).map(fr).collect::<Vec<T>>()))
-            })
-            .collect();
-        for h in handles {
-            out.extend(h.join().expect("par_map worker panicked"));
-        }
+    let n_chunks = n.div_ceil(chunk);
+    let slots: Vec<Mutex<Vec<T>>> = (0..n_chunks).map(|_| Mutex::new(Vec::new())).collect();
+    pool::run(n_chunks, |t| {
+        let lo = t * chunk;
+        let hi = ((t + 1) * chunk).min(n);
+        *slots[t].lock().unwrap() = (lo..hi).map(&f).collect();
     });
+    let mut out = Vec::with_capacity(n);
+    for s in slots {
+        out.append(&mut s.into_inner().expect("par_map slot poisoned"));
+    }
     out
 }
 
@@ -92,22 +94,9 @@ where
         }
         return;
     }
-    let chunk = n_rows.div_ceil(nt);
-    std::thread::scope(|s| {
-        let mut rest = data;
-        let mut row0 = 0usize;
-        while row0 < n_rows {
-            let rows_here = chunk.min(n_rows - row0);
-            let (head, tail) = rest.split_at_mut(rows_here * row_len);
-            rest = tail;
-            let fr = &f;
-            let base = row0;
-            s.spawn(move || {
-                for (k, row) in head.chunks_mut(row_len).enumerate() {
-                    fr(base + k, row);
-                }
-            });
-            row0 += rows_here;
+    par_row_blocks_t(data, n_rows, row_len, |row0, block| {
+        for (k, row) in block.chunks_mut(row_len).enumerate() {
+            f(row0 + k, row);
         }
     });
 }
@@ -139,18 +128,60 @@ where
         return;
     }
     let chunk = n_rows.div_ceil(nt);
-    std::thread::scope(|s| {
-        let mut rest = data;
-        let mut row0 = 0usize;
-        while row0 < n_rows {
-            let rows_here = chunk.min(n_rows - row0);
-            let (head, tail) = rest.split_at_mut(rows_here * row_len);
-            rest = tail;
-            let fr = &f;
-            let base = row0;
-            s.spawn(move || fr(base, head));
-            row0 += rows_here;
+    let mut bounds: Vec<usize> =
+        (0..).map(|t| t * chunk).take_while(|&lo| lo < n_rows).collect();
+    bounds.push(n_rows);
+    par_row_spans_t(data, row_len, &bounds, f);
+}
+
+/// Send-safe raw base pointer for handing disjoint row spans of one
+/// buffer to index-addressed pool tasks.
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// Parallel iteration over *caller-chosen* disjoint row spans of a flat
+/// row-major buffer. `bounds` is an ascending row-boundary list starting
+/// at 0 and ending at the row count (`bounds.len() - 1` spans); span `s`
+/// covers rows `bounds[s]..bounds[s+1]` and its worker is handed
+/// `(first_row, span_slice)`. This is the weighted-split shape the GEMM
+/// engine needs (SYRK slabs are cost-balanced, not equal-height).
+pub fn par_row_spans_t<T, F>(data: &mut [T], row_len: usize, bounds: &[usize], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n_spans = bounds.len().saturating_sub(1);
+    if n_spans == 0 {
+        return;
+    }
+    assert_eq!(bounds[0], 0, "par_row_spans: bounds must start at 0");
+    assert!(
+        bounds.windows(2).all(|w| w[0] <= w[1]),
+        "par_row_spans: bounds must ascend"
+    );
+    assert_eq!(
+        data.len(),
+        bounds[n_spans] * row_len,
+        "par_row_spans: shape mismatch"
+    );
+    if n_spans == 1 {
+        f(0, data);
+        return;
+    }
+    let base = SendPtr(data.as_mut_ptr());
+    pool::run(n_spans, |s| {
+        let (lo, hi) = (bounds[s], bounds[s + 1]);
+        if lo >= hi {
+            return;
         }
+        // Safety: bounds ascend, so spans are pairwise disjoint; the
+        // whole range is in-bounds by the length assert above, and the
+        // submitter (pool::run) blocks until every span is done.
+        let span = unsafe {
+            std::slice::from_raw_parts_mut(base.0.add(lo * row_len), (hi - lo) * row_len)
+        };
+        f(lo, span);
     });
 }
 
@@ -194,11 +225,22 @@ mod tests {
 
     #[test]
     fn par_map_without_default_bound() {
-        // T needs only Send now — e.g. Vec<usize> of varying lengths.
+        // T needs only Send — e.g. Vec<usize> of varying lengths.
         let v = par_map(17, |i| vec![i; i % 3]);
         for (i, x) in v.iter().enumerate() {
             assert_eq!(x.len(), i % 3);
             assert!(x.iter().all(|&e| e == i));
+        }
+    }
+
+    #[test]
+    fn num_threads_is_cached_and_positive() {
+        // Resolved once per process: repeated calls must agree (the value
+        // also sized the persistent pool, which cannot resize).
+        let first = num_threads();
+        assert!(first >= 1);
+        for _ in 0..3 {
+            assert_eq!(num_threads(), first);
         }
     }
 
@@ -217,6 +259,23 @@ mod tests {
             for (k, &x) in data.iter().enumerate() {
                 assert_eq!(x, k as f32, "n={n}");
             }
+        }
+    }
+
+    #[test]
+    fn par_row_spans_honors_uneven_bounds() {
+        let (n, m) = (23usize, 4usize);
+        let mut data = vec![0f32; n * m];
+        let bounds = [0usize, 1, 9, 9, 16, 23];
+        par_row_spans_t(&mut data, m, &bounds, |row0, span| {
+            for (k, row) in span.chunks_mut(m).enumerate() {
+                for (j, x) in row.iter_mut().enumerate() {
+                    *x = ((row0 + k) * m + j) as f32;
+                }
+            }
+        });
+        for (k, &x) in data.iter().enumerate() {
+            assert_eq!(x, k as f32);
         }
     }
 

@@ -1,0 +1,253 @@
+//! Lazily-initialized persistent worker pool — the process-wide thread
+//! substrate under every `util::par` helper (and through them the GEMM
+//! engine, SYRK, the batched transforms and the coordinator).
+//!
+//! The previous generation of `util::par` opened a fresh
+//! `std::thread::scope` per call, paying a spawn/join round trip on every
+//! GEMM slab split and every batched transform. This module replaces that
+//! with one set of workers for the life of the process:
+//!
+//! - **init**: the first parallel call builds `num_threads() - 1` workers
+//!   (named `ntk-pool-N`) via a `OnceLock`; with `NTK_THREADS=1` no pool
+//!   is built and every `run` executes serially on the caller.
+//! - **park**: idle workers block on a condvar; an idle pool costs nothing
+//!   but memory.
+//! - **run**: a job is `n_tasks` independent closure invocations. Workers
+//!   and the submitter claim task indices from a shared atomic counter, so
+//!   load balances at task granularity. The submitter always participates
+//!   — a `run` on an empty machine still makes progress, and a *nested*
+//!   `run` issued from inside a pool worker cannot deadlock because the
+//!   nested submitter drains any task no other worker claims.
+//! - **panic**: a panicking task is caught, the first payload is stored,
+//!   every remaining task still runs (bookkeeping stays consistent), and
+//!   the payload is re-raised on the submitting thread at join — same
+//!   observable behavior as the scoped-thread join it replaces. Workers
+//!   survive panics; the pool stays usable.
+//!
+//! Safety: `run` erases the borrow of the caller's closure to hand it to
+//! 'static workers. This is sound because `run` does not return until
+//! every one of its `n_tasks` claims has finished (tracked under the job
+//! mutex), after which no worker dereferences the closure again — late
+//! claim attempts observe `next >= n_tasks` and drop the job without
+//! touching the task pointer.
+
+use std::any::Any;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// One submitted parallel job: `n_tasks` closure invocations claimed off
+/// an atomic counter.
+struct Job {
+    /// Borrow-erased pointer to the submitter's task closure. Only valid
+    /// until the submitting `run` returns; guarded by the claim counter.
+    task: *const (dyn Fn(usize) + Sync),
+    n_tasks: usize,
+    /// Next unclaimed task index (claims may exceed `n_tasks`; such
+    /// claims are no-ops).
+    next: AtomicUsize,
+    done: Mutex<JobDone>,
+    done_cv: Condvar,
+}
+
+struct JobDone {
+    finished: usize,
+    panic: Option<Box<dyn Any + Send>>,
+}
+
+// Safety: the raw task pointer is only dereferenced by `run_tasks`, and
+// only for claims `< n_tasks`, all of which complete before the owning
+// `run` call returns; the closure itself is `Sync` so shared calls from
+// multiple workers are fine.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+struct Pool {
+    /// Jobs with potentially unclaimed tasks. Submitters push and (after
+    /// completion) remove their own job; workers only scan and clone.
+    queue: Mutex<Vec<Arc<Job>>>,
+    work_cv: Condvar,
+    workers: usize,
+}
+
+/// The global pool, built on first use. `None` when `num_threads() == 1`:
+/// no threads are ever spawned and every `run` is serial.
+fn get() -> Option<&'static Pool> {
+    static POOL: OnceLock<Option<&'static Pool>> = OnceLock::new();
+    *POOL.get_or_init(|| {
+        let workers = super::par::num_threads().saturating_sub(1);
+        if workers == 0 {
+            return None;
+        }
+        let pool: &'static Pool = Box::leak(Box::new(Pool {
+            queue: Mutex::new(Vec::new()),
+            work_cv: Condvar::new(),
+            workers,
+        }));
+        for i in 0..workers {
+            std::thread::Builder::new()
+                .name(format!("ntk-pool-{i}"))
+                .spawn(move || worker_loop(pool))
+                .expect("ntk pool: worker spawn failed");
+        }
+        Some(pool)
+    })
+}
+
+/// Number of persistent pool workers (0 under `NTK_THREADS=1`, where the
+/// pool is never built). Total parallelism is `workers() + 1`: the
+/// submitting thread always works too.
+pub fn workers() -> usize {
+    get().map_or(0, |p| p.workers)
+}
+
+fn worker_loop(pool: &'static Pool) {
+    loop {
+        let job = {
+            let mut q = pool.queue.lock().unwrap();
+            loop {
+                if let Some(j) =
+                    q.iter().find(|j| j.next.load(Ordering::Relaxed) < j.n_tasks)
+                {
+                    break j.clone();
+                }
+                q = pool.work_cv.wait(q).unwrap();
+            }
+        };
+        run_tasks(&job);
+    }
+}
+
+/// Claim and execute tasks until the job's counter is exhausted. Called
+/// by pool workers and by the submitting thread alike.
+fn run_tasks(job: &Job) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.n_tasks {
+            return;
+        }
+        // Safety: i < n_tasks, so the submitter is still inside `run`
+        // waiting on this claim — the closure borrow is live.
+        let task = unsafe { &*job.task };
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(i)));
+        let mut d = job.done.lock().unwrap();
+        if let Err(p) = r {
+            if d.panic.is_none() {
+                d.panic = Some(p);
+            }
+        }
+        d.finished += 1;
+        if d.finished == job.n_tasks {
+            job.done_cv.notify_all();
+        }
+    }
+}
+
+/// Run `f(0), f(1), …, f(n_tasks-1)` across the pool and the calling
+/// thread; returns when all invocations have finished. If any invocation
+/// panicked, the first payload is re-raised here. Serial (no pool touch)
+/// when `n_tasks <= 1` or the pool is disabled.
+pub fn run<F>(n_tasks: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n_tasks == 0 {
+        return;
+    }
+    let pool = match get() {
+        Some(p) if n_tasks > 1 => p,
+        _ => {
+            for i in 0..n_tasks {
+                f(i);
+            }
+            return;
+        }
+    };
+    let task_ref: &(dyn Fn(usize) + Sync) = &f;
+    // Erase the borrow (see module Safety note): the job is fully drained
+    // before this function returns, so the pointer never outlives `f`.
+    let task = task_ref as *const (dyn Fn(usize) + Sync);
+    let job = Arc::new(Job {
+        task,
+        n_tasks,
+        next: AtomicUsize::new(0),
+        done: Mutex::new(JobDone { finished: 0, panic: None }),
+        done_cv: Condvar::new(),
+    });
+    pool.queue.lock().unwrap().push(job.clone());
+    pool.work_cv.notify_all();
+    run_tasks(&job);
+    let panic = {
+        let mut d = job.done.lock().unwrap();
+        while d.finished < job.n_tasks {
+            d = job.done_cv.wait(d).unwrap();
+        }
+        d.panic.take()
+    };
+    let mut q = pool.queue.lock().unwrap();
+    if let Some(pos) = q.iter().position(|j| Arc::ptr_eq(j, &job)) {
+        q.remove(pos);
+    }
+    drop(q);
+    if let Some(p) = panic {
+        std::panic::resume_unwind(p);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn run_covers_every_index_exactly_once() {
+        for n in [0usize, 1, 2, 3, 17, 256, 1003] {
+            let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            run(n, |i| {
+                counts[i].fetch_add(1, Ordering::SeqCst);
+            });
+            assert!(
+                counts.iter().all(|c| c.load(Ordering::SeqCst) == 1),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn pool_size_is_num_threads_minus_one() {
+        // The submitting thread always participates, so the pool itself
+        // holds one fewer worker than the configured parallelism.
+        assert_eq!(workers(), super::super::par::num_threads().saturating_sub(1));
+    }
+
+    #[test]
+    fn nested_run_completes() {
+        // A task that itself submits a job: the inner submitter drains
+        // unclaimed inner tasks, so this terminates even when every pool
+        // worker is busy with outer tasks.
+        let total = AtomicUsize::new(0);
+        run(8, |_| {
+            run(8, |_| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn panics_propagate_and_pool_survives() {
+        let r = std::panic::catch_unwind(|| {
+            run(16, |i| {
+                if i == 7 {
+                    panic!("boom from task 7");
+                }
+            });
+        });
+        assert!(r.is_err(), "task panic must reach the submitter");
+        // the pool must remain fully usable afterwards
+        let hits = AtomicUsize::new(0);
+        run(32, |_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 32);
+    }
+}

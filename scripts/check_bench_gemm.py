@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Gate GEMM bench regressions against the committed baseline.
+
+Compares the per-shape ``speedup`` (packed engine vs the frozen seed
+loops, measured in the same process on the same machine — so the ratio
+is machine-portable even though raw GFLOP/s are not) from a freshly
+produced ``BENCH_gemm.json`` against ``rust/BENCH_gemm_baseline.json``.
+A shape regresses when its speedup falls more than TOLERANCE below the
+baseline floor. Exits non-zero listing every regression.
+
+Baseline floors are deliberately conservative (well under what the
+engine actually delivers) so the gate catches "someone broke the packed
+path / the pool / the dispatch" — not benchmark noise or a slower CI
+runner.
+
+Usage: check_bench_gemm.py <current BENCH_gemm.json> [baseline.json]
+"""
+
+import json
+import os
+import sys
+
+TOLERANCE = 0.20  # allow 20% under the baseline floor before failing
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def main():
+    if len(sys.argv) < 2:
+        print(__doc__)
+        return 2
+    current = load(sys.argv[1])
+    baseline_path = (
+        sys.argv[2]
+        if len(sys.argv) > 2
+        else os.path.join(
+            os.path.dirname(__file__), "..", "rust", "BENCH_gemm_baseline.json"
+        )
+    )
+    baseline = load(baseline_path)
+
+    cur_shapes = {s["name"]: s for s in current.get("shapes", [])}
+    failures = []
+    for base in baseline["shapes"]:
+        name = base["name"]
+        if name not in cur_shapes:
+            failures.append(f"{name}: missing from current bench output")
+            continue
+        floor = base["speedup"] * (1.0 - TOLERANCE)
+        got = cur_shapes[name]["speedup"]
+        status = "ok" if got >= floor else "REGRESSED"
+        print(
+            f"{name:>14}: speedup {got:6.2f}x  "
+            f"(floor {floor:.2f}x = baseline {base['speedup']:.2f}x - {TOLERANCE:.0%})  {status}"
+        )
+        if got < floor:
+            failures.append(
+                f"{name}: speedup {got:.2f}x < floor {floor:.2f}x"
+            )
+
+    # informational only: SIMD-vs-portable ratio is hardware-dependent
+    # (a CI runner without AVX2 legitimately reports nothing here), so it
+    # is printed but never gated.
+    ratio = current.get("simd_vs_portable")
+    if ratio is not None:
+        print(f"simd_vs_portable: {ratio:.2f}x (active: {current.get('active_kernel')})")
+
+    if failures:
+        print("\nGEMM bench regression gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("\nGEMM bench regression gate passed.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
