@@ -1,7 +1,7 @@
 //! Closed-loop load generator for the networked serving tier
-//! (DESIGN.md §10). Connects `--clients` concurrent [`TcpSession`]s to a
-//! running `serve --listen` daemon and hammers it for `--min-secs`,
-//! checking three properties the tier promises:
+//! (DESIGN.md §10). Connects `--clients` concurrent retrying sessions to
+//! a running `serve --listen` daemon and hammers it for `--min-secs`,
+//! checking four properties the tier promises:
 //!
 //! 1. **No corruption**: each client cycles a fixed pool of request
 //!    batches and pins the first response it sees per batch; every later
@@ -14,23 +14,29 @@
 //!    the closed loop and trip the wall-clock guard).
 //! 3. **Typed backpressure**: saturation surfaces as
 //!    `InferenceError::Rejected` with a retry hint, never a desync or a
-//!    protocol error; the generator honors the hint and retries.
+//!    protocol error; the [`RetryingClient`] honors the hint.
+//! 4. **Self-healing under chaos**: against a daemon running with
+//!    `NTK_FAULTS` set, injected wire faults and shard panics surface as
+//!    typed errors the retry policy absorbs — a resubmitted batch is
+//!    bit-identical because inference is pure. Mismatch counting is
+//!    unchanged, so this doubles as the chaos-mode corruption oracle.
 //!
-//! Exits nonzero on any mismatch or protocol failure, so shell drivers
-//! can gate on it directly.
+//! Exits nonzero on any mismatch or an exhausted retry budget, so shell
+//! drivers can gate on it directly.
 //!
 //! Run: `ntk-sketch serve --model m1 --listen 127.0.0.1:7071 &`
 //!      `cargo run --release --example serve_load -- --connect 127.0.0.1:7071`
 
 use ntk_sketch::rng::Rng;
-use ntk_sketch::serve::{InferenceError, InferenceSession, TcpSession};
+use ntk_sketch::serve::{InferenceSession, RetryPolicy, RetryingClient};
 use ntk_sketch::tensor::Mat;
 use ntk_sketch::util::cli::Args;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 struct ClientStats {
     ok: u64,
     rejected: u64,
+    reconnects: u64,
     mismatches: u64,
 }
 
@@ -47,21 +53,23 @@ fn main() {
     let min_secs = args.f64("min-secs", 5.0);
     let batch_rows = args.usize("rows", 8).max(1);
     let pool = args.usize("pool", 32).max(1);
+    let retries = args.usize("retries", 16).max(1) as u32;
 
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for c in 0..clients {
         let addr = addr.clone();
         handles.push(std::thread::spawn(move || {
-            client_loop(&addr, c as u64, batch_rows, pool, min_secs)
+            client_loop(&addr, c as u64, batch_rows, pool, min_secs, retries)
         }));
     }
-    let mut total = ClientStats { ok: 0, rejected: 0, mismatches: 0 };
+    let mut total = ClientStats { ok: 0, rejected: 0, reconnects: 0, mismatches: 0 };
     for h in handles {
         match h.join() {
             Ok(st) => {
                 total.ok += st.ok;
                 total.rejected += st.rejected;
+                total.reconnects += st.reconnects;
                 total.mismatches += st.mismatches;
             }
             Err(_) => {
@@ -72,11 +80,12 @@ fn main() {
     }
     let secs = t0.elapsed().as_secs_f64();
     println!(
-        "serve_load: {} ok ({:.0} req/s), {} rejected (retried), {} mismatches over {secs:.1}s \
-         with {clients} clients",
+        "serve_load: {} ok ({:.0} req/s), {} rejected (retried), {} reconnects, {} mismatches \
+         over {secs:.1}s with {clients} clients",
         total.ok,
         total.ok as f64 / secs,
         total.rejected,
+        total.reconnects,
         total.mismatches
     );
     if total.mismatches > 0 {
@@ -85,8 +94,18 @@ fn main() {
     }
 }
 
-fn client_loop(addr: &str, id: u64, batch_rows: usize, pool: usize, min_secs: f64) -> ClientStats {
-    let mut sess = TcpSession::connect(addr).unwrap_or_else(|e| {
+fn client_loop(
+    addr: &str,
+    id: u64,
+    batch_rows: usize,
+    pool: usize,
+    min_secs: f64,
+    retries: u32,
+) -> ClientStats {
+    // a generous budget: chaos mode is expected to tear sessions down,
+    // and the whole point is that the retry policy absorbs it
+    let policy = RetryPolicy { max_attempts: retries, seed: 0x5EED ^ id, ..RetryPolicy::default() };
+    let mut sess = RetryingClient::connect(addr, policy).unwrap_or_else(|e| {
         eprintln!("serve_load client {id}: connect {addr}: {e}");
         std::process::exit(1);
     });
@@ -98,7 +117,7 @@ fn client_loop(addr: &str, id: u64, batch_rows: usize, pool: usize, min_secs: f6
     let batches: Vec<Mat> =
         (0..pool).map(|_| Mat::from_vec(batch_rows, d, rng.gauss_vec(batch_rows * d))).collect();
     let mut first_seen: Vec<Option<Vec<f32>>> = vec![None; pool];
-    let mut st = ClientStats { ok: 0, rejected: 0, mismatches: 0 };
+    let mut st = ClientStats { ok: 0, rejected: 0, reconnects: 0, mismatches: 0 };
     let t0 = Instant::now();
     let mut k = 0usize;
     while t0.elapsed().as_secs_f64() < min_secs {
@@ -119,15 +138,16 @@ fn client_loop(addr: &str, id: u64, batch_rows: usize, pool: usize, min_secs: f6
                 }
                 st.ok += 1;
             }
-            Err(InferenceError::Rejected { retry_after_ms }) => {
-                st.rejected += 1;
-                std::thread::sleep(Duration::from_millis(retry_after_ms.max(1)));
-            }
             Err(e) => {
-                eprintln!("serve_load client {id}: {e}");
+                // the retrying client already exhausted its budget —
+                // under chaos that means the daemon is truly down, not
+                // merely faulting
+                eprintln!("serve_load client {id}: retry budget exhausted: {e}");
                 std::process::exit(1);
             }
         }
     }
+    st.rejected = sess.rejected();
+    st.reconnects = sess.reconnects();
     st
 }

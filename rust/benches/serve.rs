@@ -69,6 +69,12 @@ fn client_loop(addr: &str, seed: u64, rows: usize, secs: f64) -> (u64, u64) {
 }
 
 fn main() {
+    if std::env::var("NTK_FAULTS").is_ok() {
+        eprintln!(
+            "serve bench: NTK_FAULTS is set — numbers under fault injection are not \
+             comparable; skipping the JSON record"
+        );
+    }
     let d = 32;
     let rows = 4;
     let clients = 6;
@@ -86,7 +92,7 @@ fn main() {
             bench_model(d),
             None,
             "127.0.0.1:0",
-            ServeOptions { workers, queue_depth: 4, poll_ms: 0, max_conns: 64 },
+            ServeOptions { workers, queue_depth: 4, poll_ms: 0, max_conns: 64, ..ServeOptions::default() },
         )
         .expect("start server");
         let addr = server.local_addr().to_string();
@@ -131,6 +137,9 @@ fn main() {
     top.insert("rows_per_request".to_string(), Json::Num(rows as f64));
     top.insert("secs_per_config".to_string(), Json::Num(secs));
     top.insert("configs".to_string(), Json::Arr(configs));
+    if std::env::var("NTK_FAULTS").is_ok() {
+        return;
+    }
     let path = std::env::var("NTK_SERVE_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_serve.json".to_string());
     if let Err(e) = std::fs::write(&path, Json::Obj(top).to_string()) {

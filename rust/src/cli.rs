@@ -82,6 +82,9 @@ pub struct PredictCfg {
     pub seed: Option<u64>,
     pub connect: Option<String>,
     pub models_dir: Option<String>,
+    /// Retry budget for `--connect` (capped-backoff attempts per batch
+    /// and per connect; 1 disables retries).
+    pub retries: u32,
 }
 
 /// `serve` — four modes, validated at parse time:
@@ -234,7 +237,12 @@ fn train_cfg(args: &Args) -> Result<TrainCfg, String> {
 }
 
 fn predict_cfg(args: &Args) -> Result<PredictCfg, String> {
-    check_known(args, "predict", &["model", "version", "n", "seed", "connect", "models-dir"], &[])?;
+    check_known(
+        args,
+        "predict",
+        &["model", "version", "n", "seed", "connect", "models-dir", "retries"],
+        &[],
+    )?;
     let model = args
         .get("model")
         .ok_or_else(|| "predict needs --model NAME".to_string())?
@@ -246,6 +254,7 @@ fn predict_cfg(args: &Args) -> Result<PredictCfg, String> {
         seed: parse_opt_u64(args, "seed")?,
         connect: args.get("connect").map(str::to_string),
         models_dir: args.get("models-dir").map(str::to_string),
+        retries: parse_u64(args, "retries", 8)? as u32,
     })
 }
 
@@ -496,9 +505,16 @@ mod tests {
             panic!()
         };
         assert_eq!((p.model.as_str(), p.version), ("m1", Some(3)));
+        assert_eq!(p.retries, 8, "default retry budget");
         assert!(parse(&["predict", "--model", "m1", "--version", "vx"])
             .unwrap_err()
             .contains("bad --version"));
+        let Command::Predict(p) =
+            parse(&["predict", "--model", "m1", "--retries", "3"]).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(p.retries, 3);
     }
 
     #[test]

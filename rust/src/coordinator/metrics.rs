@@ -85,6 +85,8 @@ pub struct Metrics {
     pub pad_rows: AtomicU64,
     /// requests refused by admission control (queues full)
     pub rejected: AtomicU64,
+    /// requests failed by a caught worker panic (the worker recovered)
+    pub panics: AtomicU64,
 }
 
 impl Metrics {
@@ -104,6 +106,7 @@ impl Metrics {
             rows: Self::get(&self.rows),
             pad_rows: Self::get(&self.pad_rows),
             rejected: Self::get(&self.rejected),
+            panics: Self::get(&self.panics),
             req_p50_us: self.request_latency.quantile_us(0.5),
             req_p99_us: self.request_latency.quantile_us(0.99),
             req_mean_us: self.request_latency.mean_us(),
@@ -122,6 +125,7 @@ pub struct MetricsSnapshot {
     pub rows: u64,
     pub pad_rows: u64,
     pub rejected: u64,
+    pub panics: u64,
     pub req_p50_us: u64,
     pub req_p99_us: u64,
     pub req_mean_us: f64,
@@ -149,6 +153,7 @@ impl MetricsSnapshot {
         m.insert("rows".into(), Json::Num(self.rows as f64));
         m.insert("pad_rows".into(), Json::Num(self.pad_rows as f64));
         m.insert("rejected".into(), Json::Num(self.rejected as f64));
+        m.insert("panics".into(), Json::Num(self.panics as f64));
         m.insert("req_p50_us".into(), Json::Num(self.req_p50_us as f64));
         m.insert("req_p99_us".into(), Json::Num(self.req_p99_us as f64));
         m.insert("req_mean_us".into(), Json::Num(self.req_mean_us));
@@ -163,6 +168,7 @@ impl MetricsSnapshot {
             rows: field_u64(v, "rows")?,
             pad_rows: field_u64(v, "pad_rows")?,
             rejected: field_u64(v, "rejected")?,
+            panics: field_u64(v, "panics")?,
             req_p50_us: field_u64(v, "req_p50_us")?,
             req_p99_us: field_u64(v, "req_p99_us")?,
             req_mean_us: field_f64(v, "req_mean_us")?,
@@ -173,13 +179,14 @@ impl MetricsSnapshot {
     /// One-line human rendering (what the CLI prints after a serve run).
     pub fn summary(&self) -> String {
         format!(
-            "requests={} batches={} rows={} pad={} rejected={} \
+            "requests={} batches={} rows={} pad={} rejected={} panics={} \
              req_p50={}us req_p99={}us exec_mean={:.0}us",
             self.requests,
             self.batches,
             self.rows,
             self.pad_rows,
             self.rejected,
+            self.panics,
             self.req_p50_us,
             self.req_p99_us,
             self.exec_mean_us,
@@ -196,6 +203,7 @@ impl MetricsSnapshot {
             rows: 0,
             pad_rows: 0,
             rejected: 0,
+            panics: 0,
             req_p50_us: 0,
             req_p99_us: 0,
             req_mean_us: 0.0,
@@ -209,6 +217,7 @@ impl MetricsSnapshot {
             total.rows += p.rows;
             total.pad_rows += p.pad_rows;
             total.rejected += p.rejected;
+            total.panics += p.panics;
             total.req_p50_us = total.req_p50_us.max(p.req_p50_us);
             total.req_p99_us = total.req_p99_us.max(p.req_p99_us);
             total.req_mean_us += p.req_mean_us * p.requests as f64;
@@ -290,6 +299,7 @@ mod tests {
             rows: 10,
             pad_rows: 0,
             rejected: 1,
+            panics: 1,
             req_p50_us: 100,
             req_p99_us: 400,
             req_mean_us: 100.0,

@@ -1,0 +1,500 @@
+//! Seeded, deterministic fault injection.
+//!
+//! Production robustness is only provable if failures can be *manufactured
+//! on demand and replayed bit-identically*. This module is the crate-wide
+//! switchboard for that: every stateful boundary (model-store writes,
+//! registry pointer advancement, wire I/O, shard workers, hot-swap loads)
+//! calls [`inject`] with a named site, and gets back `Some(Fault)` when
+//! the active plan says that visit should fail.
+//!
+//! Design contract:
+//!
+//! - **Zero cost when unset.** The first [`inject`] call reads `NTK_FAULTS`
+//!   once (a `OnceLock`); when the variable is absent the whole subsystem
+//!   collapses to one relaxed atomic load per site visit.
+//! - **Deterministic.** Each site keeps its own visit counter; the fire
+//!   decision for visit `k` of site `s` under seed `σ` is a pure function
+//!   of `(σ, s, k)` — independent of thread interleaving *given the same
+//!   per-site visit order*. A failing run prints its `(site, visit, seed)`
+//!   triple; re-running with `site:at=<visit>` (or the same seed) replays
+//!   the exact same failure.
+//! - **Test-safe.** Plans are process-global, so only the dedicated
+//!   serialized torture tests ([`install`]/[`clear`]) and env-configured
+//!   binaries use the global switch; unit tests exercise [`FaultPlan`]
+//!   instances directly.
+//!
+//! Grammar (`NTK_FAULTS`, sites separated by `;`):
+//!
+//! ```text
+//! NTK_FAULTS="store.write:p=0.01;wire.read:p=0.005;shard.panic:at=3"
+//! NTK_FAULT_SEED=42
+//! ```
+//!
+//! Per-site keys: `p=<f64 in [0,1]>` (fire probability per visit),
+//! `at=<k>` (fire exactly on visit `k`, 0-based), `max=<n>` (cap total
+//! injections at this site). `at` and `p` compose: `at` fires its visit
+//! unconditionally, `p` adds probabilistic fires elsewhere.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::rng::Rng;
+
+/// Every injection site wired through the crate. [`FaultPlan::parse`]
+/// refuses names outside this list so typos fail loudly, and the docs /
+/// DESIGN.md table stay the single source of truth.
+pub const SITES: &[&str] = &[
+    "store.write",    // codec write_atomic: torn short write to the tmp file
+    "store.fsync",    // codec write_atomic: fsync of the tmp file fails
+    "store.rename",   // codec write_atomic: crash before tmp -> final rename
+    "registry.latest", // registry save: crash before the LATEST pointer write
+    "wire.read",      // serve wire: inbound frame read fails mid-frame
+    "wire.write",     // serve wire: outbound frame truncated after partial header
+    "wire.stall",     // serve wire: sender stalls between header and payload
+    "shard.panic",    // router shard worker: induced panic mid-request
+    "swap.load",      // registry watcher: loading the new version fails
+];
+
+/// Configuration for one site within a plan.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SiteCfg {
+    /// Probability in `[0, 1]` that any given visit fires.
+    pub p: f64,
+    /// Fire unconditionally on exactly this (0-based) visit index.
+    pub at: Option<u64>,
+    /// Cap on the total number of injections at this site.
+    pub max: Option<u64>,
+}
+
+/// Runtime state for one configured site.
+struct SiteState {
+    name: &'static str,
+    cfg: SiteCfg,
+    visits: AtomicU64,
+    injected: AtomicU64,
+}
+
+/// A parsed fault plan: seed plus per-site configs with visit counters.
+pub struct FaultPlan {
+    seed: u64,
+    sites: Vec<SiteState>,
+}
+
+/// One injected fault, returned to the site so it can construct its
+/// failure (error return, short write, stall, panic...).
+#[derive(Clone, Copy, Debug)]
+pub struct Fault {
+    /// The site that fired (always one of [`SITES`]).
+    pub site: &'static str,
+    /// 0-based visit index at which it fired — `site:at=<visit>` replays it.
+    pub visit: u64,
+    /// The plan seed active when it fired.
+    pub seed: u64,
+    /// A deterministic 64-bit draw for fault *magnitudes* (how short a
+    /// torn write is, how long a stall lasts) — same `(seed, site, visit)`
+    /// always yields the same draw.
+    pub draw: u64,
+}
+
+impl Fault {
+    /// Human-readable one-liner carrying the replay triple.
+    pub fn msg(&self) -> String {
+        format!(
+            "injected fault at {} (visit {}, seed {})",
+            self.site, self.visit, self.seed
+        )
+    }
+
+    /// The fault as an `std::io::Error` (the common shape at I/O sites).
+    pub fn io_error(&self) -> std::io::Error {
+        std::io::Error::other(self.msg())
+    }
+
+    /// The magnitude draw as a fraction in `[0, 1)`.
+    pub fn frac(&self) -> f64 {
+        (self.draw >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+}
+
+/// Per-visit deterministic draws: `(fire, magnitude)`. Pure in
+/// `(seed, site, visit)` — this is what makes replay exact.
+fn draws(seed: u64, site: &str, visit: u64) -> (u64, u64) {
+    // FNV-1a over the site name decorrelates sites sharing a seed.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in site.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    let mut r = Rng::new(seed ^ h ^ visit.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    (r.next_u64(), r.next_u64())
+}
+
+impl FaultPlan {
+    /// Parse a spec like `"store.write:p=0.01;shard.panic:at=3,max=1"`.
+    /// Unknown sites, unknown keys, malformed values and duplicate sites
+    /// are refusals, not silent no-ops.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan, String> {
+        let mut sites: Vec<SiteState> = Vec::new();
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, kvs) = part
+                .split_once(':')
+                .ok_or_else(|| format!("fault spec `{part}`: expected SITE:KEY=VALUE"))?;
+            let name = name.trim();
+            let canonical = *SITES.iter().find(|s| **s == name).ok_or_else(|| {
+                format!("unknown fault site `{name}`; known sites: {}", SITES.join(", "))
+            })?;
+            if sites.iter().any(|s| s.name == canonical) {
+                return Err(format!("duplicate fault site `{name}`"));
+            }
+            let mut cfg = SiteCfg::default();
+            for kv in kvs.split(',') {
+                let kv = kv.trim();
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| format!("fault spec `{part}`: `{kv}` is not KEY=VALUE"))?;
+                match k.trim() {
+                    "p" => {
+                        let p: f64 = v
+                            .trim()
+                            .parse()
+                            .map_err(|_| format!("fault site `{name}`: bad p `{v}`"))?;
+                        if !(0.0..=1.0).contains(&p) {
+                            return Err(format!(
+                                "fault site `{name}`: p={p} outside [0, 1]"
+                            ));
+                        }
+                        cfg.p = p;
+                    }
+                    "at" => {
+                        let at: u64 = v
+                            .trim()
+                            .parse()
+                            .map_err(|_| format!("fault site `{name}`: bad at `{v}`"))?;
+                        cfg.at = Some(at);
+                    }
+                    "max" => {
+                        let max: u64 = v
+                            .trim()
+                            .parse()
+                            .map_err(|_| format!("fault site `{name}`: bad max `{v}`"))?;
+                        cfg.max = Some(max);
+                    }
+                    other => {
+                        return Err(format!(
+                            "fault site `{name}`: unknown key `{other}` (want p/at/max)"
+                        ))
+                    }
+                }
+            }
+            sites.push(SiteState {
+                name: canonical,
+                cfg,
+                visits: AtomicU64::new(0),
+                injected: AtomicU64::new(0),
+            });
+        }
+        if sites.is_empty() {
+            return Err("empty fault spec".into());
+        }
+        Ok(FaultPlan { seed, sites })
+    }
+
+    /// Record a visit to `site` and decide whether it fires. Counters are
+    /// per-plan, so plan instances in tests never interfere.
+    pub fn inject(&self, site: &str) -> Option<Fault> {
+        let s = self.sites.iter().find(|s| s.name == site)?;
+        let visit = s.visits.fetch_add(1, Ordering::Relaxed);
+        if let Some(max) = s.cfg.max {
+            if s.injected.load(Ordering::Relaxed) >= max {
+                return None;
+            }
+        }
+        let (fire_draw, mag_draw) = draws(self.seed, s.name, visit);
+        let fire = s.cfg.at == Some(visit)
+            || (s.cfg.p > 0.0
+                && ((fire_draw >> 11) as f64 * (1.0 / (1u64 << 53) as f64)) < s.cfg.p);
+        if !fire {
+            return None;
+        }
+        s.injected.fetch_add(1, Ordering::Relaxed);
+        Some(Fault { site: s.name, visit, seed: self.seed, draw: mag_draw })
+    }
+
+    /// Total visits recorded at `site` (0 when the site is unconfigured).
+    pub fn visits(&self, site: &str) -> u64 {
+        self.sites
+            .iter()
+            .find(|s| s.name == site)
+            .map_or(0, |s| s.visits.load(Ordering::Relaxed))
+    }
+
+    /// Total injections fired at `site`.
+    pub fn injected(&self, site: &str) -> u64 {
+        self.sites
+            .iter()
+            .find(|s| s.name == site)
+            .map_or(0, |s| s.injected.load(Ordering::Relaxed))
+    }
+
+    /// Compact `site:p=..,at=..` description for banners.
+    pub fn describe(&self) -> String {
+        let mut out = String::new();
+        for s in &self.sites {
+            if !out.is_empty() {
+                out.push(';');
+            }
+            out.push_str(s.name);
+            out.push(':');
+            let mut first = true;
+            if s.cfg.p > 0.0 {
+                out.push_str(&format!("p={}", s.cfg.p));
+                first = false;
+            }
+            if let Some(at) = s.cfg.at {
+                if !first {
+                    out.push(',');
+                }
+                out.push_str(&format!("at={at}"));
+                first = false;
+            }
+            if let Some(max) = s.cfg.max {
+                if !first {
+                    out.push(',');
+                }
+                out.push_str(&format!("max={max}"));
+            }
+            let _ = first;
+        }
+        out
+    }
+}
+
+/// Fast-path gate: `false` ⇒ `inject` is one relaxed load.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// The active global plan (torture tests swap this; binaries set it once
+/// from env).
+static PLAN: RwLock<Option<Arc<FaultPlan>>> = RwLock::new(None);
+/// One-time env read.
+static ENV_INIT: OnceLock<()> = OnceLock::new();
+
+fn env_init() {
+    ENV_INIT.get_or_init(|| {
+        let spec = match std::env::var("NTK_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => s,
+            _ => return,
+        };
+        let seed = std::env::var("NTK_FAULT_SEED")
+            .ok()
+            .and_then(|s| s.trim().parse::<u64>().ok())
+            .unwrap_or(0);
+        match FaultPlan::parse(&spec, seed) {
+            Ok(plan) => {
+                eprintln!(
+                    "ntk fault injection ACTIVE: {} (seed {seed}); failing visits \
+                     replay with NTK_FAULTS=\"<site>:at=<visit>\" or the same seed",
+                    plan.describe()
+                );
+                *PLAN.write().unwrap() = Some(Arc::new(plan));
+                ENABLED.store(true, Ordering::Release);
+            }
+            Err(e) => panic!("NTK_FAULTS parse error: {e}"),
+        }
+    });
+}
+
+/// The crate-wide injection point. Sites call this with their name from
+/// [`SITES`]; `None` means proceed normally. With no plan installed this
+/// is one `OnceLock` check + one relaxed atomic load.
+pub fn inject(site: &str) -> Option<Fault> {
+    env_init();
+    if !ENABLED.load(Ordering::Acquire) {
+        return None;
+    }
+    let plan = PLAN.read().unwrap().clone()?;
+    let fault = plan.inject(site)?;
+    eprintln!("ntk fault: {}", fault.msg());
+    Some(fault)
+}
+
+/// Install a plan globally (torture tests; serialized by the caller).
+pub fn install(spec: &str, seed: u64) -> Result<(), String> {
+    env_init();
+    let plan = FaultPlan::parse(spec, seed)?;
+    *PLAN.write().unwrap() = Some(Arc::new(plan));
+    ENABLED.store(true, Ordering::Release);
+    Ok(())
+}
+
+/// Remove any globally installed plan (injection reverts to no-op).
+pub fn clear() {
+    ENABLED.store(false, Ordering::Release);
+    *PLAN.write().unwrap() = None;
+}
+
+/// Whether a global plan is currently active.
+pub fn active() -> bool {
+    env_init();
+    ENABLED.load(Ordering::Acquire)
+}
+
+/// Visits recorded at `site` by the *global* plan (0 when inactive).
+/// The torture test uses this to count numbered sites in a dry run.
+pub fn visits(site: &str) -> u64 {
+    if !ENABLED.load(Ordering::Acquire) {
+        return 0;
+    }
+    PLAN.read().unwrap().as_ref().map_or(0, |p| p.visits(site))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_refuses_garbage() {
+        assert!(FaultPlan::parse("", 0).is_err(), "empty spec");
+        assert!(FaultPlan::parse("nope.site:p=0.5", 0).is_err(), "unknown site");
+        assert!(FaultPlan::parse("store.write", 0).is_err(), "missing config");
+        assert!(FaultPlan::parse("store.write:p=1.5", 0).is_err(), "p > 1");
+        assert!(FaultPlan::parse("store.write:p=-0.1", 0).is_err(), "p < 0");
+        assert!(FaultPlan::parse("store.write:zap=1", 0).is_err(), "unknown key");
+        assert!(FaultPlan::parse("store.write:p", 0).is_err(), "key without value");
+        assert!(
+            FaultPlan::parse("store.write:p=0.1;store.write:p=0.2", 0).is_err(),
+            "duplicate site"
+        );
+    }
+
+    #[test]
+    fn parse_accepts_full_grammar() {
+        let plan =
+            FaultPlan::parse("store.write:p=0.25,max=2; wire.read:at=3 ;shard.panic:p=1", 7)
+                .unwrap();
+        assert_eq!(plan.sites.len(), 3);
+        assert_eq!(plan.sites[0].cfg, SiteCfg { p: 0.25, at: None, max: Some(2) });
+        assert_eq!(plan.sites[1].cfg, SiteCfg { p: 0.0, at: Some(3), max: None });
+        assert_eq!(plan.sites[2].cfg, SiteCfg { p: 1.0, at: None, max: None });
+    }
+
+    #[test]
+    fn at_fires_exactly_once_at_the_named_visit() {
+        let plan = FaultPlan::parse("wire.read:at=2", 0).unwrap();
+        let fired: Vec<bool> = (0..6).map(|_| plan.inject("wire.read").is_some()).collect();
+        assert_eq!(fired, [false, false, true, false, false, false]);
+        assert_eq!(plan.visits("wire.read"), 6);
+        assert_eq!(plan.injected("wire.read"), 1);
+    }
+
+    #[test]
+    fn unconfigured_site_never_fires_but_costs_nothing() {
+        let plan = FaultPlan::parse("wire.read:at=0", 0).unwrap();
+        assert!(plan.inject("store.write").is_none());
+        assert_eq!(plan.visits("store.write"), 0);
+    }
+
+    #[test]
+    fn p_zero_never_fires_p_one_always_fires() {
+        let never = FaultPlan::parse("shard.panic:p=0", 1).unwrap();
+        assert!((0..100).all(|_| never.inject("shard.panic").is_none()));
+        let always = FaultPlan::parse("shard.panic:p=1", 1).unwrap();
+        assert!((0..100).all(|_| always.inject("shard.panic").is_some()));
+    }
+
+    #[test]
+    fn max_caps_total_injections() {
+        let plan = FaultPlan::parse("shard.panic:p=1,max=3", 9).unwrap();
+        let fired = (0..10).filter(|_| plan.inject("shard.panic").is_some()).count();
+        assert_eq!(fired, 3);
+        assert_eq!(plan.injected("shard.panic"), 3);
+    }
+
+    #[test]
+    fn probabilistic_schedule_replays_bit_identically() {
+        let spec = "store.write:p=0.37;wire.read:p=0.11";
+        let a = FaultPlan::parse(spec, 0xDEAD_BEEF).unwrap();
+        let b = FaultPlan::parse(spec, 0xDEAD_BEEF).unwrap();
+        for _ in 0..500 {
+            let fa = a.inject("store.write");
+            let fb = b.inject("store.write");
+            assert_eq!(fa.is_some(), fb.is_some());
+            if let (Some(fa), Some(fb)) = (fa, fb) {
+                assert_eq!(fa.visit, fb.visit);
+                assert_eq!(fa.draw, fb.draw, "magnitude draws must replay");
+            }
+            assert_eq!(a.inject("wire.read").is_some(), b.inject("wire.read").is_some());
+        }
+        // ... and a different seed gives a different schedule.
+        let c = FaultPlan::parse(spec, 0xDEAD_BEEF + 1).unwrap();
+        let differs = (0..500).any(|_| {
+            let fa = FaultPlan::parse(spec, 0xDEAD_BEEF).unwrap();
+            let _ = fa;
+            c.inject("store.write").is_some() != a.inject("store.write").is_some()
+        });
+        assert!(differs, "schedules under different seeds should diverge");
+    }
+
+    #[test]
+    fn a_fired_visit_replays_via_at() {
+        // Find a probabilistic fire, then replay that exact visit with at=.
+        let plan = FaultPlan::parse("store.write:p=0.2", 0x5EED).unwrap();
+        let mut fired_visit = None;
+        for _ in 0..200 {
+            if let Some(f) = plan.inject("store.write") {
+                fired_visit = Some(f.visit);
+                break;
+            }
+        }
+        let visit = fired_visit.expect("p=0.2 should fire within 200 visits");
+        let replay =
+            FaultPlan::parse(&format!("store.write:at={visit}"), 0x5EED).unwrap();
+        let mut got = None;
+        for _ in 0..=visit {
+            if let Some(f) = replay.inject("store.write") {
+                got = Some(f);
+            }
+        }
+        let got = got.expect("replay plan must fire at the recorded visit");
+        assert_eq!(got.visit, visit);
+    }
+
+    #[test]
+    fn sites_are_decorrelated() {
+        // Same seed, same visit indices — different sites must not fire in
+        // lockstep (FNV site hash separates their streams).
+        let plan = FaultPlan::parse("store.write:p=0.5;wire.read:p=0.5", 42).unwrap();
+        let pairs: Vec<(bool, bool)> = (0..200)
+            .map(|_| {
+                (plan.inject("store.write").is_some(), plan.inject("wire.read").is_some())
+            })
+            .collect();
+        assert!(pairs.iter().any(|&(a, b)| a != b), "streams must decorrelate");
+    }
+
+    #[test]
+    fn describe_round_trips_through_parse() {
+        let plan = FaultPlan::parse("store.write:p=0.25,max=2;wire.read:at=3", 7).unwrap();
+        let described = plan.describe();
+        let re = FaultPlan::parse(&described, 7).unwrap();
+        assert_eq!(re.sites.len(), plan.sites.len());
+        for (a, b) in plan.sites.iter().zip(re.sites.iter()) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.cfg, b.cfg);
+        }
+    }
+
+    #[test]
+    fn fault_helpers_carry_the_replay_triple() {
+        let plan = FaultPlan::parse("store.write:at=0", 99).unwrap();
+        let f = plan.inject("store.write").unwrap();
+        assert_eq!(f.site, "store.write");
+        assert_eq!(f.seed, 99);
+        let msg = f.msg();
+        assert!(msg.contains("store.write") && msg.contains("visit 0") && msg.contains("99"));
+        assert_eq!(f.io_error().to_string(), msg);
+        assert!((0.0..1.0).contains(&f.frac()));
+    }
+}

@@ -54,6 +54,7 @@
 
 pub mod util;
 pub mod rng;
+pub mod fault;
 pub mod tensor;
 pub mod linalg;
 pub mod transforms;

@@ -59,7 +59,8 @@ use ntk_sketch::regression::{accuracy, mse, RidgeRegressor};
 use ntk_sketch::rng::Rng;
 use ntk_sketch::runtime::{artifacts_dir, pjrt_enabled, Engine};
 use ntk_sketch::serve::{
-    DirectSession, InferenceSession, ServeOptions, TcpServer, TcpSession, MAX_ROWS_PER_REQUEST,
+    DirectSession, InferenceSession, RetryPolicy, RetryingClient, ServeOptions, TcpServer,
+    TcpSession, MAX_ROWS_PER_REQUEST,
 };
 use ntk_sketch::tensor::Mat;
 use ntk_sketch::transforms::LeafMode;
@@ -519,7 +520,10 @@ fn predict(cfg: &PredictCfg) {
     // the crc line below is a bit-identity check across the two paths
     let mut session: Box<dyn InferenceSession> = match &cfg.connect {
         Some(addr) => {
-            let s = TcpSession::connect(addr).unwrap_or_else(|e| fail(e));
+            // retrying client: transient refusals and transport faults are
+            // absorbed by capped backoff instead of failing the whole eval
+            let policy = RetryPolicy { max_attempts: cfg.retries.max(1), ..RetryPolicy::default() };
+            let s = RetryingClient::connect(addr, policy).unwrap_or_else(|e| fail(e));
             if s.input_dim() != meta.input_dim || s.output_dim() != meta.outputs {
                 fail(format!(
                     "server at {addr} serves {}→{}, model `{}` expects {}→{}",
@@ -640,7 +644,11 @@ fn serve_daemon(cfg: &ServeCfg, bind: &str) {
         queue_depth: cfg.queue_depth,
         poll_ms: cfg.poll_ms,
         max_conns: cfg.max_conns,
+        ..ServeOptions::default()
     };
+    if ntk_sketch::fault::active() {
+        eprintln!("serve: NTK_FAULTS active — this daemon injects faults (chaos mode)");
+    }
     let server = TcpServer::start(model, watch, bind, opts).unwrap_or_else(|e| fail(e));
     let addr = server.local_addr();
     println!(

@@ -257,9 +257,29 @@ pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<(), ModelError> {
         TMP_SEQ.fetch_add(1, Ordering::Relaxed)
     ));
     let mut f = std::fs::File::create(&tmp)?;
+    // fault site `store.write`: simulate a crash mid-write — a torn
+    // prefix of the payload lands in the tmp file and the write errors.
+    // The final `path` is untouched (tmp never renamed), which is the
+    // invariant the torture test pins.
+    if let Some(fault) = crate::fault::inject("store.write") {
+        let cut = ((fault.frac() * bytes.len() as f64) as usize)
+            .min(bytes.len().saturating_sub(1));
+        let _ = f.write_all(&bytes[..cut]);
+        return Err(ModelError::Io(fault.msg()));
+    }
     f.write_all(bytes)?;
+    // fault site `store.fsync`: the data write succeeded but the fsync
+    // fails — the caller must treat the artifact as not persisted.
+    if let Some(fault) = crate::fault::inject("store.fsync") {
+        return Err(ModelError::Io(fault.msg()));
+    }
     f.sync_all()?;
     drop(f);
+    // fault site `store.rename`: crash after a fully-synced tmp file but
+    // before the rename — the final path never sees a partial artifact.
+    if let Some(fault) = crate::fault::inject("store.rename") {
+        return Err(ModelError::Io(fault.msg()));
+    }
     std::fs::rename(&tmp, path)?;
     // make the rename itself durable; best-effort (directory handles
     // cannot be fsynced on every platform)

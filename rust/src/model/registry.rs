@@ -125,6 +125,13 @@ impl Registry {
         }
         write_atomic(&self.version_file(&name, v), &model.to_bytes_with(v))?;
         if self.latest_pointer(&name).is_none_or(|cur| v > cur) {
+            // fault site `registry.latest`: crash between the artifact
+            // landing and the pointer advancing. The artifact is complete
+            // on disk; `load(None)`'s max(pointer, on-disk) rule still
+            // resolves it, so a trailing pointer is benign by design.
+            if let Some(fault) = crate::fault::inject("registry.latest") {
+                return Err(ModelError::Io(fault.msg()));
+            }
             write_atomic(&self.model_dir(&name).join("LATEST"), format!("v{v}\n").as_bytes())?;
         }
         Ok(v)

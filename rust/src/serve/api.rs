@@ -118,6 +118,57 @@ pub(crate) fn no_outstanding() -> InferenceError {
     InferenceError::BadRequest("recv with no outstanding request".into())
 }
 
+/// Client-side retry discipline: capped exponential backoff with
+/// deterministic jitter, honoring the server's `retry_after_ms` hint.
+///
+/// Deterministic on purpose: backoff schedules come from a seeded
+/// [`crate::rng::Rng`], so a chaos run that exposed a timing-dependent
+/// bug replays with identical client pacing. Jitter still decorrelates
+/// *distinct* clients — give each its own seed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Attempts before giving up (≥ 1; the first try counts).
+    pub max_attempts: u32,
+    /// Backoff before retry k is `base_ms · 2^k`, jittered.
+    pub base_ms: u64,
+    /// Ceiling on any single backoff sleep.
+    pub cap_ms: u64,
+    /// Jitter seed (vary per client to decorrelate a retrying fleet).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 8, base_ms: 5, cap_ms: 1000, seed: 0x5EED }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff in ms before retrying after failed attempt `attempt`
+    /// (0-based). Deterministic in `(seed, attempt)`; jitter spans
+    /// [½, 1]× the exponential step; a server `retry_after_ms` hint is a
+    /// floor — the client never comes back sooner than asked.
+    pub fn backoff_ms(&self, attempt: u32, hint_ms: Option<u64>) -> u64 {
+        let exp = self.base_ms.saturating_mul(1u64 << attempt.min(20)).min(self.cap_ms);
+        let span = exp / 2;
+        let jittered = if span == 0 {
+            exp
+        } else {
+            let mut r = crate::rng::Rng::new(self.seed ^ attempt as u64);
+            exp - span + (r.next_u64() % (span + 1))
+        };
+        jittered.max(hint_ms.unwrap_or(0))
+    }
+
+    /// Whether an error is worth retrying. `BadRequest` is the caller's
+    /// bug — the same bytes will fail the same way forever; everything
+    /// else (saturation, transport loss, protocol desync after a torn
+    /// frame, server restart) can heal on a fresh attempt/connection.
+    pub fn retryable(err: &InferenceError) -> bool {
+        !matches!(err, InferenceError::BadRequest(_))
+    }
+}
+
 /// Zero-queue reference implementation: predictions are computed
 /// synchronously at `submit` on a shared model replica. The networked
 /// tier is tested for bit-identity against this session.
@@ -252,5 +303,48 @@ mod tests {
         let e = InferenceError::Rejected { retry_after_ms: 12 };
         assert!(e.to_string().contains("12ms"));
         assert!(InferenceError::Closed.to_string().contains("closed"));
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_and_caps() {
+        let p = RetryPolicy { max_attempts: 10, base_ms: 5, cap_ms: 100, seed: 1 };
+        let steps: Vec<u64> = (0..10).map(|k| p.backoff_ms(k, None)).collect();
+        // each step stays within [½, 1]× of the capped exponential
+        for (k, &ms) in steps.iter().enumerate() {
+            let exp = (5u64 << k.min(20)).min(100);
+            assert!(ms >= exp / 2 && ms <= exp, "attempt {k}: {ms} vs exp {exp}");
+        }
+        // late attempts are capped, never overflow
+        assert!(steps[9] <= 100);
+        assert!(p.backoff_ms(63, None) <= 100, "huge attempt index must not overflow");
+    }
+
+    #[test]
+    fn backoff_honors_the_server_hint_as_a_floor() {
+        let p = RetryPolicy { max_attempts: 4, base_ms: 1, cap_ms: 10, seed: 2 };
+        assert!(p.backoff_ms(0, Some(500)) >= 500, "never return sooner than asked");
+        // without a hint, early backoff is small
+        assert!(p.backoff_ms(0, None) <= 10);
+    }
+
+    #[test]
+    fn backoff_is_deterministic_per_seed() {
+        let a = RetryPolicy { seed: 7, ..RetryPolicy::default() };
+        let b = RetryPolicy { seed: 7, ..RetryPolicy::default() };
+        let c = RetryPolicy { seed: 8, ..RetryPolicy::default() };
+        let sa: Vec<u64> = (0..8).map(|k| a.backoff_ms(k, None)).collect();
+        let sb: Vec<u64> = (0..8).map(|k| b.backoff_ms(k, None)).collect();
+        let sc: Vec<u64> = (0..8).map(|k| c.backoff_ms(k, None)).collect();
+        assert_eq!(sa, sb, "same seed → same schedule");
+        assert_ne!(sa, sc, "different seed → decorrelated schedule");
+    }
+
+    #[test]
+    fn bad_request_is_not_retryable_everything_else_is() {
+        assert!(!RetryPolicy::retryable(&InferenceError::BadRequest("w".into())));
+        assert!(RetryPolicy::retryable(&InferenceError::Rejected { retry_after_ms: 1 }));
+        assert!(RetryPolicy::retryable(&InferenceError::Protocol("p".into())));
+        assert!(RetryPolicy::retryable(&InferenceError::Io("io".into())));
+        assert!(RetryPolicy::retryable(&InferenceError::Closed));
     }
 }

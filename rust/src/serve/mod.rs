@@ -32,11 +32,12 @@ pub mod wire;
 
 pub use api::{
     DirectSession, InferenceError, InferenceRequest, InferenceResponse, InferenceSession,
+    RetryPolicy,
 };
 pub use replica::{RegistryWatcher, ReplicaSlot};
 pub use router::{JobOutput, JobResult, RouterConfig, ShardRouter};
-pub use tcp::{ServeOptions, ServeStats, TcpServer, TcpSession};
+pub use tcp::{RetryingClient, ServeOptions, ServeStats, TcpServer, TcpSession};
 pub use wire::{
-    read_frame, write_frame, ErrorCode, Frame, WireError, MAX_PAYLOAD, MAX_ROWS_PER_REQUEST,
-    WIRE_VERSION,
+    read_frame, read_frame_deadline, write_frame, ErrorCode, Frame, WireError, MAX_PAYLOAD,
+    MAX_ROWS_PER_REQUEST, WIRE_VERSION,
 };

@@ -18,11 +18,16 @@ use std::time::Duration;
 pub struct ReplicaSlot {
     model: RwLock<Arc<NativeModel>>,
     swaps: AtomicU64,
+    swap_failures: AtomicU64,
 }
 
 impl ReplicaSlot {
     pub fn new(model: NativeModel) -> ReplicaSlot {
-        ReplicaSlot { model: RwLock::new(Arc::new(model)), swaps: AtomicU64::new(0) }
+        ReplicaSlot {
+            model: RwLock::new(Arc::new(model)),
+            swaps: AtomicU64::new(0),
+            swap_failures: AtomicU64::new(0),
+        }
     }
 
     /// The current replica. Callers clone the `Arc` per unit of work, so
@@ -39,6 +44,17 @@ impl ReplicaSlot {
     /// How many hot swaps this slot has performed.
     pub fn swaps(&self) -> u64 {
         self.swaps.load(Ordering::Relaxed)
+    }
+
+    /// How many swap attempts failed (load error, golden-row refusal,
+    /// dim mismatch). Surfaced in `ServeStats` so operators can see a
+    /// replica that is healthy but *stuck* on an old version.
+    pub fn swap_failures(&self) -> u64 {
+        self.swap_failures.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn record_swap_failure(&self) {
+        self.swap_failures.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Atomically replace the replica; returns (old, new) versions.
@@ -62,9 +78,11 @@ impl ReplicaSlot {
 
 /// Background thread that polls the registry and hot-swaps the slot when
 /// a newer version of the model appears. Load failures (a save mid-write,
-/// a corrupt artifact, a failed golden-row check) are logged and retried
-/// on the next tick — the serving replica is never torn down for a
-/// replacement that cannot load.
+/// a corrupt artifact, a failed golden-row check) are counted in
+/// [`ReplicaSlot::swap_failures`] and retried with capped exponential
+/// backoff (poll × 2^fails, capped at 16× poll) — the serving replica is
+/// never torn down for a replacement that cannot load, and a persistently
+/// broken artifact cannot spin the watcher into a hot retry loop.
 pub struct RegistryWatcher {
     stop: Arc<AtomicBool>,
     handle: Option<JoinHandle<()>>,
@@ -80,23 +98,49 @@ impl RegistryWatcher {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let handle = std::thread::spawn(move || {
+            // consecutive failed swap attempts; drives the backoff
+            let mut fails: u32 = 0;
             while !stop2.load(Ordering::Relaxed) {
                 let newest = registry.versions(&name).last().copied();
                 if newest.is_some_and(|v| v > slot.version()) {
-                    let built = registry
-                        .load(&name, None)
-                        .map_err(|e| e.to_string())
-                        .and_then(|saved| saved.build().map_err(|e| e.to_string()));
+                    // fault site `swap.load`: the replacement fails to
+                    // load exactly as a mid-write artifact would.
+                    let built = if let Some(fault) = crate::fault::inject("swap.load") {
+                        Err(fault.msg())
+                    } else {
+                        registry
+                            .load(&name, None)
+                            .map_err(|e| e.to_string())
+                            .and_then(|saved| saved.build().map_err(|e| e.to_string()))
+                    };
                     match built {
                         Ok(m) => match slot.swap(m) {
-                            Ok((from, to)) => eprintln!("hot-swap {name}: v{from} → v{to}"),
-                            Err(e) => eprintln!("hot-swap {name} refused: {e}"),
+                            Ok((from, to)) => {
+                                eprintln!("hot-swap {name}: v{from} → v{to}");
+                                fails = 0;
+                            }
+                            Err(e) => {
+                                eprintln!("hot-swap {name} refused: {e}");
+                                slot.record_swap_failure();
+                                fails += 1;
+                            }
                         },
-                        Err(e) => eprintln!("hot-swap {name}: load failed ({e}); will retry"),
+                        Err(e) => {
+                            slot.record_swap_failure();
+                            fails += 1;
+                            eprintln!(
+                                "hot-swap {name}: load failed ({e}); retry #{fails} \
+                                 after backoff"
+                            );
+                        }
                     }
+                } else {
+                    fails = 0;
                 }
-                // sleep in short slices so stop() returns promptly
-                let mut left = poll;
+                // capped exponential backoff after failures, sleeping in
+                // short slices so stop() returns promptly
+                let mult = 1u32 << fails.min(4);
+                let mut left = poll.saturating_mul(mult);
                 while !stop2.load(Ordering::Relaxed) && left > Duration::ZERO {
                     let step = left.min(Duration::from_millis(25));
                     std::thread::sleep(step);
@@ -148,5 +192,14 @@ mod tests {
         assert!(err.contains("differ"), "{err}");
         assert_eq!(slot.swaps(), 0);
         assert_eq!(slot.current().meta.input_dim, 3);
+    }
+
+    #[test]
+    fn swap_failures_counter_is_independent_of_swaps() {
+        let slot = ReplicaSlot::new(toy_model(3));
+        assert_eq!(slot.swap_failures(), 0);
+        slot.record_swap_failure();
+        slot.record_swap_failure();
+        assert_eq!((slot.swaps(), slot.swap_failures()), (0, 2));
     }
 }

@@ -79,31 +79,55 @@ impl ShardRouter {
         let mut queues = Vec::with_capacity(cfg.shards);
         let mut metrics = Vec::with_capacity(cfg.shards);
         let mut workers = Vec::with_capacity(cfg.shards);
-        for _ in 0..cfg.shards {
+        for shard_id in 0..cfg.shards {
             let (tx, rx) = std::sync::mpsc::sync_channel::<Job>(cfg.queue_depth);
             let m = Arc::new(Metrics::default());
             let slot2 = slot.clone();
             let m2 = m.clone();
-            workers.push(std::thread::spawn(move || {
-                while let Ok(job) = rx.recv() {
-                    // clone the replica per job: a concurrent hot-swap
-                    // retires the old model only after in-flight jobs
-                    // drop their Arc
-                    let model = slot2.current();
-                    let t_exec = Instant::now();
-                    let out = model.predict(&job.rows);
-                    m2.exec_latency.record(t_exec.elapsed());
-                    Metrics::inc(&m2.batches, 1);
-                    Metrics::inc(&m2.rows, out.rows as u64);
-                    m2.request_latency.record(job.t0.elapsed());
-                    // a vanished connection just drops the completion
-                    let _ = job.done.send(JobResult {
-                        tag: job.tag,
-                        id: job.id,
-                        result: Ok(JobOutput::Rows(out)),
-                    });
-                }
-            }));
+            let worker = std::thread::Builder::new()
+                .name(format!("ntk-shard-{shard_id}"))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        // clone the replica per job: a concurrent hot-swap
+                        // retires the old model only after in-flight jobs
+                        // drop their Arc
+                        let model = slot2.current();
+                        let t_exec = Instant::now();
+                        // Self-healing: a panicking predict (model bug,
+                        // poisoned input, injected `shard.panic` fault)
+                        // fails THIS request with a typed error and the
+                        // worker keeps serving — the client never hangs
+                        // on a lost completion, and the queue behind the
+                        // panicking job drains normally.
+                        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            if let Some(fault) = crate::fault::inject("shard.panic") {
+                                panic!("{}", fault.msg());
+                            }
+                            model.predict(&job.rows)
+                        }));
+                        let result = match out {
+                            Ok(rows) => {
+                                m2.exec_latency.record(t_exec.elapsed());
+                                Metrics::inc(&m2.batches, 1);
+                                Metrics::inc(&m2.rows, rows.rows as u64);
+                                Ok(JobOutput::Rows(rows))
+                            }
+                            Err(_) => {
+                                Metrics::inc(&m2.panics, 1);
+                                Err(InferenceError::Io(format!(
+                                    "shard {shard_id} worker panicked serving request {}; \
+                                     the request failed and the worker recovered",
+                                    job.id
+                                )))
+                            }
+                        };
+                        m2.request_latency.record(job.t0.elapsed());
+                        // a vanished connection just drops the completion
+                        let _ = job.done.send(JobResult { tag: job.tag, id: job.id, result });
+                    }
+                })
+                .expect("ntk shard: worker spawn failed");
+            workers.push(worker);
             queues.push(tx);
             metrics.push(m);
         }
@@ -268,6 +292,56 @@ mod tests {
         let total = MetricsSnapshot::merge(&router.snapshots());
         assert_eq!(total.rejected, rejected);
         assert_eq!(total.requests, admitted);
+        router.join();
+    }
+
+    /// Panics on a marker input, otherwise behaves like SumFeat — drives
+    /// the worker's catch_unwind path without touching the global fault
+    /// plan (unit tests must stay parallel-safe).
+    struct PanicFeat;
+
+    impl Featurizer for PanicFeat {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn transform(&self, x: &Mat) -> Mat {
+            if x.data.first() == Some(&13.0) {
+                panic!("poisoned row");
+            }
+            SumFeat.transform(x)
+        }
+        fn name(&self) -> &'static str {
+            "panicfeat"
+        }
+    }
+
+    #[test]
+    fn worker_panic_fails_request_and_shard_recovers() {
+        let mut m = toy_model(3);
+        m.featurizer = Box::new(PanicFeat);
+        let slot = Arc::new(ReplicaSlot::new(m));
+        let router = ShardRouter::start(slot, RouterConfig { shards: 1, queue_depth: 4 });
+        let (tx, rx) = channel();
+        // queue the poisoned row AND a healthy sibling behind it: the
+        // panic must fail only its own request, then the same worker
+        // thread serves the next one.
+        router.submit(row(13.0), 0, 50, &tx).unwrap();
+        router.submit(row(2.0), 1, 51, &tx).unwrap();
+        let first = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!((first.tag, first.id), (0, 50));
+        match first.result {
+            Err(InferenceError::Io(msg)) => assert!(msg.contains("panicked"), "{msg}"),
+            other => panic!("poisoned request must fail typed, got {other:?}"),
+        }
+        let second = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!((second.tag, second.id), (1, 51));
+        match second.result.unwrap() {
+            JobOutput::Rows(m) => assert_eq!(m.data[0], -2.0),
+            other => panic!("unexpected output {other:?}"),
+        }
+        let total = MetricsSnapshot::merge(&router.snapshots());
+        assert_eq!(total.panics, 1);
+        assert_eq!(total.requests, 2);
         router.join();
     }
 

@@ -20,7 +20,7 @@
 
 use super::api::{
     check_batch, no_outstanding, InferenceError, InferenceRequest, InferenceResponse,
-    InferenceSession,
+    InferenceSession, RetryPolicy,
 };
 use super::replica::{RegistryWatcher, ReplicaSlot};
 use super::router::{JobOutput, JobResult, RouterConfig, ShardRouter};
@@ -48,11 +48,16 @@ pub struct ServeOptions {
     pub poll_ms: u64,
     /// Maximum concurrent client connections.
     pub max_conns: usize,
+    /// Reader deadline (ms) for completing a frame once its first byte
+    /// has arrived. A peer that stalls mid-frame past this is
+    /// disconnected cleanly and its connection slot freed — it can never
+    /// pin a slot forever.
+    pub stall_ms: u64,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { workers: 2, queue_depth: 32, poll_ms: 500, max_conns: 256 }
+        ServeOptions { workers: 2, queue_depth: 32, poll_ms: 500, max_conns: 256, stall_ms: 5000 }
     }
 }
 
@@ -64,6 +69,10 @@ pub struct ServeStats {
     pub model: String,
     pub version: u32,
     pub swaps: u64,
+    /// Hot-swap attempts that failed (load error, golden-row refusal,
+    /// dim mismatch) — a healthy replica stuck on an old version shows
+    /// up here.
+    pub swap_failures: u64,
     pub shards: Vec<MetricsSnapshot>,
     pub total: MetricsSnapshot,
 }
@@ -74,6 +83,7 @@ impl ServeStats {
         m.insert("model".into(), Json::Str(self.model.clone()));
         m.insert("version".into(), Json::Num(self.version as f64));
         m.insert("swaps".into(), Json::Num(self.swaps as f64));
+        m.insert("swap_failures".into(), Json::Num(self.swap_failures as f64));
         m.insert("total".into(), self.total.to_json());
         m.insert(
             "shards".into(),
@@ -96,6 +106,11 @@ impl ServeStats {
             .get("swaps")
             .and_then(Json::as_f64)
             .ok_or_else(|| "serve stats: missing `swaps`".to_string())? as u64;
+        let swap_failures = v
+            .get("swap_failures")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| "serve stats: missing `swap_failures`".to_string())?
+            as u64;
         let total =
             MetricsSnapshot::from_json(v.get("total").ok_or("serve stats: missing `total`")?)?;
         let shards = match v.get("shards") {
@@ -104,15 +119,16 @@ impl ServeStats {
             }
             _ => return Err("serve stats: missing `shards`".to_string()),
         };
-        Ok(ServeStats { model, version, swaps, total, shards })
+        Ok(ServeStats { model, version, swaps, swap_failures, total, shards })
     }
 
     /// One-line human rendering.
     pub fn summary(&self) -> String {
         format!(
-            "v{} swaps={} shards={} {}",
+            "v{} swaps={} swap_failures={} shards={} {}",
             self.version,
             self.swaps,
+            self.swap_failures,
             self.shards.len(),
             self.total.summary()
         )
@@ -173,6 +189,7 @@ impl TcpServer {
         let accept_shutdown = shutdown.clone();
         let accept_active = active_conns.clone();
         let max_conns = opts.max_conns.max(1);
+        let stall = Duration::from_millis(opts.stall_ms.max(1));
         let accept_handle = std::thread::spawn(move || loop {
             if accept_shutdown.load(Ordering::Relaxed) {
                 return;
@@ -187,7 +204,9 @@ impl TcpServer {
                     let guard = ConnGuard(accept_active.clone());
                     let router = accept_router.clone();
                     let shutdown = accept_shutdown.clone();
-                    std::thread::spawn(move || handle_conn(stream, router, shutdown, guard));
+                    std::thread::spawn(move || {
+                        handle_conn(stream, router, shutdown, guard, stall)
+                    });
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(Duration::from_millis(20));
@@ -276,6 +295,7 @@ fn server_stats(router: &ShardRouter) -> ServeStats {
         model: router.slot().current().meta.banner(),
         version: router.slot().version(),
         swaps: router.slot().swaps(),
+        swap_failures: router.slot().swap_failures(),
         total: MetricsSnapshot::merge(&shards),
         shards,
     }
@@ -293,6 +313,7 @@ fn handle_conn(
     router: Arc<ShardRouter>,
     shutdown: Arc<AtomicBool>,
     guard: ConnGuard,
+    stall: Duration,
 ) {
     // held until reader AND writer are done: the conn slot frees only
     // after every in-flight response for this connection has been written
@@ -323,7 +344,7 @@ fn handle_conn(
             let _ = tx.send(JobResult { tag: seq, id: 0, result: Err(InferenceError::Closed) });
             break;
         }
-        match wire::read_frame(&mut reader) {
+        match wire::read_frame_deadline(&mut reader, stall) {
             Ok(Frame::Infer(req)) => {
                 if let Err(e) = router.submit(req.rows, seq, req.id, &tx) {
                     let _ = tx.send(JobResult { tag: seq, id: req.id, result: Err(e) });
@@ -355,6 +376,12 @@ fn handle_conn(
             // idle tick: loop to re-check the shutdown flag
             Err(WireError::TimedOut) => continue,
             Err(WireError::Closed) => break,
+            // a peer wedged mid-frame: hang up so the conn slot frees
+            // (its ConnGuard drops at reader exit, like any disconnect)
+            Err(WireError::Stalled) => {
+                eprintln!("serve: peer stalled mid-frame; disconnecting");
+                break;
+            }
             Err(WireError::Io(e)) => {
                 eprintln!("serve: connection io error: {e}");
                 break;
@@ -539,6 +566,163 @@ impl InferenceSession for TcpSession {
     }
 }
 
+/// Self-healing client: a [`TcpSession`] wrapped in a [`RetryPolicy`].
+///
+/// On a retryable failure (saturation rejection, transport loss, a
+/// server-side panic surfacing as an internal error, a torn frame) it
+/// backs off, reconnects if the session broke, and resubmits — inference
+/// is pure, so a resubmitted batch returns bit-identical predictions.
+/// `BadRequest` is surfaced immediately: the caller's bytes are wrong
+/// and no retry can fix them.
+///
+/// Non-pipelined by design: each submit completes (with retries) before
+/// returning, so a mid-stream reconnect can never orphan an outstanding
+/// request.
+pub struct RetryingClient {
+    addr: String,
+    policy: RetryPolicy,
+    sess: Option<TcpSession>,
+    ready: VecDeque<InferenceResponse>,
+    next_id: u64,
+    input_dim: usize,
+    output_dim: usize,
+    banner: String,
+    rejected: u64,
+    reconnects: u64,
+}
+
+impl RetryingClient {
+    /// Connect with retries: retryable connect failures (cap rejection,
+    /// transport refusal while a daemon restarts) back off and try again
+    /// up to `policy.max_attempts`.
+    pub fn connect(addr: &str, policy: RetryPolicy) -> Result<RetryingClient, InferenceError> {
+        let max = policy.max_attempts.max(1);
+        let mut attempt = 0u32;
+        loop {
+            match TcpSession::connect(addr) {
+                Ok(sess) => {
+                    let (input_dim, output_dim) = (sess.input_dim(), sess.output_dim());
+                    let banner = sess.banner().to_string();
+                    return Ok(RetryingClient {
+                        addr: addr.to_string(),
+                        policy,
+                        sess: Some(sess),
+                        ready: VecDeque::new(),
+                        next_id: 0,
+                        input_dim,
+                        output_dim,
+                        banner,
+                        rejected: 0,
+                        reconnects: 0,
+                    });
+                }
+                Err(e) if RetryPolicy::retryable(&e) && attempt + 1 < max => {
+                    let hint = match e {
+                        InferenceError::Rejected { retry_after_ms } => Some(retry_after_ms),
+                        _ => None,
+                    };
+                    std::thread::sleep(Duration::from_millis(policy.backoff_ms(attempt, hint)));
+                    attempt += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// The server's model banner from the (most recent) HELLO.
+    pub fn banner(&self) -> &str {
+        &self.banner
+    }
+
+    /// Saturation rejections absorbed by retries so far.
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+
+    /// Sessions re-established after transport/protocol failures.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects
+    }
+
+    /// The live session, re-establishing it if the last failure tore it
+    /// down. A reconnect refuses a server whose dims changed — sessions
+    /// pin the dims advertised at their first HELLO.
+    fn session(&mut self) -> Result<&mut TcpSession, InferenceError> {
+        if self.sess.is_none() {
+            let sess = TcpSession::connect(&self.addr)?;
+            if sess.input_dim() != self.input_dim || sess.output_dim() != self.output_dim {
+                return Err(InferenceError::Protocol(format!(
+                    "server dims changed across reconnect: {}→{} became {}→{}",
+                    self.input_dim,
+                    self.output_dim,
+                    sess.input_dim(),
+                    sess.output_dim()
+                )));
+            }
+            self.banner = sess.banner().to_string();
+            self.reconnects += 1;
+            self.sess = Some(sess);
+        }
+        Ok(self.sess.as_mut().expect("session just ensured"))
+    }
+
+    /// One batch, retried to completion under the policy. Returns the
+    /// last error once `max_attempts` are exhausted.
+    fn infer_retrying(&mut self, rows: &Mat) -> Result<Mat, InferenceError> {
+        check_batch(rows, self.input_dim)?;
+        let max = self.policy.max_attempts.max(1);
+        let mut last = InferenceError::Closed;
+        for attempt in 0..max {
+            let r = self.session().and_then(|s| s.infer(rows));
+            match r {
+                Ok(out) => return Ok(out),
+                Err(e @ InferenceError::BadRequest(_)) => return Err(e),
+                Err(InferenceError::Rejected { retry_after_ms }) => {
+                    // the session is fine — the server is saturated;
+                    // honor its hint and resubmit on the same connection
+                    self.rejected += 1;
+                    last = InferenceError::Rejected { retry_after_ms };
+                    std::thread::sleep(Duration::from_millis(
+                        self.policy.backoff_ms(attempt, Some(retry_after_ms)),
+                    ));
+                }
+                Err(e) => {
+                    // transport/protocol/internal failure: the stream may
+                    // be desynchronized — drop it and reconnect fresh
+                    self.sess = None;
+                    last = e;
+                    std::thread::sleep(Duration::from_millis(
+                        self.policy.backoff_ms(attempt, None),
+                    ));
+                }
+            }
+        }
+        Err(last)
+    }
+}
+
+impl InferenceSession for RetryingClient {
+    fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+
+    fn output_dim(&self) -> usize {
+        self.output_dim
+    }
+
+    fn submit(&mut self, rows: &Mat) -> Result<u64, InferenceError> {
+        let out = self.infer_retrying(rows)?;
+        let id = self.next_id;
+        self.next_id += 1;
+        self.ready.push_back(InferenceResponse { id, rows: out });
+        Ok(id)
+    }
+
+    fn recv(&mut self) -> Result<InferenceResponse, InferenceError> {
+        self.ready.pop_front().ok_or_else(no_outstanding)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -586,6 +770,39 @@ mod tests {
         assert!(matches!(s.submit(&Mat::zeros(1, 2)), Err(InferenceError::BadRequest(_))));
         // the session still works afterwards
         assert_eq!(s.infer(&Mat::from_vec(1, 3, vec![3.0, 0.0, 0.0])).unwrap().data, vec![-3.0]);
+        server.join();
+    }
+
+    #[test]
+    fn retrying_client_matches_plain_session_bitwise() {
+        let server = start_toy(ServeOptions::default());
+        let addr = server.local_addr().to_string();
+        let mut plain = TcpSession::connect(&addr).unwrap();
+        let mut retrying = RetryingClient::connect(&addr, RetryPolicy::default()).unwrap();
+        assert_eq!(
+            (retrying.input_dim(), retrying.output_dim()),
+            (plain.input_dim(), plain.output_dim())
+        );
+        assert_eq!(retrying.banner(), plain.banner());
+        let x = Mat::from_vec(3, 3, vec![1.0, 2.0, 3.0, -1.5, 0.25, 4.0, 0.0, 0.0, 7.0]);
+        let a = plain.infer(&x).unwrap();
+        let b = retrying.infer(&x).unwrap();
+        assert_eq!(a.data, b.data, "retry wrapper must not perturb results");
+        assert_eq!((retrying.rejected(), retrying.reconnects()), (0, 0));
+        server.join();
+    }
+
+    #[test]
+    fn retrying_client_surfaces_bad_request_immediately() {
+        let server = start_toy(ServeOptions::default());
+        let addr = server.local_addr().to_string();
+        let mut c = RetryingClient::connect(&addr, RetryPolicy::default()).unwrap();
+        let t0 = Instant::now();
+        assert!(matches!(c.submit(&Mat::zeros(1, 2)), Err(InferenceError::BadRequest(_))));
+        // no backoff sleeps were spent on an unretryable error
+        assert!(t0.elapsed() < Duration::from_millis(500));
+        // the client still works afterwards
+        assert_eq!(c.infer(&Mat::from_vec(1, 3, vec![3.0, 0.0, 0.0])).unwrap().data, vec![-3.0]);
         server.join();
     }
 

@@ -103,6 +103,9 @@ pub enum WireError {
     Oversized { len: u32, cap: u32 },
     Truncated(&'static str),
     Malformed(String),
+    /// The peer started a frame but stopped feeding bytes past the
+    /// reader's mid-frame deadline (see [`read_frame_deadline`]).
+    Stalled,
     Io(String),
 }
 
@@ -121,6 +124,9 @@ impl std::fmt::Display for WireError {
             }
             WireError::Truncated(what) => write!(f, "peer disconnected mid-{what}"),
             WireError::Malformed(m) => write!(f, "malformed payload: {m}"),
+            WireError::Stalled => {
+                write!(f, "peer stalled mid-frame past the reader deadline")
+            }
             WireError::Io(m) => write!(f, "{m}"),
         }
     }
@@ -133,7 +139,9 @@ impl WireError {
     pub fn to_inference(&self) -> InferenceError {
         match self {
             WireError::Closed => InferenceError::Closed,
-            WireError::TimedOut | WireError::Io(_) => InferenceError::Io(self.to_string()),
+            WireError::TimedOut | WireError::Stalled | WireError::Io(_) => {
+                InferenceError::Io(self.to_string())
+            }
             _ => InferenceError::Protocol(self.to_string()),
         }
     }
@@ -246,7 +254,22 @@ pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<(), WireError> 
     hdr[4..12].copy_from_slice(&id.to_le_bytes());
     hdr[12..16].copy_from_slice(&(payload.len() as u32).to_le_bytes());
     let io = |e: std::io::Error| WireError::Io(e.to_string());
+    // fault site `wire.write`: a partial header reaches the peer and the
+    // stream dies — the peer must see a typed Truncated, never a hang.
+    if let Some(fault) = crate::fault::inject("wire.write") {
+        let cut = ((fault.draw as usize) % HEADER_LEN).max(1);
+        let _ = w.write_all(&hdr[..cut]);
+        let _ = w.flush();
+        return Err(WireError::Io(fault.msg()));
+    }
     w.write_all(&hdr).map_err(io)?;
+    // fault site `wire.stall`: the header is out but the payload lags —
+    // the peer's reader sits mid-frame. Exercises the reader-deadline
+    // path ([`read_frame_deadline`]) without desynchronizing framing.
+    if let Some(fault) = crate::fault::inject("wire.stall") {
+        let _ = w.flush();
+        std::thread::sleep(std::time::Duration::from_millis(20 + fault.draw % 180));
+    }
     w.write_all(&payload).map_err(io)?;
     w.flush().map_err(io)?;
     Ok(())
@@ -258,13 +281,22 @@ enum Fill {
     Full,
     Eof(usize),
     Idle,
+    Stalled,
 }
 
 /// Fill `buf`, retrying interrupts. A read timeout with zero bytes read
-/// reports `Idle` when `idle_ok` (so pollers can tick a shutdown flag);
-/// a timeout *mid-frame* keeps waiting — the peer is mid-write and
-/// abandoning the stream there would desynchronize framing.
-fn read_fill<R: Read>(r: &mut R, buf: &mut [u8], idle_ok: bool) -> Result<Fill, WireError> {
+/// reports `Idle` when `idle_ok` (so pollers can tick a shutdown flag).
+/// A timeout *mid-frame* keeps waiting — the peer is mid-write and
+/// abandoning the stream there would desynchronize framing — unless a
+/// `deadline` is set and has passed, in which case the fill reports
+/// `Stalled` so the caller can drop the connection instead of waiting
+/// on a dead peer forever.
+fn read_fill<R: Read>(
+    r: &mut R,
+    buf: &mut [u8],
+    idle_ok: bool,
+    deadline: Option<std::time::Instant>,
+) -> Result<Fill, WireError> {
     let mut got = 0;
     while got < buf.len() {
         match r.read(&mut buf[got..]) {
@@ -278,6 +310,9 @@ fn read_fill<R: Read>(r: &mut R, buf: &mut [u8], idle_ok: bool) -> Result<Fill, 
             {
                 if idle_ok && got == 0 {
                     return Ok(Fill::Idle);
+                }
+                if deadline.is_some_and(|d| std::time::Instant::now() >= d) {
+                    return Ok(Fill::Stalled);
                 }
             }
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
@@ -385,12 +420,37 @@ fn decode(kind: u8, id: u64, payload: &[u8]) -> Result<Frame, WireError> {
 /// nonblocking/timed and no bytes have arrived, and a typed error for
 /// every malformed input — never a panic, never an unbounded allocation.
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
+    read_frame_impl(r, None)
+}
+
+/// [`read_frame`] with a mid-frame stall deadline: once the first byte
+/// of a frame has arrived, the rest must follow within `stall` or the
+/// read fails with [`WireError::Stalled`] (the caller should drop the
+/// connection — the peer is wedged). Waiting for the *first* byte is
+/// still governed by the stream's own idle timeout, so header polling
+/// between frames works unchanged; the deadline is re-armed on every
+/// call.
+pub fn read_frame_deadline<R: Read>(r: &mut R, stall: std::time::Duration) -> Result<Frame, WireError> {
+    read_frame_impl(r, Some(std::time::Instant::now() + stall))
+}
+
+fn read_frame_impl<R: Read>(
+    r: &mut R,
+    deadline: Option<std::time::Instant>,
+) -> Result<Frame, WireError> {
+    // fault site `wire.read`: the inbound stream dies mid-frame from the
+    // reader's point of view; sessions must surface a typed Io error and
+    // reconnect, never desynchronize.
+    if let Some(fault) = crate::fault::inject("wire.read") {
+        return Err(WireError::Io(fault.msg()));
+    }
     let mut hdr = [0u8; HEADER_LEN];
-    match read_fill(r, &mut hdr, true)? {
+    match read_fill(r, &mut hdr, true, deadline)? {
         Fill::Full => {}
         Fill::Eof(0) => return Err(WireError::Closed),
         Fill::Eof(_) => return Err(WireError::Truncated("frame header")),
         Fill::Idle => return Err(WireError::TimedOut),
+        Fill::Stalled => return Err(WireError::Stalled),
     }
     if hdr[0..2] != WIRE_MAGIC {
         return Err(WireError::BadMagic([hdr[0], hdr[1]]));
@@ -409,10 +469,11 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
         return Err(WireError::Oversized { len, cap: MAX_PAYLOAD as u32 });
     }
     let mut payload = vec![0u8; len as usize];
-    match read_fill(r, &mut payload, false)? {
+    match read_fill(r, &mut payload, false, deadline)? {
         Fill::Full => {}
         Fill::Eof(_) => return Err(WireError::Truncated("frame payload")),
         Fill::Idle => return Err(WireError::TimedOut),
+        Fill::Stalled => return Err(WireError::Stalled),
     }
     decode(kind, id, &payload)
 }
@@ -584,6 +645,53 @@ mod tests {
             .unwrap_err();
         assert!(matches!(err, WireError::Oversized { .. }));
         assert!(buf.is_empty(), "nothing written for a refused frame");
+    }
+
+    /// Yields its bytes one at a time, then reports `WouldBlock` forever
+    /// — a peer that started a frame and wedged.
+    struct DribbleThenBlock {
+        data: Vec<u8>,
+        pos: usize,
+    }
+
+    impl Read for DribbleThenBlock {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos < self.data.len() && !buf.is_empty() {
+                buf[0] = self.data[self.pos];
+                self.pos += 1;
+                Ok(1)
+            } else {
+                Err(std::io::ErrorKind::WouldBlock.into())
+            }
+        }
+    }
+
+    #[test]
+    fn stalled_peer_hits_the_deadline_not_a_hang() {
+        // 7 header bytes arrive, then nothing: without a deadline this
+        // read would wait forever (mid-frame timeouts keep waiting).
+        let mut r = DribbleThenBlock { data: raw_header(KIND_SHUTDOWN, 0, 0)[..7].to_vec(), pos: 0 };
+        let t0 = std::time::Instant::now();
+        let err = read_frame_deadline(&mut r, std::time::Duration::from_millis(20)).unwrap_err();
+        assert_eq!(err, WireError::Stalled);
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5));
+        assert_eq!(err.to_inference(), InferenceError::Io(WireError::Stalled.to_string()));
+    }
+
+    #[test]
+    fn deadline_reader_still_reports_idle_before_first_byte() {
+        let mut r = DribbleThenBlock { data: Vec::new(), pos: 0 };
+        let err = read_frame_deadline(&mut r, std::time::Duration::from_millis(20)).unwrap_err();
+        assert_eq!(err, WireError::TimedOut);
+    }
+
+    #[test]
+    fn deadline_reader_decodes_complete_frames_normally() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Shutdown).unwrap();
+        let mut r: &[u8] = &buf;
+        let f = read_frame_deadline(&mut r, std::time::Duration::from_millis(200)).unwrap();
+        assert_eq!(f, Frame::Shutdown);
     }
 
     #[test]

@@ -234,6 +234,37 @@ mod tests {
     }
 
     #[test]
+    fn panic_with_queued_siblings_reraises_and_pool_stays_usable() {
+        // Many more tasks than workers, and the panicking task fires
+        // early: siblings are still queued (unclaimed) when the panic
+        // hits. Every sibling must still run — bookkeeping stays
+        // consistent — and the payload re-raises on the submitter.
+        let n = workers().max(1) * 16 + 8;
+        let ran = AtomicUsize::new(0);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run(n, |i| {
+                if i == 0 {
+                    panic!("boom while siblings queued");
+                }
+                // brief stall keeps siblings queued past the panic
+                std::thread::sleep(std::time::Duration::from_micros(200));
+                ran.fetch_add(1, Ordering::SeqCst);
+            });
+        }));
+        let p = r.expect_err("task panic must reach the submitter");
+        let msg = p.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert!(msg.contains("siblings queued"), "payload: {msg:?}");
+        // the panic aborted only its own task — every sibling ran
+        assert_eq!(ran.load(Ordering::SeqCst), n - 1);
+        // and a fresh job on the same pool is fully serviced
+        let hits = AtomicUsize::new(0);
+        run(64, |_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
     fn panics_propagate_and_pool_survives() {
         let r = std::panic::catch_unwind(|| {
             run(16, |i| {

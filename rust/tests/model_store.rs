@@ -340,3 +340,102 @@ fn registry_versions_latest_and_gc() {
 
     let _ = std::fs::remove_dir_all(&root);
 }
+
+#[test]
+fn concurrent_saves_and_gc_never_corrupt_a_racing_load() {
+    // Writers advance versions while a gc thread prunes and loaders spin
+    // on `load(name, None)`. The store's contract under this race: every
+    // load either resolves a COMPLETE version (golden-verified build,
+    // bit-identical predictions) or fails with a readable not-found-style
+    // error — never a CRC/magic/truncation error, which would mean a
+    // loader observed a half-written or half-deleted artifact.
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    let root =
+        std::env::temp_dir().join(format!("ntkm_reg_race_test_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let registry = Registry::open(&root);
+
+    let spec = all_specs(5).remove(0);
+    let (saved, x, _) = fit_tiny(&spec, 1, 91);
+    assert_eq!(registry.save(&saved).unwrap(), 1);
+    // every save stores the same artifact, so one reference prediction
+    // checks any version a loader happens to resolve
+    let reference = registry.load("tiny", None).unwrap().build().unwrap().predict(&x).data;
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let good_loads = Arc::new(AtomicU64::new(0));
+    let mut handles = Vec::new();
+
+    // writer: keeps advancing LATEST
+    {
+        let (root, saved, stop) = (root.clone(), saved.clone(), stop.clone());
+        handles.push(std::thread::spawn(move || {
+            let registry = Registry::open(&root);
+            for _ in 0..24 {
+                registry.save(&saved).expect("concurrent save");
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }));
+    }
+    // collector: prunes everything but the newest two, racing the loaders
+    {
+        let (root, stop) = (root.clone(), stop.clone());
+        handles.push(std::thread::spawn(move || {
+            let registry = Registry::open(&root);
+            while !stop.load(Ordering::Relaxed) {
+                let _ = registry.gc("tiny", 2);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        }));
+    }
+    // loaders: every resolved artifact must be complete and correct
+    for _ in 0..2 {
+        let (root, x, reference) = (root.clone(), x.clone(), reference.clone());
+        let (stop, good_loads) = (stop.clone(), good_loads.clone());
+        handles.push(std::thread::spawn(move || {
+            let registry = Registry::open(&root);
+            while !stop.load(Ordering::Relaxed) {
+                match registry.load("tiny", None) {
+                    Ok(loaded) => {
+                        // build() golden-verifies: a torn artifact that
+                        // somehow parsed would be refused here
+                        let model = loaded.build().expect("resolved version must be complete");
+                        assert_bits_eq(
+                            &model.predict(&x).data,
+                            &reference,
+                            "racing load",
+                        );
+                        good_loads.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) => {
+                        // the only acceptable failure is the resolved
+                        // version vanishing under gc between listing and
+                        // reading — a clean not-found, never torn bytes
+                        let msg = e.to_string();
+                        assert!(
+                            !msg.contains("CRC") && !msg.contains("magic"),
+                            "racing load saw a corrupt artifact: {msg}"
+                        );
+                    }
+                }
+            }
+        }));
+    }
+
+    // let the race run, then stop everyone
+    std::thread::sleep(std::time::Duration::from_millis(250));
+    stop.store(true, Ordering::Relaxed);
+    for h in handles {
+        h.join().expect("race thread");
+    }
+    assert!(
+        good_loads.load(Ordering::Relaxed) >= 1,
+        "loaders never resolved a complete version"
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}

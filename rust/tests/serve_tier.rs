@@ -217,6 +217,45 @@ fn hostile_bytes_get_typed_errors_and_leak_nothing() {
 }
 
 #[test]
+fn stalled_mid_header_peer_is_reaped_and_frees_its_conn_slot() {
+    let saved = saved_model("stall", 1);
+    // max_conns = 1: the stalled peer holds the ONLY slot, so the healthy
+    // session below can connect only if the server reaps the staller
+    let server = TcpServer::start(
+        saved.build().unwrap(),
+        None,
+        "127.0.0.1:0",
+        ServeOptions { workers: 1, max_conns: 1, stall_ms: 300, ..ServeOptions::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    // connect, consume HELLO, send 7 of the 16 header bytes, then stall
+    // with the socket held open — a mid-frame stall, not a disconnect
+    let staller = TcpStream::connect(&addr).unwrap();
+    let mut reader = std::io::BufReader::new(staller.try_clone().unwrap());
+    let hello = read_frame(&mut reader).unwrap();
+    assert!(matches!(hello, Frame::Hello { .. }));
+    let mut writer = staller.try_clone().unwrap();
+    writer.write_all(&header(b"NW", 1, 2, 0, 0)[..7]).unwrap();
+    writer.flush().unwrap();
+
+    // the server's mid-frame deadline (stall_ms) must fire, disconnect
+    // the staller, and release the slot — all while the socket stays open
+    let ok = (0..200).find_map(|_| {
+        std::thread::sleep(Duration::from_millis(25));
+        TcpSession::connect(&addr).ok()
+    });
+    let mut sess =
+        ok.expect("stalled peer still holds the only conn slot after the deadline");
+    let out = sess.infer(&batch(9, 4)).unwrap();
+    assert_eq!((out.rows, out.cols), (4, 1));
+    drop(sess);
+    drop(staller);
+    server.join();
+}
+
+#[test]
 fn shutdown_frame_stops_a_running_daemon() {
     let saved = saved_model("shutdown", 1);
     let server = TcpServer::start(
