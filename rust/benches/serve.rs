@@ -68,6 +68,95 @@ fn client_loop(addr: &str, seed: u64, rows: usize, secs: f64) -> (u64, u64) {
     (ok, rejected)
 }
 
+/// One short closed-loop run against a fresh 2-shard server; returns
+/// (qps, mean request latency µs, ok requests).
+fn qps_run(d: usize, rows: usize, secs: f64) -> (f64, f64, u64) {
+    let server = TcpServer::start(
+        bench_model(d),
+        None,
+        "127.0.0.1:0",
+        ServeOptions { workers: 2, queue_depth: 8, poll_ms: 0, max_conns: 16, ..ServeOptions::default() },
+    )
+    .expect("start server");
+    let addr = server.local_addr().to_string();
+    let t0 = Instant::now();
+    let (mut ok, mut _rej) = (0u64, 0u64);
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for c in 0..2u64 {
+            let addr = addr.clone();
+            handles.push(s.spawn(move || client_loop(&addr, 90 + c, rows, secs)));
+        }
+        for h in handles {
+            let (o, r) = h.join().expect("client");
+            ok += o;
+            _rej += r;
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let mean_us = server.stats().total.req_mean_us();
+    server.join();
+    (ok as f64 / wall, mean_us, ok)
+}
+
+/// The `tracing_overhead` record: what having span instrumentation
+/// *compiled in but disabled* costs on the serve path, plus the QPS
+/// delta when collection is armed. The CI gate
+/// (`scripts/check_bench_obs.py`) reads `disabled_overhead_pct`, which is
+/// computed analytically — per-span disabled cost × spans per request ÷
+/// mean request latency — so it is stable where raw QPS deltas between
+/// two short runs are noise.
+fn tracing_overhead(d: usize, rows: usize, secs: f64) -> Json {
+    use ntk_sketch::obs::trace;
+    println!("\n== tracing overhead: spans on the serve path ==");
+
+    // (a) per-call cost of a disabled span (two relaxed atomic loads)
+    trace::disable();
+    let iters: u64 = if smoke() { 2_000_000 } else { 20_000_000 };
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(ntk_sketch::obs::span(std::hint::black_box("bench.noop")));
+    }
+    let span_disabled_ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+
+    // (b) how many span gates one request actually crosses: arm an
+    // in-memory capture, run a single request, count the events
+    trace::enable_mem();
+    let (_, _, ok_probe) = qps_run(d, rows, 0.05);
+    let (events, _) = trace::drain();
+    trace::disable();
+    let spans_per_request = (events.len() as f64 / ok_probe.max(1) as f64).max(1.0);
+
+    // (c) closed-loop QPS with collection off vs armed (in-memory)
+    let (qps_off, mean_us_off, ok_off) = qps_run(d, rows, secs);
+    trace::enable_mem();
+    let (qps_on, _, ok_on) = qps_run(d, rows, secs);
+    let (_, dropped) = trace::drain();
+    trace::disable();
+    if dropped > 0 {
+        println!("(enabled run overflowed the capture: {dropped} events dropped)");
+    }
+
+    let disabled_overhead_pct = 100.0 * spans_per_request * span_disabled_ns / (mean_us_off * 1e3);
+    let enabled_overhead_pct = 100.0 * (qps_off / qps_on.max(1e-9) - 1.0);
+    let t = Table::new(&["mode", "req/s", "ok"]);
+    t.row(&["disabled".to_string(), format!("{qps_off:.0}"), format!("{ok_off}")]);
+    t.row(&["enabled".to_string(), format!("{qps_on:.0}"), format!("{ok_on}")]);
+    println!(
+        "disabled span: {span_disabled_ns:.1}ns/call × {spans_per_request:.0} spans/request \
+         = {disabled_overhead_pct:.4}% of a {mean_us_off:.0}µs request"
+    );
+
+    let mut o = BTreeMap::new();
+    o.insert("span_disabled_ns".to_string(), Json::Num(span_disabled_ns));
+    o.insert("spans_per_request".to_string(), Json::Num(spans_per_request));
+    o.insert("qps_disabled".to_string(), Json::Num(qps_off));
+    o.insert("qps_enabled".to_string(), Json::Num(qps_on));
+    o.insert("disabled_overhead_pct".to_string(), Json::Num(disabled_overhead_pct));
+    o.insert("enabled_overhead_pct".to_string(), Json::Num(enabled_overhead_pct));
+    Json::Obj(o)
+}
+
 fn main() {
     if std::env::var("NTK_FAULTS").is_ok() {
         eprintln!(
@@ -117,26 +206,29 @@ fn main() {
         t.row(&[
             format!("{workers}"),
             format!("{qps:.0}"),
-            format!("{}us", stats.total.req_p50_us),
-            format!("{}us", stats.total.req_p99_us),
+            format!("{}us", stats.total.req_p50_us()),
+            format!("{}us", stats.total.req_p99_us()),
             format!("{ok}"),
             format!("{rejected}"),
         ]);
         let mut o = BTreeMap::new();
         o.insert("workers".to_string(), Json::Num(workers as f64));
         o.insert("qps".to_string(), Json::Num(qps));
-        o.insert("p50_us".to_string(), Json::Num(stats.total.req_p50_us as f64));
-        o.insert("p99_us".to_string(), Json::Num(stats.total.req_p99_us as f64));
+        o.insert("p50_us".to_string(), Json::Num(stats.total.req_p50_us() as f64));
+        o.insert("p99_us".to_string(), Json::Num(stats.total.req_p99_us() as f64));
         o.insert("ok".to_string(), Json::Num(ok as f64));
         o.insert("rejected".to_string(), Json::Num(rejected as f64));
         configs.push(Json::Obj(o));
     }
+
+    let overhead = tracing_overhead(d, rows, if smoke() { 0.4 } else { 1.5 });
 
     let mut top = BTreeMap::new();
     top.insert("clients".to_string(), Json::Num(clients as f64));
     top.insert("rows_per_request".to_string(), Json::Num(rows as f64));
     top.insert("secs_per_config".to_string(), Json::Num(secs));
     top.insert("configs".to_string(), Json::Arr(configs));
+    top.insert("tracing_overhead".to_string(), overhead);
     if std::env::var("NTK_FAULTS").is_ok() {
         return;
     }

@@ -29,6 +29,14 @@ pub enum Command {
     Predict(PredictCfg),
     Serve(ServeCfg),
     Models(ModelsCfg),
+    Trace(TraceCfg),
+}
+
+/// `trace` — summarize a Chrome-trace capture written via `NTK_TRACE`
+/// into a per-stage table (count, total, mean, max per span name).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceCfg {
+    pub file: String,
 }
 
 /// `kernel` — print K_relu^{(L)} on a grid (Fig. 1 data).
@@ -87,11 +95,12 @@ pub struct PredictCfg {
     pub retries: u32,
 }
 
-/// `serve` — four modes, validated at parse time:
+/// `serve` — five modes, validated at parse time:
 /// - in-process demo (default): `--model NAME [--requests N]`, or the
 ///   PJRT feature-serving demo without `--model`;
 /// - daemon: `--model NAME --listen ADDR [--port-file F]`;
 /// - stats client: `--stats --connect ADDR` (prints JSON);
+/// - metrics client: `--metrics --connect ADDR` (prints Prometheus text);
 /// - shutdown client: `--shutdown --connect ADDR`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeCfg {
@@ -108,6 +117,7 @@ pub struct ServeCfg {
     pub port_file: Option<String>,
     pub connect: Option<String>,
     pub stats: bool,
+    pub metrics: bool,
     pub shutdown: bool,
 }
 
@@ -144,9 +154,10 @@ impl Command {
             "predict" => predict_cfg(args).map(Command::Predict),
             "serve" => serve_cfg(args).map(Command::Serve),
             "models" => models_cfg(args).map(Command::Models),
+            "trace" => trace_cfg(args).map(Command::Trace),
             other => Err(format!(
                 "unknown command `{other}` \
-                 (known: info, golden, kernel, train, predict, serve, models)"
+                 (known: info, golden, kernel, train, predict, serve, models, trace)"
             )),
         }
     }
@@ -166,7 +177,10 @@ pub fn usage() -> &'static str {
      \tntk-sketch serve --model m1 --listen 127.0.0.1:7071 --workers 4\n\
      \tntk-sketch predict --model m1 --connect 127.0.0.1:7071\n\
      \tntk-sketch serve --stats --connect 127.0.0.1:7071\n\
+     \tntk-sketch serve --metrics --connect 127.0.0.1:7071\n\
      \tntk-sketch serve --shutdown --connect 127.0.0.1:7071\n\
+     \tNTK_TRACE=trace.json ntk-sketch train --family cntk --n 64 --save c1\n\
+     \tntk-sketch trace --file trace.json\n\
      \tntk-sketch models"
 }
 
@@ -276,7 +290,7 @@ fn serve_cfg(args: &Args) -> Result<ServeCfg, String> {
             "connect",
             "models-dir",
         ],
-        &["stats", "shutdown"],
+        &["stats", "metrics", "shutdown"],
     )?;
     let cfg = ServeCfg {
         model: args.get("model").map(str::to_string),
@@ -292,18 +306,26 @@ fn serve_cfg(args: &Args) -> Result<ServeCfg, String> {
         port_file: args.get("port-file").map(str::to_string),
         connect: args.get("connect").map(str::to_string),
         stats: args.flag("stats"),
+        metrics: args.flag("metrics"),
         shutdown: args.flag("shutdown"),
     };
-    if cfg.stats && cfg.shutdown {
-        return Err("--stats and --shutdown are separate operations; pick one".into());
+    let ops = cfg.stats as u32 + cfg.metrics as u32 + cfg.shutdown as u32;
+    if ops > 1 {
+        return Err("--stats, --metrics and --shutdown are separate operations; pick one".into());
     }
-    if (cfg.stats || cfg.shutdown) && cfg.connect.is_none() {
-        let op = if cfg.stats { "--stats" } else { "--shutdown" };
+    if ops == 1 && cfg.connect.is_none() {
+        let op = if cfg.stats {
+            "--stats"
+        } else if cfg.metrics {
+            "--metrics"
+        } else {
+            "--shutdown"
+        };
         return Err(format!("{op} talks to a running server: add --connect HOST:PORT"));
     }
-    if cfg.connect.is_some() && !(cfg.stats || cfg.shutdown) {
+    if cfg.connect.is_some() && ops == 0 {
         return Err(
-            "serve --connect needs an operation: --stats or --shutdown \
+            "serve --connect needs an operation: --stats, --metrics or --shutdown \
              (to run inference against a server, use `predict --connect`)"
                 .into(),
         );
@@ -318,6 +340,15 @@ fn serve_cfg(args: &Args) -> Result<ServeCfg, String> {
         return Err("--port-file only makes sense with --listen".into());
     }
     Ok(cfg)
+}
+
+fn trace_cfg(args: &Args) -> Result<TraceCfg, String> {
+    check_known(args, "trace", &["file"], &[])?;
+    let file = args
+        .get("file")
+        .ok_or_else(|| "trace needs --file PATH (a capture written via NTK_TRACE)".to_string())?
+        .to_string();
+    Ok(TraceCfg { file })
 }
 
 fn models_cfg(args: &Args) -> Result<ModelsCfg, String> {
@@ -542,6 +573,27 @@ mod tests {
         assert!(parse(&["serve", "--model", "m1", "--listen", "a", "--connect", "b", "--stats"])
             .unwrap_err()
             .contains("mutually exclusive"));
+    }
+
+    #[test]
+    fn serve_metrics_client_validates() {
+        assert!(parse(&["serve", "--metrics"]).unwrap_err().contains("--connect"));
+        let Command::Serve(s) = parse(&["serve", "--metrics", "--connect", "h:1"]).unwrap()
+        else {
+            panic!()
+        };
+        assert!(s.metrics && !s.stats && !s.shutdown);
+        assert!(parse(&["serve", "--metrics", "--stats", "--connect", "h:1"])
+            .unwrap_err()
+            .contains("pick one"));
+    }
+
+    #[test]
+    fn trace_requires_file() {
+        assert!(parse(&["trace"]).unwrap_err().contains("--file"));
+        let Command::Trace(t) = parse(&["trace", "--file", "t.json"]).unwrap() else { panic!() };
+        assert_eq!(t.file, "t.json");
+        assert!(parse(&["trace", "--frames", "x"]).unwrap_err().contains("unknown flag"));
     }
 
     #[test]

@@ -1,75 +1,25 @@
-//! Lightweight serving metrics: counters and a log-bucketed latency
-//! histogram with quantile extraction (p50/p95/p99 for the serve bench).
+//! Serving metrics on the unified [`crate::obs`] core: counters plus the
+//! shared log-bucketed latency histogram (DESIGN.md §12).
 //!
 //! [`Metrics`] is the live, shared-across-threads accumulator;
 //! [`MetricsSnapshot`] is its point-in-time, serializable projection —
-//! the one stats representation used by `serve --stats`, the saturation
-//! bench (`BENCH_serve.json`), and human-readable summaries.
+//! the one stats representation used by `serve --stats`, the Prometheus
+//! exposition behind `serve --connect --metrics`, the saturation bench
+//! (`BENCH_serve.json`), and human-readable summaries. Snapshots carry
+//! the full request/exec histograms, so [`MetricsSnapshot::merge`]
+//! reconstructs **exact** cross-shard quantiles by bucket-wise addition
+//! instead of the worst-shard approximation the pre-obs implementation
+//! had to settle for.
 
+use crate::obs::hist::HistSnapshot;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Log-bucketed histogram over microsecond latencies: bucket k covers
-/// [2^k, 2^(k+1)) µs, k = 0..=39.
-pub struct LatencyHistogram {
-    buckets: Vec<AtomicU64>,
-    count: AtomicU64,
-    sum_us: AtomicU64,
-}
-
-impl Default for LatencyHistogram {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl LatencyHistogram {
-    pub fn new() -> LatencyHistogram {
-        LatencyHistogram {
-            buckets: (0..40).map(|_| AtomicU64::new(0)).collect(),
-            count: AtomicU64::new(0),
-            sum_us: AtomicU64::new(0),
-        }
-    }
-
-    pub fn record(&self, dur: std::time::Duration) {
-        let us = dur.as_micros().max(1) as u64;
-        let k = (63 - us.leading_zeros() as usize).min(39);
-        self.buckets[k].fetch_add(1, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us, Ordering::Relaxed);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
-    }
-
-    pub fn mean_us(&self) -> f64 {
-        let c = self.count();
-        if c == 0 {
-            return 0.0;
-        }
-        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
-    }
-
-    /// Upper edge of the bucket containing quantile `q` (0..1).
-    pub fn quantile_us(&self, q: f64) -> u64 {
-        let total = self.count();
-        if total == 0 {
-            return 0;
-        }
-        let target = ((total as f64) * q).ceil() as u64;
-        let mut seen = 0;
-        for (k, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return 1u64 << (k + 1);
-            }
-        }
-        1u64 << 40
-    }
-}
+/// The crate-wide latency histogram (bucket k covers [2^k, 2^(k+1)) µs).
+/// Re-exported here because the serving tier grew it first; new code
+/// should reach for [`crate::obs::Hist`] directly.
+pub use crate::obs::hist::Hist as LatencyHistogram;
 
 /// Aggregate serving metrics shared across threads.
 #[derive(Default)]
@@ -107,17 +57,15 @@ impl Metrics {
             pad_rows: Self::get(&self.pad_rows),
             rejected: Self::get(&self.rejected),
             panics: Self::get(&self.panics),
-            req_p50_us: self.request_latency.quantile_us(0.5),
-            req_p99_us: self.request_latency.quantile_us(0.99),
-            req_mean_us: self.request_latency.mean_us(),
-            exec_mean_us: self.exec_latency.mean_us(),
+            req_hist: self.request_latency.snapshot(),
+            exec_hist: self.exec_latency.snapshot(),
         }
     }
 }
 
 /// A point-in-time copy of [`Metrics`], serializable via
-/// [`crate::util::json`]. Counters are exact; latency figures are the
-/// histogram's bucketed quantiles and exact means.
+/// [`crate::util::json`]. Counters are exact; latency figures derive
+/// from the embedded histograms (bucketed quantiles, exact means).
 #[derive(Debug, Clone, PartialEq)]
 pub struct MetricsSnapshot {
     pub requests: u64,
@@ -126,10 +74,10 @@ pub struct MetricsSnapshot {
     pub pad_rows: u64,
     pub rejected: u64,
     pub panics: u64,
-    pub req_p50_us: u64,
-    pub req_p99_us: u64,
-    pub req_mean_us: f64,
-    pub exec_mean_us: f64,
+    /// end-to-end request latency distribution
+    pub req_hist: HistSnapshot,
+    /// executable invocation latency distribution
+    pub exec_hist: HistSnapshot,
 }
 
 fn field_u64(v: &Json, key: &str) -> Result<u64, String> {
@@ -139,13 +87,46 @@ fn field_u64(v: &Json, key: &str) -> Result<u64, String> {
         .ok_or_else(|| format!("metrics snapshot: missing numeric field `{key}`"))
 }
 
-fn field_f64(v: &Json, key: &str) -> Result<f64, String> {
-    v.get(key)
-        .and_then(Json::as_f64)
-        .ok_or_else(|| format!("metrics snapshot: missing numeric field `{key}`"))
-}
-
 impl MetricsSnapshot {
+    /// All-zero snapshot (the merge identity).
+    pub fn zero() -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: 0,
+            batches: 0,
+            rows: 0,
+            pad_rows: 0,
+            rejected: 0,
+            panics: 0,
+            req_hist: HistSnapshot::empty(),
+            exec_hist: HistSnapshot::empty(),
+        }
+    }
+
+    /// p50 of end-to-end request latency (bucket upper edge, µs).
+    pub fn req_p50_us(&self) -> u64 {
+        self.req_hist.quantile_us(0.5)
+    }
+
+    /// p90 of end-to-end request latency (bucket upper edge, µs).
+    pub fn req_p90_us(&self) -> u64 {
+        self.req_hist.quantile_us(0.9)
+    }
+
+    /// p99 of end-to-end request latency (bucket upper edge, µs).
+    pub fn req_p99_us(&self) -> u64 {
+        self.req_hist.quantile_us(0.99)
+    }
+
+    /// Exact mean end-to-end request latency (µs).
+    pub fn req_mean_us(&self) -> f64 {
+        self.req_hist.mean_us()
+    }
+
+    /// Exact mean executable invocation latency (µs).
+    pub fn exec_mean_us(&self) -> f64 {
+        self.exec_hist.mean_us()
+    }
+
     pub fn to_json(&self) -> Json {
         let mut m = BTreeMap::new();
         m.insert("requests".into(), Json::Num(self.requests as f64));
@@ -154,14 +135,25 @@ impl MetricsSnapshot {
         m.insert("pad_rows".into(), Json::Num(self.pad_rows as f64));
         m.insert("rejected".into(), Json::Num(self.rejected as f64));
         m.insert("panics".into(), Json::Num(self.panics as f64));
-        m.insert("req_p50_us".into(), Json::Num(self.req_p50_us as f64));
-        m.insert("req_p99_us".into(), Json::Num(self.req_p99_us as f64));
-        m.insert("req_mean_us".into(), Json::Num(self.req_mean_us));
-        m.insert("exec_mean_us".into(), Json::Num(self.exec_mean_us));
+        m.insert("req_hist".into(), self.req_hist.to_json());
+        m.insert("exec_hist".into(), self.exec_hist.to_json());
+        // derived figures, kept in the wire shape so `--stats` JSON and
+        // the chaos-e2e assertions read them without reconstructing
+        m.insert("req_p50_us".into(), Json::Num(self.req_p50_us() as f64));
+        m.insert("req_p99_us".into(), Json::Num(self.req_p99_us() as f64));
+        m.insert("req_mean_us".into(), Json::Num(self.req_mean_us()));
+        m.insert("exec_mean_us".into(), Json::Num(self.exec_mean_us()));
         Json::Obj(m)
     }
 
     pub fn from_json(v: &Json) -> Result<MetricsSnapshot, String> {
+        let hist = |key: &str| -> Result<HistSnapshot, String> {
+            match v.get(key) {
+                Some(h) => HistSnapshot::from_json(h)
+                    .map_err(|e| format!("metrics snapshot `{key}`: {e}")),
+                None => Err(format!("metrics snapshot: missing histogram `{key}`")),
+            }
+        };
         Ok(MetricsSnapshot {
             requests: field_u64(v, "requests")?,
             batches: field_u64(v, "batches")?,
@@ -169,10 +161,8 @@ impl MetricsSnapshot {
             pad_rows: field_u64(v, "pad_rows")?,
             rejected: field_u64(v, "rejected")?,
             panics: field_u64(v, "panics")?,
-            req_p50_us: field_u64(v, "req_p50_us")?,
-            req_p99_us: field_u64(v, "req_p99_us")?,
-            req_mean_us: field_f64(v, "req_mean_us")?,
-            exec_mean_us: field_f64(v, "exec_mean_us")?,
+            req_hist: hist("req_hist")?,
+            exec_hist: hist("exec_hist")?,
         })
     }
 
@@ -187,30 +177,19 @@ impl MetricsSnapshot {
             self.pad_rows,
             self.rejected,
             self.panics,
-            self.req_p50_us,
-            self.req_p99_us,
-            self.exec_mean_us,
+            self.req_p50_us(),
+            self.req_p99_us(),
+            self.exec_mean_us(),
         )
     }
 
-    /// Aggregate per-shard snapshots into a fleet total: counters sum;
-    /// quantiles take the worst shard (a cross-shard quantile cannot be
-    /// reconstructed from bucketed summaries); means weight by requests.
+    /// Aggregate per-shard snapshots into a fleet total: counters sum
+    /// and histograms merge bucket-wise, so the total's quantiles and
+    /// means are the **exact** pooled figures (the bucket-wise merge is
+    /// associative — see [`HistSnapshot::merge`] — which is what makes
+    /// this reconstruction sound in any grouping order).
     pub fn merge(parts: &[MetricsSnapshot]) -> MetricsSnapshot {
-        let mut total = MetricsSnapshot {
-            requests: 0,
-            batches: 0,
-            rows: 0,
-            pad_rows: 0,
-            rejected: 0,
-            panics: 0,
-            req_p50_us: 0,
-            req_p99_us: 0,
-            req_mean_us: 0.0,
-            exec_mean_us: 0.0,
-        };
-        let mut req_weight = 0.0;
-        let mut exec_weight = 0.0;
+        let mut total = MetricsSnapshot::zero();
         for p in parts {
             total.requests += p.requests;
             total.batches += p.batches;
@@ -218,18 +197,8 @@ impl MetricsSnapshot {
             total.pad_rows += p.pad_rows;
             total.rejected += p.rejected;
             total.panics += p.panics;
-            total.req_p50_us = total.req_p50_us.max(p.req_p50_us);
-            total.req_p99_us = total.req_p99_us.max(p.req_p99_us);
-            total.req_mean_us += p.req_mean_us * p.requests as f64;
-            req_weight += p.requests as f64;
-            total.exec_mean_us += p.exec_mean_us * p.batches as f64;
-            exec_weight += p.batches as f64;
-        }
-        if req_weight > 0.0 {
-            total.req_mean_us /= req_weight;
-        }
-        if exec_weight > 0.0 {
-            total.exec_mean_us /= exec_weight;
+            total.req_hist = total.req_hist.merge(&p.req_hist);
+            total.exec_hist = total.exec_hist.merge(&p.exec_hist);
         }
         total
     }
@@ -282,6 +251,12 @@ mod tests {
         let back = MetricsSnapshot::from_json(&snap.to_json()).unwrap();
         assert_eq!(back, snap);
         assert!(snap.summary().contains("rejected=3"));
+        // derived figures ride in the JSON for external readers
+        let j = snap.to_json();
+        assert_eq!(
+            j.get("req_p50_us").and_then(Json::as_f64),
+            Some(snap.req_p50_us() as f64)
+        );
     }
 
     #[test]
@@ -292,32 +267,57 @@ mod tests {
     }
 
     #[test]
-    fn merge_sums_counters_and_takes_worst_quantiles() {
-        let a = MetricsSnapshot {
-            requests: 10,
-            batches: 2,
-            rows: 10,
-            pad_rows: 0,
-            rejected: 1,
-            panics: 1,
-            req_p50_us: 100,
-            req_p99_us: 400,
-            req_mean_us: 100.0,
-            exec_mean_us: 50.0,
-        };
-        let b = MetricsSnapshot { requests: 30, req_p99_us: 800, req_mean_us: 300.0, ..a.clone() };
-        let t = MetricsSnapshot::merge(&[a, b]);
+    fn merge_sums_counters_and_pools_histograms() {
+        // shard a: 10 fast requests; shard b: 30 slow requests — the
+        // merged quantiles come from the pooled distribution.
+        let ma = Metrics::default();
+        Metrics::inc(&ma.requests, 10);
+        Metrics::inc(&ma.batches, 2);
+        Metrics::inc(&ma.rejected, 1);
+        Metrics::inc(&ma.panics, 1);
+        for _ in 0..10 {
+            ma.request_latency.record(Duration::from_micros(100));
+        }
+        let mb = Metrics::default();
+        Metrics::inc(&mb.requests, 30);
+        Metrics::inc(&mb.batches, 2);
+        Metrics::inc(&mb.rejected, 1);
+        Metrics::inc(&mb.panics, 1);
+        for _ in 0..30 {
+            mb.request_latency.record(Duration::from_micros(300));
+        }
+        let t = MetricsSnapshot::merge(&[ma.snapshot(), mb.snapshot()]);
         assert_eq!(t.requests, 40);
         assert_eq!(t.rejected, 2);
-        assert_eq!(t.req_p99_us, 800);
-        // 10 reqs at 100us + 30 reqs at 300us → 250us mean
-        assert!((t.req_mean_us - 250.0).abs() < 1e-9, "{}", t.req_mean_us);
+        assert_eq!(t.panics, 2);
+        // 10 at 100µs + 30 at 300µs → exact mean 250µs
+        assert!((t.req_mean_us() - 250.0).abs() < 1e-9, "{}", t.req_mean_us());
+        // pooled p50 sits in 300µs's bucket [256, 512), not the max shard's p99
+        assert_eq!(t.req_p50_us(), 512);
+        assert_eq!(t.req_hist.count, 40);
     }
 
     #[test]
     fn merge_of_empty_is_zero() {
         let t = MetricsSnapshot::merge(&[]);
         assert_eq!(t.requests, 0);
-        assert_eq!(t.req_mean_us, 0.0);
+        assert_eq!(t.req_mean_us(), 0.0);
+        assert_eq!(t, MetricsSnapshot::zero());
+    }
+
+    #[test]
+    fn merge_is_associative() {
+        let mk = |n: u64, us: u64| {
+            let m = Metrics::default();
+            Metrics::inc(&m.requests, n);
+            for _ in 0..n {
+                m.request_latency.record(Duration::from_micros(us));
+            }
+            m.snapshot()
+        };
+        let (a, b, c) = (mk(3, 50), mk(7, 900), mk(1, 40_000));
+        let left = MetricsSnapshot::merge(&[MetricsSnapshot::merge(&[a.clone(), b.clone()]), c.clone()]);
+        let right = MetricsSnapshot::merge(&[a, MetricsSnapshot::merge(&[b, c])]);
+        assert_eq!(left, right);
     }
 }

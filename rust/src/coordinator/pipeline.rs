@@ -76,7 +76,10 @@ where
         let xs = x.slice_rows(lo, hi);
         let ys = y.slice_rows(lo, hi);
         let tf = std::time::Instant::now();
-        let feats = featurize(&xs);
+        let feats = {
+            let _s = crate::obs::span("train.featurize");
+            featurize(&xs)
+        };
         featurize_secs += tf.elapsed().as_secs_f64();
         reg.add_batch(&feats, &ys);
     }

@@ -149,7 +149,7 @@ impl FeatureClient {
 
     /// Retry hint: roughly one mean batch execution, clamped [1, 1000] ms.
     fn retry_after_ms(&self) -> u64 {
-        let mean_us = self.metrics.snapshot().exec_mean_us;
+        let mean_us = self.metrics.snapshot().exec_mean_us();
         ((mean_us / 1000.0).ceil() as u64).clamp(1, 1000)
     }
 }

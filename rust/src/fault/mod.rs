@@ -316,6 +316,9 @@ pub fn inject(site: &str) -> Option<Fault> {
     }
     let plan = PLAN.read().unwrap().clone()?;
     let fault = plan.inject(site)?;
+    // fired injections flow into the unified metrics registry so chaos
+    // runs are visible in the Prometheus exposition, not only in stderr
+    crate::obs::event_labeled("ntk_fault_injected_total", "site", fault.site, 1);
     eprintln!("ntk fault: {}", fault.msg());
     Some(fault)
 }

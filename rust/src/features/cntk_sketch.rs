@@ -402,13 +402,16 @@ impl CntkSketch {
         // once. Same per-row core as `Srht::apply_batch`, reading rows
         // straight from the borrowed pixel stack (bit-identical).
         let mut phi = Mat::zeros(np, r);
-        par::par_row_blocks(&mut phi.data, np, r, |row0, block| {
-            let mut scratch = vec![0.0f32; self.s_in.scratch_len()];
-            for (k, orow) in block.chunks_mut(r).enumerate() {
-                let row = row0 + k;
-                self.s_in.apply_into(&data[row * c..(row + 1) * c], &mut scratch, orow);
-            }
-        });
+        {
+            let _s = crate::obs::span("cntk.input_sketch");
+            par::par_row_blocks(&mut phi.data, np, r, |row0, block| {
+                let mut scratch = vec![0.0f32; self.s_in.scratch_len()];
+                for (k, orow) in block.chunks_mut(r).enumerate() {
+                    let row = row0 + k;
+                    self.s_in.apply_into(&data[row * c..(row + 1) * c], &mut scratch, orow);
+                }
+            });
+        }
         let mut psi = Mat::zeros(np, s); // ψ⁰ = 0
         let mut mu = Mat::zeros(np, self.cfg.q * self.cfg.q * r);
         let mut phi_new = Mat::zeros(np, r);
@@ -419,31 +422,46 @@ impl CntkSketch {
         for (hh, layer) in self.layers.iter().enumerate() {
             let lvl = hh + 1;
             let n_h = &n_arr[lvl];
-            self.gather_mu(&phi, n_h, &mut mu);
+            {
+                let _s = crate::obs::span("cntk.gather_mu");
+                self.gather_mu(&phi, n_h, &mut mu);
+            }
             // φ̇^h: κ₀ block (batched), scaled by 1/q — needed at every
             // layer (it feeds Q² below)
-            super::poly_block_batch(&layer.q_dot, &layer.b_sqrt, &layer.w, &mu, &mut phi_dot);
-            par::par_rows(&mut phi_dot.data, np, s, |_row, orow| {
-                for v in orow.iter_mut() {
-                    *v /= qf;
-                }
-            });
+            {
+                let _s = crate::obs::span("cntk.phi_dot");
+                super::poly_block_batch(&layer.q_dot, &layer.b_sqrt, &layer.w, &mu, &mut phi_dot);
+                par::par_rows(&mut phi_dot.data, np, s, |_row, orow| {
+                    for v in orow.iter_mut() {
+                        *v /= qf;
+                    }
+                });
+            }
             // Q²(ψ^{h−1} ⊗ φ̇^h) for the whole pixel stack
-            layer.q2.apply_batch(&psi, &phi_dot, &mut q2_out);
+            {
+                let _s = crate::obs::span("cntk.q2");
+                layer.q2.apply_batch(&psi, &phi_dot, &mut q2_out);
+            }
             if lvl < self.cfg.depth {
                 // φ^h: κ₁ block (batched PolySketch family + T mix), then
                 // the √N/q rescale of Definition 3 — only layers below
                 // the top consume φ (Eq. 113 reads φ̇ alone), so the
                 // final layer skips this entire sketch stage
-                super::poly_block_batch(&layer.q_phi, &layer.c_sqrt, &layer.t, &mu, &mut phi_new);
-                par::par_rows(&mut phi_new.data, np, r, |row, orow| {
-                    let scale = (n_h[row].sqrt() as f32) / qf;
-                    for v in orow.iter_mut() {
-                        *v *= scale;
-                    }
-                });
+                {
+                    let _s = crate::obs::span("cntk.phi_sketch");
+                    super::poly_block_batch(&layer.q_phi, &layer.c_sqrt, &layer.t, &mu, &mut phi_new);
+                    par::par_rows(&mut phi_new.data, np, r, |row, orow| {
+                        let scale = (n_h[row].sqrt() as f32) / qf;
+                        for v in orow.iter_mut() {
+                            *v *= scale;
+                        }
+                    });
+                }
                 // η then patch-summed ψ (Eq. 112)
-                self.gather_eta_mix(layer, &q2_out, &phi_new, &mut psi_new);
+                {
+                    let _s = crate::obs::span("cntk.gather_eta_mix");
+                    self.gather_eta_mix(layer, &q2_out, &phi_new, &mut psi_new);
+                }
                 std::mem::swap(&mut psi, &mut psi_new);
                 std::mem::swap(&mut phi, &mut phi_new);
             } else {
@@ -454,6 +472,7 @@ impl CntkSketch {
 
         // step 6 (Eq. 114): GAP per image, then one Gaussian JL GEMM over
         // the pooled batch.
+        let _s = crate::obs::span("cntk.final_jl");
         let mut pooled = Mat::zeros(n_imgs, s);
         let psi_ref = &psi;
         par::par_rows(&mut pooled.data, n_imgs, s, |img, orow| {

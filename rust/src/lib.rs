@@ -55,6 +55,7 @@
 pub mod util;
 pub mod rng;
 pub mod fault;
+pub mod obs;
 pub mod tensor;
 pub mod linalg;
 pub mod transforms;

@@ -24,10 +24,15 @@
 //!                                serving); with --listen ADDR it becomes
 //!                                the networked daemon (DESIGN.md §10),
 //!                                hot-swapping when the registry advances;
-//!                                --stats/--shutdown --connect ADDR talk
-//!                                to a running daemon
+//!                                --stats/--metrics/--shutdown --connect
+//!                                ADDR talk to a running daemon
 //!   models                       list the registry; --gc NAME trims old
 //!                                versions
+//!   trace    --file F            summarize an NTK_TRACE capture into a
+//!                                per-stage profile table
+//!
+//! Set `NTK_TRACE=trace.json` on any verb to capture structured spans
+//! (Chrome trace-event JSON, loadable in `chrome://tracing` / Perfetto).
 //!
 //! Dataset families: `millionsongs | workloads | ct | protein` (UCI-like
 //! regression), `cifar | mnist` (flattened side×side image
@@ -38,7 +43,7 @@
 //! Model registry root: `--models-dir`, else `$NTK_MODEL_DIR`, else
 //! `./models` (DESIGN.md §8).
 
-use ntk_sketch::cli::{self, Command, KernelCfg, ModelsCfg, PredictCfg, ServeCfg, TrainCfg};
+use ntk_sketch::cli::{self, Command, KernelCfg, ModelsCfg, PredictCfg, ServeCfg, TraceCfg, TrainCfg};
 use ntk_sketch::coordinator::{BatchBackend, BatchPolicy, FeatureServer, NativeBackend};
 use ntk_sketch::data::{
     eval_dataset, gen_vec_dataset, image_side, parse_family, split, square_side, DataFamily,
@@ -65,6 +70,7 @@ use ntk_sketch::serve::{
 use ntk_sketch::tensor::Mat;
 use ntk_sketch::transforms::LeafMode;
 use ntk_sketch::util::cli::Args;
+use ntk_sketch::util::timer::fmt_secs;
 use std::sync::Arc;
 
 fn main() {
@@ -83,11 +89,24 @@ fn main() {
         Command::Predict(c) => predict(&c),
         Command::Serve(c) => serve(&c),
         Command::Models(c) => models_cmd(&c),
+        Command::Trace(c) => trace_cmd(&c),
+    }
+    flush_trace();
+}
+
+/// Write out an `NTK_TRACE` capture (if one is armed). Called on both the
+/// normal exit path and [`fail`], because `process::exit` skips `Drop`.
+fn flush_trace() {
+    match ntk_sketch::obs::trace::flush() {
+        Ok(Some(path)) => eprintln!("trace written to {path}"),
+        Ok(None) => {}
+        Err(e) => eprintln!("warning: failed to write NTK_TRACE capture: {e}"),
     }
 }
 
 fn fail(e: impl std::fmt::Display) -> ! {
     eprintln!("error: {e}");
+    flush_trace();
     std::process::exit(1);
 }
 
@@ -445,7 +464,10 @@ fn train_persistent(cfg: &TrainCfg) {
     let batches_at_start = batches_done;
     while lo < n_total {
         let hi = (lo + batch_rows).min(n_total);
-        let feats = f.transform(&ds.x.slice_rows(lo, hi));
+        let feats = {
+            let _s = ntk_sketch::obs::span("train.featurize");
+            f.transform(&ds.x.slice_rows(lo, hi))
+        };
         reg.add_batch(&feats, &y.slice_rows(lo, hi));
         batches_done += 1;
         lo = hi;
@@ -600,12 +622,16 @@ impl BatchBackend for PjrtBackend {
 
 fn serve(cfg: &ServeCfg) {
     // client operations against a running daemon
-    if cfg.stats || cfg.shutdown {
+    if cfg.stats || cfg.metrics || cfg.shutdown {
         let addr = cfg.connect.as_deref().expect("validated at parse");
         let mut s = TcpSession::connect(addr).unwrap_or_else(|e| fail(e));
         if cfg.shutdown {
             s.shutdown_server().unwrap_or_else(|e| fail(e));
             println!("server at {addr} shutting down");
+        } else if cfg.metrics {
+            // Prometheus text exposition, exactly as a scraper would see it
+            let text = s.metrics().unwrap_or_else(|e| fail(e));
+            print!("{text}");
         } else {
             let stats = s.stats().unwrap_or_else(|e| fail(e));
             let json = stats.to_json().to_string();
@@ -734,6 +760,33 @@ fn serve_pjrt_demo(cfg: &ServeCfg) {
     println!("{}", server.metrics.snapshot().summary());
     drop(client);
     server.join();
+}
+
+/// Summarize an `NTK_TRACE` capture into a per-stage table: one row per
+/// span name, sorted by total time (the hot stage reads first).
+fn trace_cmd(cfg: &TraceCfg) {
+    let text = std::fs::read_to_string(&cfg.file)
+        .unwrap_or_else(|e| fail(format!("read {}: {e}", cfg.file)));
+    let doc = ntk_sketch::util::json::parse(&text)
+        .unwrap_or_else(|e| fail(format!("{}: not valid trace JSON ({e})", cfg.file)));
+    let rows = ntk_sketch::obs::trace::summarize(&doc)
+        .unwrap_or_else(|e| fail(format!("{}: {e}", cfg.file)));
+    if rows.is_empty() {
+        println!("{}: no complete spans", cfg.file);
+        return;
+    }
+    let name_w = rows.iter().map(|r| r.name.len()).max().unwrap_or(5).max(5);
+    println!("{:<name_w$}  {:>8}  {:>10}  {:>10}  {:>10}", "stage", "count", "total", "mean", "max");
+    for r in &rows {
+        println!(
+            "{:<name_w$}  {:>8}  {:>10}  {:>10}  {:>10}",
+            r.name,
+            r.count,
+            fmt_secs(r.total_s),
+            fmt_secs(r.mean_s),
+            fmt_secs(r.max_s)
+        );
+    }
 }
 
 fn models_cmd(cfg: &ModelsCfg) {

@@ -112,6 +112,7 @@ impl Registry {
     /// on-disk), so a briefly trailing pointer cannot hide a newer
     /// artifact).
     pub fn save(&self, model: &SavedModel) -> Result<u32, ModelError> {
+        let _s = crate::obs::span("store.save");
         let name = model.meta.name.clone();
         check_name(&name)?;
         std::fs::create_dir_all(self.model_dir(&name))?;
@@ -141,6 +142,7 @@ impl Registry {
     /// highest on-disk version) — so a pointer briefly trailing a
     /// concurrent save never hides the newer artifact.
     pub fn load(&self, name: &str, version: Option<u32>) -> Result<SavedModel, ModelError> {
+        let _s = crate::obs::span("store.load");
         check_name(name)?;
         let v = match version {
             Some(v) => v,
@@ -213,11 +215,13 @@ impl Registry {
 
     /// Persist an in-flight training checkpoint (atomic).
     pub fn save_checkpoint(&self, ck: &TrainCheckpoint) -> Result<(), ModelError> {
+        let _s = crate::obs::span("store.checkpoint");
         check_name(&ck.meta.name)?;
         write_atomic(&self.checkpoint_path(&ck.meta.name), &ck.to_bytes())
     }
 
     pub fn load_checkpoint(&self, name: &str) -> Result<TrainCheckpoint, ModelError> {
+        let _s = crate::obs::span("store.checkpoint");
         check_name(name)?;
         let path = self.checkpoint_path(name);
         let bytes = std::fs::read(&path).map_err(|e| {

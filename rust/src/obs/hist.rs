@@ -1,0 +1,353 @@
+//! Log-bucketed latency histograms — the one histogram implementation
+//! every metrics surface in the crate is built on (DESIGN.md §12).
+//!
+//! Bucket `k` covers `[2^k, 2^(k+1))` microseconds for `k = 0..=39`;
+//! sub-microsecond durations clamp into bucket 0 and anything above
+//! `2^40 µs` (~12.7 days) clamps into bucket 39. Two shapes:
+//!
+//! - [`Hist`]: the live, lock-free accumulator (relaxed atomic adds) that
+//!   worker threads record into.
+//! - [`HistSnapshot`]: its plain point-in-time projection. Snapshots
+//!   merge **bucket-wise** — integer adds, so merge is exactly
+//!   associative and commutative (property-tested) — which is what lets
+//!   a fleet of shard histograms be combined into one exact cross-shard
+//!   distribution instead of a worst-shard approximation.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of log buckets: `[2^0, 2^40)` µs.
+pub const N_BUCKETS: usize = 40;
+
+/// Bucket index for a latency of `us` microseconds (`us` is clamped to
+/// at least 1): the floor of `log2(us)`, capped at the top bucket.
+#[inline]
+pub fn bucket_index(us: u64) -> usize {
+    (63 - us.max(1).leading_zeros() as usize).min(N_BUCKETS - 1)
+}
+
+/// Inclusive lower edge of bucket `k` in microseconds.
+#[inline]
+pub fn bucket_lo_us(k: usize) -> u64 {
+    1u64 << k
+}
+
+/// Exclusive upper edge of bucket `k` in microseconds.
+#[inline]
+pub fn bucket_hi_us(k: usize) -> u64 {
+    1u64 << (k + 1)
+}
+
+/// Live, shared-across-threads log-bucketed histogram.
+pub struct Hist {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one latency sample.
+    pub fn record(&self, dur: Duration) {
+        self.record_us(dur.as_micros().max(1) as u64);
+    }
+
+    /// Record one latency sample given directly in microseconds.
+    pub fn record_us(&self, us: u64) {
+        let us = us.max(1);
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    /// Upper edge of the bucket containing quantile `q` (0..1).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        self.snapshot().quantile_us(q)
+    }
+
+    /// Point-in-time plain copy (the mergeable/serializable shape).
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain, mergeable point-in-time histogram. `buckets.len()` is always
+/// [`N_BUCKETS`]; `count` is the total sample count and `sum_us` the
+/// exact sum of recorded microseconds (so merged means stay exact).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum_us: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+impl HistSnapshot {
+    pub fn empty() -> HistSnapshot {
+        HistSnapshot { buckets: vec![0; N_BUCKETS], count: 0, sum_us: 0 }
+    }
+
+    /// Bucket-wise sum of two snapshots. Pure integer adds, hence
+    /// exactly associative and commutative — the algebra that makes
+    /// cross-shard quantiles exact rather than worst-shard bounds.
+    pub fn merge(&self, other: &HistSnapshot) -> HistSnapshot {
+        let buckets =
+            self.buckets.iter().zip(&other.buckets).map(|(&a, &b)| a + b).collect();
+        HistSnapshot {
+            buckets,
+            count: self.count + other.count,
+            sum_us: self.sum_us + other.sum_us,
+        }
+    }
+
+    /// Fold a slice of snapshots into one (empty slice ⇒ empty hist).
+    pub fn merge_all(parts: &[HistSnapshot]) -> HistSnapshot {
+        parts.iter().fold(HistSnapshot::empty(), |acc, p| acc.merge(p))
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum_us as f64 / self.count as f64
+    }
+
+    /// Upper edge of the bucket containing quantile `q` (0..1); 0 when
+    /// the histogram is empty.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((self.count as f64) * q).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (k, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= target {
+                return bucket_hi_us(k);
+            }
+        }
+        bucket_hi_us(N_BUCKETS - 1)
+    }
+
+    /// Upper edge of the highest non-empty bucket; 0 when empty.
+    pub fn max_us(&self) -> u64 {
+        self.buckets
+            .iter()
+            .enumerate()
+            .rev()
+            .find(|(_, &b)| b > 0)
+            .map_or(0, |(k, _)| bucket_hi_us(k))
+    }
+
+    /// Serialize as `{"buckets": [...40 counts...], "count": n, "sum_us": s}`.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "buckets".to_string(),
+            Json::Arr(self.buckets.iter().map(|&b| Json::Num(b as f64)).collect()),
+        );
+        m.insert("count".to_string(), Json::Num(self.count as f64));
+        m.insert("sum_us".to_string(), Json::Num(self.sum_us as f64));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(v: &Json) -> Result<HistSnapshot, String> {
+        let arr = v
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "hist: missing `buckets` array".to_string())?;
+        if arr.len() != N_BUCKETS {
+            return Err(format!("hist: expected {} buckets, got {}", N_BUCKETS, arr.len()));
+        }
+        let mut buckets = Vec::with_capacity(N_BUCKETS);
+        for b in arr {
+            buckets.push(
+                b.as_f64().ok_or_else(|| "hist: non-numeric bucket".to_string())? as u64,
+            );
+        }
+        let count = v
+            .get("count")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| "hist: missing `count`".to_string())? as u64;
+        let sum_us = v
+            .get("sum_us")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| "hist: missing `sum_us`".to_string())? as u64;
+        Ok(HistSnapshot { buckets, count, sum_us })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn bucket_boundaries_are_exact() {
+        // bucket k covers [2^k, 2^(k+1)): each lower edge lands in its
+        // own bucket, each upper-edge-minus-one stays put.
+        for k in 0..N_BUCKETS - 1 {
+            let lo = bucket_lo_us(k);
+            assert_eq!(bucket_index(lo), k, "lower edge of bucket {k}");
+            assert_eq!(bucket_index(bucket_hi_us(k) - 1), k, "last value of bucket {k}");
+            assert_eq!(bucket_index(bucket_hi_us(k)), k + 1, "upper edge opens bucket {}", k + 1);
+        }
+        // clamps: 0 µs records as 1 µs (bucket 0); beyond-top clamps to 39.
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(u64::MAX), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn record_lands_in_the_documented_bucket() {
+        let h = Hist::new();
+        h.record_us(1); // bucket 0: [1, 2)
+        h.record_us(2); // bucket 1: [2, 4)
+        h.record_us(3); // bucket 1
+        h.record_us(4); // bucket 2: [4, 8)
+        h.record_us(1023); // bucket 9: [512, 1024)
+        h.record_us(1024); // bucket 10: [1024, 2048)
+        let s = h.snapshot();
+        assert_eq!(s.buckets[0], 1);
+        assert_eq!(s.buckets[1], 2);
+        assert_eq!(s.buckets[2], 1);
+        assert_eq!(s.buckets[9], 1);
+        assert_eq!(s.buckets[10], 1);
+        assert_eq!(s.count, 6);
+        assert_eq!(s.sum_us, 1 + 2 + 3 + 4 + 1023 + 1024);
+    }
+
+    #[test]
+    fn quantiles_are_bucket_upper_edges() {
+        let h = Hist::new();
+        for us in [10u64, 20, 40, 80, 160, 320, 640, 1280, 2560, 100_000] {
+            h.record_us(us);
+        }
+        let s = h.snapshot();
+        let p50 = s.quantile_us(0.5);
+        let p99 = s.quantile_us(0.99);
+        assert!(p50 <= p99);
+        assert!((64..=256).contains(&p50), "p50={p50}");
+        assert!(p99 >= 100_000, "p99={p99}");
+        assert_eq!(s.max_us(), bucket_hi_us(bucket_index(100_000)));
+    }
+
+    #[test]
+    fn empty_hist_is_safe() {
+        let s = HistSnapshot::empty();
+        assert_eq!(s.quantile_us(0.5), 0);
+        assert_eq!(s.mean_us(), 0.0);
+        assert_eq!(s.max_us(), 0);
+    }
+
+    fn random_hist(rng: &mut Rng, samples: usize) -> HistSnapshot {
+        let h = Hist::new();
+        for _ in 0..samples {
+            // spread over ~6 decades so many buckets fill
+            h.record_us(1 + (rng.next_u64() % 1_000_000));
+        }
+        h.snapshot()
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        // property test: merge(a, merge(b, c)) ≡ merge(merge(a, b), c)
+        // and merge(a, b) ≡ merge(b, a), bucket-for-bucket, over random
+        // histograms. Integer adds make this exact, not approximate.
+        let mut rng = Rng::new(0x0B5);
+        for trial in 0..20 {
+            let a = random_hist(&mut rng, 50 + trial);
+            let b = random_hist(&mut rng, 120);
+            let c = random_hist(&mut rng, 7);
+            assert_eq!(a.merge(&b.merge(&c)), a.merge(&b).merge(&c), "associativity");
+            assert_eq!(a.merge(&b), b.merge(&a), "commutativity");
+            assert_eq!(a.merge(&HistSnapshot::empty()), a, "empty is the identity");
+        }
+    }
+
+    #[test]
+    fn merged_quantiles_are_exact_cross_shard() {
+        // One shard with fast requests, one with slow: the merged p50
+        // must reflect the pooled distribution, not the worst shard.
+        let fast = Hist::new();
+        let slow = Hist::new();
+        for _ in 0..99 {
+            fast.record_us(100);
+        }
+        slow.record_us(1_000_000);
+        let merged = fast.snapshot().merge(&slow.snapshot());
+        assert_eq!(merged.count, 100);
+        assert_eq!(merged.quantile_us(0.5), bucket_hi_us(bucket_index(100)));
+        assert!(merged.quantile_us(0.999) >= 1_000_000);
+    }
+
+    #[test]
+    fn merge_all_folds_left() {
+        let mut rng = Rng::new(0x0B6);
+        let parts: Vec<HistSnapshot> = (0..4).map(|_| random_hist(&mut rng, 30)).collect();
+        let folded = HistSnapshot::merge_all(&parts);
+        let manual = parts[0].merge(&parts[1]).merge(&parts[2]).merge(&parts[3]);
+        assert_eq!(folded, manual);
+        assert_eq!(HistSnapshot::merge_all(&[]), HistSnapshot::empty());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut rng = Rng::new(0x0B7);
+        let s = random_hist(&mut rng, 200);
+        let back = HistSnapshot::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        // refusals, not silent zeros
+        assert!(HistSnapshot::from_json(&Json::Obj(Default::default())).is_err());
+        let bad = crate::util::json::parse(r#"{"buckets": [1, 2], "count": 3, "sum_us": 6}"#)
+            .unwrap();
+        assert!(HistSnapshot::from_json(&bad).unwrap_err().contains("40"));
+    }
+
+    #[test]
+    fn live_hist_matches_snapshot_quantiles() {
+        let h = Hist::new();
+        for us in [5u64, 50, 500, 5000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.quantile_us(0.5), h.snapshot().quantile_us(0.5));
+        assert!((h.mean_us() - h.snapshot().mean_us()).abs() < 1e-9);
+    }
+}

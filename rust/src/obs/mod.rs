@@ -1,0 +1,255 @@
+//! Unified observability layer (DESIGN.md §12): structured tracing
+//! spans, one shared histogram core, a process-wide named event
+//! registry, and Prometheus text exposition.
+//!
+//! Three faces, one substrate:
+//!
+//! - **Tracing** ([`trace`], re-exported [`span`]): RAII spans named by
+//!   the dotted stage taxonomy, ~ns when disabled, Chrome-trace JSON via
+//!   `NTK_TRACE=<path>` and the `trace` CLI verb.
+//! - **Metrics** ([`hist`], [`event`]): the log-bucketed
+//!   [`hist::Hist`]/[`hist::HistSnapshot`] pair that
+//!   `coordinator::Metrics`, the router's shard histograms, and
+//!   `ServeStats` are all built on, plus a registry of named counters
+//!   that rare discrete events (fault injections, hot swaps, panics,
+//!   rejections) bump so they are visible outside the test that caused
+//!   them.
+//! - **Exposition** ([`PromWriter`]): Prometheus text-exposition
+//!   rendering used by the serve daemon's `METRICS` wire frame. Latency
+//!   metrics expose microsecond `le` edges and carry a `_us` name
+//!   suffix rather than converting to seconds — the buckets then match
+//!   the trace/stats numbers digit-for-digit.
+
+pub mod hist;
+pub mod trace;
+
+pub use hist::{Hist, HistSnapshot};
+pub use trace::span;
+
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+use std::sync::Mutex;
+
+/// Process-wide named event counters. Keys are full Prometheus series
+/// names including any label set, e.g.
+/// `ntk_fault_injected_total{site="shard.panic"}`. These are rare,
+/// discrete occurrences (faults, swaps, panics) — a mutexed map is
+/// simpler than atomics and nowhere near any hot path.
+static EVENTS: Mutex<BTreeMap<String, u64>> = Mutex::new(BTreeMap::new());
+
+/// Bump the named event counter by `n`. `series` is the full Prometheus
+/// series name (metric name plus optional `{label="value"}` set).
+pub fn event(series: &str, n: u64) {
+    let mut m = EVENTS.lock().unwrap();
+    *m.entry(series.to_string()).or_insert(0) += n;
+}
+
+/// Bump a single-label event series: `event_labeled("ntk_fault_injected_total",
+/// "site", "wire.read", 1)` bumps `ntk_fault_injected_total{site="wire.read"}`.
+pub fn event_labeled(metric: &str, key: &str, value: &str, n: u64) {
+    event(&format!("{metric}{{{key}=\"{value}\"}}"), n);
+}
+
+/// Snapshot of all event counters, sorted by series name.
+pub fn events() -> Vec<(String, u64)> {
+    EVENTS.lock().unwrap().iter().map(|(k, &v)| (k.clone(), v)).collect()
+}
+
+/// Current value of one series (0 when never bumped).
+pub fn event_value(series: &str) -> u64 {
+    EVENTS.lock().unwrap().get(series).copied().unwrap_or(0)
+}
+
+/// Series name (the part before any `{`) — used to group HELP/TYPE
+/// headers when rendering the registry.
+fn series_metric(series: &str) -> &str {
+    series.split('{').next().unwrap_or(series)
+}
+
+/// Prometheus text-exposition (version 0.0.4) writer. Emits `# HELP` /
+/// `# TYPE` headers once per metric name and keeps sample lines in
+/// insertion order.
+#[derive(Default)]
+pub struct PromWriter {
+    out: String,
+    headed: BTreeSet<String>,
+}
+
+impl PromWriter {
+    pub fn new() -> PromWriter {
+        PromWriter::default()
+    }
+
+    fn header(&mut self, name: &str, help: &str, kind: &str) {
+        if self.headed.insert(name.to_string()) {
+            self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+        }
+    }
+
+    /// One counter sample. `labels` is either empty or a rendered
+    /// `key="value",...` list (no braces).
+    pub fn counter(&mut self, name: &str, help: &str, labels: &str, value: u64) {
+        self.header(name, help, "counter");
+        if labels.is_empty() {
+            self.out.push_str(&format!("{name} {value}\n"));
+        } else {
+            self.out.push_str(&format!("{name}{{{labels}}} {value}\n"));
+        }
+    }
+
+    /// One gauge sample.
+    pub fn gauge(&mut self, name: &str, help: &str, labels: &str, value: f64) {
+        self.header(name, help, "gauge");
+        if labels.is_empty() {
+            self.out.push_str(&format!("{name} {value}\n"));
+        } else {
+            self.out.push_str(&format!("{name}{{{labels}}} {value}\n"));
+        }
+    }
+
+    /// A full histogram family from one snapshot: cumulative `_bucket`
+    /// lines with microsecond `le` edges, then `_sum` (µs) and `_count`.
+    /// Only buckets up to the highest non-empty one are emitted (plus
+    /// `+Inf`), keeping the exposition compact.
+    pub fn hist_us(&mut self, name: &str, help: &str, labels: &str, h: &HistSnapshot) {
+        self.header(name, help, "histogram");
+        let sep = if labels.is_empty() { "" } else { "," };
+        let top = h
+            .buckets
+            .iter()
+            .rposition(|&b| b > 0)
+            .map_or(0, |k| k + 1)
+            .min(hist::N_BUCKETS);
+        let mut cum = 0u64;
+        for k in 0..top {
+            cum += h.buckets[k];
+            self.out.push_str(&format!(
+                "{name}_bucket{{{labels}{sep}le=\"{}\"}} {cum}\n",
+                hist::bucket_hi_us(k)
+            ));
+        }
+        self.out.push_str(&format!("{name}_bucket{{{labels}{sep}le=\"+Inf\"}} {}\n", h.count));
+        if labels.is_empty() {
+            self.out.push_str(&format!("{name}_sum {}\n", h.sum_us));
+            self.out.push_str(&format!("{name}_count {}\n", h.count));
+        } else {
+            self.out.push_str(&format!("{name}_sum{{{labels}}} {}\n", h.sum_us));
+            self.out.push_str(&format!("{name}_count{{{labels}}} {}\n", h.count));
+        }
+    }
+
+    /// Append every registry event counter under its own metric name.
+    pub fn registry_events(&mut self) {
+        for (series, value) in events() {
+            let metric = series_metric(&series).to_string();
+            self.header(&metric, "named event counter (ntk obs registry)", "counter");
+            self.out.push_str(&format!("{series} {value}\n"));
+        }
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Minimal parser for the exposition format this writer produces:
+/// returns `(series_name_with_labels, value)` pairs, skipping comments.
+/// Tests and the CLI use it to reconcile counters without a Prometheus
+/// client library.
+pub fn parse_prometheus(text: &str) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        // value is everything after the last space outside braces — the
+        // writer never puts spaces in label values' tails, and `rsplit`
+        // on the final space is exact for its output.
+        if let Some(idx) = line.rfind(' ') {
+            let (series, val) = line.split_at(idx);
+            if let Ok(v) = val.trim().parse::<f64>() {
+                out.push((series.trim().to_string(), v));
+            }
+        }
+    }
+    out
+}
+
+/// Value of one series in a parsed exposition (None when absent).
+pub fn prom_value(samples: &[(String, f64)], series: &str) -> Option<f64> {
+    samples.iter().find(|(s, _)| s == series).map(|&(_, v)| v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_registry_accumulates() {
+        event("test_obs_total", 2);
+        event("test_obs_total", 3);
+        event_labeled("test_obs_labeled_total", "site", "a.b", 1);
+        assert_eq!(event_value("test_obs_total"), 5);
+        assert_eq!(event_value("test_obs_labeled_total{site=\"a.b\"}"), 1);
+        let all = events();
+        assert!(all.iter().any(|(k, v)| k == "test_obs_total" && *v == 5));
+    }
+
+    #[test]
+    fn prom_writer_counters_and_gauges() {
+        let mut w = PromWriter::new();
+        w.counter("ntk_requests_total", "requests", "", 7);
+        w.counter("ntk_requests_total", "requests", "shard=\"1\"", 3);
+        w.gauge("ntk_model_version", "version", "", 4.0);
+        let text = w.finish();
+        // HELP/TYPE emitted once per metric even with two samples
+        assert_eq!(text.matches("# TYPE ntk_requests_total counter").count(), 1);
+        assert!(text.contains("ntk_requests_total 7\n"));
+        assert!(text.contains("ntk_requests_total{shard=\"1\"} 3\n"));
+        assert!(text.contains("# TYPE ntk_model_version gauge"));
+        assert!(text.contains("ntk_model_version 4\n"));
+    }
+
+    #[test]
+    fn prom_hist_is_cumulative_with_us_edges() {
+        let h = Hist::new();
+        h.record_us(1); // bucket 0, le="2"
+        h.record_us(3); // bucket 1, le="4"
+        h.record_us(3);
+        let mut w = PromWriter::new();
+        w.hist_us("ntk_req_us", "request latency", "shard=\"0\"", &h.snapshot());
+        let text = w.finish();
+        assert!(text.contains("# TYPE ntk_req_us histogram"));
+        assert!(text.contains("ntk_req_us_bucket{shard=\"0\",le=\"2\"} 1\n"));
+        assert!(text.contains("ntk_req_us_bucket{shard=\"0\",le=\"4\"} 3\n"));
+        assert!(text.contains("ntk_req_us_bucket{shard=\"0\",le=\"+Inf\"} 3\n"));
+        assert!(text.contains("ntk_req_us_sum{shard=\"0\"} 7\n"));
+        assert!(text.contains("ntk_req_us_count{shard=\"0\"} 3\n"));
+        // no buckets beyond the highest non-empty one
+        assert!(!text.contains("le=\"8\""));
+    }
+
+    #[test]
+    fn parse_reads_back_what_the_writer_wrote() {
+        let mut w = PromWriter::new();
+        w.counter("ntk_a_total", "a", "", 11);
+        w.counter("ntk_b_total", "b", "x=\"y\"", 22);
+        w.gauge("ntk_c", "c", "", 1.5);
+        let samples = parse_prometheus(&w.finish());
+        assert_eq!(prom_value(&samples, "ntk_a_total"), Some(11.0));
+        assert_eq!(prom_value(&samples, "ntk_b_total{x=\"y\"}"), Some(22.0));
+        assert_eq!(prom_value(&samples, "ntk_c"), Some(1.5));
+        assert_eq!(prom_value(&samples, "ntk_missing"), None);
+    }
+
+    #[test]
+    fn registry_renders_into_exposition() {
+        event_labeled("test_obs_render_total", "kind", "swap", 9);
+        let mut w = PromWriter::new();
+        w.registry_events();
+        let text = w.finish();
+        assert!(text.contains("test_obs_render_total{kind=\"swap\"} 9\n"));
+        assert!(text.contains("# TYPE test_obs_render_total counter"));
+    }
+}

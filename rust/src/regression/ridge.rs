@@ -117,6 +117,7 @@ impl RidgeRegressor {
     /// accumulating f32→f64 GEMM with Ψ consumed in its transposed
     /// orientation by the panel packer.
     pub fn add_batch(&mut self, features: &Mat, targets: &Mat) {
+        let _s = crate::obs::span("ridge.accumulate");
         assert_eq!(features.cols, self.dim, "ridge: feature dim mismatch");
         assert_eq!(targets.cols, self.outputs, "ridge: target dim mismatch");
         assert_eq!(features.rows, targets.rows);
@@ -148,6 +149,7 @@ impl RidgeRegressor {
     /// nothing per step); `gram` itself is never mutated, so `solve` can
     /// be called repeatedly and interleaved with `add_batch`.
     pub fn solve(&mut self, lambda: f64) -> Result<(), String> {
+        let _s = crate::obs::span("ridge.solve");
         let dim = self.dim;
         let a = self.scratch.get_or_insert_with(|| DMat::zeros(dim, dim));
         a.data.copy_from_slice(&self.gram.data);

@@ -55,6 +55,7 @@ impl ReplicaSlot {
 
     pub(crate) fn record_swap_failure(&self) {
         self.swap_failures.fetch_add(1, Ordering::Relaxed);
+        crate::obs::event("ntk_model_swap_failures_events_total", 1);
     }
 
     /// Atomically replace the replica; returns (old, new) versions.
@@ -72,6 +73,7 @@ impl ReplicaSlot {
         let to = next.meta.version;
         *self.model.write().expect("replica lock") = Arc::new(next);
         self.swaps.fetch_add(1, Ordering::Relaxed);
+        crate::obs::event("ntk_model_swap_events_total", 1);
         Ok((from, to))
     }
 }

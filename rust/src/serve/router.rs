@@ -28,6 +28,9 @@ pub enum JobOutput {
     /// Rendered stats JSON — stats replies ride the same ordered
     /// completion channel as predictions so frames stay in sequence.
     Stats(String),
+    /// Rendered Prometheus text exposition for a METRICS_REQ — same
+    /// ordered-channel discipline as [`JobOutput::Stats`].
+    Metrics(String),
 }
 
 /// Completion for connection sequence `tag` / client request `id`.
@@ -99,12 +102,15 @@ impl ShardRouter {
                         // worker keeps serving — the client never hangs
                         // on a lost completion, and the queue behind the
                         // panicking job drains normally.
-                        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                            if let Some(fault) = crate::fault::inject("shard.panic") {
-                                panic!("{}", fault.msg());
-                            }
-                            model.predict(&job.rows)
-                        }));
+                        let out = {
+                            let _s = crate::obs::span("serve.infer");
+                            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                if let Some(fault) = crate::fault::inject("shard.panic") {
+                                    panic!("{}", fault.msg());
+                                }
+                                model.predict(&job.rows)
+                            }))
+                        };
                         let result = match out {
                             Ok(rows) => {
                                 m2.exec_latency.record(t_exec.elapsed());
@@ -114,6 +120,7 @@ impl ShardRouter {
                             }
                             Err(_) => {
                                 Metrics::inc(&m2.panics, 1);
+                                crate::obs::event("ntk_serve_panics_total", 1);
                                 Err(InferenceError::Io(format!(
                                     "shard {shard_id} worker panicked serving request {}; \
                                      the request failed and the worker recovered",
@@ -162,6 +169,7 @@ impl ShardRouter {
         done: &Sender<JobResult>,
     ) -> Result<(), InferenceError> {
         check_batch(&rows, self.input_dim())?;
+        let _s = crate::obs::span("serve.admit");
         let start = self.rr.fetch_add(1, Ordering::Relaxed);
         let mut job = Job { rows, tag, id, t0: Instant::now(), done: done.clone() };
         for k in 0..self.queues.len() {
@@ -176,6 +184,7 @@ impl ShardRouter {
             }
         }
         Metrics::inc(&self.metrics[start % self.metrics.len()].rejected, 1);
+        crate::obs::event("ntk_serve_rejected_total", 1);
         Err(InferenceError::Rejected { retry_after_ms: self.retry_after_ms() })
     }
 
@@ -183,7 +192,7 @@ impl ShardRouter {
     /// clamped to [1, 1000] ms (1ms before any execution data exists).
     fn retry_after_ms(&self) -> u64 {
         let parts: Vec<MetricsSnapshot> = self.metrics.iter().map(|m| m.snapshot()).collect();
-        let mean_us = MetricsSnapshot::merge(&parts).exec_mean_us;
+        let mean_us = MetricsSnapshot::merge(&parts).exec_mean_us();
         ((mean_us / 1000.0).ceil() as u64).clamp(1, 1000)
     }
 

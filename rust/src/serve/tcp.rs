@@ -27,6 +27,7 @@ use super::router::{JobOutput, JobResult, RouterConfig, ShardRouter};
 use super::wire::{self, ErrorCode, Frame, WireError};
 use crate::coordinator::metrics::MetricsSnapshot;
 use crate::model::{NativeModel, Registry};
+use crate::obs::PromWriter;
 use crate::tensor::Mat;
 use crate::util::json::Json;
 use std::collections::{BTreeMap, VecDeque};
@@ -196,6 +197,7 @@ impl TcpServer {
             }
             match listener.accept() {
                 Ok((stream, _peer)) => {
+                    let _s = crate::obs::span("serve.accept");
                     if accept_active.load(Ordering::Relaxed) >= max_conns {
                         refuse_conn(stream);
                         continue;
@@ -301,6 +303,49 @@ fn server_stats(router: &ShardRouter) -> ServeStats {
     }
 }
 
+/// Render the server's metrics surface as Prometheus text exposition
+/// (the METRICS frame payload): model identity, fleet totals, per-shard
+/// series, latency histograms with microsecond `le` edges, and every
+/// named event counter in the [`crate::obs`] registry (fault injections,
+/// hot swaps, panics, rejections).
+pub fn render_prometheus(stats: &ServeStats) -> String {
+    let mut w = PromWriter::new();
+    w.gauge("ntk_model_version", "serving replica version", "", stats.version as f64);
+    w.counter("ntk_model_swaps_total", "successful hot swaps", "", stats.swaps);
+    w.counter(
+        "ntk_model_swap_failures_total",
+        "failed hot-swap attempts",
+        "",
+        stats.swap_failures,
+    );
+    let mut series: Vec<(String, &MetricsSnapshot)> = vec![(String::new(), &stats.total)];
+    for (i, s) in stats.shards.iter().enumerate() {
+        series.push((format!("shard=\"{i}\""), s));
+    }
+    for (labels, s) in &series {
+        w.counter("ntk_requests_total", "admitted inference requests", labels, s.requests);
+        w.counter("ntk_rejected_total", "requests refused by admission control", labels, s.rejected);
+        w.counter("ntk_panics_total", "requests failed by a caught worker panic", labels, s.panics);
+        w.counter("ntk_batches_total", "executed batches", labels, s.batches);
+        w.counter("ntk_rows_total", "inference rows served", labels, s.rows);
+        w.counter("ntk_pad_rows_total", "padding rows added to fixed-shape batches", labels, s.pad_rows);
+        w.hist_us(
+            "ntk_request_latency_us",
+            "end-to-end request latency (microseconds)",
+            labels,
+            &s.req_hist,
+        );
+        w.hist_us(
+            "ntk_exec_latency_us",
+            "executable invocation latency (microseconds)",
+            labels,
+            &s.exec_hist,
+        );
+    }
+    w.registry_events();
+    w.finish()
+}
+
 /// Refuse a connection over the cap: best-effort typed rejection, then
 /// hang up. Clients see `InferenceError::Rejected` from `connect`.
 fn refuse_conn(mut stream: TcpStream) {
@@ -357,6 +402,12 @@ fn handle_conn(
                     tx.send(JobResult { tag: seq, id: 0, result: Ok(JobOutput::Stats(json)) });
                 seq += 1;
             }
+            Ok(Frame::MetricsReq) => {
+                let text = render_prometheus(&server_stats(&router));
+                let _ =
+                    tx.send(JobResult { tag: seq, id: 0, result: Ok(JobOutput::Metrics(text)) });
+                seq += 1;
+            }
             Ok(Frame::Shutdown) => {
                 shutdown.store(true, Ordering::Relaxed);
                 let _ = tx.send(JobResult { tag: seq, id: 0, result: Err(InferenceError::Closed) });
@@ -411,9 +462,14 @@ fn conn_writer(mut w: std::io::BufWriter<TcpStream>, rx: Receiver<JobResult>) {
             let frame = match m.result {
                 Ok(JobOutput::Rows(rows)) => Frame::Response(InferenceResponse { id: m.id, rows }),
                 Ok(JobOutput::Stats(json)) => Frame::Stats { json },
+                Ok(JobOutput::Metrics(text)) => Frame::Metrics { text },
                 Err(e) => wire::error_frame(m.id, &e),
             };
-            if wire::write_frame(&mut w, &frame).is_err() {
+            let wrote = {
+                let _s = crate::obs::span("serve.respond");
+                wire::write_frame(&mut w, &frame)
+            };
+            if wrote.is_err() {
                 return; // peer gone; remaining completions drain via drop
             }
             next += 1;
@@ -486,6 +542,26 @@ impl TcpSession {
                 Err(wire::error_from_frame(code, retry_after_ms, &msg))
             }
             Ok(_) => Err(InferenceError::Protocol("expected STATS".into())),
+            Err(e) => Err(e.to_inference()),
+        }
+    }
+
+    /// Fetch the server's Prometheus text exposition (the METRICS
+    /// frame). Call with no outstanding requests — the reply shares the
+    /// ordered response stream, like [`TcpSession::stats`].
+    pub fn metrics(&mut self) -> Result<String, InferenceError> {
+        if !self.outstanding.is_empty() {
+            return Err(InferenceError::BadRequest(
+                "metrics with outstanding requests; recv them first".into(),
+            ));
+        }
+        wire::write_frame(&mut self.writer, &Frame::MetricsReq).map_err(|e| e.to_inference())?;
+        match wire::read_frame(&mut self.reader) {
+            Ok(Frame::Metrics { text }) => Ok(text),
+            Ok(Frame::Error { code, retry_after_ms, msg, .. }) => {
+                Err(wire::error_from_frame(code, retry_after_ms, &msg))
+            }
+            Ok(_) => Err(InferenceError::Protocol("expected METRICS".into())),
             Err(e) => Err(e.to_inference()),
         }
     }
@@ -758,6 +834,31 @@ mod tests {
         assert_eq!(stats.shards.len(), 2);
 
         s.shutdown_server().unwrap();
+        server.join();
+    }
+
+    #[test]
+    fn metrics_frame_returns_prometheus_exposition() {
+        let server = start_toy(ServeOptions::default());
+        let addr = server.local_addr().to_string();
+        let mut s = TcpSession::connect(&addr).unwrap();
+        s.infer(&Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 0.0, 0.0, 1.0])).unwrap();
+        let text = s.metrics().unwrap();
+        // per-server counters reconcile with what this client did
+        let samples = crate::obs::parse_prometheus(&text);
+        assert_eq!(crate::obs::prom_value(&samples, "ntk_requests_total"), Some(1.0));
+        assert_eq!(crate::obs::prom_value(&samples, "ntk_rows_total"), Some(2.0));
+        assert_eq!(crate::obs::prom_value(&samples, "ntk_rejected_total"), Some(0.0));
+        assert_eq!(crate::obs::prom_value(&samples, "ntk_model_version"), Some(1.0));
+        // histogram family is present, cumulative, and internally consistent
+        assert!(text.contains("# TYPE ntk_request_latency_us histogram"), "{text}");
+        assert_eq!(
+            crate::obs::prom_value(&samples, "ntk_request_latency_us_bucket{le=\"+Inf\"}"),
+            Some(1.0)
+        );
+        assert_eq!(crate::obs::prom_value(&samples, "ntk_request_latency_us_count"), Some(1.0));
+        // per-shard series carry the shard label
+        assert!(samples.iter().any(|(k, _)| k == "ntk_requests_total{shard=\"0\"}"), "{text}");
         server.join();
     }
 

@@ -22,6 +22,8 @@
 //! | 5    | STATS_REQ | (empty)                                          |
 //! | 6    | STATS     | u32 n, json utf8                                 |
 //! | 7    | SHUTDOWN  | (empty)                                          |
+//! | 8    | METRICS_REQ | (empty)                                        |
+//! | 9    | METRICS   | u32 n, Prometheus text exposition utf8           |
 //!
 //! Hostile-input discipline: the length prefix is validated *before* any
 //! allocation, matrix payloads must match their declared shape exactly,
@@ -50,6 +52,8 @@ const KIND_ERROR: u8 = 4;
 const KIND_STATS_REQ: u8 = 5;
 const KIND_STATS: u8 = 6;
 const KIND_SHUTDOWN: u8 = 7;
+const KIND_METRICS_REQ: u8 = 8;
+const KIND_METRICS: u8 = 9;
 
 /// Typed error codes carried by ERROR frames.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -88,6 +92,8 @@ pub enum Frame {
     StatsReq,
     Stats { json: String },
     Shutdown,
+    MetricsReq,
+    Metrics { text: String },
 }
 
 /// Wire-level failures. `Closed` is a clean peer hangup at a frame
@@ -237,6 +243,13 @@ fn encode(frame: &Frame) -> Result<(u8, u64, Vec<u8>), WireError> {
             (KIND_STATS, 0)
         }
         Frame::Shutdown => (KIND_SHUTDOWN, 0),
+        Frame::MetricsReq => (KIND_METRICS_REQ, 0),
+        Frame::Metrics { text } => {
+            let t = clip(text, MAX_PAYLOAD - 4);
+            p.extend_from_slice(&(t.len() as u32).to_le_bytes());
+            p.extend_from_slice(t.as_bytes());
+            (KIND_METRICS, 0)
+        }
     };
     if p.len() > MAX_PAYLOAD {
         return Err(WireError::Oversized { len: p.len() as u32, cap: MAX_PAYLOAD as u32 });
@@ -409,6 +422,12 @@ fn decode(kind: u8, id: u64, payload: &[u8]) -> Result<Frame, WireError> {
             Frame::Stats { json }
         }
         KIND_SHUTDOWN => Frame::Shutdown,
+        KIND_METRICS_REQ => Frame::MetricsReq,
+        KIND_METRICS => {
+            let n = c.u32()? as usize;
+            let text = c.utf8(n)?;
+            Frame::Metrics { text }
+        }
         other => return Err(WireError::BadKind(other)),
     };
     c.done()?;
@@ -459,7 +478,7 @@ fn read_frame_impl<R: Read>(
         return Err(WireError::BadVersion(hdr[2]));
     }
     let kind = hdr[3];
-    if !(KIND_HELLO..=KIND_SHUTDOWN).contains(&kind) {
+    if !(KIND_HELLO..=KIND_METRICS).contains(&kind) {
         return Err(WireError::BadKind(kind));
     }
     let id = u64::from_le_bytes(hdr[4..12].try_into().unwrap());
@@ -525,6 +544,10 @@ mod tests {
             Frame::StatsReq,
             Frame::Stats { json: r#"{"requests":5}"#.into() },
             Frame::Shutdown,
+            Frame::MetricsReq,
+            Frame::Metrics {
+                text: "# TYPE ntk_requests_total counter\nntk_requests_total 5\n".into(),
+            },
         ];
         for f in &frames {
             assert_eq!(&roundtrip(f), f);

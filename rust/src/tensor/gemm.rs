@@ -172,6 +172,7 @@ pub fn gemm<SA, SB, T>(
     SB: Copy + Send + Sync,
     T: Widen<SA> + Widen<SB>,
 {
+    let _s = crate::obs::span("gemm.matmul");
     gemm_with(T::active_kernel(), m, n, k, a, op_a, b, op_b, c, accumulate)
 }
 
@@ -228,6 +229,7 @@ where
     S: Copy + Send + Sync,
     T: Widen<S>,
 {
+    let _s = crate::obs::span("gemm.syrk");
     syrk_lower_with(T::active_kernel(), n, k, a, op, c, accumulate)
 }
 

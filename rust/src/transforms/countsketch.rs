@@ -84,6 +84,7 @@ impl BatchTransform for CountSketch {
     }
 
     fn apply_batch(&self, x: &Mat, out: &mut Mat) {
+        let _s = crate::obs::span("transform.countsketch");
         super::check_batch_shapes("CountSketch", x, out, self.d, self.m);
         // scatter-adds stay row-local, so no scratch is needed
         par::par_rows(&mut out.data, x.rows, self.m, |i, orow| {

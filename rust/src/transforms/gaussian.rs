@@ -104,6 +104,7 @@ impl BatchTransform for GaussianJl {
     }
 
     fn apply_batch(&self, x: &Mat, out: &mut Mat) {
+        let _s = crate::obs::span("transform.gaussian_jl");
         super::check_batch_shapes("GaussianJl", x, out, self.d, self.m);
         par::par_rows(&mut out.data, x.rows, self.m, |i, orow| {
             self.apply_into(x.row(i), orow);

@@ -197,6 +197,7 @@ impl BatchTransform for PolySketch {
     }
 
     fn apply_batch(&self, x: &Mat, out: &mut Mat) {
+        let _s = crate::obs::span("transform.polysketch");
         super::check_batch_shapes("PolySketch", x, out, self.d, self.m);
         par::par_rows(&mut out.data, x.rows, self.m, |i, orow| {
             self.sketch_power_into(x.row(i), orow);

@@ -79,6 +79,7 @@ impl BatchTransform for Srht {
     }
 
     fn apply_batch(&self, x: &Mat, out: &mut Mat) {
+        let _s = crate::obs::span("transform.srht");
         super::check_batch_shapes("Srht", x, out, self.d, self.m);
         par::par_row_blocks(&mut out.data, x.rows, self.m, |row0, block| {
             let mut scratch = vec![0.0f32; self.padded];

@@ -116,6 +116,7 @@ impl TensorSrht {
     /// allocations per row. (Two-input shape, so this sits outside the
     /// single-input `BatchTransform` trait.)
     pub fn apply_batch(&self, x: &Mat, y: &Mat, out: &mut Mat) {
+        let _s = crate::obs::span("transform.tensor_srht");
         assert_eq!(x.rows, y.rows, "TensorSrht::apply_batch: row count mismatch");
         assert_eq!(x.cols, self.d1, "TensorSrht::apply_batch: d1 mismatch");
         assert_eq!(y.cols, self.d2, "TensorSrht::apply_batch: d2 mismatch");

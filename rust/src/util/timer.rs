@@ -26,9 +26,13 @@ pub fn timed<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
     (out, t.secs())
 }
 
-/// Human-friendly duration formatting for tables.
+/// Human-friendly duration formatting for tables. Durations that make
+/// no sense as wall-clock readings — NaN, ±inf, negatives — render as
+/// `"?"` instead of garbage like `"-500000.0us"` or `"infmin"`.
 pub fn fmt_secs(s: f64) -> String {
-    if s < 1e-3 {
+    if !s.is_finite() || s < 0.0 {
+        "?".to_string()
+    } else if s < 1e-3 {
         format!("{:.1}us", s * 1e6)
     } else if s < 1.0 {
         format!("{:.2}ms", s * 1e3)
@@ -64,5 +68,16 @@ mod tests {
         assert!(fmt_secs(5e-2).ends_with("ms"));
         assert!(fmt_secs(5.0).ends_with('s'));
         assert!(fmt_secs(500.0).ends_with("min"));
+    }
+
+    #[test]
+    fn formatting_degenerate_durations() {
+        assert_eq!(fmt_secs(f64::NAN), "?");
+        assert_eq!(fmt_secs(f64::INFINITY), "?");
+        assert_eq!(fmt_secs(f64::NEG_INFINITY), "?");
+        assert_eq!(fmt_secs(-0.5), "?");
+        assert_eq!(fmt_secs(-1e-9), "?");
+        // zero is a legitimate (if suspicious) reading, not garbage
+        assert_eq!(fmt_secs(0.0), "0.0us");
     }
 }

@@ -1,0 +1,174 @@
+//! Observability end to end (DESIGN.md §12).
+//!
+//! 1. Chaos reconciliation: under an injected shard panic, the serve
+//!    daemon's Prometheus exposition must agree *exactly* with what the
+//!    client observed — requests, panics and rejections are counted on
+//!    both sides of the wire and compared number for number, including
+//!    the fault-injection event series.
+//! 2. Trace coverage: an in-memory capture of a small train → solve →
+//!    save → load run contains spans for every documented stage on that
+//!    path.
+//!
+//! Tracing, the fault plan and the obs event registry are process-global,
+//! so the tests serialize on one mutex and clean up via drop guards.
+
+use ntk_sketch::fault;
+use ntk_sketch::model::{FeaturizerSpec, Registry, SavedModel};
+use ntk_sketch::obs::{parse_prometheus, prom_value, trace};
+use ntk_sketch::regression::RidgeRegressor;
+use ntk_sketch::rng::Rng;
+use ntk_sketch::serve::{InferenceError, InferenceSession, ServeOptions, TcpServer, TcpSession};
+use ntk_sketch::tensor::Mat;
+use std::sync::Mutex;
+
+const D: usize = 8;
+const SEED: u64 = 0x0B5_0001;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn serialize() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Clears process-global fault + trace state when dropped, so a failing
+/// assertion cannot leak armed state into the other test.
+struct ClearOnDrop;
+impl Drop for ClearOnDrop {
+    fn drop(&mut self) {
+        fault::clear();
+        trace::disable();
+    }
+}
+
+fn saved_model(name: &str) -> SavedModel {
+    let spec = FeaturizerSpec::NtkRf {
+        d: D,
+        depth: 2,
+        m0: 16,
+        m1: 32,
+        ms: 16,
+        leverage_sweeps: 0,
+        seed: 100,
+    };
+    let f = spec.build();
+    let mut rng = Rng::new(SEED);
+    let weights = Mat::from_vec(f.dim(), 1, rng.gauss_vec(f.dim()));
+    SavedModel::new(name, "synthetic", SEED, 1e-3, 64, spec, weights, &f)
+}
+
+fn batch(seed: u64, rows: usize) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_vec(rows, D, rng.gauss_vec(rows * D))
+}
+
+#[test]
+fn chaos_metrics_reconcile_exactly_with_client_observations() {
+    let _lock = serialize();
+    let _clear = ClearOnDrop;
+    let server = TcpServer::start(
+        saved_model("obs-chaos").build().unwrap(),
+        None,
+        "127.0.0.1:0",
+        ServeOptions { workers: 1, ..ServeOptions::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let mut sess = TcpSession::connect(&addr).unwrap();
+
+    // exactly one induced panic somewhere inside the request run
+    fault::install("shard.panic:at=5,max=1", SEED).expect("install plan");
+
+    let (mut ok, mut rows_ok, mut panicked, mut rejected) = (0u64, 0u64, 0u64, 0u64);
+    for seed in 0..20u64 {
+        let rows = 1 + (seed as usize % 4);
+        match sess.infer(&batch(300 + seed, rows)) {
+            Ok(out) => {
+                assert_eq!(out.rows, rows);
+                ok += 1;
+                rows_ok += rows as u64;
+            }
+            Err(InferenceError::Io(msg)) if msg.contains("panicked") => panicked += 1,
+            Err(InferenceError::Rejected { .. }) => rejected += 1,
+            Err(e) => panic!("unexpected client error: {e}"),
+        }
+    }
+    assert_eq!(panicked, 1, "the at=5,max=1 plan fires exactly once");
+
+    let text = sess.metrics().unwrap();
+    let samples = parse_prometheus(&text);
+
+    // every admitted request — served or panicked — is a request; the
+    // counters must reconcile exactly with this client's ledger
+    assert_eq!(
+        prom_value(&samples, "ntk_requests_total"),
+        Some((ok + panicked) as f64),
+        "{text}"
+    );
+    assert_eq!(prom_value(&samples, "ntk_panics_total"), Some(panicked as f64));
+    assert_eq!(prom_value(&samples, "ntk_rejected_total"), Some(rejected as f64));
+    assert!(
+        prom_value(&samples, "ntk_rows_total").unwrap_or(-1.0) >= rows_ok as f64,
+        "rows served at least covers the rows this client got back: {text}"
+    );
+    // the injected fault itself is visible as an event series
+    assert_eq!(
+        prom_value(&samples, "ntk_fault_injected_total{site=\"shard.panic\"}"),
+        Some(1.0),
+        "{text}"
+    );
+    assert_eq!(prom_value(&samples, "ntk_serve_panics_total"), Some(1.0));
+
+    drop(sess);
+    server.join();
+}
+
+#[test]
+fn trace_spans_cover_train_solve_and_store() {
+    let _lock = serialize();
+    let _clear = ClearOnDrop;
+    let root = std::env::temp_dir().join(format!("ntk_obs_trace_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+
+    trace::enable_mem();
+    let spec = FeaturizerSpec::NtkRf {
+        d: D,
+        depth: 2,
+        m0: 16,
+        m1: 32,
+        ms: 16,
+        leverage_sweeps: 0,
+        seed: 100,
+    };
+    let f = spec.build();
+    let mut rng = Rng::new(SEED + 1);
+    let (n, outputs) = (64usize, 1usize);
+    let x = Mat::from_vec(n, D, rng.gauss_vec(n * D));
+    let y = Mat::from_vec(n, outputs, rng.gauss_vec(n * outputs));
+    let (mut reg, _stats) = ntk_sketch::coordinator::train_streaming(
+        &x,
+        &y,
+        f.dim(),
+        || |xs: &Mat| f.transform(xs),
+        ntk_sketch::coordinator::PipelineConfig { shard_rows: 16, ..Default::default() },
+    );
+    reg.solve(1e-3).unwrap();
+    let weights = reg.weights().unwrap().clone();
+    let saved = SavedModel::new("obs-trace", "synthetic", SEED, 1e-3, n as u64, spec, weights, &f);
+    let registry = Registry::open(&root);
+    registry.save(&saved).unwrap();
+    registry.load("obs-trace", None).unwrap();
+
+    let (events, dropped) = trace::drain();
+    trace::disable();
+    assert_eq!(dropped, 0);
+    for stage in
+        ["train.featurize", "ridge.accumulate", "ridge.solve", "gemm.syrk", "gemm.matmul", "store.save", "store.load"]
+    {
+        assert!(
+            events.iter().any(|e| e.name == stage),
+            "stage `{stage}` missing from the capture; saw: {:?}",
+            events.iter().map(|e| e.name).collect::<std::collections::BTreeSet<_>>()
+        );
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}

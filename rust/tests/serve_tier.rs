@@ -256,6 +256,59 @@ fn stalled_mid_header_peer_is_reaped_and_frees_its_conn_slot() {
 }
 
 #[test]
+fn metrics_frame_reconciles_with_client_observed_traffic() {
+    use ntk_sketch::obs::{parse_prometheus, prom_value};
+
+    let saved = saved_model("metrics", 1);
+    let server = TcpServer::start(
+        saved.build().unwrap(),
+        None,
+        "127.0.0.1:0",
+        ServeOptions { workers: 2, ..ServeOptions::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    let mut sess = TcpSession::connect(&addr).unwrap();
+    let (mut sent, mut rows_sent) = (0u64, 0u64);
+    for seed in 0..12u64 {
+        let rows = 1 + (seed as usize % 5);
+        let out = sess.infer(&batch(200 + seed, rows)).unwrap();
+        assert_eq!(out.rows, rows);
+        sent += 1;
+        rows_sent += rows as u64;
+    }
+    let text = sess.metrics().unwrap();
+    let samples = parse_prometheus(&text);
+
+    // counters reconcile exactly with what this client observed
+    assert_eq!(prom_value(&samples, "ntk_requests_total"), Some(sent as f64), "{text}");
+    assert_eq!(prom_value(&samples, "ntk_rows_total"), Some(rows_sent as f64));
+    assert_eq!(prom_value(&samples, "ntk_rejected_total"), Some(0.0));
+    assert_eq!(prom_value(&samples, "ntk_panics_total"), Some(0.0));
+    assert_eq!(prom_value(&samples, "ntk_model_version"), Some(1.0));
+
+    // the request-latency histogram saw exactly `sent` observations, and
+    // its cumulative +Inf bucket agrees with its _count
+    assert_eq!(prom_value(&samples, "ntk_request_latency_us_count"), Some(sent as f64));
+    assert_eq!(
+        prom_value(&samples, "ntk_request_latency_us_bucket{le=\"+Inf\"}"),
+        Some(sent as f64)
+    );
+
+    // per-shard series sum to the fleet total (exact bucket-wise merge)
+    let shard_sum: f64 = (0..2)
+        .map(|i| {
+            prom_value(&samples, &format!("ntk_requests_total{{shard=\"{i}\"}}")).unwrap_or(0.0)
+        })
+        .sum();
+    assert_eq!(shard_sum, sent as f64, "shard series must sum to the fleet counter");
+
+    drop(sess);
+    server.join();
+}
+
+#[test]
 fn shutdown_frame_stops_a_running_daemon() {
     let saved = saved_model("shutdown", 1);
     let server = TcpServer::start(

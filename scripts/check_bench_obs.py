@@ -1,0 +1,66 @@
+#!/usr/bin/env python3
+"""Gate the cost of disabled tracing spans on the serve path.
+
+Reads the ``tracing_overhead`` section of ``BENCH_serve.json`` and fails
+when ``disabled_overhead_pct`` — per-span disabled cost x spans per
+request / mean request latency, measured in the same process — exceeds
+the budget. The analytic definition is deliberate: it is stable where a
+raw QPS delta between two short closed-loop runs is noise, so the gate
+catches "someone put real work on the disabled span path" and nothing
+else. The enabled-mode QPS delta is printed for context but not gated.
+
+Usage: check_bench_obs.py <BENCH_serve.json>
+"""
+
+import json
+import sys
+
+MAX_DISABLED_OVERHEAD_PCT = 1.0
+
+
+def main():
+    if len(sys.argv) != 2:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        bench = json.load(f)
+
+    oh = bench.get("tracing_overhead")
+    if oh is None:
+        print(f"{sys.argv[1]}: missing `tracing_overhead` section")
+        return 1
+    for key in (
+        "span_disabled_ns",
+        "spans_per_request",
+        "qps_disabled",
+        "qps_enabled",
+        "disabled_overhead_pct",
+        "enabled_overhead_pct",
+    ):
+        if not isinstance(oh.get(key), (int, float)):
+            print(f"tracing_overhead.{key}: missing or not a number")
+            return 1
+
+    pct = oh["disabled_overhead_pct"]
+    print(
+        f"disabled span: {oh['span_disabled_ns']:.1f}ns/call x "
+        f"{oh['spans_per_request']:.0f} spans/request = {pct:.4f}% overhead "
+        f"(budget {MAX_DISABLED_OVERHEAD_PCT}%)"
+    )
+    print(
+        f"qps disabled={oh['qps_disabled']:.0f} enabled={oh['qps_enabled']:.0f} "
+        f"(enabled overhead {oh['enabled_overhead_pct']:+.1f}%, informational)"
+    )
+    if pct > MAX_DISABLED_OVERHEAD_PCT:
+        print(
+            f"FAIL: disabled-mode tracing overhead {pct:.4f}% exceeds "
+            f"{MAX_DISABLED_OVERHEAD_PCT}% — the span fast path must stay "
+            f"one relaxed atomic load"
+        )
+        return 1
+    print("ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,155 @@
+#!/usr/bin/env python3
+"""Validate machine-readable bench records against checked-in schemas.
+
+Every ``BENCH_*.json`` the bench binaries emit is consumed downstream —
+regression gates, the perf-trajectory history, the obs overhead gate — so
+a bench that silently drops or renames a field must fail CI here, not
+corrupt the trajectory three PRs later. Schemas are declarative specs of
+required fields: ``float``/``str``/``bool`` leaves, ``[subschema]`` for
+arrays of objects (validated element-wise, at least one element), and
+nested dicts for sections. Extra fields are allowed — adding telemetry is
+not a break; removing it is.
+
+Usage: check_bench_schema.py <BENCH_x.json> [<BENCH_y.json>...]
+       (each file is matched to a schema by basename)
+"""
+
+import json
+import os
+import sys
+
+FLOAT = float
+STR = str
+BOOL = bool
+
+SCHEMAS = {
+    "BENCH_gemm.json": {
+        "bench": STR,
+        "smoke": BOOL,
+        "full_scale": BOOL,
+        "threads": FLOAT,
+        "active_kernel": STR,
+        "shapes": [
+            {
+                "name": STR,
+                "m": FLOAT,
+                "n": FLOAT,
+                "k": FLOAT,
+                "gflops_packed": FLOAT,
+                "gflops_seed": FLOAT,
+                "speedup": FLOAT,
+            }
+        ],
+    },
+    "BENCH_cntk.json": {
+        "bench": STR,
+        "smoke": BOOL,
+        "threads": FLOAT,
+        "depth": FLOAT,
+        "q": FLOAT,
+        "s_out": FLOAT,
+        "sizes": [
+            {
+                "side": FLOAT,
+                "pixels": FLOAT,
+                "sketch_us_per_image": FLOAT,
+                "exact_us_per_pair": FLOAT,
+                "pair_speedup": FLOAT,
+                "gram_speedup_n1000": FLOAT,
+            }
+        ],
+    },
+    "BENCH_model_store.json": {
+        "save_ms": FLOAT,
+        "load_verify_ms": FLOAT,
+        "first_predict_ms": FLOAT,
+        "first_served_ms": FLOAT,
+        "file_bytes": FLOAT,
+        "materialized_bytes": FLOAT,
+        "feature_dim": FLOAT,
+    },
+    "BENCH_serve.json": {
+        "clients": FLOAT,
+        "rows_per_request": FLOAT,
+        "secs_per_config": FLOAT,
+        "configs": [
+            {
+                "workers": FLOAT,
+                "qps": FLOAT,
+                "p50_us": FLOAT,
+                "p99_us": FLOAT,
+                "ok": FLOAT,
+                "rejected": FLOAT,
+            }
+        ],
+        "tracing_overhead": {
+            "span_disabled_ns": FLOAT,
+            "spans_per_request": FLOAT,
+            "qps_disabled": FLOAT,
+            "qps_enabled": FLOAT,
+            "disabled_overhead_pct": FLOAT,
+            "enabled_overhead_pct": FLOAT,
+        },
+    },
+}
+
+
+def check(value, schema, path, errors):
+    if schema is FLOAT:
+        if not isinstance(value, (int, float)) or isinstance(value, bool):
+            errors.append(f"{path}: expected a number, got {value!r}")
+    elif schema is STR:
+        if not isinstance(value, str):
+            errors.append(f"{path}: expected a string, got {value!r}")
+    elif schema is BOOL:
+        if not isinstance(value, bool):
+            errors.append(f"{path}: expected a bool, got {value!r}")
+    elif isinstance(schema, list):
+        if not isinstance(value, list):
+            errors.append(f"{path}: expected an array, got {value!r}")
+        elif not value:
+            errors.append(f"{path}: array is empty")
+        else:
+            for i, item in enumerate(value):
+                check(item, schema[0], f"{path}[{i}]", errors)
+    elif isinstance(schema, dict):
+        if not isinstance(value, dict):
+            errors.append(f"{path}: expected an object, got {value!r}")
+            return
+        for key, sub in schema.items():
+            if key not in value:
+                errors.append(f"{path}.{key}: required field missing")
+            else:
+                check(value[key], sub, f"{path}.{key}", errors)
+    else:  # pragma: no cover - schema author error
+        raise AssertionError(f"bad schema node at {path}")
+
+
+def main():
+    if len(sys.argv) < 2:
+        print(__doc__)
+        return 2
+    failures = 0
+    for path in sys.argv[1:]:
+        base = os.path.basename(path)
+        schema = SCHEMAS.get(base)
+        if schema is None:
+            print(f"{path}: no schema registered for `{base}` — add one to "
+                  f"{os.path.basename(__file__)} alongside the new bench")
+            failures += 1
+            continue
+        with open(path) as f:
+            doc = json.load(f)
+        errors = []
+        check(doc, schema, base, errors)
+        if errors:
+            failures += 1
+            for e in errors:
+                print(e)
+        else:
+            print(f"{base}: ok")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,60 @@
+#!/usr/bin/env python3
+"""Validate an NTK_TRACE capture and require stage coverage.
+
+Checks that the file is Chrome trace-event JSON of the shape documented
+in DESIGN.md section 12 — a ``traceEvents`` array of complete-phase
+(``"ph": "X"``) events each carrying name/pid/tid/ts/dur — and that every
+stage named on the command line appears at least once. CI runs this over
+a capture taken from a real ``train --save`` run, so a span that silently
+stops firing (or a rename that breaks the documented taxonomy) fails the
+build.
+
+Usage: check_trace.py <trace.json> <required-stage> [<required-stage>...]
+"""
+
+import json
+import sys
+
+
+def main():
+    if len(sys.argv) < 3:
+        print(__doc__)
+        return 2
+    path, required = sys.argv[1], sys.argv[2:]
+    with open(path) as f:
+        doc = json.load(f)
+
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        print(f"{path}: `traceEvents` missing or empty")
+        return 1
+
+    seen = {}
+    for i, e in enumerate(events):
+        for key, typ in (
+            ("name", str),
+            ("ph", str),
+            ("cat", str),
+            ("pid", (int, float)),
+            ("tid", (int, float)),
+            ("ts", (int, float)),
+            ("dur", (int, float)),
+        ):
+            if not isinstance(e.get(key), typ):
+                print(f"{path}: event {i} field `{key}` missing or mistyped: {e}")
+                return 1
+        if e["ph"] == "X":
+            seen[e["name"]] = seen.get(e["name"], 0) + 1
+
+    missing = [s for s in required if s not in seen]
+    for name in sorted(seen):
+        print(f"  {name}: {seen[name]} span(s)")
+    if missing:
+        print(f"FAIL: {path} has no spans for: {', '.join(missing)}")
+        return 1
+    print(f"ok: {len(events)} events, all {len(required)} required stages present")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
