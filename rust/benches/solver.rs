@@ -1,0 +1,146 @@
+//! Solver crossover: dense Cholesky vs Nyström-preconditioned CG on the
+//! ridge normal equations, by feature dimension m.
+//!
+//! The distributed tier exists to make large-m fits reachable
+//! (DESIGN.md §13); this bench shows where the O(m³) factorization loses
+//! to the O(m²·iters) iterative solve on a decaying NTK-feature-like
+//! spectrum, and records the PCG iteration counts that make that true.
+//! Emits `BENCH_solver.json` (path override: `NTK_BENCH_JSON`);
+//! `--solver auto` should place its threshold above the crossover m
+//! measured here.
+
+use std::collections::BTreeMap;
+
+use ntk_sketch::bench::{bench, full_scale, smoke, Table};
+use ntk_sketch::linalg::{solve_spd_multi_scratch, DMat};
+use ntk_sketch::regression::{solve_spd_pcg, PcgOpts, PCG_AUTO_MIN_DIM};
+use ntk_sketch::rng::Rng;
+use ntk_sketch::tensor::gemm::{self, Op};
+use ntk_sketch::util::json::Json;
+use ntk_sketch::util::par;
+
+/// Synthetic regularized gram with a polynomially-decaying spectrum —
+/// the shape NTK random-feature grams actually have (a strong head the
+/// Nyström sketch captures, a long flat tail the regularization floors).
+fn decaying_gram(m: usize, seed: u64) -> DMat {
+    let mut rng = Rng::new(seed);
+    let g = DMat::from_fn(m, m, |_, j| {
+        rng.gauss() / ((1.0 + j as f64).powf(0.75) * (m as f64).sqrt())
+    });
+    let mut a = DMat::zeros(m, m);
+    gemm::gemm(m, m, m, &g.data, Op::Trans, &g.data, Op::NoTrans, &mut a.data, false);
+    for i in 0..m {
+        for j in 0..i {
+            let s = 0.5 * (a.at(i, j) + a.at(j, i));
+            *a.at_mut(i, j) = s;
+            *a.at_mut(j, i) = s;
+        }
+    }
+    // λn floor, ~1e-5 of the top scale: ill-conditioned enough that the
+    // preconditioner matters, regularized like a real ridge system
+    a.add_diag(1e-5);
+    a
+}
+
+struct Row {
+    m: usize,
+    chol_ms: f64,
+    pcg_ms: f64,
+    pcg_iters: usize,
+    precond_rank: usize,
+}
+
+fn main() {
+    let sizes: Vec<usize> = if full_scale() {
+        vec![512, 1024, 2048, 4096]
+    } else if smoke() {
+        vec![384, 1536]
+    } else {
+        vec![512, 1024, 2048]
+    };
+    println!("== ridge normal-equation solve: Cholesky vs Nyström-PCG, by m ==");
+    let t = Table::new(&["m", "chol", "pcg", "iters", "rank", "speedup"]);
+    let mut rows = Vec::new();
+    for &m in &sizes {
+        let a = decaying_gram(m, 0xBE2C_0001 + m as u64);
+        let mut rng = Rng::new(17);
+        let b = DMat::from_fn(m, 1, |_, _| rng.gauss());
+        let budget = 0.4;
+        let tc = bench(budget, || {
+            // clone per iteration: solve_spd_multi_scratch factors in
+            // place (m² copy, against the m³ factorization it times)
+            let mut sys = a.clone();
+            std::hint::black_box(solve_spd_multi_scratch(&mut sys, &b).expect("chol"));
+        });
+        let opts = PcgOpts::for_dim(m);
+        let mut iters = 0usize;
+        let mut rank = 0usize;
+        let tp = bench(budget, || {
+            let (x, rep) = solve_spd_pcg(&a, &b, &opts).expect("pcg");
+            std::hint::black_box(&x);
+            assert!(rep.converged, "pcg must converge on the bench spectrum");
+            iters = rep.iterations.iter().sum();
+            rank = rep.precond_rank;
+        });
+        t.row(&[
+            format!("{m}"),
+            format!("{:.1}ms", 1e3 * tc.median_s),
+            format!("{:.1}ms", 1e3 * tp.median_s),
+            format!("{iters}"),
+            format!("{rank}"),
+            format!("{:.2}x", tc.median_s / tp.median_s.max(1e-12)),
+        ]);
+        rows.push(Row {
+            m,
+            chol_ms: 1e3 * tc.median_s,
+            pcg_ms: 1e3 * tp.median_s,
+            pcg_iters: iters,
+            precond_rank: rank,
+        });
+    }
+
+    let crossover_m =
+        rows.iter().find(|r| r.pcg_ms < r.chol_ms).map(|r| r.m as f64).unwrap_or(-1.0);
+    let largest = rows.last().expect("at least one size");
+    let pcg_wins_at_largest = largest.pcg_ms < largest.chol_ms;
+    println!(
+        "\ncrossover: PCG first wins at m = {} (auto threshold is m >= {PCG_AUTO_MIN_DIM}); \
+         at m = {} PCG is {:.2}x {} Cholesky.",
+        if crossover_m < 0.0 { "never (in this sweep)".to_string() } else { format!("{crossover_m}") },
+        largest.m,
+        largest.chol_ms / largest.pcg_ms.max(1e-12),
+        if pcg_wins_at_largest { "faster than" } else { "SLOWER than" },
+    );
+
+    let path = std::env::var("NTK_BENCH_JSON").unwrap_or_else(|_| "BENCH_solver.json".to_string());
+    let sizes_json: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut o = BTreeMap::new();
+            o.insert("m".into(), Json::Num(r.m as f64));
+            o.insert("chol_ms".into(), Json::Num(r.chol_ms));
+            o.insert("pcg_ms".into(), Json::Num(r.pcg_ms));
+            o.insert("pcg_iters".into(), Json::Num(r.pcg_iters as f64));
+            o.insert("precond_rank".into(), Json::Num(r.precond_rank as f64));
+            o.insert("pcg_wins".into(), Json::Bool(r.pcg_ms < r.chol_ms));
+            o.insert("speedup".into(), Json::Num(r.chol_ms / r.pcg_ms.max(1e-12)));
+            Json::Obj(o)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("solver".into()));
+    root.insert("smoke".into(), Json::Bool(smoke()));
+    root.insert("threads".into(), Json::Num(par::num_threads() as f64));
+    root.insert("auto_threshold_m".into(), Json::Num(PCG_AUTO_MIN_DIM as f64));
+    root.insert("sizes".into(), Json::Arr(sizes_json));
+    root.insert("crossover_m".into(), Json::Num(crossover_m));
+    root.insert("pcg_wins_at_largest".into(), Json::Bool(pcg_wins_at_largest));
+    match std::fs::write(&path, Json::Obj(root).to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+    println!(
+        "acceptance: pcg_wins_at_largest = true — the iterative solver must beat the \
+         O(m³) factorization at the largest benched m."
+    );
+}

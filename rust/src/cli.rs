@@ -26,10 +26,31 @@ pub enum Command {
     Golden,
     Kernel(KernelCfg),
     Train(TrainCfg),
+    Merge(MergeCfg),
     Predict(PredictCfg),
     Serve(ServeCfg),
     Models(ModelsCfg),
     Trace(TraceCfg),
+}
+
+/// Which solver runs on the accumulated normal equations
+/// (`--solver chol|pcg|auto`; DESIGN.md §13 selection policy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverKind {
+    Chol,
+    Pcg,
+    Auto,
+}
+
+impl SolverKind {
+    fn parse(args: &Args) -> Result<SolverKind, String> {
+        match args.get("solver") {
+            None | Some("auto") => Ok(SolverKind::Auto),
+            Some("chol") => Ok(SolverKind::Chol),
+            Some("pcg") => Ok(SolverKind::Pcg),
+            Some(other) => Err(format!("bad --solver `{other}` (known: chol, pcg, auto)")),
+        }
+    }
 }
 
 /// `trace` — summarize a Chrome-trace capture written via `NTK_TRACE`
@@ -69,6 +90,11 @@ pub struct TrainCfg {
     pub resume: bool,
     pub resume_name: Option<String>,
     pub models_dir: Option<String>,
+    /// `--shard i/k` (1-based on the CLI, stored 0-based): train only
+    /// this contiguous slice of the batch stream and emit a shard
+    /// checkpoint instead of a model (merge with the `merge` verb).
+    pub shard: Option<(u64, u64)>,
+    pub solver: SolverKind,
     /// Option names the operator gave explicitly (for resume warnings).
     explicit: Vec<String>,
 }
@@ -77,6 +103,23 @@ impl TrainCfg {
     pub fn is_explicit(&self, key: &str) -> bool {
         self.explicit.iter().any(|k| k == key)
     }
+}
+
+/// `merge` — combine the shard checkpoints of a `train --shard` fleet
+/// into one solved, registered model (DESIGN.md §13). Shards are found
+/// under the model name by default or given explicitly as paths; merge
+/// order is canonical (ascending shard index) either way.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MergeCfg {
+    /// Model name to merge into (and to discover shard files under).
+    pub save: String,
+    /// Explicit shard checkpoint paths (comma-separated on the CLI);
+    /// default is every `shard-*.ntkc` under the model's registry dir.
+    pub shards: Option<Vec<String>>,
+    /// Override the λ recorded in the shards for the final solve.
+    pub lambda: Option<f64>,
+    pub solver: SolverKind,
+    pub models_dir: Option<String>,
 }
 
 /// `predict` — evaluate a saved model locally, or against a running
@@ -151,13 +194,14 @@ impl Command {
             }
             "kernel" => kernel_cfg(args).map(Command::Kernel),
             "train" => train_cfg(args).map(Command::Train),
+            "merge" => merge_cfg(args).map(Command::Merge),
             "predict" => predict_cfg(args).map(Command::Predict),
             "serve" => serve_cfg(args).map(Command::Serve),
             "models" => models_cfg(args).map(Command::Models),
             "trace" => trace_cfg(args).map(Command::Trace),
             other => Err(format!(
                 "unknown command `{other}` \
-                 (known: info, golden, kernel, train, predict, serve, models, trace)"
+                 (known: info, golden, kernel, train, merge, predict, serve, models, trace)"
             )),
         }
     }
@@ -165,13 +209,16 @@ impl Command {
 
 /// The help/usage text (also printed on `help` and unknown commands).
 pub fn usage() -> &'static str {
-    "usage: ntk-sketch <info|golden|kernel|train|predict|serve|models> [--flags]\n\
+    "usage: ntk-sketch <info|golden|kernel|train|merge|predict|serve|models> [--flags]\n\
      examples:\n\
      \tntk-sketch kernel --depth 3\n\
      \tntk-sketch train --family protein --method ntkrf --m 1024 --n 1000\n\
      \tntk-sketch train --family protein --method ntkrf --save m1 --checkpoint-every 1\n\
      \tntk-sketch train --family cntk --side 8 --n 200 --save c1\n\
      \tntk-sketch train --resume\n\
+     \tntk-sketch train --family protein --method ntkrf --save m1 --shard 1/3\n\
+     \tntk-sketch merge --save m1 --solver auto\n\
+     \tntk-sketch train --family protein --m 2048 --solver pcg\n\
      \tntk-sketch predict --model m1\n\
      \tntk-sketch serve --model m1 --requests 1000\n\
      \tntk-sketch serve --model m1 --listen 127.0.0.1:7071 --workers 4\n\
@@ -220,12 +267,29 @@ fn train_cfg(args: &Args) -> Result<TrainCfg, String> {
             "save",
             "resume",
             "models-dir",
+            "shard",
+            "solver",
         ],
         &["resume"],
     )?;
     let mut explicit: Vec<String> = args.option_names().iter().map(|s| s.to_string()).collect();
     for f in args.flag_names() {
         explicit.push(f.to_string());
+    }
+    let shard = parse_shard(args)?;
+    if shard.is_some() {
+        if args.get("save").is_none() {
+            return Err("--shard emits a shard checkpoint into the registry: add --save NAME"
+                .to_string());
+        }
+        for conflict in ["resume", "checkpoint-every", "stop-after-batches"] {
+            if args.get(conflict).is_some() || args.flag(conflict) {
+                return Err(format!(
+                    "--shard trains one complete slice in one pass; --{conflict} \
+                     does not apply to shard runs"
+                ));
+            }
+        }
     }
     Ok(TrainCfg {
         family: args.get_or("family", "protein").to_string(),
@@ -246,7 +310,47 @@ fn train_cfg(args: &Args) -> Result<TrainCfg, String> {
         resume: args.flag("resume") || args.get("resume").is_some(),
         resume_name: args.get("resume").map(str::to_string),
         models_dir: args.get("models-dir").map(str::to_string),
+        shard,
+        solver: SolverKind::parse(args)?,
         explicit,
+    })
+}
+
+/// `--shard i/k`: 1-based on the CLI (matching the shard filenames),
+/// stored 0-based. `1/1` is allowed (a degenerate but valid fleet).
+fn parse_shard(args: &Args) -> Result<Option<(u64, u64)>, String> {
+    let Some(s) = args.get("shard") else { return Ok(None) };
+    let bad = || format!("bad --shard `{s}` (expected i/k with 1 <= i <= k, e.g. 2/3)");
+    let (i, k) = s.split_once('/').ok_or_else(bad)?;
+    let i: u64 = i.parse().map_err(|_| bad())?;
+    let k: u64 = k.parse().map_err(|_| bad())?;
+    if i == 0 || k == 0 || i > k {
+        return Err(bad());
+    }
+    Ok(Some((i - 1, k)))
+}
+
+fn merge_cfg(args: &Args) -> Result<MergeCfg, String> {
+    check_known(args, "merge", &["save", "shards", "lambda", "solver", "models-dir"], &[])?;
+    let save = args
+        .get("save")
+        .ok_or_else(|| "merge needs --save NAME (the model the shards trained)".to_string())?
+        .to_string();
+    let shards = args.get("shards").map(|s| {
+        s.split(',').map(str::trim).filter(|p| !p.is_empty()).map(String::from).collect()
+    });
+    if let Some(list) = &shards {
+        let list: &Vec<String> = list;
+        if list.is_empty() {
+            return Err("--shards got an empty list (comma-separated paths expected)".into());
+        }
+    }
+    Ok(MergeCfg {
+        save,
+        shards,
+        lambda: parse_opt_f64(args, "lambda")?,
+        solver: SolverKind::parse(args)?,
+        models_dir: args.get("models-dir").map(str::to_string),
     })
 }
 
@@ -607,5 +711,72 @@ mod tests {
     #[test]
     fn extra_positionals_are_refused() {
         assert!(parse(&["train", "extra"]).unwrap_err().contains("unexpected positional"));
+    }
+
+    #[test]
+    fn train_shard_parses_and_validates() {
+        let Command::Train(t) =
+            parse(&["train", "--family", "protein", "--save", "m1", "--shard", "2/3"]).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(t.shard, Some((1, 3)), "1-based CLI, 0-based stored");
+        // degenerate but valid single-shard fleet
+        let Command::Train(t) = parse(&["train", "--save", "m1", "--shard", "1/1"]).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(t.shard, Some((0, 1)));
+        // malformed forms
+        for bad in ["0/3", "4/3", "3", "a/b", "1/0", "/3"] {
+            let err = parse(&["train", "--save", "m1", "--shard", bad]).unwrap_err();
+            assert!(err.contains("bad --shard"), "{bad}: {err}");
+        }
+        // mode conflicts
+        assert!(parse(&["train", "--shard", "1/3"]).unwrap_err().contains("--save"));
+        assert!(parse(&["train", "--save", "m1", "--shard", "1/3", "--resume"])
+            .unwrap_err()
+            .contains("--resume"));
+        assert!(parse(&["train", "--save", "m1", "--shard", "1/3", "--checkpoint-every", "2"])
+            .unwrap_err()
+            .contains("--checkpoint-every"));
+        assert!(parse(&["train", "--save", "m1", "--shard", "1/3", "--stop-after-batches", "2"])
+            .unwrap_err()
+            .contains("--stop-after-batches"));
+    }
+
+    #[test]
+    fn solver_flag_parses_everywhere() {
+        let Command::Train(t) = parse(&["train"]).unwrap() else { panic!() };
+        assert_eq!(t.solver, SolverKind::Auto, "default is auto");
+        let Command::Train(t) = parse(&["train", "--solver", "pcg"]).unwrap() else { panic!() };
+        assert_eq!(t.solver, SolverKind::Pcg);
+        let Command::Train(t) = parse(&["train", "--solver", "chol"]).unwrap() else { panic!() };
+        assert_eq!(t.solver, SolverKind::Chol);
+        assert!(parse(&["train", "--solver", "lu"]).unwrap_err().contains("bad --solver"));
+    }
+
+    #[test]
+    fn merge_parses_and_validates() {
+        assert!(parse(&["merge"]).unwrap_err().contains("--save"));
+        let Command::Merge(m) = parse(&["merge", "--save", "m1"]).unwrap() else { panic!() };
+        assert_eq!(m.save, "m1");
+        assert!(m.shards.is_none() && m.lambda.is_none());
+        assert_eq!(m.solver, SolverKind::Auto);
+        let Command::Merge(m) = parse(&[
+            "merge", "--save", "m1", "--shards", "a.ntkc, b.ntkc", "--lambda", "0.5", "--solver",
+            "pcg",
+        ])
+        .unwrap() else {
+            panic!()
+        };
+        assert_eq!(m.shards.as_deref(), Some(&["a.ntkc".to_string(), "b.ntkc".to_string()][..]));
+        assert_eq!((m.lambda, m.solver), (Some(0.5), SolverKind::Pcg));
+        assert!(parse(&["merge", "--save", "m1", "--shards", " , "])
+            .unwrap_err()
+            .contains("empty list"));
+        assert!(parse(&["merge", "--save", "m1", "--frobnicate", "x"])
+            .unwrap_err()
+            .contains("unknown flag"));
     }
 }

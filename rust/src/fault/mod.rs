@@ -53,6 +53,7 @@ pub const SITES: &[&str] = &[
     "wire.stall",     // serve wire: sender stalls between header and payload
     "shard.panic",    // router shard worker: induced panic mid-request
     "swap.load",      // registry watcher: loading the new version fails
+    "merge.read",     // merge: reading a shard checkpoint fails pre-merge
 ];
 
 /// Configuration for one site within a plan.

@@ -14,7 +14,15 @@
 //!                                checkpoints every --checkpoint-every K
 //!                                batches, and persists the model to the
 //!                                registry; --resume continues an
-//!                                interrupted fit bit-identically
+//!                                interrupted fit bit-identically;
+//!                                --shard i/k trains one contiguous slice
+//!                                of the stream and emits a shard
+//!                                checkpoint; --solver chol|pcg|auto
+//!                                picks the normal-equation solver
+//!   merge    --save NAME         fold a complete shard-checkpoint set
+//!                                into one solved, registered model —
+//!                                predictions bit-identical to a
+//!                                single-pass train (DESIGN.md §13)
 //!   predict  --model NAME        load a saved model and evaluate it;
 //!                                with --connect HOST:PORT the same
 //!                                predictions run through a serve daemon
@@ -43,7 +51,10 @@
 //! Model registry root: `--models-dir`, else `$NTK_MODEL_DIR`, else
 //! `./models` (DESIGN.md §8).
 
-use ntk_sketch::cli::{self, Command, KernelCfg, ModelsCfg, PredictCfg, ServeCfg, TraceCfg, TrainCfg};
+use ntk_sketch::cli::{
+    self, Command, KernelCfg, MergeCfg, ModelsCfg, PredictCfg, ServeCfg, SolverKind, TraceCfg,
+    TrainCfg,
+};
 use ntk_sketch::coordinator::{BatchBackend, BatchPolicy, FeatureServer, NativeBackend};
 use ntk_sketch::data::{
     eval_dataset, gen_vec_dataset, image_side, parse_family, split, square_side, DataFamily,
@@ -57,10 +68,12 @@ use ntk_sketch::features::rff::Rff;
 use ntk_sketch::features::Featurizer;
 use ntk_sketch::model::codec::crc32;
 use ntk_sketch::model::spec::MAX_CNTK_DEPTH;
-use ntk_sketch::model::{FeaturizerSpec, ModelMeta, SavedModel, TrainCheckpoint};
+use ntk_sketch::model::{
+    merge_checkpoints, FeaturizerSpec, ModelMeta, Registry, SavedModel, TrainCheckpoint,
+};
 use ntk_sketch::ntk::k_relu;
 use ntk_sketch::regression::cv::kfold_mse;
-use ntk_sketch::regression::{accuracy, mse, RidgeRegressor};
+use ntk_sketch::regression::{accuracy, mse, RidgeRegressor, SolveReport, SolverChoice};
 use ntk_sketch::rng::Rng;
 use ntk_sketch::runtime::{artifacts_dir, pjrt_enabled, Engine};
 use ntk_sketch::serve::{
@@ -86,6 +99,7 @@ fn main() {
         Command::Golden => golden(),
         Command::Kernel(c) => kernel(&c),
         Command::Train(c) => train(&c),
+        Command::Merge(c) => merge_cmd(&c),
         Command::Predict(c) => predict(&c),
         Command::Serve(c) => serve(&c),
         Command::Models(c) => models_cmd(&c),
@@ -325,7 +339,41 @@ fn train_setup(cfg: &TrainCfg) -> TrainSetup {
     TrainSetup { fam, n, seed, lambda, ds, spec }
 }
 
+/// Map the CLI's solver spelling onto the regression tier's enum.
+fn solver_choice(kind: SolverKind) -> SolverChoice {
+    match kind {
+        SolverKind::Chol => SolverChoice::Chol,
+        SolverKind::Pcg => SolverChoice::Pcg,
+        SolverKind::Auto => SolverChoice::Auto,
+    }
+}
+
+/// One line on what the solver actually did (PCG only — Cholesky runs
+/// silently, as before).
+fn report_solve(rep: &SolveReport) {
+    if rep.solver != "pcg" {
+        return;
+    }
+    let total: usize = rep.iterations.iter().sum();
+    println!(
+        "solver pcg: {total} iteration(s) across {} rhs, precond rank {}, rel residual {:.2e}",
+        rep.iterations.len(),
+        rep.precond_rank,
+        rep.rel_residual
+    );
+    if !rep.converged {
+        eprintln!(
+            "warning: pcg stopped at the iteration cap before reaching tolerance; \
+             consider --solver chol"
+        );
+    }
+}
+
 fn train(cfg: &TrainCfg) {
+    if let Some((index, count)) = cfg.shard {
+        train_shard(cfg, index, count);
+        return;
+    }
     if cfg.resume || cfg.save.is_some() {
         train_persistent(cfg);
         return;
@@ -339,7 +387,8 @@ fn train(cfg: &TrainCfg) {
         let (tr, te) = split::train_test(&ds, 0.25, seed ^ 0xA5);
         let mut reg = RidgeRegressor::new(f.dim(), ds.classes);
         reg.add_batch(&f.transform(&tr.x), &tr.one_hot_centered());
-        reg.solve(lambda).unwrap_or_else(|e| fail(e));
+        let rep = reg.solve_with(lambda, solver_choice(cfg.solver)).unwrap_or_else(|e| fail(e));
+        report_solve(&rep);
         let pred = reg.predict(&f.transform(&te.x));
         let acc = accuracy(&pred, &te.y);
         println!(
@@ -493,7 +542,8 @@ fn train_persistent(cfg: &TrainCfg) {
             return;
         }
     }
-    reg.solve(meta.lambda).unwrap_or_else(|e| fail(e));
+    let rep = reg.solve_with(meta.lambda, solver_choice(cfg.solver)).unwrap_or_else(|e| fail(e));
+    report_solve(&rep);
     let weights = reg.weights().expect("solved").clone();
     let saved = SavedModel::new(
         &name,
@@ -517,6 +567,134 @@ fn train_persistent(cfg: &TrainCfg) {
         saved.meta.banner(),
         bytes,
         spec.materialized_bytes(),
+        t0.elapsed().as_secs_f64()
+    );
+}
+
+/// Which rows shard `index` of `count` covers: the batch stream is
+/// partitioned into contiguous **batch-aligned** ranges (⌊B·i/k⌋ …
+/// ⌊B·(i+1)/k⌋ of B = ⌈n/batch⌉ batches), so every shard slices the
+/// deterministic stream at exactly the boundaries a single-pass train
+/// would — the precondition for merge ≡ single-pass (DESIGN.md §13).
+fn shard_batch_range(n_total: usize, batch_rows: usize, index: u64, count: u64) -> (usize, usize) {
+    let nb = n_total.div_ceil(batch_rows);
+    let lo_b = nb * index as usize / count as usize;
+    let hi_b = nb * (index as usize + 1) / count as usize;
+    ((lo_b * batch_rows).min(n_total), (hi_b * batch_rows).min(n_total))
+}
+
+/// `train --shard i/k`: accumulate only this shard's contiguous slice of
+/// the (deterministic) batch stream and emit a shard checkpoint — no
+/// solve, no model. An independent process per shard, then `merge`.
+fn train_shard(cfg: &TrainCfg, index: u64, count: u64) {
+    let registry = cli::open_registry(cfg.models_dir.as_deref());
+    let name = cfg.save.clone().expect("parser requires --save with --shard");
+    let t0 = std::time::Instant::now();
+    let TrainSetup { fam, n, seed, lambda, ds, spec } = train_setup(cfg);
+    let outputs = if ds.classes >= 2 { ds.classes } else { 1 };
+    let meta = ModelMeta {
+        name: name.clone(),
+        version: 0,
+        family: spec.family().to_string(),
+        dataset: fam.name().to_string(),
+        data_seed: seed,
+        lambda,
+        n_seen: 0,
+        input_dim: spec.input_dim(),
+        feature_dim: spec.feature_dim(),
+        outputs,
+    };
+    let y = if ds.classes >= 2 { ds.one_hot_centered() } else { ds.y_mat() };
+    let f = spec.build();
+    let batch_rows = cfg.batch;
+    let (shard_lo, shard_hi) = shard_batch_range(n, batch_rows, index, count);
+    let mut reg = RidgeRegressor::new(spec.feature_dim(), outputs);
+    let mut lo = shard_lo;
+    let mut batches = 0usize;
+    while lo < shard_hi {
+        // same boundaries a single-pass train would cut: lo starts on a
+        // batch boundary and shard_hi is itself batch-aligned (or n)
+        let hi = (lo + batch_rows).min(shard_hi);
+        let feats = {
+            let _s = ntk_sketch::obs::span("train.featurize");
+            f.transform(&ds.x.slice_rows(lo, hi))
+        };
+        reg.add_batch(&feats, &y.slice_rows(lo, hi));
+        batches += 1;
+        lo = hi;
+    }
+    let ck = TrainCheckpoint::capture(meta, spec, n as u64, batch_rows as u64, 0, &reg)
+        .with_shard(index, count);
+    registry.save_shard_checkpoint(&ck).unwrap_or_else(|e| fail(e));
+    println!(
+        "shard {}/{count} of `{name}`: rows [{shard_lo}, {shard_hi}) of {n} accumulated \
+         ({batches} batch(es), {:.2}s)",
+        index + 1,
+        t0.elapsed().as_secs_f64()
+    );
+    println!(
+        "shard checkpoint: {} (merge with `merge --save {name}`)",
+        registry.shard_checkpoint_path(&name, index, count).display()
+    );
+}
+
+/// `merge`: fold a complete shard-checkpoint set into one solved,
+/// registered model. Refuses incompatible or incomplete sets with typed
+/// errors; the merged predictions are bit-identical to a single-pass
+/// train of the same seed/params (DESIGN.md §13, pinned by CI's
+/// shard-e2e crc diff).
+fn merge_cmd(cfg: &MergeCfg) {
+    let t0 = std::time::Instant::now();
+    let registry = cli::open_registry(cfg.models_dir.as_deref());
+    let paths: Vec<std::path::PathBuf> = match &cfg.shards {
+        Some(list) => list.iter().map(std::path::PathBuf::from).collect(),
+        None => registry.list_shard_checkpoints(&cfg.save),
+    };
+    if paths.is_empty() {
+        fail(format!(
+            "no shard checkpoints for `{}` under {} \
+             (produce them with `train --shard i/k --save {}`)",
+            cfg.save,
+            registry.root().display(),
+            cfg.save
+        ));
+    }
+    let mut shards = Vec::with_capacity(paths.len());
+    for p in &paths {
+        shards.push(Registry::read_shard_checkpoint(p).unwrap_or_else(|e| fail(e)));
+    }
+    let k = shards.len();
+    let (merged, mut reg) = merge_checkpoints(shards).unwrap_or_else(|e| fail(e));
+    let mut meta = merged.meta.clone();
+    // λ only enters at the solve, so a merge-time override is safe; the
+    // accumulated sums are untouched
+    meta.lambda = cfg.lambda.unwrap_or(meta.lambda);
+    let rep = reg.solve_with(meta.lambda, solver_choice(cfg.solver)).unwrap_or_else(|e| fail(e));
+    report_solve(&rep);
+    let f = merged.spec.build();
+    let weights = reg.weights().expect("solved").clone();
+    let saved = SavedModel::new(
+        &cfg.save,
+        &meta.dataset,
+        meta.data_seed,
+        meta.lambda,
+        reg.n_seen as u64,
+        merged.spec.clone(),
+        weights,
+        &f,
+    );
+    let version = registry.save(&saved).unwrap_or_else(|e| fail(e));
+    // shard artifacts are consumed only after the merged model landed —
+    // a crash anywhere above leaves every shard intact for the retry
+    registry.clear_shard_checkpoints(&cfg.save).unwrap_or_else(|e| fail(e));
+    println!(
+        "merged {k} shard(s) into {} v{version}: {} rows, family={} dims {}→{}→{} ({:.2}s)",
+        cfg.save,
+        reg.n_seen,
+        meta.family,
+        meta.input_dim,
+        meta.feature_dim,
+        meta.outputs,
         t0.elapsed().as_secs_f64()
     );
 }
@@ -814,5 +992,39 @@ fn models_cmd(cfg: &ModelsCfg) {
             None => "no saved versions".to_string(),
         };
         println!("  {}: {} version(s), {latest}{ck}", e.name, e.versions.len());
+        if !e.versions.is_empty() {
+            let vs: Vec<String> = e.versions.iter().map(|v| format!("v{v}")).collect();
+            println!("      versions: {}", vs.join(" "));
+        }
+        // shard checkpoints awaiting merge: which arrived, which are
+        // missing, and whether the set is ready to merge
+        let shard_files = registry.list_shard_checkpoints(&e.name);
+        if !shard_files.is_empty() {
+            let mut have: Vec<(u64, u64, u64)> = Vec::new();
+            let mut unreadable = 0usize;
+            for p in &shard_files {
+                match Registry::read_shard_checkpoint(p) {
+                    Ok(s) => have.push((s.shard_index, s.shard_count, s.meta.n_seen)),
+                    Err(_) => unreadable += 1,
+                }
+            }
+            let count = have.iter().map(|h| h.1).max().unwrap_or(0);
+            let desc: Vec<String> =
+                have.iter().map(|(i, k, rows)| format!("{}/{k} ({rows} rows)", i + 1)).collect();
+            let missing: Vec<String> = (0..count)
+                .filter(|i| !have.iter().any(|h| h.0 == *i))
+                .map(|i| format!("{}/{count}", i + 1))
+                .collect();
+            let mut line = format!("      shards awaiting merge: {}", desc.join(", "));
+            if unreadable > 0 {
+                line.push_str(&format!(" + {unreadable} unreadable"));
+            }
+            if missing.is_empty() && unreadable == 0 && !have.is_empty() {
+                line.push_str(&format!(" — complete; run `merge --save {}`", e.name));
+            } else if !missing.is_empty() {
+                line.push_str(&format!(" — missing {}", missing.join(", ")));
+            }
+            println!("{line}");
+        }
     }
 }

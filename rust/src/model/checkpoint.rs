@@ -4,13 +4,20 @@
 //!
 //! What makes that possible (and what this file relies on):
 //! `RidgeRegressor` accumulates the normal equations per batch — the
-//! lower triangle of ΨᵀΨ in f64 plus ΨᵀY in f64 — and every lower
-//! triangle entry is a sum of per-batch contributions added in batch
-//! order. Saving (lower triangle, ΨᵀY, n_seen) at a batch boundary and
-//! restoring it therefore reproduces the exact f64 accumulation state;
-//! entries above the diagonal are scratch (straddling-tile partials from
-//! the SYRK) and are deliberately *not* saved — the mirror at solve time
-//! rebuilds them from the lower triangle either way.
+//! lower triangle of ΨᵀΨ in compensated (hi, lo) f64 pairs plus ΨᵀY
+//! likewise — and every lower triangle entry is a sum of per-batch
+//! contributions added in batch order. Saving (lower triangle + residue
+//! plane, ΨᵀY + residue plane, n_seen) at a batch boundary and restoring
+//! it therefore reproduces the exact accumulation state; entries above
+//! the diagonal are scratch (straddling-tile partials from the SYRK) and
+//! are deliberately *not* saved — the mirror at solve time rebuilds them
+//! from the lower triangle either way.
+//!
+//! The same container doubles as the **shard artifact** of distributed
+//! training (DESIGN.md §13): `train --shard i/k` writes one checkpoint
+//! per shard with `shard_index`/`shard_count` metadata, and `merge` sums
+//! them. The residue planes are what make merge-of-shards reproduce the
+//! single-pass accumulation bit for bit.
 
 use super::codec::{put_f64s, Container, Dec, ModelError, Record};
 use super::spec::FeaturizerSpec;
@@ -20,16 +27,20 @@ use crate::regression::RidgeRegressor;
 const SEC_META: [u8; 4] = *b"META";
 const SEC_SPEC: [u8; 4] = *b"SPEC";
 const SEC_GRAM: [u8; 4] = *b"GRAM";
+const SEC_GRAM_LO: [u8; 4] = *b"GRLO";
 const SEC_XTY: [u8; 4] = *b"XTY0";
+const SEC_XTY_LO: [u8; 4] = *b"XTLO";
 
 const FORMAT_CHECKPOINT: &str = "checkpoint";
 
-/// A resumable snapshot of a streaming `train --save` run.
+/// A resumable snapshot of a streaming `train --save` run, or one
+/// shard's partial sums from a `train --shard i/k` run.
 #[derive(Debug, Clone)]
 pub struct TrainCheckpoint {
     pub meta: ModelMeta,
     pub spec: FeaturizerSpec,
-    /// Total rows the interrupted run was fitting.
+    /// Total rows the interrupted run was fitting (the *whole* stream,
+    /// not this shard's slice — shards must agree on it to merge).
     pub n_total: u64,
     /// Rows per streaming batch (checkpoints land on batch boundaries).
     pub batch_rows: u64,
@@ -37,15 +48,26 @@ pub struct TrainCheckpoint {
     /// snapshots) — persisted so `train --resume` keeps checkpointing
     /// at the same rhythm instead of silently dropping to never.
     pub ckpt_every: u64,
-    /// Packed lower triangle of ΨᵀΨ (row-major, i ≥ j), f64.
+    /// Which contiguous slice of the batch stream this artifact covers
+    /// (0-based). 0 with `shard_count` 1 means an ordinary unsharded
+    /// checkpoint.
+    pub shard_index: u64,
+    /// How many shards the stream was partitioned into (≥ 1).
+    pub shard_count: u64,
+    /// Packed lower triangle of ΨᵀΨ (row-major, i ≥ j), f64 hi plane.
     pub gram_lower: Vec<f64>,
-    /// ΨᵀY flat (feature_dim × outputs, row-major), f64.
+    /// Compensation residues of `gram_lower`, same packing.
+    pub gram_lower_lo: Vec<f64>,
+    /// ΨᵀY flat (feature_dim × outputs, row-major), f64 hi plane.
     pub xty: Vec<f64>,
+    /// Compensation residues of `xty`, same layout.
+    pub xty_lo: Vec<f64>,
 }
 
 impl TrainCheckpoint {
     /// Snapshot a live accumulator. `meta.n_seen` is taken from the
-    /// regressor, not the caller.
+    /// regressor, not the caller. Produces an unsharded (0 of 1)
+    /// artifact; use [`TrainCheckpoint::with_shard`] to tag shard runs.
     pub fn capture(
         mut meta: ModelMeta,
         spec: FeaturizerSpec,
@@ -61,9 +83,20 @@ impl TrainCheckpoint {
             n_total,
             batch_rows,
             ckpt_every,
+            shard_index: 0,
+            shard_count: 1,
             gram_lower: reg.gram_lower_packed(),
+            gram_lower_lo: reg.gram_lower_lo_packed(),
             xty: reg.xty_flat().to_vec(),
+            xty_lo: reg.xty_lo_flat().to_vec(),
         }
+    }
+
+    /// Tag this checkpoint as shard `index` of `count` (0-based).
+    pub fn with_shard(mut self, index: u64, count: u64) -> TrainCheckpoint {
+        self.shard_index = index;
+        self.shard_count = count;
+        self
     }
 
     /// Rebuild the accumulator exactly as it was at capture time.
@@ -72,7 +105,9 @@ impl TrainCheckpoint {
             self.meta.feature_dim,
             self.meta.outputs,
             &self.gram_lower,
+            &self.gram_lower_lo,
             &self.xty,
+            &self.xty_lo,
             self.meta.n_seen as usize,
         )
         .map_err(ModelError::Invalid)
@@ -85,6 +120,8 @@ impl TrainCheckpoint {
         rec.set_u64("n_total", self.n_total);
         rec.set_u64("batch_rows", self.batch_rows);
         rec.set_u64("ckpt_every", self.ckpt_every);
+        rec.set_u64("shard_index", self.shard_index);
+        rec.set_u64("shard_count", self.shard_count);
         rec.encode(&mut meta);
         c.add(SEC_META, meta);
         let mut spec = Vec::new();
@@ -93,9 +130,15 @@ impl TrainCheckpoint {
         let mut gram = Vec::new();
         put_f64s(&mut gram, &self.gram_lower);
         c.add(SEC_GRAM, gram);
+        let mut gram_lo = Vec::new();
+        put_f64s(&mut gram_lo, &self.gram_lower_lo);
+        c.add(SEC_GRAM_LO, gram_lo);
         let mut xty = Vec::new();
         put_f64s(&mut xty, &self.xty);
         c.add(SEC_XTY, xty);
+        let mut xty_lo = Vec::new();
+        put_f64s(&mut xty_lo, &self.xty_lo);
+        c.add(SEC_XTY_LO, xty_lo);
         c.to_bytes()
     }
 
@@ -106,12 +149,16 @@ impl TrainCheckpoint {
         let n_total = rec.u64("n_total")?;
         let batch_rows = rec.u64("batch_rows")?;
         let ckpt_every = rec.u64("ckpt_every")?;
+        let shard_index = rec.u64("shard_index")?;
+        let shard_count = rec.u64("shard_count")?;
         let spec = FeaturizerSpec::from_record(&Record::decode(&mut Dec::new(
             c.section(SEC_SPEC)?,
             "SPEC",
         ))?)?;
         let gram_lower = Dec::new(c.section(SEC_GRAM)?, "GRAM").f64s()?;
+        let gram_lower_lo = Dec::new(c.section(SEC_GRAM_LO)?, "GRLO").f64s()?;
         let xty = Dec::new(c.section(SEC_XTY)?, "XTY0").f64s()?;
+        let xty_lo = Dec::new(c.section(SEC_XTY_LO)?, "XTLO").f64s()?;
         // meta must agree with the spec it travels with — the restored
         // accumulator feeds features from the reconstructed featurizer,
         // and a mismatch must be a refusal here, not an assert later
@@ -136,6 +183,12 @@ impl TrainCheckpoint {
                 gram_lower.len(),
             )));
         }
+        if gram_lower_lo.len() != tri {
+            return Err(ModelError::Invalid(format!(
+                "checkpoint gram residue plane has {} entries, needs {tri}",
+                gram_lower_lo.len(),
+            )));
+        }
         let expect_xty = m.checked_mul(meta.outputs).ok_or_else(|| {
             ModelError::Invalid(format!("feature_dim {m} × outputs {} too large", meta.outputs))
         })?;
@@ -145,11 +198,34 @@ impl TrainCheckpoint {
                 xty.len(),
             )));
         }
+        if xty_lo.len() != expect_xty {
+            return Err(ModelError::Invalid(format!(
+                "checkpoint xty residue plane has {} entries, expected {expect_xty}",
+                xty_lo.len(),
+            )));
+        }
         if batch_rows == 0 || meta.n_seen > n_total {
             return Err(ModelError::Invalid(
                 "checkpoint progress fields inconsistent".into(),
             ));
         }
-        Ok(TrainCheckpoint { meta, spec, n_total, batch_rows, ckpt_every, gram_lower, xty })
+        if shard_count == 0 || shard_index >= shard_count {
+            return Err(ModelError::Invalid(format!(
+                "checkpoint shard tag {shard_index}/{shard_count} out of range"
+            )));
+        }
+        Ok(TrainCheckpoint {
+            meta,
+            spec,
+            n_total,
+            batch_rows,
+            ckpt_every,
+            shard_index,
+            shard_count,
+            gram_lower,
+            gram_lower_lo,
+            xty,
+            xty_lo,
+        })
     }
 }

@@ -1,0 +1,284 @@
+//! Merging shard checkpoints into one fit (DESIGN.md §13).
+//!
+//! Gram matrices are additive: if shard i accumulated ΨᵢᵀΨᵢ / ΨᵢᵀYᵢ over
+//! its contiguous slice of the batch stream, the sums over all shards
+//! are exactly the single-pass ΨᵀΨ / ΨᵀY. With the compensated (hi, lo)
+//! planes the checkpoints carry, the merged accumulator is bit-identical
+//! to an uninterrupted run — which is what `tests/shard_merge.rs` pins.
+//!
+//! f64 sums are permutation-sensitive, so merge order is part of the
+//! contract: shards are **always folded in ascending `shard_index`
+//! order**, regardless of the order paths arrived on the CLI. (The
+//! compensated planes make reordering error vanishingly unlikely, not
+//! impossible — canonical order removes the question entirely.)
+//!
+//! Mismatched shards are refused with typed errors, field by field:
+//! partial sums from different specs, seeds, λ, or stream shapes are
+//! not the same linear system, and silently summing them would produce
+//! a plausible-looking but wrong model.
+
+use std::fmt;
+
+use super::checkpoint::TrainCheckpoint;
+use super::codec::ModelError;
+use crate::regression::RidgeRegressor;
+
+/// Why a set of shard checkpoints cannot be merged.
+#[derive(Debug)]
+pub enum MergeError {
+    /// Need at least one shard (two for the verb to be useful, but one
+    /// complete shard of 1 is a valid degenerate merge).
+    NoShards,
+    /// Shards disagree on how many shards the stream was split into.
+    ShardCountMismatch { want: u64, got: u64 },
+    /// The same shard index appeared twice.
+    DuplicateShard { index: u64 },
+    /// Shard `index` of the declared partition never arrived.
+    MissingShard { index: u64, count: u64 },
+    /// Two shards disagree on a compatibility field (spec, seed, λ, …).
+    Mismatch { field: &'static str, want: String, got: String },
+    /// Merged row count doesn't cover the declared stream.
+    RowsIncomplete { seen: u64, total: u64 },
+    /// A shard artifact failed to restore.
+    Model(ModelError),
+    /// Accumulator-level refusal (shape mismatch on absorb).
+    Absorb(String),
+}
+
+impl fmt::Display for MergeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MergeError::NoShards => write!(f, "merge: no shard checkpoints given"),
+            MergeError::ShardCountMismatch { want, got } => write!(
+                f,
+                "merge: shard declares a {got}-way partition, others declare {want}-way"
+            ),
+            MergeError::DuplicateShard { index } => {
+                write!(f, "merge: shard index {index} appears more than once")
+            }
+            MergeError::MissingShard { index, count } => {
+                write!(f, "merge: shard {index} of {count} is missing")
+            }
+            MergeError::Mismatch { field, want, got } => write!(
+                f,
+                "merge: shards disagree on {field}: `{want}` vs `{got}` — \
+                 partial sums from different runs cannot be combined"
+            ),
+            MergeError::RowsIncomplete { seen, total } => write!(
+                f,
+                "merge: shards cover {seen} rows of a {total}-row stream — \
+                 a shard checkpoint is incomplete"
+            ),
+            MergeError::Model(e) => write!(f, "merge: shard artifact unreadable: {e}"),
+            MergeError::Absorb(e) => write!(f, "merge: {e}"),
+        }
+    }
+}
+
+impl From<ModelError> for MergeError {
+    fn from(e: ModelError) -> MergeError {
+        MergeError::Model(e)
+    }
+}
+
+/// Compare one compatibility field across shards; mismatch is a refusal.
+fn check<T: PartialEq + fmt::Debug>(
+    field: &'static str,
+    want: &T,
+    got: &T,
+) -> Result<(), MergeError> {
+    if want == got {
+        Ok(())
+    } else {
+        Err(MergeError::Mismatch {
+            field,
+            want: format!("{want:?}"),
+            got: format!("{got:?}"),
+        })
+    }
+}
+
+/// Merge the partial sums of a complete shard set into one accumulator.
+///
+/// Validates the set (exactly indices 0..k-1 of a k-way partition, all
+/// compatibility fields equal), folds in **ascending shard-index order**
+/// (canonical — input order is irrelevant), and returns the merged
+/// checkpoint (tagged 0 of 1, i.e. unsharded) plus the live accumulator
+/// ready to `solve`. The merged sums are bit-identical to a single-pass
+/// train of the same stream (see module doc).
+pub fn merge_checkpoints(
+    mut shards: Vec<TrainCheckpoint>,
+) -> Result<(TrainCheckpoint, RidgeRegressor), MergeError> {
+    if shards.is_empty() {
+        return Err(MergeError::NoShards);
+    }
+    // canonical order: ascending shard index, whatever the CLI gave us
+    shards.sort_by_key(|s| s.shard_index);
+    let count = shards[0].shard_count;
+    for s in &shards {
+        if s.shard_count != count {
+            return Err(MergeError::ShardCountMismatch { want: count, got: s.shard_count });
+        }
+    }
+    for w in shards.windows(2) {
+        if w[0].shard_index == w[1].shard_index {
+            return Err(MergeError::DuplicateShard { index: w[0].shard_index });
+        }
+    }
+    for (i, s) in shards.iter().enumerate() {
+        if s.shard_index != i as u64 {
+            // sorted + deduped, so the first gap is the missing index
+            return Err(MergeError::MissingShard { index: i as u64, count });
+        }
+    }
+    if shards.len() as u64 != count {
+        return Err(MergeError::MissingShard { index: shards.len() as u64, count });
+    }
+    let head = &shards[0];
+    for s in &shards[1..] {
+        check("name", &head.meta.name, &s.meta.name)?;
+        check("family", &head.meta.family, &s.meta.family)?;
+        check("dataset", &head.meta.dataset, &s.meta.dataset)?;
+        check("data_seed", &head.meta.data_seed, &s.meta.data_seed)?;
+        check("lambda", &head.meta.lambda.to_bits(), &s.meta.lambda.to_bits())?;
+        check("input_dim", &head.meta.input_dim, &s.meta.input_dim)?;
+        check("feature_dim", &head.meta.feature_dim, &s.meta.feature_dim)?;
+        check("outputs", &head.meta.outputs, &s.meta.outputs)?;
+        check("n_total", &head.n_total, &s.n_total)?;
+        check("batch_rows", &head.batch_rows, &s.batch_rows)?;
+        check("spec", &head.spec, &s.spec)?;
+    }
+    let mut reg = head.restore_regressor()?;
+    for s in &shards[1..] {
+        let part = s.restore_regressor()?;
+        reg.absorb(&part).map_err(MergeError::Absorb)?;
+    }
+    if reg.n_seen as u64 != head.n_total {
+        return Err(MergeError::RowsIncomplete { seen: reg.n_seen as u64, total: head.n_total });
+    }
+    let merged = TrainCheckpoint::capture(
+        head.meta.clone(),
+        head.spec.clone(),
+        head.n_total,
+        head.batch_rows,
+        head.ckpt_every,
+        &reg,
+    );
+    Ok((merged, reg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::FeaturizerSpec;
+    use crate::model::ModelMeta;
+    use crate::rng::Rng;
+    use crate::tensor::Mat;
+
+    fn meta(m: usize, k: usize) -> ModelMeta {
+        ModelMeta {
+            name: "merge-test".into(),
+            version: 0,
+            family: "rff".into(),
+            dataset: "protein-like".into(),
+            data_seed: 41,
+            lambda: 1e-3,
+            n_seen: 0,
+            input_dim: 6,
+            feature_dim: m,
+            outputs: k,
+        }
+    }
+
+    fn spec() -> FeaturizerSpec {
+        FeaturizerSpec::Rff { d: 6, m: 16, sigma: 1.0, seed: 42 }
+    }
+
+    /// Shard the batch stream [0, n) into `cuts.len()-1` contiguous
+    /// slices and return (shard checkpoints, single-pass regressor).
+    fn make_shards(cuts: &[usize], batch: usize) -> (Vec<TrainCheckpoint>, RidgeRegressor) {
+        let n = *cuts.last().unwrap();
+        let (m, k) = (16, 2);
+        let mut rng = Rng::new(4242);
+        let x = Mat::from_vec(n, m, rng.gauss_vec(n * m));
+        let y = Mat::from_vec(n, k, rng.gauss_vec(n * k));
+        let mut full = RidgeRegressor::new(m, k);
+        for lo in (0..n).step_by(batch) {
+            full.add_batch(&x.slice_rows(lo, lo + batch), &y.slice_rows(lo, lo + batch));
+        }
+        let count = (cuts.len() - 1) as u64;
+        let shards = cuts
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| {
+                let mut reg = RidgeRegressor::new(m, k);
+                for lo in (w[0]..w[1]).step_by(batch) {
+                    reg.add_batch(&x.slice_rows(lo, lo + batch), &y.slice_rows(lo, lo + batch));
+                }
+                TrainCheckpoint::capture(meta(m, k), spec(), n as u64, batch as u64, 1, &reg)
+                    .with_shard(i as u64, count)
+            })
+            .collect();
+        (shards, full)
+    }
+
+    #[test]
+    fn merge_is_bitwise_single_pass_any_input_order() {
+        let (shards, full) = make_shards(&[0, 48, 64, 128], 16);
+        // feed shards in a scrambled order; canonical sort must restore it
+        let scrambled = vec![shards[2].clone(), shards[0].clone(), shards[1].clone()];
+        let (merged, reg) = merge_checkpoints(scrambled).unwrap();
+        assert_eq!(merged.shard_index, 0);
+        assert_eq!(merged.shard_count, 1);
+        assert_eq!(reg.n_seen, full.n_seen);
+        for (p, q) in merged.gram_lower.iter().zip(full.gram_lower_packed().iter()) {
+            assert_eq!(p.to_bits(), q.to_bits());
+        }
+        for (p, q) in merged.xty.iter().zip(full.xty_flat().iter()) {
+            assert_eq!(p.to_bits(), q.to_bits());
+        }
+    }
+
+    #[test]
+    fn merge_refuses_missing_and_duplicate_shards() {
+        let (shards, _) = make_shards(&[0, 32, 64, 128], 16);
+        let missing = vec![shards[0].clone(), shards[2].clone()];
+        assert!(matches!(
+            merge_checkpoints(missing),
+            Err(MergeError::MissingShard { index: 1, .. })
+        ));
+        let dup = vec![shards[0].clone(), shards[0].clone(), shards[1].clone()];
+        assert!(matches!(merge_checkpoints(dup), Err(MergeError::DuplicateShard { index: 0 })));
+        assert!(matches!(merge_checkpoints(Vec::new()), Err(MergeError::NoShards)));
+    }
+
+    #[test]
+    fn merge_refuses_field_mismatches() {
+        let (shards, _) = make_shards(&[0, 64, 128], 16);
+        let mut wrong_seed = shards.clone();
+        wrong_seed[1].meta.data_seed = 999;
+        match merge_checkpoints(wrong_seed) {
+            Err(MergeError::Mismatch { field: "data_seed", .. }) => {}
+            other => panic!("expected data_seed mismatch, got {other:?}"),
+        }
+        let mut wrong_spec = shards.clone();
+        wrong_spec[1].spec = FeaturizerSpec::Rff { d: 6, m: 16, sigma: 0.9, seed: 42 };
+        match merge_checkpoints(wrong_spec) {
+            Err(MergeError::Mismatch { field: "spec", .. }) => {}
+            other => panic!("expected spec mismatch, got {other:?}"),
+        }
+        let mut wrong_count = shards.clone();
+        wrong_count[1].shard_count = 3;
+        assert!(matches!(
+            merge_checkpoints(wrong_count),
+            Err(MergeError::ShardCountMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn single_shard_of_one_merges() {
+        let (shards, full) = make_shards(&[0, 128], 16);
+        let (_, reg) = merge_checkpoints(shards).unwrap();
+        assert_eq!(reg.n_seen, full.n_seen);
+    }
+}

@@ -27,11 +27,13 @@
 
 pub mod checkpoint;
 pub mod codec;
+pub mod merge;
 pub mod registry;
 pub mod spec;
 
 pub use checkpoint::TrainCheckpoint;
 pub use codec::{ModelError, Record};
+pub use merge::{merge_checkpoints, MergeError};
 pub use registry::Registry;
 pub use spec::FeaturizerSpec;
 

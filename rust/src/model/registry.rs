@@ -175,7 +175,10 @@ impl Registry {
                 continue;
             }
             let versions = self.versions(&name);
-            if versions.is_empty() && !self.checkpoint_path(&name).exists() {
+            if versions.is_empty()
+                && !self.checkpoint_path(&name).exists()
+                && self.list_shard_checkpoints(&name).is_empty()
+            {
                 continue;
             }
             let latest = self.latest_pointer(&name).or_else(|| versions.last().copied());
@@ -238,6 +241,74 @@ impl Registry {
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
             Err(e) => Err(e.into()),
         }
+    }
+
+    // ------------------------------------------- shard checkpoints --
+
+    /// On-disk path of one shard's partial-sum artifact. 1-based in the
+    /// filename to match the CLI's `--shard i/k` spelling.
+    pub fn shard_checkpoint_path(&self, name: &str, index: u64, count: u64) -> PathBuf {
+        self.model_dir(name).join(format!("shard-{}of{count}.ntkc", index + 1))
+    }
+
+    /// Persist one shard's checkpoint (atomic). Unlike the resume
+    /// checkpoint there can be many per model — one per shard, awaiting
+    /// `merge`.
+    pub fn save_shard_checkpoint(&self, ck: &TrainCheckpoint) -> Result<(), ModelError> {
+        let _s = crate::obs::span("store.checkpoint");
+        check_name(&ck.meta.name)?;
+        write_atomic(
+            &self.shard_checkpoint_path(&ck.meta.name, ck.shard_index, ck.shard_count),
+            &ck.to_bytes(),
+        )
+    }
+
+    /// Read one shard artifact for merging. Fault site `merge.read`
+    /// fires before the read — a merge that dies here must leave every
+    /// shard file intact for the retry (merge only ever reads shards;
+    /// deletion happens after the merged model lands).
+    pub fn read_shard_checkpoint(path: &Path) -> Result<TrainCheckpoint, ModelError> {
+        if let Some(fault) = crate::fault::inject("merge.read") {
+            return Err(ModelError::Io(fault.msg()));
+        }
+        let bytes = std::fs::read(path).map_err(|e| {
+            ModelError::Io(format!("shard checkpoint {} unreadable: {e}", path.display()))
+        })?;
+        TrainCheckpoint::from_bytes(&bytes)
+    }
+
+    /// All shard checkpoint files for `name`, sorted by shard index
+    /// (filename-parsed; contents are validated at merge time).
+    pub fn list_shard_checkpoints(&self, name: &str) -> Vec<PathBuf> {
+        let mut out: Vec<(u64, PathBuf)> = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(self.model_dir(name)) {
+            for e in rd.flatten() {
+                let Some(fname) = e.file_name().to_str().map(String::from) else { continue };
+                if let Some(idx) = fname
+                    .strip_prefix("shard-")
+                    .and_then(|s| s.strip_suffix(".ntkc"))
+                    .and_then(|s| s.split_once("of"))
+                    .and_then(|(i, _)| i.parse::<u64>().ok())
+                {
+                    out.push((idx, e.path()));
+                }
+            }
+        }
+        out.sort();
+        out.into_iter().map(|(_, p)| p).collect()
+    }
+
+    /// Remove every shard checkpoint of `name` (after a merge landed).
+    pub fn clear_shard_checkpoints(&self, name: &str) -> Result<(), ModelError> {
+        check_name(name)?;
+        for p in self.list_shard_checkpoints(name) {
+            match std::fs::remove_file(&p) {
+                Ok(()) => {}
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(())
     }
 
     /// Find a resumable checkpoint: by name if given, otherwise the

@@ -5,8 +5,10 @@
 pub mod cv;
 pub mod kernel_ridge;
 pub mod metrics;
+pub mod pcg;
 pub mod ridge;
 
 pub use kernel_ridge::KernelRidge;
 pub use metrics::{accuracy, mse, r2};
-pub use ridge::RidgeRegressor;
+pub use pcg::{solve_spd_pcg, NystromPrecond, PcgOpts, PcgReport};
+pub use ridge::{RidgeRegressor, SolveReport, SolverChoice, PCG_AUTO_MIN_DIM};

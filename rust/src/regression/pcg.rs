@@ -1,0 +1,384 @@
+//! Preconditioned conjugate gradient on the ridge normal equations.
+//!
+//! The dense Cholesky in `regression::ridge` is O(m³); past a few
+//! thousand sketch features it dominates end-to-end train time (see
+//! BENCH_solver.json). Since the regularized system A = ΨᵀΨ + λnI is
+//! SPD with eigenvalues ≥ λn, CG applies directly — and its iteration
+//! count is governed by the spectrum's top tail, which is exactly what
+//! a low-rank randomized-Nyström approximation captures (Frangella,
+//! Tropp & Udell's sketch-and-precondition recipe; "A Simple Algorithm
+//! For Scaling Up Kernel Methods" uses the same pairing for kernel
+//! ridge). The preconditioner damps the top-r eigendirections down to
+//! the level of the smallest captured eigenvalue, leaving a clustered
+//! spectrum CG resolves in a handful of iterations (DESIGN.md §13).
+//!
+//! Everything is deterministic for a fixed build: the Gaussian test
+//! matrix comes from a fixed-seed `Rng`, and the matvec runs through
+//! the deterministic GEMM engine — repeated solves are bit-identical.
+
+use crate::linalg::{cholesky, jacobi_eigen, solve_lower, DMat};
+use crate::rng::Rng;
+use crate::tensor::gemm::{self, Op};
+
+/// Fixed seed for the Nyström test matrix: solver output must be a pure
+/// function of the accumulated gram, never of ambient RNG state.
+const NYSTROM_SEED: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Tuning for [`solve_spd_pcg`].
+#[derive(Debug, Clone)]
+pub struct PcgOpts {
+    /// Relative residual target ‖Ax−b‖/‖b‖.
+    pub tol: f64,
+    /// Iteration cap per right-hand side.
+    pub max_iter: usize,
+    /// Nyström sketch rank (clamped to the system dimension).
+    pub rank: usize,
+    /// Seed for the Gaussian test matrix.
+    pub seed: u64,
+    /// Disable to run plain CG (used by the paid-for-itself tests).
+    pub precond: bool,
+}
+
+impl PcgOpts {
+    /// Defaults scaled to the system dimension. Rank m/8 (clamped to
+    /// [16, 192]) keeps the build at O(m²r) — below one Cholesky — while
+    /// capturing the decaying NTK-feature spectrum's head.
+    pub fn for_dim(dim: usize) -> PcgOpts {
+        PcgOpts {
+            tol: 1e-10,
+            max_iter: (2 * dim).max(200),
+            rank: (dim / 8).clamp(16, 192).min(dim),
+            seed: NYSTROM_SEED,
+            precond: true,
+        }
+    }
+}
+
+/// What a [`solve_spd_pcg`] run did, for reports and benches.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PcgReport {
+    /// CG iterations per right-hand side.
+    pub iterations: Vec<usize>,
+    /// Worst relative residual across right-hand sides.
+    pub rel_residual: f64,
+    /// All right-hand sides reached `tol`.
+    pub converged: bool,
+    /// Eigenpairs the preconditioner kept (0 = ran unpreconditioned).
+    pub precond_rank: usize,
+}
+
+/// Rank-r randomized Nyström approximation of an SPD matrix, applied as
+/// the preconditioner P⁻¹ = I + U(diag(λ_min/λ_j) − I)Uᵀ where (λ_j, U)
+/// are the captured eigenpairs and λ_min the smallest kept one. Top
+/// directions are damped to λ_min's level; the unseen subspace passes
+/// through untouched, so P is SPD whenever every kept λ_j > 0.
+pub struct NystromPrecond {
+    /// m×r' orthonormal captured eigenvectors.
+    u: DMat,
+    /// λ_min_kept/λ_j − 1 per kept column (the correction gains).
+    gain: Vec<f64>,
+}
+
+impl NystromPrecond {
+    /// Build from the already-regularized system A (symmetric, PD).
+    /// Returns `None` when nothing useful was captured (tiny systems or
+    /// a degenerate sketch) — callers fall back to plain CG.
+    ///
+    /// This is the numerically-stable single-pass recipe: shift the
+    /// sketch by ν = ε·√m·‖AΩ‖_F before factoring so the small Cholesky
+    /// never sees a rank-deficient Gram, then subtract ν from the
+    /// recovered eigenvalues.
+    pub fn build(a: &DMat, rank: usize, seed: u64) -> Option<NystromPrecond> {
+        let m = a.rows;
+        let r = rank.min(m);
+        if r == 0 || m == 0 {
+            return None;
+        }
+        let mut rng = Rng::new(seed);
+        let omega = DMat::from_fn(m, r, |_, _| rng.gauss());
+        // Y = A·Ω through the deterministic GEMM engine.
+        let mut y = DMat::zeros(m, r);
+        gemm::gemm(
+            m, r, m, &a.data, Op::NoTrans, &omega.data, Op::NoTrans, &mut y.data, false,
+        );
+        let y_frob = y.data.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if !y_frob.is_finite() || y_frob == 0.0 {
+            return None;
+        }
+        let nu = f64::EPSILON * (m as f64).sqrt() * y_frob;
+        let mut y_nu = y;
+        for (yv, ov) in y_nu.data.iter_mut().zip(omega.data.iter()) {
+            *yv += nu * ov;
+        }
+        // G = ΩᵀYν, symmetrized against GEMM rounding asymmetry.
+        let mut g = DMat::zeros(r, r);
+        gemm::gemm(
+            r, r, m, &omega.data, Op::Trans, &y_nu.data, Op::NoTrans, &mut g.data, false,
+        );
+        for i in 0..r {
+            for j in 0..i {
+                let s = 0.5 * (g.at(i, j) + g.at(j, i));
+                *g.at_mut(i, j) = s;
+                *g.at_mut(j, i) = s;
+            }
+        }
+        let c = {
+            let mut jitter = 0.0;
+            let trace: f64 = (0..r).map(|i| g.at(i, i)).sum();
+            let mut attempt = g.clone();
+            loop {
+                match cholesky(&attempt) {
+                    Ok(c) => break c,
+                    Err(_) => {
+                        jitter = if jitter == 0.0 {
+                            1e-14 * trace.abs().max(1.0)
+                        } else {
+                            jitter * 100.0
+                        };
+                        if jitter > trace.abs().max(1.0) {
+                            return None;
+                        }
+                        attempt = g.clone();
+                        attempt.add_diag(jitter);
+                    }
+                }
+            }
+        };
+        // B = Yν C⁻ᵀ row by row, so A ≈ BBᵀ + shift.
+        let mut b = DMat::zeros(m, r);
+        for i in 0..m {
+            let solved = solve_lower(&c, y_nu.row(i));
+            b.data[i * r..(i + 1) * r].copy_from_slice(&solved);
+        }
+        // Eigen-decompose the small BᵀB to recover A's top eigenpairs.
+        let mut s = DMat::zeros(r, r);
+        gemm::gemm(r, r, m, &b.data, Op::Trans, &b.data, Op::NoTrans, &mut s.data, false);
+        for i in 0..r {
+            for j in 0..i {
+                let v = 0.5 * (s.at(i, j) + s.at(j, i));
+                *s.at_mut(i, j) = v;
+                *s.at_mut(j, i) = v;
+            }
+        }
+        let (vals, vecs) = jacobi_eigen(&s, 64);
+        // vals ascending = Σ²; eigenvalues of A-approx after the ν shift.
+        let kept: Vec<usize> = (0..r).filter(|&j| vals[j] > nu && vals[j] > 0.0).collect();
+        if kept.is_empty() {
+            return None;
+        }
+        let lam: Vec<f64> = kept.iter().map(|&j| (vals[j] - nu).max(vals[j] * 1e-8)).collect();
+        let lam_min = lam.iter().cloned().fold(f64::INFINITY, f64::min);
+        if !(lam_min > 0.0) {
+            return None;
+        }
+        // U = B·V·Σ⁻¹ over the kept columns (orthonormal up to rounding).
+        let mut u = DMat::zeros(m, kept.len());
+        for i in 0..m {
+            let brow = b.row(i);
+            for (uc, &j) in kept.iter().enumerate() {
+                let mut acc = 0.0;
+                for t in 0..r {
+                    acc += brow[t] * vecs.at(t, j);
+                }
+                *u.at_mut(i, uc) = acc / vals[j].sqrt();
+            }
+        }
+        let gain: Vec<f64> = lam.iter().map(|&l| lam_min / l - 1.0).collect();
+        Some(NystromPrecond { u, gain })
+    }
+
+    /// Kept rank r'.
+    pub fn rank(&self) -> usize {
+        self.u.cols
+    }
+
+    /// z = P⁻¹ r = r + U(gain ∘ Uᵀr).
+    pub fn apply(&self, r: &[f64], z: &mut [f64]) {
+        let (m, k) = (self.u.rows, self.u.cols);
+        let mut proj = vec![0.0; k];
+        gemm::gemm(k, 1, m, &self.u.data, Op::Trans, r, Op::NoTrans, &mut proj, false);
+        for (p, g) in proj.iter_mut().zip(self.gain.iter()) {
+            *p *= g;
+        }
+        z.copy_from_slice(r);
+        gemm::gemm(m, 1, k, &self.u.data, Op::NoTrans, &proj, Op::NoTrans, z, true);
+    }
+}
+
+/// Solve A X = B for SPD A (m×m) and multi-rhs B (m×k) by
+/// Nyström-preconditioned CG, one CG run per right-hand side. Emits an
+/// `obs` span `ridge.pcg_iter` per iteration so traces expose the
+/// convergence profile. Fails only on non-finite breakdown; hitting the
+/// iteration cap is reported, not fatal (`converged: false`).
+pub fn solve_spd_pcg(a: &DMat, b: &DMat, opts: &PcgOpts) -> Result<(DMat, PcgReport), String> {
+    assert_eq!(a.rows, a.cols, "pcg: system must be square");
+    assert_eq!(a.rows, b.rows, "pcg: rhs rows must match system");
+    let (m, k) = (b.rows, b.cols);
+    let precond = if opts.precond {
+        NystromPrecond::build(a, opts.rank, opts.seed)
+    } else {
+        None
+    };
+    let precond_rank = precond.as_ref().map_or(0, |p| p.rank());
+    let mut x_all = DMat::zeros(m, k);
+    let mut iterations = Vec::with_capacity(k);
+    let mut worst_rel = 0.0f64;
+    let mut converged = true;
+    let mut rhs = vec![0.0; m];
+    let mut ap = vec![0.0; m];
+    for col in 0..k {
+        for i in 0..m {
+            rhs[i] = b.at(i, col);
+        }
+        let b_norm = rhs.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if b_norm == 0.0 {
+            iterations.push(0);
+            continue;
+        }
+        let mut x = vec![0.0; m];
+        let mut r = rhs.clone();
+        let mut z = vec![0.0; m];
+        match precond.as_ref() {
+            Some(p) => p.apply(&r, &mut z),
+            None => z.copy_from_slice(&r),
+        }
+        let mut p = z.clone();
+        let mut rz: f64 = r.iter().zip(z.iter()).map(|(a, b)| a * b).sum();
+        let mut iters = 0usize;
+        let mut rel = 1.0f64;
+        while iters < opts.max_iter {
+            let _s = crate::obs::span("ridge.pcg_iter");
+            ap.fill(0.0);
+            gemm::gemm(m, 1, m, &a.data, Op::NoTrans, &p, Op::NoTrans, &mut ap, false);
+            let pap: f64 = p.iter().zip(ap.iter()).map(|(a, b)| a * b).sum();
+            if !pap.is_finite() || pap <= 0.0 {
+                return Err(format!(
+                    "pcg: breakdown at iteration {iters} (pᵀAp = {pap}); system not SPD?"
+                ));
+            }
+            let alpha = rz / pap;
+            for i in 0..m {
+                x[i] += alpha * p[i];
+                r[i] -= alpha * ap[i];
+            }
+            iters += 1;
+            let r_norm = r.iter().map(|v| v * v).sum::<f64>().sqrt();
+            rel = r_norm / b_norm;
+            if rel <= opts.tol {
+                break;
+            }
+            match precond.as_ref() {
+                Some(pc) => pc.apply(&r, &mut z),
+                None => z.copy_from_slice(&r),
+            }
+            let rz_new: f64 = r.iter().zip(z.iter()).map(|(a, b)| a * b).sum();
+            let beta = rz_new / rz;
+            for i in 0..m {
+                p[i] = z[i] + beta * p[i];
+            }
+            rz = rz_new;
+        }
+        if rel > opts.tol {
+            converged = false;
+        }
+        worst_rel = worst_rel.max(rel);
+        iterations.push(iters);
+        for i in 0..m {
+            *x_all.at_mut(i, col) = x[i];
+        }
+    }
+    Ok((
+        x_all,
+        PcgReport { iterations, rel_residual: worst_rel, converged, precond_rank },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::solve_spd_multi_scratch;
+
+    /// SPD test system with eigenvalues spread over [1, cond].
+    fn spd(m: usize, cond: f64, seed: u64) -> DMat {
+        let mut rng = Rng::new(seed);
+        // random-ish orthogonal-ish mix: start from gaussian, build AᵀA
+        // with decaying column scales, then regularize to floor 1.
+        let g = DMat::from_fn(m, m, |_, j| {
+            let scale = (cond.powf(j as f64 / (m.max(2) - 1) as f64)).sqrt();
+            rng.gauss() * scale / (m as f64).sqrt()
+        });
+        let mut a = DMat::zeros(m, m);
+        gemm::gemm(m, m, m, &g.data, Op::Trans, &g.data, Op::NoTrans, &mut a.data, false);
+        for i in 0..m {
+            for j in 0..i {
+                let s = 0.5 * (a.at(i, j) + a.at(j, i));
+                *a.at_mut(i, j) = s;
+                *a.at_mut(j, i) = s;
+            }
+        }
+        a.add_diag(1.0);
+        a
+    }
+
+    #[test]
+    fn pcg_matches_cholesky() {
+        let m = 48;
+        let a = spd(m, 1e4, 7);
+        let mut rng = Rng::new(11);
+        let b = DMat::from_fn(m, 2, |_, _| rng.gauss());
+        let mut a_chol = a.clone();
+        let exact = solve_spd_multi_scratch(&mut a_chol, &b).unwrap();
+        let (x, rep) = solve_spd_pcg(&a, &b, &PcgOpts::for_dim(m)).unwrap();
+        assert!(rep.converged, "rel_residual={}", rep.rel_residual);
+        for (p, q) in x.data.iter().zip(exact.data.iter()) {
+            assert!((p - q).abs() < 1e-6 * q.abs().max(1.0), "{p} vs {q}");
+        }
+    }
+
+    #[test]
+    fn preconditioner_reduces_iterations() {
+        let m = 96;
+        let a = spd(m, 1e5, 13);
+        let mut rng = Rng::new(17);
+        let b = DMat::from_fn(m, 1, |_, _| rng.gauss());
+        let mut with = PcgOpts::for_dim(m);
+        with.rank = 32;
+        let mut without = with.clone();
+        without.precond = false;
+        let (_, rep_p) = solve_spd_pcg(&a, &b, &with).unwrap();
+        let (_, rep_n) = solve_spd_pcg(&a, &b, &without).unwrap();
+        assert!(rep_p.converged);
+        assert!(rep_p.precond_rank > 0);
+        assert!(
+            rep_p.iterations[0] < rep_n.iterations[0],
+            "precond {} vs plain {}",
+            rep_p.iterations[0],
+            rep_n.iterations[0]
+        );
+    }
+
+    #[test]
+    fn repeated_solves_are_bit_identical() {
+        let m = 40;
+        let a = spd(m, 1e3, 23);
+        let mut rng = Rng::new(29);
+        let b = DMat::from_fn(m, 3, |_, _| rng.gauss());
+        let opts = PcgOpts::for_dim(m);
+        let (x1, r1) = solve_spd_pcg(&a, &b, &opts).unwrap();
+        let (x2, r2) = solve_spd_pcg(&a, &b, &opts).unwrap();
+        assert_eq!(r1, r2);
+        for (p, q) in x1.data.iter().zip(x2.data.iter()) {
+            assert_eq!(p.to_bits(), q.to_bits());
+        }
+    }
+
+    #[test]
+    fn zero_rhs_short_circuits() {
+        let m = 16;
+        let a = spd(m, 10.0, 31);
+        let b = DMat::zeros(m, 1);
+        let (x, rep) = solve_spd_pcg(&a, &b, &PcgOpts::for_dim(m)).unwrap();
+        assert_eq!(rep.iterations, vec![0]);
+        assert!(x.data.iter().all(|&v| v == 0.0));
+    }
+}

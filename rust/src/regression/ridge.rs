@@ -5,10 +5,85 @@
 //! shard, rank-k update, discard the shard. Memory is O(m²) regardless of
 //! n, which is exactly how the paper's feature maps beat the O(n²) kernel
 //! matrix on the large UCI sets (Table 2's OOM column).
+//!
+//! ## Compensated accumulation and shard mergeability
+//!
+//! Every accumulator entry is kept as a double-double pair `(hi, lo)`
+//! where `hi` is the correctly-rounded running sum and `lo` the exact
+//! rounding residue, folded with error-free TwoSum transforms. Plain f64
+//! accumulation is association-sensitive — `(c0+c1)+(c2+c3)` and
+//! `((c0+c1)+c2)+c3` differ in the last ulp — so summing independently
+//! trained shard partials could never reproduce a single-pass run bit
+//! for bit. With the residue carried, regrouping error drops from
+//! 2⁻⁵³ to ~2⁻¹⁰⁵ relative, far below the final rounding of `hi`, so
+//! [`RidgeRegressor::absorb`]-ing contiguous shard partials in stream
+//! order reproduces the uninterrupted accumulation bitwise (DESIGN.md
+//! §13). Checkpoints must persist both planes for the same reason.
 
 use crate::linalg::{solve_spd_multi_scratch, DMat};
+use crate::regression::pcg::{self, PcgOpts};
 use crate::tensor::gemm::{self, Op};
 use crate::tensor::Mat;
+
+/// Knuth TwoSum: `a + b` as a rounded sum plus exact error term.
+#[inline]
+fn two_sum(a: f64, b: f64) -> (f64, f64) {
+    let s = a + b;
+    let ap = s - b;
+    let bp = s - ap;
+    (s, (a - ap) + (b - bp))
+}
+
+/// Fold a plain f64 contribution into a `(hi, lo)` accumulator,
+/// renormalized so `hi` stays the correctly-rounded total.
+#[inline]
+fn dd_add(hi: f64, lo: f64, c: f64) -> (f64, f64) {
+    let (s, e) = two_sum(hi, c);
+    let e = e + lo;
+    let hi2 = s + e;
+    (hi2, e - (hi2 - s))
+}
+
+/// Merge two `(hi, lo)` accumulators (shard partial sums).
+#[inline]
+fn dd_merge(ahi: f64, alo: f64, bhi: f64, blo: f64) -> (f64, f64) {
+    let (s, e) = two_sum(ahi, bhi);
+    let e = e + (alo + blo);
+    let hi = s + e;
+    (hi, e - (hi - s))
+}
+
+/// Which solver [`RidgeRegressor::solve_with`] runs on the accumulated
+/// normal equations (DESIGN.md §13 selection policy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverChoice {
+    /// Dense Cholesky — exact up to f64 rounding, O(m³).
+    Chol,
+    /// Nyström-preconditioned conjugate gradient — O(m²) per iteration.
+    Pcg,
+    /// Cholesky below [`PCG_AUTO_MIN_DIM`], PCG at or above it.
+    Auto,
+}
+
+/// `--solver auto` switches from Cholesky to PCG at this feature
+/// dimension (the BENCH_solver crossover sits below it on every machine
+/// benched; picking the conservative side keeps small solves exact).
+pub const PCG_AUTO_MIN_DIM: usize = 1024;
+
+/// What a [`RidgeRegressor::solve_with`] run actually did.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SolveReport {
+    /// `"chol"` or `"pcg"` — the solver that ran after Auto resolution.
+    pub solver: &'static str,
+    /// PCG iterations per right-hand side (empty for Cholesky).
+    pub iterations: Vec<usize>,
+    /// Worst relative residual ‖Ax−b‖/‖b‖ across rhs (0 for Cholesky).
+    pub rel_residual: f64,
+    /// Whether every rhs reached tolerance (always true for Cholesky).
+    pub converged: bool,
+    /// Nyström preconditioner rank actually used (0 for Cholesky).
+    pub precond_rank: usize,
+}
 
 /// Accumulating ridge solver, multi-output.
 pub struct RidgeRegressor {
@@ -16,13 +91,17 @@ pub struct RidgeRegressor {
     pub dim: usize,
     /// number of outputs k.
     pub outputs: usize,
-    /// ΨᵀΨ in f64. Only the lower triangle is authoritative between
-    /// solves: batches accumulate via the lower-triangle SYRK and the
-    /// mirror is paid once per `solve`, not once per batch (entries above
-    /// the diagonal may hold straddling-tile partials in the meantime).
+    /// ΨᵀΨ in f64 (rounded plane). Only the lower triangle is
+    /// authoritative between solves: batches accumulate via the
+    /// lower-triangle SYRK and the mirror is paid once per `solve`, not
+    /// once per batch.
     gram: DMat,
-    /// Ψᵀ y in f64 (m×k).
+    /// Rounding residue plane of `gram` (lower triangle, see module doc).
+    gram_lo: DMat,
+    /// Ψᵀ y in f64 (m×k, rounded plane).
     xty: DMat,
+    /// Rounding residue plane of `xty`.
+    xty_lo: DMat,
     /// rows seen.
     pub n_seen: usize,
     /// learned weights (m×k) after solve().
@@ -31,6 +110,9 @@ pub struct RidgeRegressor {
     /// first `solve` and reused across solves — a λ sweep costs zero
     /// allocations per step instead of an m² clone each.
     scratch: Option<DMat>,
+    /// Per-batch contribution scratch (m×m gram + m×k xty), reused so a
+    /// long stream allocates the fold buffers once.
+    batch_scratch: Option<(DMat, DMat)>,
 }
 
 impl RidgeRegressor {
@@ -39,23 +121,29 @@ impl RidgeRegressor {
             dim,
             outputs,
             gram: DMat::zeros(dim, dim),
+            gram_lo: DMat::zeros(dim, dim),
             xty: DMat::zeros(dim, outputs),
+            xty_lo: DMat::zeros(dim, outputs),
             n_seen: 0,
             weights: None,
             scratch: None,
+            batch_scratch: None,
         }
     }
 
     /// Restore an accumulator from checkpointed state: the packed lower
-    /// triangle of ΨᵀΨ (row-major, i ≥ j — the only authoritative part
-    /// between solves), ΨᵀY flat (m×k row-major), and the row count.
-    /// Continuing to `add_batch` after this is bit-identical to never
-    /// having stopped (see `model::checkpoint`).
+    /// triangle of ΨᵀΨ plus its residue plane (row-major, i ≥ j — the
+    /// only authoritative part between solves), ΨᵀY flat (m×k row-major)
+    /// plus residue, and the row count. Continuing to `add_batch` after
+    /// this is bit-identical to never having stopped (see
+    /// `model::checkpoint`); dropping the residue planes would not be.
     pub fn restore(
         dim: usize,
         outputs: usize,
         gram_lower: &[f64],
+        gram_lower_lo: &[f64],
         xty: &[f64],
+        xty_lo: &[f64],
         n_seen: usize,
     ) -> Result<RidgeRegressor, String> {
         if gram_lower.len() != dim * (dim + 1) / 2 {
@@ -65,6 +153,13 @@ impl RidgeRegressor {
                 dim * (dim + 1) / 2
             ));
         }
+        if gram_lower_lo.len() != gram_lower.len() {
+            return Err(format!(
+                "ridge restore: gram residue plane has {} entries, expected {}",
+                gram_lower_lo.len(),
+                gram_lower.len()
+            ));
+        }
         if xty.len() != dim * outputs {
             return Err(format!(
                 "ridge restore: xty has {} entries, expected {}",
@@ -72,21 +167,34 @@ impl RidgeRegressor {
                 dim * outputs
             ));
         }
+        if xty_lo.len() != xty.len() {
+            return Err(format!(
+                "ridge restore: xty residue plane has {} entries, expected {}",
+                xty_lo.len(),
+                xty.len()
+            ));
+        }
         let mut gram = DMat::zeros(dim, dim);
+        let mut gram_lo = DMat::zeros(dim, dim);
         let mut it = gram_lower.iter();
+        let mut it_lo = gram_lower_lo.iter();
         for i in 0..dim {
             for j in 0..=i {
                 *gram.at_mut(i, j) = *it.next().unwrap();
+                *gram_lo.at_mut(i, j) = *it_lo.next().unwrap();
             }
         }
         Ok(RidgeRegressor {
             dim,
             outputs,
             gram,
+            gram_lo,
             xty: DMat::from_vec(dim, outputs, xty.to_vec()),
+            xty_lo: DMat::from_vec(dim, outputs, xty_lo.to_vec()),
             n_seen,
             weights: None,
             scratch: None,
+            batch_scratch: None,
         })
     }
 
@@ -99,9 +207,24 @@ impl RidgeRegressor {
         out
     }
 
+    /// Packed lower triangle of the gram residue plane (same order as
+    /// [`RidgeRegressor::gram_lower_packed`]).
+    pub fn gram_lower_lo_packed(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.dim * (self.dim + 1) / 2);
+        for i in 0..self.dim {
+            out.extend_from_slice(&self.gram_lo.row(i)[..=i]);
+        }
+        out
+    }
+
     /// Accumulated ΨᵀY, flat row-major (m×k).
     pub fn xty_flat(&self) -> &[f64] {
         &self.xty.data
+    }
+
+    /// Residue plane of ΨᵀY, flat row-major (m×k).
+    pub fn xty_lo_flat(&self) -> &[f64] {
+        &self.xty_lo.data
     }
 
     /// Learned weights (m×k) after `solve`.
@@ -111,55 +234,173 @@ impl RidgeRegressor {
 
     /// Accumulate a featurized batch (features n×m, targets n×k).
     ///
-    /// Both normal-equation pieces go through the packed GEMM engine:
-    /// ΨᵀΨ as an accumulating f32→f64 lower-triangle SYRK directly into
-    /// `gram` (no temporary Gram matrix, no per-batch mirror), ΨᵀY as an
-    /// accumulating f32→f64 GEMM with Ψ consumed in its transposed
-    /// orientation by the panel packer.
+    /// Both normal-equation pieces go through the packed GEMM engine
+    /// into a per-batch scratch — ΨᵀΨ as an f32→f64 lower-triangle SYRK,
+    /// ΨᵀY as an f32→f64 GEMM with Ψ consumed in its transposed
+    /// orientation by the panel packer — then fold into the compensated
+    /// `(hi, lo)` accumulators (an O(m²) epilogue against the SYRK's
+    /// O(n·m²) body).
     pub fn add_batch(&mut self, features: &Mat, targets: &Mat) {
         let _s = crate::obs::span("ridge.accumulate");
         assert_eq!(features.cols, self.dim, "ridge: feature dim mismatch");
         assert_eq!(targets.cols, self.outputs, "ridge: target dim mismatch");
         assert_eq!(features.rows, targets.rows);
-        gemm::syrk_lower(
-            self.dim,
-            features.rows,
-            &features.data,
-            Op::Trans,
-            &mut self.gram.data,
-            true,
-        );
+        let (dim, outputs) = (self.dim, self.outputs);
+        let (gs, xs) = self
+            .batch_scratch
+            .get_or_insert_with(|| (DMat::zeros(dim, dim), DMat::zeros(dim, outputs)));
+        gs.data.fill(0.0);
+        xs.data.fill(0.0);
+        gemm::syrk_lower(dim, features.rows, &features.data, Op::Trans, &mut gs.data, true);
         gemm::gemm(
-            self.dim,
-            self.outputs,
+            dim,
+            outputs,
             features.rows,
             &features.data,
             Op::Trans,
             &targets.data,
             Op::NoTrans,
-            &mut self.xty.data,
+            &mut xs.data,
             true,
         );
+        for i in 0..dim {
+            let off = i * dim;
+            for j in 0..=i {
+                let (h, l) =
+                    dd_add(self.gram.data[off + j], self.gram_lo.data[off + j], gs.data[off + j]);
+                self.gram.data[off + j] = h;
+                self.gram_lo.data[off + j] = l;
+            }
+        }
+        for (i, &c) in xs.data.iter().enumerate() {
+            let (h, l) = dd_add(self.xty.data[i], self.xty_lo.data[i], c);
+            self.xty.data[i] = h;
+            self.xty_lo.data[i] = l;
+        }
         self.n_seen += features.rows;
         self.weights = None;
     }
 
-    /// Solve (ΨᵀΨ + λ n I) W = Ψᵀ Y. The mirrored+regularized system is
-    /// built in a scratch reused across solves (λ sweeps allocate
-    /// nothing per step); `gram` itself is never mutated, so `solve` can
-    /// be called repeatedly and interleaved with `add_batch`.
+    /// Fold another accumulator's partial sums into this one — the merge
+    /// step of sharded training (DESIGN.md §13). Shards that covered
+    /// contiguous, batch-aligned slices of one deterministic stream,
+    /// absorbed in stream order, reproduce the uninterrupted single-pass
+    /// accumulation bit for bit (see the module doc on compensation).
+    pub fn absorb(&mut self, other: &RidgeRegressor) -> Result<(), String> {
+        if other.dim != self.dim || other.outputs != self.outputs {
+            return Err(format!(
+                "ridge absorb: shape mismatch ({}×{} vs {}×{})",
+                self.dim, self.outputs, other.dim, other.outputs
+            ));
+        }
+        let dim = self.dim;
+        for i in 0..dim {
+            let off = i * dim;
+            for j in 0..=i {
+                let (h, l) = dd_merge(
+                    self.gram.data[off + j],
+                    self.gram_lo.data[off + j],
+                    other.gram.data[off + j],
+                    other.gram_lo.data[off + j],
+                );
+                self.gram.data[off + j] = h;
+                self.gram_lo.data[off + j] = l;
+            }
+        }
+        for i in 0..self.xty.data.len() {
+            let (h, l) = dd_merge(
+                self.xty.data[i],
+                self.xty_lo.data[i],
+                other.xty.data[i],
+                other.xty_lo.data[i],
+            );
+            self.xty.data[i] = h;
+            self.xty_lo.data[i] = l;
+        }
+        self.n_seen += other.n_seen;
+        self.weights = None;
+        Ok(())
+    }
+
+    /// Solve (ΨᵀΨ + λ n I) W = Ψᵀ Y by dense Cholesky. The
+    /// mirrored+regularized system is built in a scratch reused across
+    /// solves (λ sweeps allocate nothing per step); `gram` itself is
+    /// never mutated, so `solve` can be called repeatedly and
+    /// interleaved with `add_batch`.
     pub fn solve(&mut self, lambda: f64) -> Result<(), String> {
         let _s = crate::obs::span("ridge.solve");
-        let dim = self.dim;
-        let a = self.scratch.get_or_insert_with(|| DMat::zeros(dim, dim));
-        a.data.copy_from_slice(&self.gram.data);
-        // `gram` accumulates lower-triangle-only; symmetrize the scratch
-        // once here rather than after every batch.
-        gemm::mirror_lower_to_upper(&mut a.data, dim);
-        a.add_diag(lambda * self.n_seen.max(1) as f64);
+        let a = Self::build_system(
+            &mut self.scratch,
+            &self.gram,
+            self.dim,
+            lambda,
+            self.n_seen,
+        );
         let w = solve_spd_multi_scratch(a, &self.xty)?;
         self.weights = Some(w.to_mat());
         Ok(())
+    }
+
+    /// Mirror + regularize the gram into the reusable scratch.
+    fn build_system<'a>(
+        scratch: &'a mut Option<DMat>,
+        gram: &DMat,
+        dim: usize,
+        lambda: f64,
+        n_seen: usize,
+    ) -> &'a mut DMat {
+        let a = scratch.get_or_insert_with(|| DMat::zeros(dim, dim));
+        a.data.copy_from_slice(&gram.data);
+        // `gram` accumulates lower-triangle-only; symmetrize the scratch
+        // once here rather than after every batch.
+        gemm::mirror_lower_to_upper(&mut a.data, dim);
+        a.add_diag(lambda * n_seen.max(1) as f64);
+        a
+    }
+
+    /// [`RidgeRegressor::solve`] with an explicit solver: Cholesky, the
+    /// Nyström-preconditioned CG of [`crate::regression::pcg`], or Auto
+    /// (PCG at m ≥ [`PCG_AUTO_MIN_DIM`]). Both solvers run on the same
+    /// mirrored+regularized system; PCG solves it iteratively in O(m²)
+    /// per iteration instead of the O(m³) factorization.
+    pub fn solve_with(
+        &mut self,
+        lambda: f64,
+        choice: SolverChoice,
+    ) -> Result<SolveReport, String> {
+        let use_pcg = match choice {
+            SolverChoice::Chol => false,
+            SolverChoice::Pcg => true,
+            SolverChoice::Auto => self.dim >= PCG_AUTO_MIN_DIM,
+        };
+        if !use_pcg {
+            self.solve(lambda)?;
+            return Ok(SolveReport {
+                solver: "chol",
+                iterations: Vec::new(),
+                rel_residual: 0.0,
+                converged: true,
+                precond_rank: 0,
+            });
+        }
+        let _s = crate::obs::span("ridge.solve");
+        let a = Self::build_system(
+            &mut self.scratch,
+            &self.gram,
+            self.dim,
+            lambda,
+            self.n_seen,
+        );
+        let opts = PcgOpts::for_dim(self.dim);
+        let (w, rep) = pcg::solve_spd_pcg(a, &self.xty, &opts)?;
+        self.weights = Some(w.to_mat());
+        Ok(SolveReport {
+            solver: "pcg",
+            iterations: rep.iterations,
+            rel_residual: rep.rel_residual,
+            converged: rep.converged,
+            precond_rank: rep.precond_rank,
+        })
     }
 
     /// Predict from featurized inputs (n×m → n×k). Must call solve first.
@@ -181,6 +422,19 @@ impl RidgeRegressor {
 mod tests {
     use super::*;
     use crate::rng::Rng;
+
+    #[test]
+    fn two_sum_is_error_free() {
+        let a = 1.0e16;
+        let b = 1.0 + 2f64.powi(-30);
+        let (s, e) = two_sum(a, b);
+        // s + e reconstructs the exact sum: e carries what rounding lost
+        assert_eq!(s, a + b);
+        assert_ne!(e, 0.0);
+        assert_eq!(s + e * 1.0, s); // e is below hi's ulp...
+        let (s2, e2) = two_sum(b, a); // ...and TwoSum is symmetric
+        assert_eq!((s, e), (s2, e2));
+    }
 
     #[test]
     fn recovers_linear_model() {
@@ -301,7 +555,9 @@ mod tests {
             m,
             k,
             &first.gram_lower_packed(),
+            &first.gram_lower_lo_packed(),
             first.xty_flat(),
+            first.xty_lo_flat(),
             first.n_seen,
         )
         .unwrap();
@@ -322,10 +578,79 @@ mod tests {
     }
 
     #[test]
+    fn absorbed_shards_match_single_pass_bitwise() {
+        // the merge contract at the accumulator level: contiguous
+        // batch-aligned shard partials absorbed in stream order
+        // reproduce the uninterrupted accumulation bit for bit
+        let mut rng = Rng::new(197);
+        let (n, m, k) = (160, 14, 3);
+        let x = Mat::from_vec(n, m, rng.gauss_vec(n * m));
+        let y = Mat::from_vec(n, k, rng.gauss_vec(n * k));
+        let batch = 16;
+        let mut full = RidgeRegressor::new(m, k);
+        for lo in (0..n).step_by(batch) {
+            full.add_batch(&x.slice_rows(lo, lo + batch), &y.slice_rows(lo, lo + batch));
+        }
+        // uneven contiguous shards: 3 + 1 + 6 batches
+        let cuts = [0usize, 3 * batch, 4 * batch, n];
+        let mut merged: Option<RidgeRegressor> = None;
+        for w in cuts.windows(2) {
+            let mut shard = RidgeRegressor::new(m, k);
+            for lo in (w[0]..w[1]).step_by(batch) {
+                shard.add_batch(&x.slice_rows(lo, lo + batch), &y.slice_rows(lo, lo + batch));
+            }
+            match merged.as_mut() {
+                None => merged = Some(shard),
+                Some(acc) => acc.absorb(&shard).unwrap(),
+            }
+        }
+        let merged = merged.unwrap();
+        assert_eq!(merged.n_seen, full.n_seen);
+        let (a, b) = (full.gram_lower_packed(), merged.gram_lower_packed());
+        for (p, q) in a.iter().zip(b.iter()) {
+            assert_eq!(p.to_bits(), q.to_bits(), "gram plane diverged");
+        }
+        for (p, q) in full.xty_flat().iter().zip(merged.xty_flat().iter()) {
+            assert_eq!(p.to_bits(), q.to_bits(), "xty plane diverged");
+        }
+    }
+
+    #[test]
+    fn absorb_rejects_shape_mismatch() {
+        let mut a = RidgeRegressor::new(4, 1);
+        let b = RidgeRegressor::new(5, 1);
+        let c = RidgeRegressor::new(4, 2);
+        assert!(a.absorb(&b).is_err());
+        assert!(a.absorb(&c).is_err());
+        let d = RidgeRegressor::new(4, 1);
+        assert!(a.absorb(&d).is_ok());
+    }
+
+    #[test]
     fn restore_rejects_bad_shapes() {
-        assert!(RidgeRegressor::restore(4, 1, &[0.0; 9], &[0.0; 4], 0).is_err());
-        assert!(RidgeRegressor::restore(4, 1, &[0.0; 10], &[0.0; 3], 0).is_err());
-        assert!(RidgeRegressor::restore(4, 1, &[0.0; 10], &[0.0; 4], 0).is_ok());
+        let r = RidgeRegressor::restore(4, 1, &[0.0; 9], &[0.0; 9], &[0.0; 4], &[0.0; 4], 0);
+        assert!(r.is_err());
+        let r = RidgeRegressor::restore(4, 1, &[0.0; 10], &[0.0; 9], &[0.0; 4], &[0.0; 4], 0);
+        assert!(r.is_err(), "residue plane length must match");
+        let r = RidgeRegressor::restore(4, 1, &[0.0; 10], &[0.0; 10], &[0.0; 3], &[0.0; 3], 0);
+        assert!(r.is_err());
+        let r = RidgeRegressor::restore(4, 1, &[0.0; 10], &[0.0; 10], &[0.0; 4], &[0.0; 3], 0);
+        assert!(r.is_err());
+        let r = RidgeRegressor::restore(4, 1, &[0.0; 10], &[0.0; 10], &[0.0; 4], &[0.0; 4], 0);
+        assert!(r.is_ok());
+    }
+
+    #[test]
+    fn solve_with_auto_picks_chol_below_threshold() {
+        let mut rng = Rng::new(198);
+        let (n, m) = (60, 8);
+        let x = Mat::from_vec(n, m, rng.gauss_vec(n * m));
+        let y = Mat::from_vec(n, 1, rng.gauss_vec(n));
+        let mut r = RidgeRegressor::new(m, 1);
+        r.add_batch(&x, &y);
+        let rep = r.solve_with(1e-2, SolverChoice::Auto).unwrap();
+        assert_eq!(rep.solver, "chol");
+        assert!(rep.converged && rep.iterations.is_empty());
     }
 
     #[test]

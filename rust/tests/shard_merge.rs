@@ -1,0 +1,267 @@
+//! Distributed-training integration tests: the shard/merge contract
+//! (DESIGN.md §13).
+//!
+//! - merging k shard checkpoints is **bit-identical** to an
+//!   uninterrupted single-pass fit — weights AND predictions — for
+//!   k ∈ {2, 3, 7}, uneven shard sizes, every persistable featurizer
+//!   family, with each shard round-tripped through the on-disk `.ntkc`
+//!   encoding;
+//! - merge order is canonical: shards are combined in ascending
+//!   shard-index order no matter how the caller enumerates the files,
+//!   so a shuffled argument list reproduces the ordered merge byte for
+//!   byte;
+//! - incompatible shard sets (wrong seed, wrong spec, wrong count,
+//!   missing or duplicated members) are refused with typed errors, not
+//!   merged into a silently wrong model.
+
+use ntk_sketch::model::{
+    merge_checkpoints, FeaturizerSpec, MergeError, ModelMeta, TrainCheckpoint,
+};
+use ntk_sketch::regression::RidgeRegressor;
+use ntk_sketch::rng::Rng;
+use ntk_sketch::tensor::Mat;
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (p, q)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(p.to_bits(), q.to_bits(), "{what}: index {i}: {p:?} vs {q:?}");
+    }
+}
+
+/// The five persistable families, sized for test speed.
+fn persistable_specs(d: usize) -> Vec<FeaturizerSpec> {
+    vec![
+        FeaturizerSpec::Rff { d, m: 48, sigma: 1.3, seed: 121 },
+        FeaturizerSpec::NtkRf {
+            d,
+            depth: 2,
+            m0: 16,
+            m1: 48,
+            ms: 16,
+            leverage_sweeps: 0,
+            seed: 122,
+        },
+        FeaturizerSpec::NtkSketch {
+            d,
+            depth: 2,
+            p1: 1,
+            p0: 2,
+            r: 32,
+            s: 32,
+            m_inner: 32,
+            s_out: 24,
+            osnap: 4,
+            seed: 123,
+        },
+        FeaturizerSpec::NtkPolySketch { d, depth: 3, deg: 4, m_inner: 32, m_out: 24, seed: 124 },
+        // cntk pins its own input dim (h·w·c), independent of d
+        FeaturizerSpec::CntkSketch {
+            h: 3,
+            w: 3,
+            c: 2,
+            depth: 2,
+            q: 3,
+            p1: 1,
+            p0: 1,
+            r: 16,
+            s: 16,
+            m_inner: 16,
+            s_out: 12,
+            seed: 125,
+        },
+    ]
+}
+
+fn meta_for(spec: &FeaturizerSpec, outputs: usize, data_seed: u64) -> ModelMeta {
+    ModelMeta {
+        name: "sharded".into(),
+        version: 0,
+        family: spec.family().into(),
+        dataset: "synthetic".into(),
+        data_seed,
+        lambda: 1e-2,
+        n_seen: 0,
+        input_dim: spec.input_dim(),
+        feature_dim: spec.feature_dim(),
+        outputs,
+    }
+}
+
+/// Batch-aligned contiguous row range of shard `i` of `k` — the same
+/// partition `train --shard i/k` computes.
+fn shard_range(n: usize, batch: usize, i: usize, k: usize) -> (usize, usize) {
+    let nb = n.div_ceil(batch);
+    let lo = (nb * i / k) * batch;
+    let hi = (nb * (i + 1) / k) * batch;
+    (lo.min(n), hi.min(n))
+}
+
+/// Stream rows [lo, hi) through `reg` in `batch`-row steps.
+fn accumulate(
+    reg: &mut RidgeRegressor,
+    f: &dyn ntk_sketch::features::Featurizer,
+    x: &Mat,
+    y: &Mat,
+    lo: usize,
+    hi: usize,
+    batch: usize,
+) {
+    let mut at = lo;
+    while at < hi {
+        let stop = (at + batch).min(hi);
+        let feats = f.transform(&x.slice_rows(at, stop));
+        reg.add_batch(&feats, &y.slice_rows(at, stop));
+        at = stop;
+    }
+}
+
+/// Train the k shards of a fit independently, round-tripping every
+/// checkpoint through the binary `.ntkc` encoding.
+fn shard_checkpoints(
+    spec: &FeaturizerSpec,
+    x: &Mat,
+    y: &Mat,
+    batch: usize,
+    k: usize,
+    data_seed: u64,
+) -> Vec<TrainCheckpoint> {
+    let f = spec.build();
+    let n = x.rows;
+    let outputs = y.cols;
+    (0..k)
+        .map(|i| {
+            let (lo, hi) = shard_range(n, batch, i, k);
+            let mut reg = RidgeRegressor::new(spec.feature_dim(), outputs);
+            accumulate(&mut reg, f.as_ref(), x, y, lo, hi, batch);
+            let ck = TrainCheckpoint::capture(
+                meta_for(spec, outputs, data_seed),
+                spec.clone(),
+                n as u64,
+                batch as u64,
+                0,
+                &reg,
+            )
+            .with_shard(i as u64, k as u64);
+            // the contract is over the on-disk encoding, not memory
+            TrainCheckpoint::from_bytes(&ck.to_bytes()).expect("shard round trip")
+        })
+        .collect()
+}
+
+#[test]
+fn merge_of_k_shards_bit_identical_to_single_pass_every_family() {
+    // n = 52 with batch 8 gives 7 batches (the last one partial), so
+    // every k in {2, 3, 7} partitions them unevenly: 3/4 batches for
+    // k=2, 2/2/3 for k=3, one each for k=7.
+    let (n, batch, outputs) = (52usize, 8usize, 2usize);
+    for spec in persistable_specs(7) {
+        let d = spec.input_dim();
+        let mut rng = Rng::new(777);
+        let x = Mat::from_vec(n, d, rng.gauss_vec(n * d));
+        let y = Mat::from_vec(n, outputs, rng.gauss_vec(n * outputs));
+
+        // uninterrupted single-pass reference
+        let f = spec.build();
+        let mut full = RidgeRegressor::new(spec.feature_dim(), outputs);
+        accumulate(&mut full, f.as_ref(), &x, &y, 0, n, batch);
+        full.solve(1e-2).unwrap();
+        let reference = f.transform(&x).matmul(full.weights().unwrap());
+
+        for k in [2usize, 3, 7] {
+            let what = format!("{} k={k}", spec.family());
+            let shards = shard_checkpoints(&spec, &x, &y, batch, k, 777);
+            let (merged_ck, mut merged) =
+                merge_checkpoints(shards).unwrap_or_else(|e| panic!("{what}: {e}"));
+            assert_eq!(merged_ck.meta.n_seen, n as u64, "{what}");
+            assert_eq!(merged.n_seen, n, "{what}");
+            merged.solve(1e-2).unwrap();
+            // double-double accumulation makes the merged normal
+            // equations — and therefore the solve — bitwise equal to
+            // the single pass, not merely close
+            assert_bits_eq(
+                &merged.weights().unwrap().data,
+                &full.weights().unwrap().data,
+                &format!("{what}: weights"),
+            );
+            assert_bits_eq(
+                &f.transform(&x).matmul(merged.weights().unwrap()).data,
+                &reference.data,
+                &format!("{what}: predictions"),
+            );
+        }
+    }
+}
+
+#[test]
+fn merge_order_is_canonical_under_shuffled_input() {
+    let (n, batch, outputs, k) = (52usize, 8usize, 1usize, 7usize);
+    let spec = persistable_specs(7).remove(1); // NTKRF
+    let d = spec.input_dim();
+    let mut rng = Rng::new(901);
+    let x = Mat::from_vec(n, d, rng.gauss_vec(n * d));
+    let y = Mat::from_vec(n, outputs, rng.gauss_vec(n * outputs));
+    let ordered = shard_checkpoints(&spec, &x, &y, batch, k, 901);
+
+    let (ck_ordered, _) = merge_checkpoints(ordered.clone()).unwrap();
+    let reference = ck_ordered.to_bytes();
+    // several enumeration orders a CLI could plausibly hand us
+    let mut shuffles: Vec<Vec<usize>> = vec![
+        (0..k).rev().collect(),
+        (0..k).map(|i| (i + 3) % k).collect(),
+        vec![4, 0, 6, 2, 5, 1, 3],
+    ];
+    for (s, order) in shuffles.drain(..).enumerate() {
+        let shards: Vec<TrainCheckpoint> =
+            order.iter().map(|&i| ordered[i].clone()).collect();
+        let (ck, _) = merge_checkpoints(shards).unwrap();
+        assert_eq!(
+            ck.to_bytes(),
+            reference,
+            "shuffle {s}: merge must canonicalize to ascending shard order"
+        );
+    }
+}
+
+#[test]
+fn incompatible_shard_sets_are_refused_with_typed_errors() {
+    let (n, batch, outputs, k) = (32usize, 8usize, 1usize, 2usize);
+    let spec = persistable_specs(6).remove(0); // RFF
+    let d = spec.input_dim();
+    let mut rng = Rng::new(333);
+    let x = Mat::from_vec(n, d, rng.gauss_vec(n * d));
+    let y = Mat::from_vec(n, outputs, rng.gauss_vec(n * outputs));
+    let good = shard_checkpoints(&spec, &x, &y, batch, k, 333);
+
+    // a shard from a different data seed must not merge
+    let mut alien = good.clone();
+    alien[1].meta.data_seed = 334;
+    match merge_checkpoints(alien) {
+        Err(MergeError::Mismatch { field: "data_seed", .. }) => {}
+        other => panic!("expected data_seed mismatch, got {other:?}"),
+    }
+
+    // a shard of a different featurizer spec must not merge
+    let mut alien = good.clone();
+    alien[1].spec = persistable_specs(6).remove(1);
+    match merge_checkpoints(alien) {
+        Err(MergeError::Mismatch { .. }) => {}
+        other => panic!("expected spec mismatch, got {other:?}"),
+    }
+
+    // an incomplete shard set must not merge
+    match merge_checkpoints(vec![good[0].clone()]) {
+        Err(MergeError::MissingShard { .. } | MergeError::ShardCountMismatch { .. }) => {}
+        other => panic!("expected missing-shard refusal, got {other:?}"),
+    }
+
+    // a duplicated member must not merge
+    match merge_checkpoints(vec![good[0].clone(), good[0].clone()]) {
+        Err(MergeError::DuplicateShard { index: 0 }) => {}
+        other => panic!("expected duplicate-shard refusal, got {other:?}"),
+    }
+
+    // the full set still merges after all those refusals (no mutation)
+    let (_, mut merged) = merge_checkpoints(good).unwrap();
+    merged.solve(1e-2).unwrap();
+    assert!(merged.weights().is_some());
+}

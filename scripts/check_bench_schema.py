@@ -68,6 +68,25 @@ SCHEMAS = {
         "materialized_bytes": FLOAT,
         "feature_dim": FLOAT,
     },
+    "BENCH_solver.json": {
+        "bench": STR,
+        "smoke": BOOL,
+        "threads": FLOAT,
+        "auto_threshold_m": FLOAT,
+        "sizes": [
+            {
+                "m": FLOAT,
+                "chol_ms": FLOAT,
+                "pcg_ms": FLOAT,
+                "pcg_iters": FLOAT,
+                "precond_rank": FLOAT,
+                "pcg_wins": BOOL,
+                "speedup": FLOAT,
+            }
+        ],
+        "crossover_m": FLOAT,
+        "pcg_wins_at_largest": BOOL,
+    },
     "BENCH_serve.json": {
         "clients": FLOAT,
         "rows_per_request": FLOAT,
